@@ -1,0 +1,96 @@
+//! Structural analysis of expert redundancy — the data behind Figures 4,
+//! 6, 7/9 — printed as ASCII heatmaps and distributions.
+//!
+//! Run: `cargo run --release --example buddy_analysis`
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+use buddymoe::buddy::BuddyProfile;
+use buddymoe::config::ModelConfig;
+use buddymoe::eval::profile_model;
+use buddymoe::profilecollect::expert_similarity_matrix;
+use buddymoe::weights::WeightStore;
+
+fn shade(x: f64) -> char {
+    const RAMP: &[char] = &[' ', '.', ':', '-', '=', '+', '*', '#', '@'];
+    let i = ((x.clamp(0.0, 1.0)) * (RAMP.len() - 1) as f64).round() as usize;
+    RAMP[i]
+}
+
+fn heat(matrix: &[Vec<f64>], step: usize, title: &str) {
+    println!("\n{title}");
+    for row in matrix.iter().step_by(step) {
+        let line: String = row.iter().step_by(step).map(|&x| shade(x)).collect();
+        println!("  {line}");
+    }
+}
+
+fn main() -> Result<()> {
+    buddymoe::util::logging::init();
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let cfg = ModelConfig::load(&dir)?;
+    let store = Arc::new(WeightStore::load(&cfg)?);
+
+    // --- Fig 4: weight-space similarity (layer 0) ------------------------
+    let sim = expert_similarity_matrix(&cfg, &store, 0)?;
+    let simf: Vec<Vec<f64>> = sim
+        .iter()
+        .map(|r| r.iter().map(|&x| x.max(0.0) as f64).collect())
+        .collect();
+    heat(&simf, 1, "Fig 4 — expert weight similarity, layer 0 (64x64, families of 4 visible on the diagonal blocks):");
+    let fs = cfg.family_size;
+    let (mut win, mut cross) = (0.0, 0.0);
+    let (mut nw, mut nc) = (0, 0);
+    for i in 0..cfg.n_experts {
+        for j in (i + 1)..cfg.n_experts {
+            if i / fs == j / fs {
+                win += sim[i][j] as f64;
+                nw += 1;
+            } else {
+                cross += sim[i][j] as f64;
+                nc += 1;
+            }
+        }
+    }
+    println!(
+        "  within-family mean cos {:.3} vs cross-family {:.3}",
+        win / nw as f64,
+        cross / nc as f64
+    );
+
+    // --- Figs 6 + 7/9: routing statistics --------------------------------
+    let pc = profile_model(&cfg, store, 64, 7777)?;
+
+    let l6 = (cfg.n_layers - 1).min(11);
+    let acts = &pc.layer(l6).activations;
+    let max = acts.iter().cloned().fold(0.0f64, f64::max).max(1.0);
+    println!("\nFig 6 — activation distribution, layer {l6} (heavy tail):");
+    let mut ranked: Vec<(usize, f64)> = acts.iter().cloned().enumerate().collect();
+    ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    for (e, a) in ranked.iter().take(12) {
+        println!("  expert {e:>2}: {} {a:.0}", "#".repeat((a / max * 50.0) as usize));
+    }
+    let total: f64 = acts.iter().sum();
+    let top8: f64 = ranked.iter().take(8).map(|x| x.1).sum();
+    println!("  -> top-8/64 experts take {:.1}% of routing events", 100.0 * top8 / total);
+
+    let co = pc.layer(0);
+    let maxc = co.binary.iter().cloned().fold(0.0f64, f64::max).max(1.0);
+    let com: Vec<Vec<f64>> = (0..cfg.n_experts)
+        .map(|i| (0..cfg.n_experts).map(|j| co.m(i, j) / maxc).collect())
+        .collect();
+    heat(&com, 1, "Fig 7/9 — co-activation heatmap, layer 0 (sparse bright family blocks):");
+
+    // --- Buddy list compactness (paper §3.3 report) ----------------------
+    let profile = BuddyProfile::build(&pc, &vec![0.8; cfg.n_layers], 16, 1e-3, true)?;
+    println!("\nBuddy list size distribution per layer (alpha=0.8, K_max=16):");
+    for l in 0..cfg.n_layers {
+        let sizes = profile.list_sizes(l);
+        let mean = sizes.iter().sum::<usize>() as f64 / sizes.len() as f64;
+        let mx = sizes.iter().max().unwrap();
+        println!("  layer {l:>2}: mean {mean:.1}, max {mx}");
+    }
+    Ok(())
+}

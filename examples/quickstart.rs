@@ -1,0 +1,83 @@
+//! Quickstart: load the AOT-compiled dsv2-mini model, profile it, build
+//! buddy lists, and serve a handful of requests under memory pressure.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (requires `make artifacts` first)
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+use buddymoe::buddy::BuddyProfile;
+use buddymoe::config::{ModelConfig, ServingConfig};
+use buddymoe::eval::{profile_model, warm_rank_from_profile, Domain, WorkloadGen};
+use buddymoe::model::{Engine, EngineOptions};
+use buddymoe::server::Server;
+use buddymoe::weights::WeightStore;
+
+fn main() -> Result<()> {
+    buddymoe::util::logging::init();
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let cfg = ModelConfig::load(&dir)?;
+    let store = Arc::new(WeightStore::load(&cfg)?);
+    println!(
+        "model: {} — {} layers x {} experts (top-{}), {:.1} MiB of expert weights",
+        cfg.name,
+        cfg.n_layers,
+        cfg.n_experts,
+        cfg.top_k,
+        (cfg.total_experts() * cfg.expert_bytes()) as f64 / (1024.0 * 1024.0)
+    );
+
+    // 1. Offline phase: profile co-activations on a held-out corpus.
+    println!("\n[1/3] profiling co-activations ...");
+    let pc = profile_model(&cfg, store.clone(), 32, 7777)?;
+    let warm = warm_rank_from_profile(&pc);
+
+    // 2. Build buddy lists with the CFT mechanism.
+    let mut scfg = ServingConfig::default().preset("buddy-rho3")?;
+    scfg.cache_rate = 0.5; // only half the experts fit on the "GPU"
+    let alphas = vec![scfg.cft_alpha; cfg.n_layers];
+    let buddies = BuddyProfile::build(&pc, &alphas, scfg.k_max, 1e-3, true)?;
+    let sizes = buddies.list_sizes(0);
+    println!(
+        "[2/3] buddy lists built: layer-0 |B| mean {:.1} (cap {})",
+        sizes.iter().sum::<usize>() as f64 / sizes.len() as f64,
+        scfg.k_max
+    );
+
+    // 3. Serve under memory pressure with buddy substitution.
+    println!("[3/3] serving 6 requests at cache rate c=0.5 ...\n");
+    let engine = Engine::new(
+        cfg.clone(),
+        scfg,
+        store,
+        Some(buddies),
+        Some(warm),
+        EngineOptions::default(),
+    )?;
+    let mut server = Server::new(engine);
+    let mut gen = WorkloadGen::new(&cfg, 123);
+    gen.max_new = 12;
+    let reqs = gen.requests(Domain::Mixed, 6, 0);
+    let responses = server.run_offline(reqs)?;
+
+    for r in &responses {
+        println!(
+            "request {:>2}: {} tokens, ttft {:.3}s, total {:.3}s -> {:?}",
+            r.id,
+            r.tokens.len(),
+            r.ttft,
+            r.total,
+            &r.tokens[..4.min(r.tokens.len())]
+        );
+    }
+    println!("\n{}", server.metrics.report());
+    println!(
+        "substitutions: {}  |  demand fetches: {}",
+        server.engine.counters.get("substitutions"),
+        server.engine.counters.get("fetches")
+    );
+    server.engine.shutdown();
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! End-to-end serving driver (the DESIGN.md validation workload): load the
+//! real AOT-compiled model, serve a batched request mix at several cache
+//! rates, and report latency / throughput / accuracy-vs-oracle for the
+//! BuddyMoE policy against the on-demand baseline.
+//!
+//! This is the "load a small model and serve batched requests" E2E proof
+//! that all three layers compose; results are recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example serve_offload [-- --fast]`
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+use buddymoe::config::ModelConfig;
+use buddymoe::eval::{
+    oracle_run, profile_model, run_method, warm_rank_from_profile, MethodSpec, TableSettings,
+};
+use buddymoe::weights::WeightStore;
+
+fn main() -> Result<()> {
+    buddymoe::util::logging::init();
+    let fast = std::env::args().any(|a| a == "--fast");
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let cfg = ModelConfig::load(&dir)?;
+    let store = Arc::new(WeightStore::load(&cfg)?);
+
+    let pc = profile_model(&cfg, store.clone(), if fast { 16 } else { 64 }, 7777)?;
+    let warm = warm_rank_from_profile(&pc);
+
+    let methods = [
+        MethodSpec::new("Original (on-demand)", "original"),
+        MethodSpec::new("BuddyMoE rho=3", "buddy-rho3"),
+    ];
+    println!("| c | method | ACC-E | ACC-C | avg | tok/s | ttft-free stalls | subs |");
+    println!("|---|---|---|---|---|---|---|---|");
+    for &cache_rate in &[0.75, 0.5, 0.375] {
+        let settings = TableSettings {
+            cache_rate,
+            n_easy: if fast { 3 } else { 6 },
+            n_hard: if fast { 3 } else { 6 },
+            max_new: if fast { 8 } else { 16 },
+            seed: 42,
+            time_scale: 1.0,
+        };
+        let oracle = oracle_run(
+            &cfg,
+            store.clone(),
+            buddymoe::eval::build_requests(&cfg, &settings),
+        )?;
+        for m in &methods {
+            let base = buddymoe::config::ServingConfig::default();
+            let row = run_method(&cfg, store.clone(), &pc, &warm, m, &base, &settings, &oracle)?;
+            println!(
+                "| {cache_rate} | {} | {:.3} | {:.3} | {:.3} | {:.2} | {} fetches | {} |",
+                row.label, row.acc_easy, row.acc_hard, row.avg, row.tok_s, row.fetches,
+                row.substitutions,
+            );
+        }
+    }
+    Ok(())
+}

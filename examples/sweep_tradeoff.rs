@@ -1,0 +1,84 @@
+//! The accuracy/throughput trade-off frontier (paper §3.4 "deployment-time
+//! trade-offs"): sweep the TAE threshold tau and replacement budget rho at
+//! a fixed cache rate and print the frontier.
+//!
+//! Run: `cargo run --release --example sweep_tradeoff [-- --fast]`
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+use buddymoe::buddy::BuddyProfile;
+use buddymoe::config::{MissPolicy, ModelConfig, ServingConfig};
+use buddymoe::eval::{
+    build_requests, forced_agreement, oracle_run, profile_model, warm_rank_from_profile,
+    TableSettings,
+};
+use buddymoe::model::{Engine, EngineOptions};
+use buddymoe::server::Server;
+use buddymoe::weights::WeightStore;
+
+fn main() -> Result<()> {
+    buddymoe::util::logging::init();
+    let fast = std::env::args().any(|a| a == "--fast");
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let cfg = ModelConfig::load(&dir)?;
+    let store = Arc::new(WeightStore::load(&cfg)?);
+
+    let settings = TableSettings {
+        cache_rate: 0.5,
+        n_easy: if fast { 3 } else { 5 },
+        n_hard: if fast { 3 } else { 5 },
+        max_new: if fast { 8 } else { 12 },
+        seed: 99,
+        time_scale: 1.0,
+    };
+    let pc = profile_model(&cfg, store.clone(), if fast { 16 } else { 48 }, 7777)?;
+    let warm = warm_rank_from_profile(&pc);
+    let mut oracle = oracle_run(&cfg, store.clone(), build_requests(&cfg, &settings))?;
+    oracle.sort_by_key(|r| r.id);
+
+    println!("| tau | rho | accuracy | tok/s | substitutions |");
+    println!("|---|---|---|---|---|");
+    for &tau in &[0.5, 0.75, 0.9, 0.95, 0.99] {
+        for rho in [Some(2usize), Some(3), None] {
+            let mut scfg = ServingConfig::default();
+            scfg.miss_policy = MissPolicy::Buddy;
+            scfg.cache_rate = settings.cache_rate;
+            scfg.tae_tau = tau;
+            scfg.rho = rho;
+            scfg.seed = settings.seed;
+            let buddies =
+                BuddyProfile::build(&pc, &vec![scfg.cft_alpha; cfg.n_layers], scfg.k_max, 1e-3, true)?;
+            let engine = Engine::new(
+                cfg.clone(),
+                scfg,
+                store.clone(),
+                Some(buddies),
+                Some(warm.clone()),
+                EngineOptions { time_scale: 1.0, record_logits: true, ..Default::default() },
+            )?;
+            let mut server = Server::new(engine);
+            let mut requests = build_requests(&cfg, &settings);
+            for req in requests.iter_mut() {
+                let o = oracle.iter().find(|r| r.id == req.id).unwrap();
+                req.force_tokens = Some(o.predictions.clone());
+            }
+            let t0 = std::time::Instant::now();
+            let mut responses = server.run_offline(requests)?;
+            let wall = t0.elapsed().as_secs_f64();
+            responses.sort_by_key(|r| r.id);
+            let o_refs: Vec<_> = oracle.iter().collect();
+            let s_refs: Vec<_> = responses.iter().collect();
+            let acc = forced_agreement(&o_refs, &s_refs);
+            println!(
+                "| {tau} | {} | {acc:.3} | {:.2} | {} |",
+                rho.map(|r| r.to_string()).unwrap_or_else(|| "inf".into()),
+                server.metrics.tokens_out as f64 / wall,
+                server.engine.counters.get("substitutions"),
+            );
+            server.engine.shutdown();
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,235 @@
+"""AOT compile path: lower every stage x shape-bucket to HLO text and emit
+the weight bundle, model config manifest, and golden fixtures.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the rust `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Python runs ONCE, at build time (`make artifacts`); the rust binary is
+self-contained afterwards.
+
+Usage: (cd python && python -m compile.aot --out-dir ../artifacts)
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import bmw, model, weightgen
+from .configs import DSV2_MINI, ModelSpec
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered, return_tuple: bool = True) -> str:
+    """jax lowered -> XLA HLO text via stablehlo (see module docstring).
+
+    Single-output stages use ``return_tuple=False`` so their PJRT output is
+    a plain array buffer the rust engine can feed straight into the next
+    stage without a host round-trip.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def _sd(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+#: Stages whose HLO root is a plain array (no tuple wrapper): their PJRT
+#: output buffer can feed the next stage directly.
+SINGLE_OUTPUT_STAGES = ("embed", "expert", "lm_head")
+
+
+def stage_returns_tuple(name: str) -> bool:
+    return not any(name.startswith(p) for p in SINGLE_OUTPUT_STAGES)
+
+
+def stage_signatures(spec: ModelSpec):
+    """Every (artifact name, python callable, example-arg specs).
+
+    The artifact names and argument orders here are the binary contract with
+    rust/src/runtime/artifacts.rs — change both together.
+    """
+    d, e, f, v, s = (spec.d_model, spec.n_experts, spec.d_ff,
+                     spec.vocab_size, spec.max_seq)
+    sigs = []
+
+    def emb_fn(tokens, emb):
+        return model.embed_stage(tokens, emb)
+
+    for t in spec.token_buckets:
+        sigs.append((f"embed_T{t}", emb_fn, [_sd((t,), I32), _sd((v, d))]))
+
+    def prefill_fn(x, len_mask, ln1, wq, wk, wv, wo):
+        return model.attn_prefill_stage(x, len_mask, ln1, wq, wk, wv, wo,
+                                        spec=spec)
+
+    sigs.append((
+        "attn_prefill", prefill_fn,
+        [_sd((s, d)), _sd((s,))] + [_sd((d,))] + [_sd((d, d))] * 4,
+    ))
+
+    def decode_fn(x, kc, vc, mask, ln1, wq, wk, wv, wo):
+        return model.attn_decode_stage(x, kc, vc, mask, ln1, wq, wk, wv, wo,
+                                       spec=spec, use_pallas=True)
+
+    for b in spec.batch_buckets:
+        sigs.append((
+            f"attn_decode_B{b}", decode_fn,
+            [_sd((b, d)), _sd((b, s, d)), _sd((b, s, d)), _sd((b, s))]
+            + [_sd((d,))] + [_sd((d, d))] * 4,
+        ))
+
+    def router_fn(x, ln2, wg, rbias):
+        return model.router_stage(x, ln2, wg, rbias, spec=spec,
+                                  use_pallas=True)
+
+    for t in spec.token_buckets:
+        sigs.append((
+            f"router_T{t}", router_fn,
+            [_sd((t, d)), _sd((d,)), _sd((d, e)), _sd((e,))],
+        ))
+
+    def expert_fn(h, w1, w3, w2):
+        return model.expert_stage(h, w1, w3, w2, use_pallas=True)
+
+    for t in spec.token_buckets:
+        sigs.append((
+            f"expert_T{t}", expert_fn,
+            [_sd((t, d)), _sd((d, f)), _sd((d, f)), _sd((f, d))],
+        ))
+
+    def head_fn(x, gain, emb):
+        return model.lm_head_stage(x, gain, emb, spec=spec)
+
+    for t in spec.token_buckets:
+        sigs.append((
+            f"lm_head_T{t}", head_fn,
+            [_sd((t, d)), _sd((d,)), _sd((v, d))],
+        ))
+    return sigs
+
+
+def emit_hlo(spec: ModelSpec, hlo_dir: str) -> dict:
+    os.makedirs(hlo_dir, exist_ok=True)
+    manifest = {}
+    for name, fn, args in stage_signatures(spec):
+        lowered = jax.jit(fn).lower(*args)
+        tup = stage_returns_tuple(name)
+        text = to_hlo_text(lowered, return_tuple=tup)
+        rel = f"{name}.hlo.txt"
+        with open(os.path.join(hlo_dir, rel), "w") as fh:
+            fh.write(text)
+        manifest[name] = {
+            "file": rel,
+            "num_args": len(args),
+            "arg_shapes": [list(a.shape) for a in args],
+            "tuple_output": tup,
+        }
+        print(f"  lowered {name}: {len(text)} chars")
+    return manifest
+
+
+def emit_goldens(spec: ModelSpec, w, out_path: str, seed: int = 11,
+                 n_cases: int = 3, prompt_len: int = 12, n_steps: int = 8):
+    """Reference decode traces for the rust integration tests.
+
+    Regenerates with a shifted seed if any step's top-2 logit gap is < 0.05
+    (so rust argmax comparison can't flip on fp reordering).
+    """
+    rng = np.random.default_rng(seed)
+    cases = []
+    domains = ["easy", "hard", "mixed"]
+    attempts = 0
+    while len(cases) < n_cases:
+        dom = domains[len(cases) % len(domains)]
+        half = spec.vocab_size // 2
+        if dom == "easy":
+            prompt = rng.integers(1, half, size=prompt_len)
+        elif dom == "hard":
+            prompt = rng.integers(half, spec.vocab_size, size=prompt_len)
+        else:
+            prompt = rng.integers(1, spec.vocab_size, size=prompt_len)
+        prompt = prompt.astype(np.int32)
+        toks, logits, traces = model.reference_decode(
+            spec, w, prompt, n_steps, use_pallas=False)
+        gaps = []
+        for srow in logits:
+            top2 = np.sort(srow)[-2:]
+            gaps.append(float(top2[1] - top2[0]))
+        attempts += 1
+        if min(gaps) < 0.05 and attempts < 20:
+            seed += 1
+            rng = np.random.default_rng(seed)
+            continue
+        # Router fixture: layer-0 top-k of the first decode step.
+        tr0 = traces[0]
+        cases.append({
+            "domain": dom,
+            "prompt": prompt.tolist(),
+            "gen_tokens": toks.tolist(),
+            "logits": [[round(float(x), 6) for x in row] for row in logits],
+            "min_top2_gap": min(gaps),
+            "router_l0_step0_idx": tr0.layer_topk_idx[0][0].tolist(),
+            "router_l0_step0_w": [round(float(x), 6)
+                                  for x in tr0.layer_topk_w[0][0]],
+            "router_l0_step0_tae": round(float(tr0.layer_tae[0][0]), 6),
+        })
+    with open(out_path, "w") as fh:
+        json.dump({"spec": spec.name, "n_steps": n_steps, "cases": cases}, fh)
+    print(f"  goldens: {len(cases)} cases -> {out_path}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--skip-goldens", action="store_true")
+    args = ap.parse_args()
+    spec = DSV2_MINI
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+
+    print("[aot] generating weights ...")
+    w = weightgen.generate(spec, seed=args.seed)
+    bmw.write_bmw(os.path.join(out, "weights.bmw"), w)
+
+    print("[aot] lowering stages ...")
+    manifest = emit_hlo(spec, os.path.join(out, "hlo"))
+
+    cfg = {
+        "spec": spec.to_json_dict(),
+        "weights_file": "weights.bmw",
+        "hlo_dir": "hlo",
+        "artifacts": manifest,
+        "weightgen": {
+            "seed": args.seed,
+            "family_size": weightgen.GenParams.family_size,
+            "n_families": spec.n_experts // weightgen.GenParams.family_size,
+        },
+        "golden_file": "golden/decode.json",
+    }
+    with open(os.path.join(out, "model_config.json"), "w") as fh:
+        json.dump(cfg, fh, indent=1)
+
+    if not args.skip_goldens:
+        print("[aot] generating golden fixtures ...")
+        os.makedirs(os.path.join(out, "golden"), exist_ok=True)
+        emit_goldens(spec, w, os.path.join(out, "golden", "decode.json"))
+    print("[aot] done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""BMW — the BuddyMoE Weights bundle format.
+
+A trivial, dependency-free binary tensor container shared between the python
+compile path (writer) and the rust coordinator (reader,
+``rust/src/weights/format.rs``). Little-endian throughout.
+
+Layout:
+    magic   4 bytes  b"BMW1"
+    count   u32      number of tensors
+    per tensor:
+        name_len u16, name utf-8 bytes
+        ndim     u8,  dims u32 * ndim
+        data     f32 * prod(dims)
+"""
+
+import struct
+from typing import Dict
+
+import numpy as np
+
+MAGIC = b"BMW1"
+
+
+def write_bmw(path: str, tensors: Dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            a = np.ascontiguousarray(arr, dtype=np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", a.ndim))
+            for d in a.shape:
+                f.write(struct.pack("<I", d))
+            f.write(a.tobytes(order="C"))
+
+
+def read_bmw(path: str) -> Dict[str, np.ndarray]:
+    out = {}
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        if magic != MAGIC:
+            raise ValueError(f"bad magic {magic!r}")
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            (ndim,) = struct.unpack("<B", f.read(1))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(4 * n), dtype="<f4").reshape(dims)
+            out[name] = data
+    return out

@@ -1,0 +1,78 @@
+"""Model specifications for the dsv2-mini family.
+
+The paper evaluates DeepSeek-V2-Lite: 64 experts per MoE layer, top-6 gating.
+We keep that *routing* configuration exactly (it is what the buddy mechanism
+operates on) and shrink the dense dimensions so the full model serves on the
+CPU PJRT client. See DESIGN.md §3 for the substitution rationale.
+"""
+
+from dataclasses import dataclass, asdict, field
+from typing import List
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    """Static architecture description shared by L1/L2/L3.
+
+    Serialized to artifacts/model_config.json; the rust coordinator treats
+    that file as the single source of truth for shapes and bucket ladders.
+    """
+
+    name: str = "dsv2-mini"
+    vocab_size: int = 512
+    d_model: int = 64
+    n_heads: int = 4
+    head_dim: int = 16
+    n_layers: int = 12
+    n_experts: int = 64
+    top_k: int = 6
+    d_ff: int = 128
+    max_seq: int = 128
+    rms_eps: float = 1e-5
+    # Token-batch bucket ladder for token-parallel stages (embed, router,
+    # expert_ffn, lm_head). Rust pads a T-token group up to the next bucket.
+    token_buckets: List[int] = field(
+        default_factory=lambda: [1, 2, 4, 8, 16, 32, 64, 128]
+    )
+    # Sequence-batch bucket ladder for the decode-attention stage.
+    batch_buckets: List[int] = field(default_factory=lambda: [1, 2, 4, 8, 16, 32])
+
+    def __post_init__(self):
+        assert self.d_model == self.n_heads * self.head_dim, "d_model mismatch"
+        assert self.top_k <= self.n_experts
+        assert self.max_seq in self.token_buckets, (
+            "prefill runs through token-parallel stages at T=max_seq; "
+            "max_seq must be a token bucket"
+        )
+
+    @property
+    def expert_param_count(self) -> int:
+        """f32 parameters in one expert (w1 + w3 + w2)."""
+        return 3 * self.d_model * self.d_ff
+
+    @property
+    def expert_bytes(self) -> int:
+        return 4 * self.expert_param_count
+
+    def to_json_dict(self) -> dict:
+        return asdict(self)
+
+
+#: The configuration every artifact bundle and experiment uses.
+DSV2_MINI = ModelSpec()
+
+#: A tiny spec for fast unit tests (never AOT-exported).
+TINY = ModelSpec(
+    name="tiny",
+    vocab_size=64,
+    d_model=16,
+    n_heads=2,
+    head_dim=8,
+    n_layers=3,
+    n_experts=8,
+    top_k=2,
+    d_ff=32,
+    max_seq=16,
+    token_buckets=[1, 2, 4, 8, 16],
+    batch_buckets=[1, 2, 4],
+)

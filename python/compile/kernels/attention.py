@@ -1,0 +1,54 @@
+"""L1 Pallas kernel: masked single-query (decode) attention core.
+
+The decode step is the serving hot loop: one query per sequence against that
+sequence's KV cache. The grid assigns one program instance per sequence (the
+TPU analogue of the paper's one-CUDA-block-per-token partitioning); each
+instance holds its query, its (S, H, hd) cache slab, and the position mask in
+VMEM, computes masked scores + stable softmax + weighted sum without leaving
+the core.
+
+QKV/output projections live in the L2 stage function (plain XLA matmuls fuse
+fine there); the kernel owns the score/softmax/value contraction, which is
+the part that would be memory-bound on HBM without explicit blocking.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, m_ref, s_ref, o_ref):
+    """One sequence: o = softmax(mask(q.k^T * scale)) @ v."""
+    q = q_ref[0]            # [H, hd]
+    k = k_ref[0]            # [S, H, hd]
+    v = v_ref[0]            # [S, H, hd]
+    mask = m_ref[0]         # [S]
+    scale = s_ref[0]
+    scores = jnp.einsum("hd,shd->hs", q, k) * scale
+    neg = jnp.finfo(scores.dtype).min
+    scores = jnp.where(mask[None, :] > 0, scores, neg)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    w = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0] = jnp.einsum("hs,shd->hd", w, v)
+
+
+def attn_decode_core(q, k, v, pos_mask, scale: float, *, interpret: bool = True):
+    """q: [B,H,hd]; k,v: [B,S,H,hd]; pos_mask: [B,S] -> [B,H,hd]."""
+    b, h, hd = q.shape
+    s = k.shape[1]
+    scale_arr = jnp.full((1,), scale, dtype=q.dtype)
+    return pl.pallas_call(
+        _decode_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, h, hd), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, s, h, hd), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, s), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, h, hd), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v, pos_mask, scale_arr)

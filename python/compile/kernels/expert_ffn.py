@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: fused gated-SiLU expert FFN.
+
+This is the compute hot-spot that buddy substitution feeds: one call runs a
+single expert over a group of tokens that the rust coordinator routed to it.
+
+TPU-shaped design (see DESIGN.md §Hardware-Adaptation):
+  * the grid tiles the token axis; each program instance owns a (BT, D)
+    activation block — the VMEM-resident working set;
+  * all three projections (gate w1, up w3, down w2) stay resident across the
+    block so the gated product never round-trips to HBM between stages
+    (the fusion the paper's CUDA expert kernel gets from staying in
+    registers/smem);
+  * tile shapes are multiples of the 8x128 MXU/VPU lanes where the mini
+    config allows (D=64, F=128).
+
+Lowered with ``interpret=True`` — the CPU PJRT client cannot execute Mosaic
+custom-calls; real-TPU behaviour is estimated in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Token-block size. 128 tokens x 64 dims x 4B = 32 KiB activations per
+#: block; with the three weight tiles (96 KiB) the working set is ~160 KiB,
+#: comfortably inside a TPU core's ~16 MiB VMEM with double-buffering room.
+DEFAULT_BLOCK_T = 128
+
+
+def _ffn_kernel(h_ref, w1_ref, w3_ref, w2_ref, o_ref):
+    """One token-block: o = (silu(h @ w1) * (h @ w3)) @ w2."""
+    h = h_ref[...]
+    g = h @ w1_ref[...]          # [BT, F] gate path (MXU matmul)
+    u = h @ w3_ref[...]          # [BT, F] up path
+    a = g * jax.nn.sigmoid(g) * u  # fused SiLU-gate, stays in VMEM
+    o_ref[...] = a @ w2_ref[...]   # [BT, D] down projection
+
+
+def expert_ffn(h, w1, w3, w2, *, block_t: int = DEFAULT_BLOCK_T,
+               interpret: bool = True):
+    """Run one expert over a token group.
+
+    h:  [T, D] normed activations; w1/w3: [D, F]; w2: [F, D].
+    T must be a multiple of block_t or smaller than it (single block).
+    """
+    t, d = h.shape
+    f = w1.shape[1]
+    bt = min(block_t, t)
+    if t % bt != 0:
+        raise ValueError(f"token count {t} not a multiple of block {bt}")
+    grid = (t // bt,)
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),   # stream token blocks
+            pl.BlockSpec((d, f), lambda i: (0, 0)),    # weights resident
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((f, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), h.dtype),
+        interpret=interpret,
+    )(h, w1, w3, w2)
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_estimate(block_t: int, d: int, f: int, bytes_per_el: int = 4) -> dict:
+    """Static VMEM footprint estimate for one program instance.
+
+    Used by DESIGN.md §Perf to reason about real-TPU residency; not used at
+    runtime.
+    """
+    act_in = block_t * d * bytes_per_el
+    weights = (2 * d * f + f * d) * bytes_per_el
+    inter = 2 * block_t * f * bytes_per_el  # gate + up paths
+    act_out = block_t * d * bytes_per_el
+    total = act_in + weights + inter + act_out
+    return {
+        "activations_in": act_in,
+        "weights": weights,
+        "intermediates": inter,
+        "activations_out": act_out,
+        "total": total,
+        "fits_vmem_16mb": total < 16 * 1024 * 1024,
+    }

@@ -1,0 +1,83 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: each Pallas kernel in this package
+must match its oracle to float32 tolerance on all shapes (pytest +
+hypothesis sweep in python/tests/). The oracles are also used by the L2
+reference model when ``use_pallas=False``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, gain, eps=1e-5):
+    """RMSNorm over the last axis: x * rsqrt(mean(x^2) + eps) * gain."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gain
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def expert_ffn(h, w1, w3, w2):
+    """Gated-SiLU expert FFN: (silu(h @ w1) * (h @ w3)) @ w2.
+
+    h:  [T, D]   activations (already RMS-normed by the router stage)
+    w1: [D, F]   gate projection
+    w3: [D, F]   up projection
+    w2: [F, D]   down projection
+    returns [T, D]
+    """
+    return (silu(h @ w1) * (h @ w3)) @ w2
+
+
+def router(x, gain, wg, bias, eps=1e-5):
+    """MoE pre-norm + router softmax.
+
+    x:    [T, D] residual-stream activations
+    gain: [D]    RMSNorm gain for the MoE block input
+    wg:   [D, E] router projection
+    bias: [E]    per-expert popularity bias (weightgen skews this)
+    returns (h [T, D] normed activations fed to experts,
+             probs [T, E] full softmax over experts)
+    """
+    h = rms_norm(x, gain, eps)
+    logits = h @ wg + bias
+    probs = jax.nn.softmax(logits, axis=-1)
+    return h, probs
+
+
+def attn_decode_core(q, k, v, pos_mask, scale):
+    """Masked single-query attention against a cached K/V window.
+
+    q:        [B, H, hd]     current-step queries
+    k, v:     [B, S, H, hd]  KV cache (padded to S = max_seq)
+    pos_mask: [B, S]         1.0 for valid cache slots, 0.0 for padding
+    returns   [B, H, hd]
+    """
+    scores = jnp.einsum("bhd,bshd->bhs", q, k) * scale
+    neg = jnp.finfo(scores.dtype).min
+    scores = jnp.where(pos_mask[:, None, :] > 0, scores, neg)
+    w = jax.nn.softmax(scores, axis=-1)
+    # Fully-masked rows can't occur (the current token is always valid) but
+    # keep the oracle total: softmax of all -inf would be nan; guard anyway.
+    w = jnp.where(jnp.sum(pos_mask, axis=-1)[:, None, None] > 0, w, 0.0)
+    return jnp.einsum("bhs,bshd->bhd", w, v)
+
+
+def attn_prefill_core(q, k, v, len_mask, scale):
+    """Causal masked self-attention over a full (padded) prompt.
+
+    q, k, v:  [S, H, hd]
+    len_mask: [S] 1.0 for real tokens, 0.0 for right-padding
+    returns   [S, H, hd]
+    """
+    s = q.shape[0]
+    scores = jnp.einsum("qhd,khd->hqk", q, k) * scale
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    valid = causal[None, :, :] & (len_mask[None, None, :] > 0)
+    neg = jnp.finfo(scores.dtype).min
+    scores = jnp.where(valid, scores, neg)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hqk,khd->qhd", w, v)

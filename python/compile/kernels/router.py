@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: MoE pre-norm + router projection + softmax.
+
+Produces both the RMS-normed activations (fed to the experts) and the full
+expert probability vector per token. Top-k selection deliberately happens in
+the rust coordinator (L3): expert choice is where the paper's buddy
+substitution, gating, and cache logic intervene, so the boundary between
+"model math" and "routing policy" sits exactly at this kernel's output.
+
+The per-expert bias term carries the popularity skew that weightgen
+engineers (Fig 6's heavy-tailed activation distribution).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_T = 128
+
+
+def _router_kernel(x_ref, g_ref, wg_ref, b_ref, eps_ref, h_ref, p_ref):
+    """One token-block: h = rmsnorm(x)*g ; p = softmax(h @ wg + b)."""
+    x = x_ref[...]
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    h = x * jax.lax.rsqrt(ms + eps_ref[0]) * g_ref[...]
+    logits = h @ wg_ref[...] + b_ref[...]
+    # Numerically-stable softmax in VMEM.
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    h_ref[...] = h
+    p_ref[...] = p
+
+
+def router(x, gain, wg, bias, eps: float = 1e-5, *,
+           block_t: int = DEFAULT_BLOCK_T, interpret: bool = True):
+    """x: [T, D]; gain: [D]; wg: [D, E]; bias: [E] -> (h [T,D], p [T,E])."""
+    t, d = x.shape
+    e = wg.shape[1]
+    bt = min(block_t, t)
+    if t % bt != 0:
+        raise ValueError(f"token count {t} not a multiple of block {bt}")
+    grid = (t // bt,)
+    eps_arr = jnp.full((1,), eps, dtype=x.dtype)
+    return pl.pallas_call(
+        _router_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d, e), lambda i: (0, 0)),
+            pl.BlockSpec((e,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((bt, e), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, d), x.dtype),
+            jax.ShapeDtypeStruct((t, e), x.dtype),
+        ],
+        interpret=interpret,
+    )(x, gain, wg, bias, eps_arr)

@@ -1,0 +1,294 @@
+"""L2 — dsv2-mini stage functions and the pure-python reference model.
+
+The forward pass is factored into the exact stage boundaries the rust
+coordinator orchestrates (one AOT artifact per stage x shape bucket):
+
+    embed -> [per layer: attn (prefill|decode) -> router -> {expert}xE] -> lm_head
+
+Top-k selection, buddy gating/substitution, weighted combine, and residual
+accumulation for the MoE output happen in rust (L3) — that is where the
+paper's system lives. ``reference_*`` functions below replicate those L3
+steps in python for golden-fixture generation and cross-layer validation.
+
+Every stage takes ``interpret``-mode Pallas kernels (L1) when
+``use_pallas=True`` (the AOT default) and the jnp oracles otherwise; pytest
+asserts both paths agree.
+"""
+
+from functools import partial
+from typing import Dict, List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelSpec
+from .kernels import ref
+from .kernels.attention import attn_decode_core as pallas_attn_decode
+from .kernels.expert_ffn import expert_ffn as pallas_expert_ffn
+from .kernels.router import router as pallas_router
+
+# --------------------------------------------------------------------------
+# Stage functions (AOT-exported; weights are runtime parameters)
+# --------------------------------------------------------------------------
+
+
+def embed_stage(tokens, emb):
+    """tokens: i32[T]; emb: [V, D] -> x [T, D]."""
+    return jnp.take(emb, tokens, axis=0)
+
+
+def _heads(x, n_heads):
+    t, d = x.shape
+    return x.reshape(t, n_heads, d // n_heads)
+
+
+def attn_prefill_stage(x, len_mask, ln1, wq, wk, wv, wo, *, spec: ModelSpec):
+    """Full-prompt causal attention.
+
+    x: [S, D]; len_mask: [S] -> (y [S, D] with residual, k [S, D], v [S, D]).
+    Padding rows produce garbage y but are masked out downstream.
+    """
+    h = ref.rms_norm(x, ln1, spec.rms_eps)
+    q = _heads(h @ wq, spec.n_heads)
+    k = _heads(h @ wk, spec.n_heads)
+    v = _heads(h @ wv, spec.n_heads)
+    scale = 1.0 / np.sqrt(spec.head_dim)
+    o = ref.attn_prefill_core(q, k, v, len_mask, scale)
+    y = x + o.reshape(x.shape) @ wo
+    return y, k.reshape(x.shape), v.reshape(x.shape)
+
+
+def attn_decode_stage(x, k_cache, v_cache, pos_mask, ln1, wq, wk, wv, wo, *,
+                      spec: ModelSpec, use_pallas: bool = True):
+    """Single-step attention for B sequences.
+
+    x: [B, D]; k_cache/v_cache: [B, S, D] (slots with pos_mask==0 ignored);
+    pos_mask: [B, S]. The current token's K/V is appended logically inside
+    the stage; rust writes the returned k_new/v_new into the cache after the
+    call. Returns (y [B, D], k_new [B, D], v_new [B, D]).
+    """
+    b, d = x.shape
+    s = k_cache.shape[1]
+    h = ref.rms_norm(x, ln1, spec.rms_eps)
+    q = (h @ wq).reshape(b, spec.n_heads, spec.head_dim)
+    k_new = h @ wk
+    v_new = h @ wv
+    kc = jnp.concatenate(
+        [k_cache.reshape(b, s, spec.n_heads, spec.head_dim),
+         k_new.reshape(b, 1, spec.n_heads, spec.head_dim)], axis=1)
+    vc = jnp.concatenate(
+        [v_cache.reshape(b, s, spec.n_heads, spec.head_dim),
+         v_new.reshape(b, 1, spec.n_heads, spec.head_dim)], axis=1)
+    mask = jnp.concatenate([pos_mask, jnp.ones((b, 1), x.dtype)], axis=1)
+    scale = 1.0 / np.sqrt(spec.head_dim)
+    core = pallas_attn_decode if use_pallas else ref.attn_decode_core
+    o = core(q, kc, vc, mask, scale)
+    y = x + o.reshape(b, d) @ wo
+    return y, k_new, v_new
+
+
+def router_stage(x, ln2, wg, rbias, *, spec: ModelSpec,
+                 use_pallas: bool = True):
+    """x: [T, D] -> (h [T, D] normed MoE input, probs [T, E])."""
+    if use_pallas:
+        return pallas_router(x, ln2, wg, rbias, spec.rms_eps)
+    return ref.router(x, ln2, wg, rbias, spec.rms_eps)
+
+
+def expert_stage(h, w1, w3, w2, *, use_pallas: bool = True):
+    """h: [T, D] -> y [T, D] for one expert over a routed token group."""
+    if use_pallas:
+        return pallas_expert_ffn(h, w1, w3, w2)
+    return ref.expert_ffn(h, w1, w3, w2)
+
+
+def lm_head_stage(x, final_gain, emb, *, spec: ModelSpec):
+    """x: [T, D] -> logits [T, V] (tied embedding)."""
+    h = ref.rms_norm(x, final_gain, spec.rms_eps)
+    return h @ emb.T
+
+
+# --------------------------------------------------------------------------
+# Reference L3 logic (python mirror of the rust coordinator's math)
+# --------------------------------------------------------------------------
+
+
+def top_k_select(probs: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Deterministic top-k: by prob desc, index asc on ties.
+
+    probs: [T, E] -> (idx [T, k] i64, weights [T, k] renormalized).
+    The rust coordinator (model::route) implements the identical rule.
+    """
+    t, e = probs.shape
+    # lexsort on (-prob, index): stable argsort of -probs is exactly that.
+    order = np.argsort(-probs, axis=-1, kind="stable")
+    idx = order[:, :k]
+    w = np.take_along_axis(probs, idx, axis=-1)
+    w = w / np.sum(w, axis=-1, keepdims=True)
+    return idx, w
+
+
+def tae(weights: np.ndarray, k: int) -> np.ndarray:
+    """Token Activating Entropy (paper Eq. 1) from renormalized top-k
+    weights: [T, k] -> [T] in [0, 1]."""
+    safe = np.clip(weights, 1e-30, 1.0)
+    wl = np.where(weights > 0, weights * np.log(safe), 0.0)
+    return -np.sum(wl, axis=-1) / np.log(k)
+
+
+class LayerWeights(NamedTuple):
+    ln1: jnp.ndarray
+    wq: jnp.ndarray
+    wk: jnp.ndarray
+    wv: jnp.ndarray
+    wo: jnp.ndarray
+    ln2: jnp.ndarray
+    wg: jnp.ndarray
+    rbias: jnp.ndarray
+    experts: List[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]]
+
+
+def split_weights(spec: ModelSpec, w: Dict[str, np.ndarray]):
+    """Group a flat bmw dict into per-layer structures (jnp arrays)."""
+    emb = jnp.asarray(w["embed"])
+    final_gain = jnp.asarray(w["final_gain"])
+    layers = []
+    for l in range(spec.n_layers):
+        p = f"L{l}."
+        experts = [
+            tuple(jnp.asarray(w[f"{p}E{e}.{n}"]) for n in ("w1", "w3", "w2"))
+            for e in range(spec.n_experts)
+        ]
+        layers.append(LayerWeights(
+            ln1=jnp.asarray(w[p + "ln1"]), wq=jnp.asarray(w[p + "wq"]),
+            wk=jnp.asarray(w[p + "wk"]), wv=jnp.asarray(w[p + "wv"]),
+            wo=jnp.asarray(w[p + "wo"]), ln2=jnp.asarray(w[p + "ln2"]),
+            wg=jnp.asarray(w[p + "wg"]), rbias=jnp.asarray(w[p + "rbias"]),
+            experts=experts,
+        ))
+    return emb, final_gain, layers
+
+
+def moe_combine(h, idx, wts, experts, use_pallas=False):
+    """Reference MoE output: weighted sum of selected expert outputs.
+
+    h: [T, D]; idx: [T, k]; wts: [T, k]. Runs each *distinct* expert over its
+    token group exactly like the rust scheduler (group-by-expert), then
+    scatter-adds — so golden fixtures exercise the same computation order
+    class as the serving engine.
+    """
+    t, d = h.shape
+    out = np.zeros((t, d), dtype=np.float32)
+    h_np = np.asarray(h)
+    for e in np.unique(idx):
+        rows, slots = np.where(idx == e)
+        grp = jnp.asarray(h_np[rows])
+        w1, w3, w2 = experts[int(e)]
+        y = np.asarray(expert_stage(grp, w1, w3, w2, use_pallas=use_pallas))
+        out[rows] += wts[rows, slots][:, None] * y
+    return out
+
+
+class StepTrace(NamedTuple):
+    """Routing telemetry for one model step (used for profiling fixtures)."""
+    layer_topk_idx: List[np.ndarray]     # per layer [T, k] selected experts
+    layer_topk_w: List[np.ndarray]       # per layer [T, k] renorm weights
+    layer_tae: List[np.ndarray]          # per layer [T]
+
+
+def reference_forward(spec: ModelSpec, w: Dict[str, np.ndarray],
+                      tokens: np.ndarray, use_pallas: bool = False
+                      ) -> Tuple[np.ndarray, StepTrace]:
+    """Full prompt forward (prefill): tokens [S0] -> logits [S0, V].
+
+    Mirrors the rust engine's prefill exactly: pad to max_seq for attention,
+    run token-parallel stages over the full padded batch, mask at the end.
+    """
+    s0 = tokens.shape[0]
+    s = spec.max_seq
+    assert s0 <= s
+    padded = np.zeros(s, dtype=np.int32)
+    padded[:s0] = tokens
+    len_mask = jnp.asarray((np.arange(s) < s0).astype(np.float32))
+    emb, final_gain, layers = split_weights(spec, w)
+
+    x = embed_stage(jnp.asarray(padded), emb)
+    tr = StepTrace([], [], [])
+    for lw in layers:
+        x, _, _ = attn_prefill_stage(x, len_mask, lw.ln1, lw.wq, lw.wk,
+                                     lw.wv, lw.wo, spec=spec)
+        h, probs = router_stage(x, lw.ln2, lw.wg, lw.rbias, spec=spec,
+                                use_pallas=use_pallas)
+        idx, wts = top_k_select(np.asarray(probs), spec.top_k)
+        tr.layer_topk_idx.append(idx[:s0])
+        tr.layer_topk_w.append(wts[:s0])
+        tr.layer_tae.append(tae(wts, spec.top_k)[:s0])
+        moe = moe_combine(h, idx, wts, lw.experts, use_pallas=use_pallas)
+        x = x + jnp.asarray(moe)
+    logits = lm_head_stage(x, final_gain, emb, spec=spec)
+    return np.asarray(logits)[:s0], tr
+
+
+def reference_decode(spec: ModelSpec, w: Dict[str, np.ndarray],
+                     prompt: np.ndarray, n_steps: int,
+                     use_pallas: bool = False):
+    """Greedy decode: returns (generated token ids [n_steps],
+    per-step logits [n_steps, V], list of StepTrace)."""
+    s = spec.max_seq
+    emb, final_gain, layers = split_weights(spec, w)
+    n_layers = spec.n_layers
+
+    # KV caches: [L][1, S, D]
+    kc = [np.zeros((1, s, spec.d_model), np.float32) for _ in range(n_layers)]
+    vc = [np.zeros((1, s, spec.d_model), np.float32) for _ in range(n_layers)]
+
+    # Prefill, recording K/V.
+    s0 = prompt.shape[0]
+    padded = np.zeros(s, dtype=np.int32)
+    padded[:s0] = prompt
+    len_mask = jnp.asarray((np.arange(s) < s0).astype(np.float32))
+    x = embed_stage(jnp.asarray(padded), emb)
+    for li, lw in enumerate(layers):
+        x, k, v = attn_prefill_stage(x, len_mask, lw.ln1, lw.wq, lw.wk,
+                                     lw.wv, lw.wo, spec=spec)
+        kc[li][0, :s0] = np.asarray(k)[:s0]
+        vc[li][0, :s0] = np.asarray(v)[:s0]
+        h, probs = router_stage(x, lw.ln2, lw.wg, lw.rbias, spec=spec,
+                                use_pallas=use_pallas)
+        idx, wts = top_k_select(np.asarray(probs), spec.top_k)
+        moe = moe_combine(h, idx, wts, lw.experts, use_pallas=use_pallas)
+        x = x + jnp.asarray(moe)
+    logits = np.asarray(lm_head_stage(x, final_gain, emb, spec=spec))
+    next_tok = int(np.argmax(logits[s0 - 1]))
+
+    out_tokens, out_logits, traces = [], [], []
+    pos = s0
+    for _ in range(n_steps):
+        tok = np.asarray([next_tok], dtype=np.int32)
+        xb = embed_stage(jnp.asarray(tok), emb)      # [1, D]
+        pos_mask = jnp.asarray(
+            (np.arange(s) < pos).astype(np.float32))[None, :]
+        tr = StepTrace([], [], [])
+        for li, lw in enumerate(layers):
+            y, k_new, v_new = attn_decode_stage(
+                xb, jnp.asarray(kc[li]), jnp.asarray(vc[li]), pos_mask,
+                lw.ln1, lw.wq, lw.wk, lw.wv, lw.wo, spec=spec,
+                use_pallas=use_pallas)
+            kc[li][0, pos] = np.asarray(k_new)[0]
+            vc[li][0, pos] = np.asarray(v_new)[0]
+            h, probs = router_stage(y, lw.ln2, lw.wg, lw.rbias, spec=spec,
+                                    use_pallas=use_pallas)
+            idx, wts = top_k_select(np.asarray(probs), spec.top_k)
+            tr.layer_topk_idx.append(idx)
+            tr.layer_topk_w.append(wts)
+            tr.layer_tae.append(tae(wts, spec.top_k))
+            moe = moe_combine(h, idx, wts, lw.experts, use_pallas=use_pallas)
+            xb = y + jnp.asarray(moe)
+        lg = np.asarray(lm_head_stage(xb, final_gain, emb, spec=spec))[0]
+        out_tokens.append(next_tok)
+        next_tok = int(np.argmax(lg))
+        out_logits.append(lg)
+        traces.append(tr)
+        pos += 1
+    return np.asarray(out_tokens), np.asarray(out_logits), traces

@@ -1,0 +1,143 @@
+"""Synthetic dsv2-mini weights with engineered expert redundancy.
+
+The paper's mechanism rests on three empirical regularities of trained MoE
+models (paper §2.4, §3.2). We cannot download DeepSeek-V2-Lite in this
+offline environment, so we *construct* weights that provably exhibit the same
+regularities, then measure everything downstream rather than assuming it:
+
+1. **Functional redundancy (Fig 4)** — experts are generated in families of
+   ``family_size``: each expert's FFN weights are
+   ``a * prototype(family) + b * noise`` with ``a^2 + b^2 = 1``, so
+   within-family weight cosine similarity concentrates near ``a^2`` and
+   buddy substitution inside a family is a bounded perturbation.
+2. **Correlated routing / co-activation (Figs 7, 9)** — router columns for
+   same-family experts share a family direction ``u_f`` the same way, so a
+   token whose hidden state aligns with ``u_f`` gives high logits to the
+   whole family: top-k sets co-activate within families.
+3. **Heavy-tailed activation (Fig 6)** — per-expert router bias is drawn
+   from an exponential, so a few "popular" experts dominate routing counts.
+
+Domains: embedding rows for token ids in the *lower* half of the
+vocabulary (the ``syn-e`` / ARC-Easy analogue) are aligned with the router
+directions of the *most popular* expert families, so easy traffic
+concentrates on head experts that any popularity-informed cache keeps
+resident — few misses, high accuracy under substitution policies.
+Upper-half rows (``syn-c`` / ARC-Challenge) stay generic, routing
+diffusely across the expert pool including the offloaded tail — more
+misses, more substitution pressure, lower accuracy. This reproduces the
+paper's ARC-E > ARC-C ordering through a real mechanism.
+
+Everything is deterministic in ``seed``.
+"""
+
+from typing import Dict
+
+import numpy as np
+
+from .configs import ModelSpec
+
+
+class GenParams:
+    """Tunables for the redundancy construction (defaults calibrated in
+    python/tests/test_weightgen.py to produce the paper's regularities)."""
+
+    family_size = 4          # experts per family; E/family_size families
+    proto_mix = 0.92         # 'a' — within-family cosine ~ a^2 = 0.9025
+    router_family_mix = 0.90 # family share of each router column direction
+    router_scale = 4.0       # overall router logit gain
+    pop_scale = 1.0          # exponential bias scale (activation skew)
+    easy_mix = 0.6           # head-direction share of easy-domain embeddings
+    head_frac = 0.25         # fraction of families counted as "head"
+    attn_std_scale = 1.0     # attention projection scale multiplier
+    expert_out_scale = 1.25  # down-projection damping (residual stability)
+
+
+def _unit_rows(x: np.ndarray) -> np.ndarray:
+    return x / np.linalg.norm(x, axis=0, keepdims=True)
+
+
+def family_of(e: int, p: GenParams = GenParams) -> int:
+    return e // p.family_size
+
+
+def generate(spec: ModelSpec, seed: int = 7, p: GenParams = GenParams
+             ) -> Dict[str, np.ndarray]:
+    """Generate the full weight dict (bmw tensor names, see DESIGN.md)."""
+    rng = np.random.default_rng(seed)
+    d, f, e, v = spec.d_model, spec.d_ff, spec.n_experts, spec.vocab_size
+    assert e % p.family_size == 0
+    n_fam = e // p.family_size
+    w: Dict[str, np.ndarray] = {}
+
+    emb = rng.normal(size=(v, d)).astype(np.float32)
+    w["embed"] = emb  # easy-domain rows rewritten after routers exist
+    w["final_gain"] = np.ones(d, dtype=np.float32)
+
+    head_dirs = []  # per-layer mean router direction of popular families
+
+    a = p.proto_mix
+    b = float(np.sqrt(1.0 - a * a))
+    for l in range(spec.n_layers):
+        pre = f"L{l}."
+        w[pre + "ln1"] = np.ones(d, dtype=np.float32)
+        w[pre + "ln2"] = np.ones(d, dtype=np.float32)
+        s = p.attn_std_scale / np.sqrt(d)
+        for name in ("wq", "wk", "wv", "wo"):
+            w[pre + name] = (rng.normal(size=(d, d)) * s).astype(np.float32)
+
+        # --- Router: family-correlated columns + popularity bias ---------
+        u_fam = _unit_rows(rng.normal(size=(d, n_fam)))          # [D, n_fam]
+        cols = np.empty((d, e), dtype=np.float64)
+        for ei in range(e):
+            fam = ei // p.family_size
+            noise = rng.normal(size=d)
+            noise /= np.linalg.norm(noise)
+            c = p.router_family_mix * u_fam[:, fam] + \
+                np.sqrt(1 - p.router_family_mix ** 2) * noise
+            cols[:, ei] = c / np.linalg.norm(c)
+        w[pre + "wg"] = (cols * p.router_scale).astype(np.float32)
+        rbias = rng.exponential(p.pop_scale, size=e)
+        w[pre + "rbias"] = rbias.astype(np.float32)
+
+        # Head families for the easy domain: most popular by total bias.
+        fam_pop = rbias.reshape(n_fam, p.family_size).sum(axis=1)
+        n_head = max(1, int(round(n_fam * p.head_frac)))
+        head = np.argsort(fam_pop)[-n_head:]
+        hd = u_fam[:, head].mean(axis=1)
+        head_dirs.append(hd / np.linalg.norm(hd))
+
+        # --- Experts: prototype + perturbation families -------------------
+        s1 = 1.0 / np.sqrt(d)
+        s2 = p.expert_out_scale / np.sqrt(f)
+        protos = {
+            "w1": rng.normal(size=(n_fam, d, f)) * s1,
+            "w3": rng.normal(size=(n_fam, d, f)) * s1,
+            "w2": rng.normal(size=(n_fam, f, d)) * s2,
+        }
+        for ei in range(e):
+            fam = ei // p.family_size
+            for name, pr in protos.items():
+                noise = rng.normal(size=pr.shape[1:]) * \
+                    (s1 if name in ("w1", "w3") else s2)
+                w[f"{pre}E{ei}.{name}"] = (
+                    a * pr[fam] + b * noise).astype(np.float32)
+
+    # Easy-domain embeddings: mix in the cross-layer mean head direction so
+    # lower-vocab tokens keep steering toward popular (cached) experts
+    # through the residual stream. Hard rows stay generic -> diffuse
+    # routing that reaches the offloaded tail.
+    hd = np.mean(head_dirs, axis=0)
+    hd /= np.linalg.norm(hd)
+    half = v // 2
+    row_norm = np.linalg.norm(emb[half:], axis=1).mean()
+    mix, keep = p.easy_mix, np.sqrt(1.0 - p.easy_mix ** 2)
+    for i in range(half):
+        r = emb[i] / np.linalg.norm(emb[i])
+        r = mix * hd + keep * r
+        emb[i] = (r / np.linalg.norm(r)) * row_norm
+    w["embed"] = emb.astype(np.float32)
+    return w
+
+
+def expert_tensor_names(l: int, e: int):
+    return [f"L{l}.E{e}.w1", f"L{l}.E{e}.w3", f"L{l}.E{e}.w2"]

@@ -1,0 +1,28 @@
+import numpy as np
+import pytest
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile.configs import TINY, DSV2_MINI  # noqa: E402
+from compile import weightgen  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def tiny_spec():
+    return TINY
+
+
+@pytest.fixture(scope="session")
+def mini_spec():
+    return DSV2_MINI
+
+
+@pytest.fixture(scope="session")
+def tiny_weights(tiny_spec):
+    return weightgen.generate(tiny_spec, seed=3)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,46 @@
+"""BMW weight-bundle format round-trip (binary contract with rust)."""
+
+import numpy as np
+import pytest
+
+from compile import bmw
+
+
+def test_roundtrip(tmp_path, rng):
+    tensors = {
+        "a": rng.normal(size=(3, 4)).astype(np.float32),
+        "b.c": rng.normal(size=(8,)).astype(np.float32),
+        "L0.E1.w2": rng.normal(size=(2, 3, 4)).astype(np.float32),
+    }
+    p = str(tmp_path / "t.bmw")
+    bmw.write_bmw(p, tensors)
+    back = bmw.read_bmw(p)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+
+
+def test_scalarish_and_empty_name_rejected_magic(tmp_path):
+    p = str(tmp_path / "bad.bmw")
+    with open(p, "wb") as f:
+        f.write(b"NOPE")
+    with pytest.raises(ValueError):
+        bmw.read_bmw(p)
+
+
+def test_f64_downcast(tmp_path):
+    t = {"x": np.arange(6, dtype=np.float64).reshape(2, 3)}
+    p = str(tmp_path / "t.bmw")
+    bmw.write_bmw(p, t)
+    back = bmw.read_bmw(p)
+    assert back["x"].dtype == np.float32
+    np.testing.assert_array_equal(back["x"], t["x"].astype(np.float32))
+
+
+def test_layout_is_row_major(tmp_path):
+    """The rust reader assumes C order; verify bytes match C order."""
+    x = np.arange(12, dtype=np.float32).reshape(3, 4)
+    p = str(tmp_path / "t.bmw")
+    bmw.write_bmw(p, {"x": np.asfortranarray(x)})
+    back = bmw.read_bmw(p)
+    np.testing.assert_array_equal(back["x"], x)

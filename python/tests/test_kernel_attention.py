@@ -1,0 +1,88 @@
+"""L1 correctness: Pallas decode attention core vs oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as ka
+from compile.kernels import ref
+
+ATOL = 1e-5
+
+
+def _mk(rng, b, s, h, hd):
+    q = jnp.asarray(rng.normal(size=(b, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    lens = rng.integers(1, s + 1, size=b)
+    mask = (np.arange(s)[None, :] < lens[:, None]).astype(np.float32)
+    return q, k, v, jnp.asarray(mask)
+
+
+@pytest.mark.parametrize("b", [1, 2, 4, 16])
+def test_matches_ref(b):
+    rng = np.random.default_rng(b)
+    q, k, v, m = _mk(rng, b, 32, 4, 16)
+    got = ka.attn_decode_core(q, k, v, m, 0.25)
+    want = ref.attn_decode_core(q, k, v, m, 0.25)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+def test_mask_excludes_positions():
+    """Changing masked-out K/V slots must not change the output."""
+    rng = np.random.default_rng(3)
+    q, k, v, _ = _mk(rng, 2, 16, 2, 8)
+    mask = jnp.asarray(
+        (np.arange(16)[None, :] < np.array([[5], [9]])).astype(np.float32))
+    base = np.asarray(ka.attn_decode_core(q, k, v, mask, 0.3))
+    k2 = np.asarray(k).copy()
+    v2 = np.asarray(v).copy()
+    k2[0, 5:] = 1e3
+    v2[0, 5:] = -1e3
+    k2[1, 9:] = 1e3
+    v2[1, 9:] = -1e3
+    pert = np.asarray(ka.attn_decode_core(
+        jnp.asarray(q), jnp.asarray(k2), jnp.asarray(v2), mask, 0.3))
+    np.testing.assert_allclose(base, pert, atol=ATOL)
+
+
+def test_single_valid_position_returns_its_value():
+    rng = np.random.default_rng(4)
+    q, k, v, _ = _mk(rng, 1, 8, 2, 4)
+    mask = jnp.asarray(np.eye(8, dtype=np.float32)[0][None, :])  # only slot 0
+    out = np.asarray(ka.attn_decode_core(q, k, v, mask, 1.0))
+    np.testing.assert_allclose(out[0], np.asarray(v)[0, 0], atol=ATOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 8]),
+    s=st.sampled_from([4, 16, 128]),
+    h=st.sampled_from([1, 4]),
+    hd=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_matches_ref(b, s, h, hd, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v, m = _mk(rng, b, s, h, hd)
+    scale = 1.0 / np.sqrt(hd)
+    got = np.asarray(ka.attn_decode_core(q, k, v, m, scale))
+    want = np.asarray(ref.attn_decode_core(q, k, v, m, scale))
+    np.testing.assert_allclose(got, want, atol=ATOL)
+
+
+def test_prefill_causal_ref_property():
+    """Prefill oracle: position i must ignore positions > i."""
+    rng = np.random.default_rng(8)
+    s, h, hd = 8, 2, 4
+    q = jnp.asarray(rng.normal(size=(s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(s, h, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(s, h, hd)), jnp.float32)
+    mask = jnp.ones((s,), jnp.float32)
+    base = np.asarray(ref.attn_prefill_core(q, k, v, mask, 0.5))
+    k2, v2 = np.asarray(k).copy(), np.asarray(v).copy()
+    k2[5:], v2[5:] = 99.0, -99.0  # only affects rows >= 5
+    pert = np.asarray(ref.attn_prefill_core(
+        q, jnp.asarray(k2), jnp.asarray(v2), mask, 0.5))
+    np.testing.assert_allclose(base[:5], pert[:5], atol=ATOL)

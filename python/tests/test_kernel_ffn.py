@@ -1,0 +1,78 @@
+"""L1 correctness: Pallas expert FFN vs pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import expert_ffn as ke
+from compile.kernels import ref
+
+ATOL = 1e-5
+
+
+def _mk(rng, t, d, f):
+    h = jnp.asarray(rng.normal(size=(t, d)), jnp.float32)
+    w1 = jnp.asarray(rng.normal(size=(d, f)) / np.sqrt(d), jnp.float32)
+    w3 = jnp.asarray(rng.normal(size=(d, f)) / np.sqrt(d), jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(f, d)) / np.sqrt(f), jnp.float32)
+    return h, w1, w3, w2
+
+
+@pytest.mark.parametrize("t", [1, 2, 4, 8, 16, 128])
+def test_matches_ref_buckets(t):
+    rng = np.random.default_rng(t)
+    h, w1, w3, w2 = _mk(rng, t, 64, 128)
+    got = ke.expert_ffn(h, w1, w3, w2)
+    want = ref.expert_ffn(h, w1, w3, w2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+@pytest.mark.parametrize("block_t", [1, 2, 4, 8])
+def test_grid_tiling_invariant(block_t):
+    """Output must not depend on the token-block size."""
+    rng = np.random.default_rng(9)
+    h, w1, w3, w2 = _mk(rng, 8, 16, 32)
+    got = ke.expert_ffn(h, w1, w3, w2, block_t=block_t)
+    want = ref.expert_ffn(h, w1, w3, w2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+def test_rejects_ragged_blocks():
+    rng = np.random.default_rng(1)
+    h, w1, w3, w2 = _mk(rng, 6, 8, 16)
+    with pytest.raises(ValueError):
+        ke.expert_ffn(h, w1, w3, w2, block_t=4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.sampled_from([1, 2, 4, 8, 16]),
+    d=st.sampled_from([8, 16, 64]),
+    f=st.sampled_from([16, 32, 128]),
+    seed=st.integers(0, 2**16),
+    scale=st.floats(0.01, 10.0),
+)
+def test_hypothesis_shapes_scales(t, d, f, seed, scale):
+    """Property sweep: any bucket shape / weight scale matches the oracle."""
+    rng = np.random.default_rng(seed)
+    h, w1, w3, w2 = _mk(rng, t, d, f)
+    h = h * scale
+    got = np.asarray(ke.expert_ffn(h, w1, w3, w2))
+    want = np.asarray(ref.expert_ffn(h, w1, w3, w2))
+    np.testing.assert_allclose(got, want, atol=ATOL * max(1.0, scale ** 2))
+
+
+def test_zero_input_zero_output():
+    h = jnp.zeros((4, 16), jnp.float32)
+    rng = np.random.default_rng(2)
+    _, w1, w3, w2 = _mk(rng, 4, 16, 32)
+    out = np.asarray(ke.expert_ffn(h, w1, w3, w2))
+    np.testing.assert_array_equal(out, np.zeros_like(out))
+
+
+def test_vmem_estimate_fits():
+    est = ke.vmem_estimate(128, 64, 128)
+    assert est["fits_vmem_16mb"]
+    assert est["total"] == est["activations_in"] + est["weights"] + \
+        est["intermediates"] + est["activations_out"]

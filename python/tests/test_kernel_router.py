@@ -1,0 +1,73 @@
+"""L1 correctness: Pallas router (pre-norm + softmax) vs oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import router as kr
+
+ATOL = 1e-5
+
+
+def _mk(rng, t, d, e, logit_scale=4.0):
+    x = jnp.asarray(rng.normal(size=(t, d)), jnp.float32)
+    g = jnp.asarray(rng.uniform(0.5, 1.5, size=(d,)), jnp.float32)
+    wg = jnp.asarray(rng.normal(size=(d, e)) * logit_scale / np.sqrt(d),
+                     jnp.float32)
+    b = jnp.asarray(rng.exponential(1.0, size=(e,)), jnp.float32)
+    return x, g, wg, b
+
+
+@pytest.mark.parametrize("t", [1, 2, 8, 64, 128])
+def test_matches_ref(t):
+    rng = np.random.default_rng(t)
+    x, g, wg, b = _mk(rng, t, 64, 64)
+    h1, p1 = kr.router(x, g, wg, b)
+    h2, p2 = ref.router(x, g, wg, b)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=ATOL)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), atol=ATOL)
+
+
+def test_probs_are_distribution():
+    rng = np.random.default_rng(5)
+    x, g, wg, b = _mk(rng, 16, 32, 24)
+    _, p = kr.router(x, g, wg, b)
+    p = np.asarray(p)
+    assert (p >= 0).all()
+    np.testing.assert_allclose(p.sum(axis=-1), np.ones(16), atol=1e-5)
+
+
+def test_softmax_stability_large_logits():
+    """Stable softmax must survive large logits without overflow."""
+    rng = np.random.default_rng(6)
+    x, g, wg, b = _mk(rng, 4, 16, 8, logit_scale=500.0)
+    _, p = kr.router(x, g, wg, b)
+    assert np.isfinite(np.asarray(p)).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.sampled_from([1, 2, 4, 16]),
+    d=st.sampled_from([8, 64]),
+    e=st.sampled_from([8, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_matches_ref(t, d, e, seed):
+    rng = np.random.default_rng(seed)
+    x, g, wg, b = _mk(rng, t, d, e)
+    h1, p1 = kr.router(x, g, wg, b)
+    h2, p2 = ref.router(x, g, wg, b)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=ATOL)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), atol=ATOL)
+
+
+def test_bias_shifts_distribution():
+    """A large bias on one expert must dominate routing."""
+    rng = np.random.default_rng(7)
+    x, g, wg, b = _mk(rng, 8, 16, 8)
+    b = np.asarray(b).copy()
+    b[3] += 50.0
+    _, p = kr.router(x, g, wg, jnp.asarray(b))
+    assert (np.argmax(np.asarray(p), axis=-1) == 3).all()

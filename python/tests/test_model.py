@@ -1,0 +1,98 @@
+"""L2 stage composition and reference-model invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_pallas_and_ref_paths_agree(tiny_spec, tiny_weights):
+    """The AOT path (pallas kernels) and the oracle path must produce the
+    same forward pass — this is the L1<->L2 composition check."""
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, tiny_spec.vocab_size, size=6).astype(np.int32)
+    lg_ref, _ = model.reference_forward(tiny_spec, tiny_weights, toks,
+                                        use_pallas=False)
+    lg_pal, _ = model.reference_forward(tiny_spec, tiny_weights, toks,
+                                        use_pallas=True)
+    np.testing.assert_allclose(lg_ref, lg_pal, atol=1e-4)
+
+
+def test_top_k_select_deterministic_ties():
+    probs = np.array([[0.3, 0.3, 0.2, 0.2]])
+    idx, w = model.top_k_select(probs, 2)
+    assert idx.tolist() == [[0, 1]]  # index asc on ties
+    np.testing.assert_allclose(w, [[0.5, 0.5]])
+
+
+def test_top_k_weights_renormalized(rng):
+    probs = rng.dirichlet(np.ones(16), size=8)
+    idx, w = model.top_k_select(probs, 4)
+    np.testing.assert_allclose(w.sum(axis=-1), np.ones(8), atol=1e-6)
+    # selected are the true top-4
+    for r in range(8):
+        top = set(np.argsort(-probs[r])[:4])
+        assert set(idx[r]) == top
+
+
+def test_tae_bounds_and_extremes():
+    # uniform over k -> TAE = 1
+    w = np.full((1, 4), 0.25)
+    np.testing.assert_allclose(model.tae(w, 4), [1.0], atol=1e-6)
+    # delta -> TAE = 0
+    w = np.array([[1.0, 0.0, 0.0, 0.0]])
+    np.testing.assert_allclose(model.tae(w, 4), [0.0], atol=1e-6)
+
+
+def test_moe_combine_equals_dense_sum(tiny_spec, tiny_weights):
+    """group-by-expert combine == direct per-token sum."""
+    rng = np.random.default_rng(1)
+    t, d = 5, tiny_spec.d_model
+    h = jnp.asarray(rng.normal(size=(t, d)), jnp.float32)
+    _, _, layers = model.split_weights(tiny_spec, tiny_weights)
+    lw = layers[0]
+    probs = rng.dirichlet(np.ones(tiny_spec.n_experts), size=t)
+    idx, wts = model.top_k_select(probs, tiny_spec.top_k)
+    got = model.moe_combine(h, idx, wts, lw.experts)
+    want = np.zeros((t, d), np.float32)
+    for ti in range(t):
+        for kk in range(tiny_spec.top_k):
+            e = int(idx[ti, kk])
+            w1, w3, w2 = lw.experts[e]
+            y = np.asarray(ref.expert_ffn(h[ti:ti + 1], w1, w3, w2))[0]
+            want[ti] += wts[ti, kk] * y
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+def test_decode_continues_prefill(tiny_spec, tiny_weights):
+    """reference_decode's first generated token == argmax of prefill logits
+    at the last prompt position."""
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, tiny_spec.vocab_size, size=5).astype(np.int32)
+    logits, _ = model.reference_forward(tiny_spec, tiny_weights, prompt)
+    toks, _, _ = model.reference_decode(tiny_spec, tiny_weights, prompt, 2)
+    assert toks[0] == int(np.argmax(logits[-1]))
+
+
+def test_prefill_padding_invariant(tiny_spec, tiny_weights):
+    """Logits over the real prompt must not depend on padding content —
+    i.e. forward(prompt) is the same for any prompt shorter than max_seq."""
+    rng = np.random.default_rng(3)
+    p5 = rng.integers(0, tiny_spec.vocab_size, size=5).astype(np.int32)
+    lg5, _ = model.reference_forward(tiny_spec, tiny_weights, p5)
+    lg5b, _ = model.reference_forward(tiny_spec, tiny_weights,
+                                      np.concatenate([p5, p5[:3]]))
+    np.testing.assert_allclose(lg5, lg5b[:5], atol=1e-4)
+
+
+def test_trace_shapes(tiny_spec, tiny_weights):
+    rng = np.random.default_rng(4)
+    toks = rng.integers(0, tiny_spec.vocab_size, size=4).astype(np.int32)
+    _, tr = model.reference_forward(tiny_spec, tiny_weights, toks)
+    assert len(tr.layer_topk_idx) == tiny_spec.n_layers
+    for li in range(tiny_spec.n_layers):
+        assert tr.layer_topk_idx[li].shape == (4, tiny_spec.top_k)
+        assert tr.layer_tae[li].shape == (4,)
+        assert ((tr.layer_tae[li] >= 0) & (tr.layer_tae[li] <= 1.0001)).all()

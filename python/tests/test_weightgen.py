@@ -1,0 +1,111 @@
+"""Weight-generator invariants: the engineered regularities the paper's
+mechanism needs must actually hold in the generated bundle (DESIGN.md §3)."""
+
+import numpy as np
+import pytest
+
+from compile import weightgen
+from compile.configs import TINY
+
+
+@pytest.fixture(scope="module")
+def w(tiny_weights):
+    return tiny_weights
+
+
+def _flat_expert(w, l, e):
+    return np.concatenate([w[f"L{l}.E{e}.{n}"].ravel()
+                           for n in ("w1", "w3", "w2")])
+
+
+def _cos(a, b):
+    return float(a @ b / (np.linalg.norm(a) * np.linalg.norm(b)))
+
+
+def test_deterministic(tiny_spec):
+    w1 = weightgen.generate(tiny_spec, seed=3)
+    w2 = weightgen.generate(tiny_spec, seed=3)
+    assert set(w1) == set(w2)
+    for k in w1:
+        np.testing.assert_array_equal(w1[k], w2[k])
+
+
+def test_seed_changes_weights(tiny_spec):
+    w1 = weightgen.generate(tiny_spec, seed=3)
+    w2 = weightgen.generate(tiny_spec, seed=4)
+    assert not np.array_equal(w1["embed"], w2["embed"])
+
+
+def test_all_tensors_present(tiny_spec, w):
+    assert "embed" in w and "final_gain" in w
+    for l in range(tiny_spec.n_layers):
+        for n in ("ln1", "ln2", "wq", "wk", "wv", "wo", "wg", "rbias"):
+            assert f"L{l}.{n}" in w
+        for e in range(tiny_spec.n_experts):
+            for n in ("w1", "w3", "w2"):
+                assert f"L{l}.E{e}.{n}" in w
+
+
+def test_shapes(tiny_spec, w):
+    s = tiny_spec
+    assert w["embed"].shape == (s.vocab_size, s.d_model)
+    assert w["L0.wg"].shape == (s.d_model, s.n_experts)
+    assert w["L0.rbias"].shape == (s.n_experts,)
+    assert w["L0.E0.w1"].shape == (s.d_model, s.d_ff)
+    assert w["L0.E0.w2"].shape == (s.d_ff, s.d_model)
+
+
+def test_within_family_similarity_exceeds_cross(tiny_spec, w):
+    """Core redundancy property: same-family experts are far more similar in
+    weight space than cross-family pairs (enables Fig 4 & substitution)."""
+    fs = weightgen.GenParams.family_size
+    within, cross = [], []
+    for l in range(tiny_spec.n_layers):
+        flats = [_flat_expert(w, l, e) for e in range(tiny_spec.n_experts)]
+        for i in range(tiny_spec.n_experts):
+            for j in range(i + 1, tiny_spec.n_experts):
+                c = _cos(flats[i], flats[j])
+                (within if i // fs == j // fs else cross).append(c)
+    assert np.mean(within) > 0.8, f"within-family cos {np.mean(within)}"
+    assert abs(np.mean(cross)) < 0.2, f"cross-family cos {np.mean(cross)}"
+
+
+def test_router_family_correlation(tiny_spec, w):
+    """Router columns of same-family experts point the same way."""
+    fs = weightgen.GenParams.family_size
+    wg = w["L0.wg"]
+    within, cross = [], []
+    for i in range(tiny_spec.n_experts):
+        for j in range(i + 1, tiny_spec.n_experts):
+            c = _cos(wg[:, i], wg[:, j])
+            (within if i // fs == j // fs else cross).append(c)
+    assert np.mean(within) > 0.6
+    assert np.mean(within) > np.mean(cross) + 0.4
+
+
+def test_popularity_bias_skew(tiny_spec, w):
+    """Exponential bias ⇒ heavy tail: max bias well above median."""
+    for l in range(tiny_spec.n_layers):
+        b = w[f"L{l}.rbias"]
+        assert b.min() >= 0
+        assert b.max() > 2.0 * np.median(b)
+
+
+def test_easy_domain_rows_share_head_direction(tiny_spec, w):
+    """Easy-vocab rows share a common (head-family) direction component;
+    hard rows stay generic."""
+    half = tiny_spec.vocab_size // 2
+    easy = w["embed"][:half]
+    easy_n = easy / np.linalg.norm(easy, axis=1, keepdims=True)
+    mean_dir = easy_n.mean(axis=0)
+    align = easy_n @ (mean_dir / np.linalg.norm(mean_dir))
+    hard = w["embed"][half:]
+    hard_n = hard / np.linalg.norm(hard, axis=1, keepdims=True)
+    hard_align = hard_n @ (mean_dir / np.linalg.norm(mean_dir))
+    assert align.mean() > hard_align.mean() + 0.3
+
+
+def test_expert_param_accounting(tiny_spec):
+    s = tiny_spec
+    assert s.expert_param_count == 3 * s.d_model * s.d_ff
+    assert s.expert_bytes == 4 * s.expert_param_count

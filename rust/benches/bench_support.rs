@@ -1,0 +1,52 @@
+//! Shared bench harness (criterion is unavailable offline): timing loops
+//! with warm-up, and the common model-loading path. Each bench binary is a
+//! plain `main` (harness = false) that prints a paper-style table.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use buddymoe::config::ModelConfig;
+use buddymoe::weights::WeightStore;
+
+/// Time `f` over `iters` iterations after `warmup` discarded ones.
+/// Returns (mean seconds, p95 seconds).
+#[allow(dead_code)]
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p95 = samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)];
+    (mean, p95)
+}
+
+#[allow(dead_code)]
+pub fn artifacts_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[allow(dead_code)]
+pub fn load_model() -> Option<(ModelConfig, Arc<WeightStore>)> {
+    let dir = artifacts_dir();
+    if !dir.join("model_config.json").exists() {
+        eprintln!("SKIP: artifacts not built — run `make artifacts` first");
+        return None;
+    }
+    let cfg = ModelConfig::load(&dir).expect("model config");
+    let store = Arc::new(WeightStore::load(&cfg).expect("weights"));
+    Some((cfg, store))
+}
+
+/// `--fast` shrinks workloads for CI-style runs.
+#[allow(dead_code)]
+pub fn fast_mode() -> bool {
+    std::env::args().any(|a| a == "--fast") || std::env::var("BENCH_FAST").is_ok()
+}

@@ -1,0 +1,81 @@
+//! Figure 8 — PCIe read bandwidth: Base vs BuddyMoE.
+//!
+//! Paper: the Base method (always fetch missing experts from host memory)
+//! uses ~20% more PCIe read bandwidth than BuddyMoE, which resolves most
+//! misses inside GPU memory. We serve the identical workload under both
+//! policies and report demand/prefetch read bytes and effective bandwidth.
+
+mod bench_support;
+
+use std::sync::Arc;
+
+use buddymoe::buddy::BuddyProfile;
+use buddymoe::config::ServingConfig;
+use buddymoe::eval::{build_requests, profile_model, warm_rank_from_profile, TableSettings};
+use buddymoe::model::{Engine, EngineOptions};
+use buddymoe::server::Server;
+
+fn main() {
+    let Some((cfg, store)) = bench_support::load_model() else {
+        return;
+    };
+    let fast = bench_support::fast_mode();
+    let settings = TableSettings {
+        cache_rate: 0.5,
+        n_easy: if fast { 3 } else { 6 },
+        n_hard: if fast { 3 } else { 6 },
+        max_new: if fast { 8 } else { 16 },
+        seed: 42,
+        time_scale: 1.0,
+    };
+    let pc = profile_model(&cfg, store.clone(), if fast { 16 } else { 64 }, 7777).unwrap();
+    let warm = warm_rank_from_profile(&pc);
+
+    println!("# Figure 8 — PCIe read traffic at c = {}\n", settings.cache_rate);
+    println!("| Method | demand MB | prefetch MB | total MB | mean read bw (scaled GB/s) | wall s |");
+    println!("|---|---|---|---|---|---|");
+    let mut totals = Vec::new();
+    for preset in ["original", "buddy-rho3"] {
+        let mut scfg = ServingConfig::default().preset(preset).unwrap();
+        scfg.cache_rate = settings.cache_rate;
+        let buddies =
+            BuddyProfile::build(&pc, &vec![scfg.cft_alpha; cfg.n_layers], scfg.k_max, 1e-3, true)
+                .unwrap();
+        let engine = Engine::new(
+            cfg.clone(),
+            scfg,
+            Arc::clone(&store),
+            Some(buddies),
+            Some(warm.clone()),
+            EngineOptions { time_scale: settings.time_scale, ..Default::default() },
+        )
+        .unwrap();
+        let mut server = Server::new(engine);
+        let t0 = std::time::Instant::now();
+        server.run_offline(build_requests(&cfg, &settings)).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = server
+            .engine
+            .transfer_handle()
+            .with_state(|st| st.pcie.stats.clone());
+        let mb = |b: u64| b as f64 / (1024.0 * 1024.0);
+        let scaled_bw = stats.total_bytes() as f64 * 1600.0 / wall / 1e9;
+        println!(
+            "| {} | {:.2} | {:.2} | {:.2} | {:.2} | {:.1} |",
+            preset,
+            mb(stats.demand_bytes),
+            mb(stats.prefetch_bytes),
+            mb(stats.total_bytes()),
+            scaled_bw,
+            wall
+        );
+        totals.push(stats.total_bytes() as f64);
+        server.engine.shutdown();
+    }
+    if totals.len() == 2 && totals[1] > 0.0 {
+        println!(
+            "\nBase uses {:+.1}% more PCIe read traffic than BuddyMoE (paper: ~+20%)",
+            100.0 * (totals[0] / totals[1] - 1.0)
+        );
+    }
+}

@@ -1,0 +1,128 @@
+//! Figures 1, 4, 6, 7/9 — the structural/motivational figures.
+//!
+//! * Fig 1: model size vs accelerator memory scaling gap (static series
+//!   reconstructed from public specs, as the paper does).
+//! * Fig 4: expert weight-similarity heatmap statistics (layer 0).
+//! * Fig 6: per-expert activation distribution (layer 11).
+//! * Fig 7/9: co-activation matrix sparsity structure (layer 1).
+
+mod bench_support;
+
+use buddymoe::eval::profile_model;
+use buddymoe::profilecollect::expert_similarity_matrix;
+
+fn main() {
+    let Some((cfg, store)) = bench_support::load_model() else {
+        return;
+    };
+
+    // ---- Fig 1: the scaling gap (relative to 2017 levels) ---------------
+    println!("# Figure 1 — model size vs single-accelerator memory (relative, 2017=1)\n");
+    println!("| year | flagship model | params (B) | rel. model | device | mem GB | rel. mem |");
+    println!("|---|---|---|---|---|---|---|");
+    let series = [
+        (2017, "Transformer-big", 0.21, "P100", 16.0),
+        (2019, "GPT-2", 1.5, "V100", 32.0),
+        (2020, "GPT-3", 175.0, "A100", 40.0),
+        (2022, "PaLM", 540.0, "A100", 80.0),
+        (2024, "DeepSeek-V3 (MoE)", 671.0, "H100", 80.0),
+        (2025, "frontier MoE (est.)", 2000.0, "B200", 192.0),
+    ];
+    let (p0, m0) = (series[0].2, series[0].4);
+    for (y, m, p, d, mem) in series {
+        println!(
+            "| {y} | {m} | {p} | {:.0}x | {d} | {mem} | {:.1}x |",
+            p / p0,
+            mem / m0
+        );
+    }
+    println!("\n-> model growth ~9500x vs memory growth ~12x over the window (the paper's widening gap).\n");
+
+    // ---- Fig 4: weight similarity ---------------------------------------
+    let sim = expert_similarity_matrix(&cfg, &store, 0).unwrap();
+    let fs = cfg.family_size;
+    let (mut win, mut cross, mut nw, mut nc) = (0.0f64, 0.0f64, 0usize, 0usize);
+    let mut bright = 0usize;
+    for i in 0..cfg.n_experts {
+        for j in (i + 1)..cfg.n_experts {
+            let s = sim[i][j] as f64;
+            if s > 0.5 {
+                bright += 1;
+            }
+            if i / fs == j / fs {
+                win += s;
+                nw += 1;
+            } else {
+                cross += s;
+                nc += 1;
+            }
+        }
+    }
+    println!("# Figure 4 — expert similarity heatmap (layer 0)\n");
+    println!(
+        "within-family mean cos: {:.3} | cross-family: {:.3} | pairs >0.5: {} (bright regions)",
+        win / nw as f64,
+        cross / nc as f64,
+        bright
+    );
+
+    // ---- Figs 6 + 7/9: routing structure --------------------------------
+    let n = if bench_support::fast_mode() { 24 } else { 64 };
+    let pc = profile_model(&cfg, store, n, 7777).unwrap();
+
+    let l = (cfg.n_layers - 1).min(11);
+    let acts = &pc.layer(l).activations;
+    let total: f64 = acts.iter().sum();
+    let mut ranked: Vec<f64> = acts.clone();
+    ranked.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let top8: f64 = ranked.iter().take(8).sum();
+    let gini = {
+        let mut s = acts.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len() as f64;
+        let sum: f64 = s.iter().sum();
+        let cum: f64 = s
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| (i as f64 + 1.0) * x)
+            .sum();
+        (2.0 * cum) / (n * sum) - (n + 1.0) / n
+    };
+    println!("\n# Figure 6 — activation distribution (layer {l})\n");
+    println!(
+        "top-8/{} experts take {:.1}% of routing events | gini {:.3} | max/median {:.1}",
+        cfg.n_experts,
+        100.0 * top8 / total,
+        gini,
+        ranked[0] / ranked[cfg.n_experts / 2].max(1.0)
+    );
+
+    let co = pc.layer(1.min(cfg.n_layers - 1));
+    let mut cells: Vec<f64> = Vec::new();
+    for i in 0..cfg.n_experts {
+        for j in (i + 1)..cfg.n_experts {
+            cells.push(co.m(i, j));
+        }
+    }
+    let tot: f64 = cells.iter().sum();
+    cells.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let top5pct: f64 = cells.iter().take(cells.len() / 20).sum();
+    let mut same_fam_mass = 0.0;
+    for i in 0..cfg.n_experts {
+        for j in (i + 1)..cfg.n_experts {
+            if i / fs == j / fs {
+                same_fam_mass += co.m(i, j);
+            }
+        }
+    }
+    println!("\n# Figure 7/9 — co-activation heatmap (layer 1)\n");
+    println!(
+        "top 5% of expert pairs hold {:.1}% of co-activation mass (sparse bright cells); \
+         same-family pairs ({:.1}% of pairs) hold {:.1}% of mass",
+        100.0 * top5pct / tot,
+        100.0 * (cfg.n_experts * (fs - 1) / 2) as f64
+            / (cfg.n_experts * (cfg.n_experts - 1) / 2) as f64,
+        100.0 * same_fam_mass / tot
+    );
+    println!("\nraw matrices: `buddymoe figures --out artifacts/figures` dumps JSON for plotting.");
+}

@@ -1,0 +1,158 @@
+//! Table 1 — Impact of cache misses and BuddyMoE on MoE inference.
+//!
+//! Paper rows:
+//!   Baseline (on demand)   9-10 ms   lossless
+//!   Prefetch hit           ~0        lossless
+//!   Prefetch miss          9-10 ms   lossless
+//!   BuddyMoE hit           ~0        lossless
+//!   BuddyMoE miss          ~0        minimal loss
+//!
+//! We measure each scenario directly against the PCIe simulator + the
+//! substitution engine: the "latency" column is the measured wall time the
+//! serving thread is stalled for one missing expert.
+
+mod bench_support;
+
+
+
+use buddymoe::buddy::{BuddyProfile, SubstitutionEngine, TokenRouting};
+use buddymoe::config::{MissPolicy, ServingConfig};
+use buddymoe::memory::{EvictPolicy, ExpertCache, PcieSim, TransferEngine, TransferPriority};
+use buddymoe::profilecollect::ProfileCollector;
+use buddymoe::stats::Counters;
+use buddymoe::util::rng::Rng;
+use buddymoe::weights::ExpertKey;
+
+fn main() {
+    let Some((cfg, store)) = bench_support::load_model() else {
+        return;
+    };
+    let scfg = ServingConfig::default();
+    let iters = if bench_support::fast_mode() { 5 } else { 20 };
+
+    // A deterministic profile with clear buddy structure for the miss rows.
+    let mut pc = ProfileCollector::new(cfg.n_layers, cfg.n_experts);
+    let mut rng = Rng::new(7);
+    for _ in 0..2000 {
+        let fam = rng.below(cfg.n_experts / cfg.family_size);
+        let a = fam * cfg.family_size + rng.below(cfg.family_size);
+        let b = fam * cfg.family_size + rng.below(cfg.family_size);
+        if a != b {
+            pc.record(0, &[a, b], &[0.6, 0.4]).unwrap();
+        }
+    }
+    let profile = BuddyProfile::build(&pc, &vec![0.9; cfg.n_layers], 16, 1e-3, true).unwrap();
+
+    let spawn = |cap: usize| {
+        let cache = ExpertCache::new(cfg.n_layers, cfg.n_experts, cap, EvictPolicy::Lru);
+        let pcie = PcieSim::new(scfg.pcie_bandwidth, scfg.pcie_base_latency, scfg.transfer_bytes_scale);
+        TransferEngine::spawn(cache, pcie, store.clone(), 1.0)
+    };
+
+    println!("# Table 1 — miss-handling latency per missing expert\n");
+    println!("| Scenario | Latency (ms) | Accuracy |");
+    println!("|---|---|---|");
+
+    // --- Baseline (on demand): synchronous PCIe fetch -------------------
+    {
+        let h = spawn(cfg.n_experts);
+        let mut lat = Vec::new();
+        for i in 0..iters {
+            let key = ExpertKey::new(0, i % cfg.n_experts);
+            let t0 = std::time::Instant::now();
+            h.request(key, TransferPriority::Demand);
+            h.wait_gpu(key);
+            lat.push(t0.elapsed().as_secs_f64() * 1e3);
+            // evict it again so the next iteration misses
+            h.with_state(|st| {
+                for e in 0..cfg.n_experts {
+                    let k = ExpertKey::new(0, e);
+                    if st.cache.is_gpu(k) {
+                        st.cache.abort_load(k);
+                    }
+                }
+            });
+            h.drain_arrivals();
+        }
+        let mean = lat.iter().sum::<f64>() / lat.len() as f64;
+        println!("| Baseline (on demand) | {mean:.2} | lossless |");
+        h.shutdown();
+    }
+
+    // --- Prefetch hit: expert already resident when needed --------------
+    {
+        let h = spawn(cfg.n_experts);
+        let key = ExpertKey::new(0, 3);
+        h.request(key, TransferPriority::Prefetch);
+        h.wait_gpu(key);
+        let (mean, _) = bench_support::time_it(3, iters, || {
+            assert!(h.with_state(|st| st.cache.is_gpu(key)));
+        });
+        println!("| Prefetch hit | {:.4} | lossless |", mean * 1e3);
+        h.shutdown();
+    }
+
+    // --- Prefetch miss: mispredicted; pay a full synchronous fetch ------
+    {
+        let h = spawn(cfg.n_experts);
+        let mut lat = Vec::new();
+        for i in 0..iters {
+            // Prefetcher warmed the WRONG expert (transfer already done by
+            // verification time); the needed one misses and pays a full
+            // synchronous load.
+            let wrong = ExpertKey::new(1, (2 * i) % cfg.n_experts);
+            let needed = ExpertKey::new(1, (2 * i + 1) % cfg.n_experts);
+            h.request(wrong, TransferPriority::Prefetch);
+            h.wait_gpu(wrong);
+            let t0 = std::time::Instant::now();
+            h.request(needed, TransferPriority::Demand);
+            h.wait_gpu(needed);
+            lat.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        let mean = lat.iter().sum::<f64>() / lat.len() as f64;
+        println!("| Prefetch miss | {mean:.2} | lossless |");
+        h.shutdown();
+    }
+
+    // --- BuddyMoE hit: same as prefetch hit (no intervention) -----------
+    println!("| BuddyMoE hit | ~0 (= prefetch hit) | lossless |");
+
+    // --- BuddyMoE miss: substitution instead of a fetch -----------------
+    {
+        // Residency: every second expert resident, so each missing expert
+        // has same-family buddies on the GPU.
+        let mut residency = vec![false; cfg.n_experts];
+        for (e, r) in residency.iter_mut().enumerate() {
+            *r = e % 2 == 0;
+        }
+        let mut eng = SubstitutionEngine::new(&profile);
+        eng.gates.tau = 0.2;
+        eng.gates.beta = 1.0;
+        let mut counters = Counters::new();
+        let mut rng = Rng::new(11);
+        let (mean, p95) = bench_support::time_it(10, iters.max(100), || {
+            // Two resident (2, 40) + four missing experts: the batch-level
+            // CPU fraction stays below beta while the misses substitute.
+            let mut toks = vec![TokenRouting {
+                selected: vec![2, 40, 5, 17, 33, 57],
+                weights: vec![1.0 / 6.0; 6],
+            }];
+            let _ = eng.apply(
+                0,
+                &mut toks,
+                &residency,
+                MissPolicy::Buddy,
+                None,
+                &mut counters,
+                &mut rng,
+            );
+        });
+        println!(
+            "| BuddyMoE miss | {:.4} (p95 {:.4}) | minimal loss (see Tables 2-4) |",
+            mean * 1e3,
+            p95 * 1e3
+        );
+        assert!(counters.get("substitutions") > 0, "substitutions must fire");
+    }
+    println!("\npaper: on-demand and prefetch-miss cost 9-10 ms; hits and buddy substitution ~0.");
+}

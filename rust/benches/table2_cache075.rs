@@ -1,0 +1,29 @@
+//! Table 2 — performance at cache rate c = 0.75.
+//!
+//! Paper (DeepSeek-V2-Lite on llama.cpp + A100): Original 0.735 acc /
+//! 34.23 t/s; Random 0.55 / 39.67; best BuddyMoE (tau=0.95, |B|=16, rho=3)
+//! 0.695 / 36.75. Expected *shape* here (absolute t/s differs — CPU PJRT
+//! testbed): accuracy Original > Buddy(rho=3) > Buddy > Random; throughput
+//! Random > Buddy > Original.
+
+mod bench_support;
+
+use buddymoe::eval::{run_table, table_methods, TableSettings};
+
+fn main() {
+    let Some((cfg, store)) = bench_support::load_model() else {
+        return;
+    };
+    let fast = bench_support::fast_mode();
+    let settings = TableSettings {
+        cache_rate: 0.75,
+        n_easy: if fast { 3 } else { 8 },
+        n_hard: if fast { 3 } else { 8 },
+        max_new: if fast { 8 } else { 16 },
+        seed: 42,
+        time_scale: 1.0,
+    };
+    let (_rows, md) = run_table(&cfg, store, &settings, &table_methods()).expect("table 2");
+    println!("# Table 2 — {md}");
+    println!("paper reference: Original 0.735/34.23, Random 0.55/39.67, Buddy(rho3) 0.695/36.75");
+}

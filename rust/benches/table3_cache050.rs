@@ -1,0 +1,35 @@
+//! Table 3 — performance at cache rate c = 0.50.
+//!
+//! Paper: Random collapses to 0.23 acc; BuddyMoE(tau=0.99,|B|=2) holds
+//! 0.53 with modest throughput; Buddy(rho=3) best avg 0.635 at 30.21 t/s.
+
+mod bench_support;
+
+use buddymoe::eval::{run_table, MethodSpec, TableSettings};
+
+fn main() {
+    let Some((cfg, store)) = bench_support::load_model() else {
+        return;
+    };
+    let fast = bench_support::fast_mode();
+    let settings = TableSettings {
+        cache_rate: 0.50,
+        n_easy: if fast { 3 } else { 8 },
+        n_hard: if fast { 3 } else { 8 },
+        max_new: if fast { 8 } else { 16 },
+        seed: 42,
+        time_scale: 1.0,
+    };
+    // Table 3 adds the strict (tau=0.99, |B|=2) row.
+    let methods = vec![
+        MethodSpec::new("Original (on-demand)", "original"),
+        MethodSpec::new("Random", "random"),
+        MethodSpec::new("BuddyMoE t=0.99 |B|=2", "buddy-strict"),
+        MethodSpec::new("BuddyMoE t=0.95 |B|=16", "buddy-wide"),
+        MethodSpec::new("BuddyMoE t=0.95 |B|=16 rho=3", "buddy-rho3"),
+        MethodSpec::new("BuddyMoE t=0.95 |B|=16 rho=4", "buddy-rho4"),
+    ];
+    let (_rows, md) = run_table(&cfg, store, &settings, &methods).expect("table 3");
+    println!("# Table 3 — {md}");
+    println!("paper reference: Random 0.23/33.14 (unusable), Buddy(strict) 0.53/28.95, Buddy(rho3) 0.635/30.21");
+}

@@ -1,0 +1,142 @@
+//! Runtime admission gates (paper §3.1).
+//!
+//! Strict sequence: (1) the **TAE gate** decides whether this token
+//! tolerates substitution at all; (2) the **distribution gate** decides
+//! whether the batch-level CPU-residency fraction makes substitution too
+//! risky. Only if both pass does buddy selection (Ψ) run.
+
+use crate::util::math::{percentile, prob_margin, tae};
+
+/// Gate thresholds (paper symbols).
+#[derive(Debug, Clone, Copy)]
+pub struct GateParams {
+    /// TAE threshold τ: forbid substitution when TAE ≤ τ.
+    pub tau: f64,
+    /// Optional margin threshold γ: also forbid when p_max − p_2nd ≥ γ.
+    pub margin_gamma: Option<f64>,
+    /// Distribution threshold β: bypass when CPU fraction δ ≥ β.
+    pub beta: f64,
+    /// Optional temperature for TAE smoothing (paper: T ∈ [0.8, 1.2]).
+    pub temperature: Option<f64>,
+}
+
+impl Default for GateParams {
+    fn default() -> Self {
+        Self { tau: 0.95, margin_gamma: None, beta: 0.9, temperature: None }
+    }
+}
+
+/// Re-normalize top-k weights under temperature T: w_i ∝ w_i^(1/T).
+///
+/// Equivalent to softmax(z/T) restricted to the selected set when w came
+/// from softmax(z) renormalized — exponent rules compose.
+pub fn temperature_renorm(weights: &[f32], t: f64) -> Vec<f32> {
+    let inv = (1.0 / t) as f32;
+    let mut w: Vec<f32> = weights.iter().map(|&x| x.max(1e-30).powf(inv)).collect();
+    let sum: f32 = w.iter().sum();
+    for x in w.iter_mut() {
+        *x /= sum;
+    }
+    w
+}
+
+/// TAE gate: `true` = substitution ALLOWED for this token.
+///
+/// Low TAE = peaky routing = sensitive token = forbid (paper Eq. 1 rule:
+/// forbid when TAE ≤ τ). With `margin_gamma`, also forbid when the top-2
+/// margin is large: forbid iff (TAE ≤ τ) ∨ (margin ≥ γ).
+pub fn tae_gate(topk_weights: &[f32], p: &GateParams) -> bool {
+    let t = match p.temperature {
+        Some(temp) => tae(&temperature_renorm(topk_weights, temp)),
+        None => tae(topk_weights),
+    };
+    if (t as f64) <= p.tau {
+        return false;
+    }
+    if let Some(gamma) = p.margin_gamma {
+        if (prob_margin(topk_weights) as f64) >= gamma {
+            return false;
+        }
+    }
+    true
+}
+
+/// Distribution gate: `true` = substitution ALLOWED for this micro-batch.
+///
+/// δ = |requested ∩ CPU| / |requested| (paper Eq. 2); bypass replacement
+/// (return false) when δ ≥ β — too many offloaded experts means broad
+/// replacement would compound errors.
+pub fn distribution_gate(cpu_requested: usize, total_requested: usize, beta: f64) -> bool {
+    if total_requested == 0 {
+        return true;
+    }
+    let delta = cpu_requested as f64 / total_requested as f64;
+    delta < beta
+}
+
+/// Percentile calibration of τ (paper §3.1 (iii)): pick τ as the p-th
+/// percentile of a layer's observed TAE distribution so the gate adapts
+/// across models and domains.
+pub fn calibrate_tau_percentile(observed_taes: &[f32], p: f64) -> f64 {
+    if observed_taes.is_empty() {
+        return 0.0;
+    }
+    percentile(observed_taes, p) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peaky_token_forbidden() {
+        let p = GateParams { tau: 0.5, ..Default::default() };
+        assert!(!tae_gate(&[0.97, 0.01, 0.01, 0.01], &p)); // TAE ~ 0.06
+        assert!(tae_gate(&[0.3, 0.25, 0.25, 0.2], &p)); // TAE ~ 0.99
+    }
+
+    #[test]
+    fn tau_one_forbids_everything() {
+        let p = GateParams { tau: 1.0, ..Default::default() };
+        assert!(!tae_gate(&[0.25, 0.25, 0.25, 0.25], &p));
+    }
+
+    #[test]
+    fn margin_gate_extra_caution() {
+        let p = GateParams {
+            tau: 0.1,
+            margin_gamma: Some(0.3),
+            ..Default::default()
+        };
+        // High TAE but large top-2 margin -> forbidden by margin.
+        assert!(!tae_gate(&[0.55, 0.2, 0.15, 0.1], &p));
+        // Small margin -> allowed.
+        assert!(tae_gate(&[0.3, 0.27, 0.23, 0.2], &p));
+    }
+
+    #[test]
+    fn temperature_smooths_tae() {
+        let w = [0.7f32, 0.2, 0.07, 0.03];
+        let hot = temperature_renorm(&w, 1.2); // T > 1 flattens
+        let cold = temperature_renorm(&w, 0.8); // T < 1 sharpens
+        assert!(crate::util::math::tae(&hot) > crate::util::math::tae(&w));
+        assert!(crate::util::math::tae(&cold) < crate::util::math::tae(&w));
+        assert!((hot.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn distribution_gate_threshold() {
+        assert!(distribution_gate(1, 10, 0.5)); // δ=0.1 < β
+        assert!(!distribution_gate(5, 10, 0.5)); // δ=0.5 >= β
+        assert!(!distribution_gate(10, 10, 0.5));
+        assert!(distribution_gate(0, 0, 0.5)); // empty batch allowed
+    }
+
+    #[test]
+    fn calibration_matches_percentile() {
+        let taes: Vec<f32> = (0..100).map(|i| i as f32 / 100.0).collect();
+        let tau = calibrate_tau_percentile(&taes, 10.0);
+        assert!((tau - 0.099).abs() < 0.02);
+        assert_eq!(calibrate_tau_percentile(&[], 10.0), 0.0);
+    }
+}

@@ -1,0 +1,22 @@
+//! The paper's contribution: buddy-expert identification and runtime
+//! substitution.
+//!
+//! * [`profile`] — offline: conditional co-activation q_{j|i} (Eq. 4) →
+//!   CFT buddy lists (Eqs. 5–6).
+//! * [`gates`] — runtime admission: Token Activating Entropy gate (Eq. 1)
+//!   with temperature smoothing / percentile calibration / margin option,
+//!   and the batch-level expert-distribution gate (Eq. 2).
+//! * [`score`] — the buddy selection priority score Ψ (Eq. 3).
+//! * [`substitute`] — Algorithm 1: the runtime replacement engine with the
+//!   per-token uniqueness constraint, search rank H, and replacement
+//!   budget ρ; also implements the Random and Drop baselines.
+
+mod gates;
+mod profile;
+mod score;
+mod substitute;
+
+pub use gates::{calibrate_tau_percentile, distribution_gate, tae_gate, temperature_renorm, GateParams};
+pub use profile::{BuddyList, BuddyProfile};
+pub use score::{psi, PsiParams};
+pub use substitute::{SlotDecision, SubEvent, SubstitutionEngine, TokenRouting};

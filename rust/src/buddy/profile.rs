@@ -1,0 +1,281 @@
+//! Offline buddy-list construction (paper §3.2–§3.3).
+//!
+//! For each pivot i: sort peers by q_{j|i} descending to get the sequence
+//! π_i, then take the minimal prefix whose cumulative conditional mass
+//! reaches the Cumulative Frequency Threshold α (Eq. 5). The buddy list
+//! B_l(i; α) is that prefix (Eq. 6), capped at K_max, and guaranteed
+//! non-empty for any pivot with nonzero activity.
+
+use anyhow::{bail, Result};
+
+use crate::profilecollect::ProfileCollector;
+use crate::util::json::{num, obj, Json};
+
+/// Ranked buddy list for one pivot expert.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BuddyList {
+    /// (buddy expert, q_{buddy|pivot}) in descending q.
+    pub ranked: Vec<(usize, f64)>,
+}
+
+impl BuddyList {
+    pub fn len(&self) -> usize {
+        self.ranked.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ranked.is_empty()
+    }
+
+    /// Rank (1-based, as in Algorithm 1) of an expert, if present.
+    pub fn rank_of(&self, expert: usize) -> Option<usize> {
+        self.ranked.iter().position(|&(e, _)| e == expert).map(|p| p + 1)
+    }
+}
+
+/// Per-layer, per-pivot buddy lists plus the α schedule that produced them.
+#[derive(Debug, Clone)]
+pub struct BuddyProfile {
+    pub n_layers: usize,
+    pub n_experts: usize,
+    pub alphas: Vec<f64>,
+    pub k_max: usize,
+    lists: Vec<Vec<BuddyList>>, // [layer][pivot]
+}
+
+impl BuddyProfile {
+    /// Build from collected co-activation statistics.
+    ///
+    /// * `alphas` — per-layer CFT α (pass a single repeated value for a
+    ///   uniform threshold; the per-layer schedule implements the paper's
+    ///   layer-wise heterogeneity calibration).
+    /// * `eps` — Laplace smoothing added to co-activation rows.
+    /// * `use_weighted` — rank by probability-weighted co-activations
+    ///   instead of binary counts.
+    pub fn build(
+        collector: &ProfileCollector,
+        alphas: &[f64],
+        k_max: usize,
+        eps: f64,
+        use_weighted: bool,
+    ) -> Result<Self> {
+        if alphas.len() != collector.n_layers() {
+            bail!(
+                "alpha schedule length {} != n_layers {}",
+                alphas.len(),
+                collector.n_layers()
+            );
+        }
+        if k_max == 0 {
+            bail!("k_max must be >= 1");
+        }
+        let mut lists = Vec::with_capacity(collector.n_layers());
+        let mut n_experts = 0;
+        for (l, &alpha) in alphas.iter().enumerate() {
+            if !(0.0 < alpha && alpha <= 1.0) {
+                bail!("alpha must be in (0,1], got {alpha}");
+            }
+            let co = collector.layer(l);
+            n_experts = co.n_experts;
+            let mut layer_lists = Vec::with_capacity(co.n_experts);
+            for i in 0..co.n_experts {
+                let q = co.q_given(i, eps, use_weighted);
+                let mut order: Vec<usize> = (0..co.n_experts).filter(|&j| j != i).collect();
+                order.sort_by(|&a, &b| {
+                    q[b].partial_cmp(&q[a])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.cmp(&b))
+                });
+                let mut ranked = Vec::new();
+                let mut cum = 0.0;
+                for &j in &order {
+                    if q[j] <= 0.0 && !ranked.is_empty() {
+                        break; // only zero-mass peers remain
+                    }
+                    ranked.push((j, q[j]));
+                    cum += q[j];
+                    if cum >= alpha || ranked.len() >= k_max {
+                        break;
+                    }
+                }
+                // t_i(alpha) >= 1 for any pivot with nonzero activity; for
+                // fully inactive pivots (q all zero without smoothing) keep
+                // the top-1 peer anyway so runtime lookups never fail.
+                layer_lists.push(BuddyList { ranked });
+            }
+            lists.push(layer_lists);
+        }
+        Ok(Self {
+            n_layers: collector.n_layers(),
+            n_experts,
+            alphas: alphas.to_vec(),
+            k_max,
+            lists,
+        })
+    }
+
+    pub fn list(&self, layer: usize, pivot: usize) -> &BuddyList {
+        &self.lists[layer][pivot]
+    }
+
+    /// |B_l(i; α)| distribution for one layer (paper reports compactness).
+    pub fn list_sizes(&self, layer: usize) -> Vec<usize> {
+        self.lists[layer].iter().map(|b| b.len()).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let layers: Vec<Json> = self
+            .lists
+            .iter()
+            .map(|layer| {
+                Json::Arr(
+                    layer
+                        .iter()
+                        .map(|bl| {
+                            Json::Arr(
+                                bl.ranked
+                                    .iter()
+                                    .map(|&(e, q)| {
+                                        Json::Arr(vec![num(e as f64), num(q)])
+                                    })
+                                    .collect(),
+                            )
+                        })
+                        .collect(),
+                )
+            })
+            .collect();
+        obj(vec![
+            ("n_layers", num(self.n_layers as f64)),
+            ("n_experts", num(self.n_experts as f64)),
+            ("k_max", num(self.k_max as f64)),
+            (
+                "alphas",
+                Json::Arr(self.alphas.iter().map(|&a| num(a)).collect()),
+            ),
+            ("lists", Json::Arr(layers)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut lists = Vec::new();
+        for layer in j.get("lists")?.as_arr()? {
+            let mut layer_lists = Vec::new();
+            for bl in layer.as_arr()? {
+                let ranked = bl
+                    .as_arr()?
+                    .iter()
+                    .map(|p| {
+                        let pair = p.as_arr()?;
+                        Ok((pair[0].as_usize()?, pair[1].as_f64()?))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                layer_lists.push(BuddyList { ranked });
+            }
+            lists.push(layer_lists);
+        }
+        Ok(Self {
+            n_layers: j.get("n_layers")?.as_usize()?,
+            n_experts: j.get("n_experts")?.as_usize()?,
+            k_max: j.get("k_max")?.as_usize()?,
+            alphas: j
+                .get("alphas")?
+                .as_arr()?
+                .iter()
+                .map(|a| a.as_f64())
+                .collect::<Result<Vec<_>, _>>()?,
+            lists,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Collector where expert 0 co-activates mostly with 1, some with 2.
+    fn skewed_collector() -> ProfileCollector {
+        let mut p = ProfileCollector::new(1, 4);
+        for _ in 0..6 {
+            p.record(0, &[0, 1], &[0.6, 0.4]).unwrap();
+        }
+        for _ in 0..3 {
+            p.record(0, &[0, 2], &[0.6, 0.4]).unwrap();
+        }
+        p.record(0, &[0, 3], &[0.6, 0.4]).unwrap();
+        p
+    }
+
+    #[test]
+    fn cft_prefix_minimal() {
+        let p = skewed_collector();
+        // q = [_, .6, .3, .1]; alpha=0.55 -> just {1}; alpha=0.8 -> {1,2}.
+        let b = BuddyProfile::build(&p, &[0.55], 8, 0.0, false).unwrap();
+        assert_eq!(
+            b.list(0, 0).ranked.iter().map(|x| x.0).collect::<Vec<_>>(),
+            vec![1]
+        );
+        let b = BuddyProfile::build(&p, &[0.8], 8, 0.0, false).unwrap();
+        assert_eq!(
+            b.list(0, 0).ranked.iter().map(|x| x.0).collect::<Vec<_>>(),
+            vec![1, 2]
+        );
+    }
+
+    #[test]
+    fn k_max_caps_lists() {
+        let p = skewed_collector();
+        let b = BuddyProfile::build(&p, &[1.0], 2, 0.0, false).unwrap();
+        assert!(b.list(0, 0).len() <= 2);
+    }
+
+    #[test]
+    fn lists_nonempty_with_smoothing() {
+        let p = ProfileCollector::new(1, 4); // no activity at all
+        let b = BuddyProfile::build(&p, &[0.5], 4, 1e-3, false).unwrap();
+        for i in 0..4 {
+            assert!(!b.list(0, i).is_empty(), "pivot {i} empty");
+            // Pivot never appears in its own list.
+            assert!(b.list(0, i).ranked.iter().all(|&(e, _)| e != i));
+        }
+    }
+
+    #[test]
+    fn ranked_descending() {
+        let p = skewed_collector();
+        let b = BuddyProfile::build(&p, &[1.0], 8, 1e-6, false).unwrap();
+        let r = &b.list(0, 0).ranked;
+        for w in r.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+        assert_eq!(b.list(0, 0).rank_of(r[0].0), Some(1));
+    }
+
+    #[test]
+    fn alpha_schedule_validated() {
+        let p = skewed_collector();
+        assert!(BuddyProfile::build(&p, &[0.5, 0.5], 4, 0.0, false).is_err());
+        assert!(BuddyProfile::build(&p, &[0.0], 4, 0.0, false).is_err());
+        assert!(BuddyProfile::build(&p, &[0.5], 0, 0.0, false).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = skewed_collector();
+        let b = BuddyProfile::build(&p, &[0.9], 4, 1e-3, true).unwrap();
+        let back = BuddyProfile::from_json(&b.to_json()).unwrap();
+        assert_eq!(back.n_experts, b.n_experts);
+        assert_eq!(back.list(0, 0), b.list(0, 0));
+        assert_eq!(back.alphas, b.alphas);
+    }
+}

@@ -1,0 +1,73 @@
+//! Buddy selection priority score Ψ (paper Eq. 3):
+//!
+//! Ψ_l(j | i, x) = q_{j|i} · (1 + η·ẑ_j(x)) · (1 − κ·hop(j)) · d^{reuse}
+//!
+//! where ẑ_j is the normalized router logit of the candidate on this token
+//! (local compatibility), hop(j) counts cross-partition hops (0 on the same
+//! GPU), and d < 1 is the multiplicative diversity discount applied each
+//! time the candidate has already been picked for this token.
+
+#[derive(Debug, Clone, Copy)]
+pub struct PsiParams {
+    /// Local-compatibility weight η (default 0 per paper).
+    pub eta: f64,
+    /// Cross-link penalty κ (default 0 per paper).
+    pub kappa: f64,
+    /// Diversity discount factor in (0, 1].
+    pub diversity_discount: f64,
+}
+
+impl Default for PsiParams {
+    fn default() -> Self {
+        Self { eta: 0.0, kappa: 0.0, diversity_discount: 0.5 }
+    }
+}
+
+/// Compute Ψ for one candidate.
+///
+/// * `q` — global co-activation similarity q_{j|i}.
+/// * `z_hat` — normalized router logit of candidate j on this token
+///   (pass 0.0 when unavailable).
+/// * `hops` — cross-partition hops to reach j.
+/// * `reuse_count` — times j was already chosen for this token.
+pub fn psi(q: f64, z_hat: f64, hops: usize, reuse_count: usize, p: &PsiParams) -> f64 {
+    let local = 1.0 + p.eta * z_hat;
+    let topo = (1.0 - p.kappa * hops as f64).max(0.0);
+    q * local * topo * p.diversity_discount.powi(reuse_count as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_reduce_to_q_order() {
+        let p = PsiParams::default();
+        assert!(psi(0.5, 10.0, 3, 0, &p) > psi(0.4, -10.0, 0, 0, &p));
+    }
+
+    #[test]
+    fn eta_boosts_compatible_candidates() {
+        let p = PsiParams { eta: 0.5, ..Default::default() };
+        assert!(psi(0.4, 1.0, 0, 0, &p) > psi(0.4, 0.0, 0, 0, &p));
+        assert!(psi(0.4, -1.0, 0, 0, &p) < psi(0.4, 0.0, 0, 0, &p));
+    }
+
+    #[test]
+    fn kappa_penalizes_hops_and_clamps() {
+        let p = PsiParams { kappa: 0.3, ..Default::default() };
+        assert!(psi(0.5, 0.0, 1, 0, &p) < psi(0.5, 0.0, 0, 0, &p));
+        // Never negative even for many hops.
+        assert!(psi(0.5, 0.0, 10, 0, &p) >= 0.0);
+    }
+
+    #[test]
+    fn reuse_discount_compounds() {
+        let p = PsiParams { diversity_discount: 0.5, ..Default::default() };
+        let s0 = psi(0.8, 0.0, 0, 0, &p);
+        let s1 = psi(0.8, 0.0, 0, 1, &p);
+        let s2 = psi(0.8, 0.0, 0, 2, &p);
+        assert!((s1 - s0 * 0.5).abs() < 1e-12);
+        assert!((s2 - s0 * 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,528 @@
+//! Algorithm 1 — Buddy Expert Substitution — plus the Random and Drop
+//! baselines (paper §4, §5.1).
+//!
+//! Runs immediately after top-k selection, before expert scheduling: for
+//! every token, every selected expert that is not GPU-resident is either
+//! substituted with a resident buddy (subject to the TAE and distribution
+//! gates, search rank H, per-token uniqueness, and the replacement budget
+//! ρ), fetched on demand, or dropped — depending on the miss policy.
+//!
+//! The paper implements this as a CUDA kernel (one block per token, one
+//! thread per top-k slot, shared-memory CAS for uniqueness). Here it is the
+//! L3 hot path: per-token scratch sets give the same uniqueness guarantee
+//! without cross-token synchronization; the `micro_hotpath` bench verifies
+//! the paper's claim that this logic is negligible next to expert compute.
+
+use crate::buddy::gates::{distribution_gate, tae_gate, GateParams};
+use crate::buddy::profile::BuddyProfile;
+use crate::buddy::score::{psi, PsiParams};
+use crate::config::MissPolicy;
+use crate::stats::Counters;
+use crate::util::rng::Rng;
+
+/// One token's routing decision (post top-k, pre substitution).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TokenRouting {
+    /// Selected experts, descending renormalized probability.
+    pub selected: Vec<usize>,
+    /// Renormalized top-k weights aligned with `selected`.
+    pub weights: Vec<f32>,
+}
+
+/// Outcome for one (token, slot).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotDecision {
+    /// Expert was GPU-resident; unchanged.
+    Keep,
+    /// Substituted with a resident buddy.
+    Substitute { to: usize, rank: usize },
+    /// Must be fetched over PCIe (demand load).
+    Fetch,
+    /// Dropped from the computation (Drop baseline).
+    Dropped,
+}
+
+/// Record of one substitution (telemetry / tests).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubEvent {
+    pub token: usize,
+    pub slot: usize,
+    pub from: usize,
+    pub to: usize,
+    pub rank: usize,
+    pub psi: f64,
+}
+
+/// The substitution engine for one layer invocation.
+pub struct SubstitutionEngine<'a> {
+    pub profile: &'a BuddyProfile,
+    pub gates: GateParams,
+    pub psi_params: PsiParams,
+    /// Maximum buddy search rank H (Algorithm 1).
+    pub search_h: usize,
+    /// Per-token replacement budget ρ (None = unlimited).
+    pub rho: Option<usize>,
+    /// Cross-partition hop counts per expert (all zero on a single GPU).
+    pub hops: Option<&'a [usize]>,
+}
+
+impl<'a> SubstitutionEngine<'a> {
+    pub fn new(profile: &'a BuddyProfile) -> Self {
+        Self {
+            profile,
+            gates: GateParams::default(),
+            psi_params: PsiParams::default(),
+            search_h: 16,
+            rho: Some(3),
+            hops: None,
+        }
+    }
+
+    /// Apply the miss policy to a micro-batch at `layer`.
+    ///
+    /// * `residency` — Algorithm 1's mask M over this layer's experts.
+    /// * `full_probs` — per-token full router probabilities (for the η
+    ///   local-compatibility term); pass `None` to skip.
+    ///
+    /// Mutates `tokens` in place (substituted slots point at the buddy) and
+    /// returns per-slot decisions plus substitution events.
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply(
+        &self,
+        layer: usize,
+        tokens: &mut [TokenRouting],
+        residency: &[bool],
+        policy: MissPolicy,
+        full_probs: Option<&[Vec<f32>]>,
+        counters: &mut Counters,
+        rng: &mut Rng,
+    ) -> (Vec<Vec<SlotDecision>>, Vec<SubEvent>) {
+        // Batch-level distribution gate (Eq. 2): δ over unique requested.
+        let mut requested = vec![false; residency.len()];
+        for t in tokens.iter() {
+            for &e in &t.selected {
+                requested[e] = true;
+            }
+        }
+        let total_req = requested.iter().filter(|&&r| r).count();
+        let cpu_req = (0..residency.len())
+            .filter(|&e| requested[e] && !residency[e])
+            .count();
+        let batch_gate_ok = distribution_gate(cpu_req, total_req, self.gates.beta);
+        if !batch_gate_ok && policy == MissPolicy::Buddy {
+            counters.inc("gate_dist_blocked_batches");
+        }
+
+        let mut decisions = Vec::with_capacity(tokens.len());
+        let mut events = Vec::new();
+        let resident_list: Vec<usize> = (0..residency.len()).filter(|&e| residency[e]).collect();
+
+        for (ti, tok) in tokens.iter_mut().enumerate() {
+            let token_gate_ok = tae_gate(&tok.weights, &self.gates);
+            let mut budget = self.rho.unwrap_or(usize::MAX);
+            let mut reuse: Vec<u16> = Vec::new(); // (expert, count) compact
+            let mut reuse_ids: Vec<usize> = Vec::new();
+            let mut slot_dec = Vec::with_capacity(tok.selected.len());
+            let mut dropped_any = false;
+
+            for slot in 0..tok.selected.len() {
+                let e = tok.selected[slot];
+                counters.inc("slots_total");
+                if residency[e] {
+                    counters.inc("slots_resident");
+                    slot_dec.push(SlotDecision::Keep);
+                    continue;
+                }
+                counters.inc("slots_miss");
+                let dec = match policy {
+                    MissPolicy::OnDemand => SlotDecision::Fetch,
+                    MissPolicy::Drop => SlotDecision::Dropped,
+                    MissPolicy::Random => {
+                        let in_set = |cand: usize, sel: &[usize]| sel.contains(&cand);
+                        let avail: Vec<usize> = resident_list
+                            .iter()
+                            .copied()
+                            .filter(|&c| !in_set(c, &tok.selected))
+                            .collect();
+                        if avail.is_empty() {
+                            SlotDecision::Fetch
+                        } else {
+                            let to = avail[rng.below(avail.len())];
+                            SlotDecision::Substitute { to, rank: 0 }
+                        }
+                    }
+                    MissPolicy::Buddy => {
+                        if !token_gate_ok {
+                            counters.inc("gate_tae_blocked");
+                            SlotDecision::Fetch
+                        } else if !batch_gate_ok {
+                            counters.inc("gate_dist_blocked");
+                            SlotDecision::Fetch
+                        } else if budget == 0 {
+                            counters.inc("budget_blocked");
+                            SlotDecision::Fetch
+                        } else {
+                            self.pick_buddy(
+                                layer,
+                                e,
+                                &tok.selected,
+                                residency,
+                                full_probs.map(|p| p[ti].as_slice()),
+                                &reuse_ids,
+                                &reuse,
+                            )
+                            .map(|(to, rank, score)| {
+                                events.push(SubEvent {
+                                    token: ti,
+                                    slot,
+                                    from: e,
+                                    to,
+                                    rank,
+                                    psi: score,
+                                });
+                                SlotDecision::Substitute { to, rank }
+                            })
+                            .unwrap_or_else(|| {
+                                counters.inc("no_buddy_resident");
+                                SlotDecision::Fetch
+                            })
+                        }
+                    }
+                };
+                match dec {
+                    SlotDecision::Substitute { to, .. } => {
+                        counters.inc("substitutions");
+                        tok.selected[slot] = to;
+                        budget = budget.saturating_sub(1);
+                        match reuse_ids.iter().position(|&x| x == to) {
+                            Some(p) => reuse[p] += 1,
+                            None => {
+                                reuse_ids.push(to);
+                                reuse.push(1);
+                            }
+                        }
+                    }
+                    SlotDecision::Fetch => counters.inc("fetches"),
+                    SlotDecision::Dropped => {
+                        counters.inc("drops");
+                        dropped_any = true;
+                    }
+                    SlotDecision::Keep => {}
+                }
+                slot_dec.push(dec);
+            }
+
+            // Drop baseline: renormalize surviving weights. When every
+            // slot dropped (all selected experts offloaded) the token gets
+            // a zero MoE contribution — the residual stream carries it.
+            if dropped_any {
+                let kept: f32 = slot_dec
+                    .iter()
+                    .zip(&tok.weights)
+                    .filter(|(d, _)| !matches!(d, SlotDecision::Dropped))
+                    .map(|(_, &w)| w)
+                    .sum();
+                for (d, w) in slot_dec.iter().zip(tok.weights.iter_mut()) {
+                    if matches!(d, SlotDecision::Dropped) {
+                        *w = 0.0;
+                    } else if kept > 0.0 {
+                        *w /= kept;
+                    }
+                }
+            }
+            decisions.push(slot_dec);
+        }
+        (decisions, events)
+    }
+
+    /// Scan the pivot's buddy list up to rank H and return the best
+    /// GPU-resident candidate not already in the token's active set.
+    #[allow(clippy::too_many_arguments)]
+    fn pick_buddy(
+        &self,
+        layer: usize,
+        pivot: usize,
+        active: &[usize],
+        residency: &[bool],
+        probs: Option<&[f32]>,
+        reuse_ids: &[usize],
+        reuse_counts: &[u16],
+    ) -> Option<(usize, usize, f64)> {
+        let list = self.profile.list(layer, pivot);
+        let mut best: Option<(usize, usize, f64)> = None;
+        for (r0, &(cand, q)) in list.ranked.iter().enumerate().take(self.search_h) {
+            if !residency[cand] || active.contains(&cand) {
+                continue;
+            }
+            let z_hat = probs.map(|p| p[cand] as f64).unwrap_or(0.0);
+            let hops = self.hops.map(|h| h[cand]).unwrap_or(0);
+            let reuse = reuse_ids
+                .iter()
+                .position(|&x| x == cand)
+                .map(|p| reuse_counts[p] as usize)
+                .unwrap_or(0);
+            let score = psi(q, z_hat, hops, reuse, &self.psi_params);
+            if best.map(|(_, _, b)| score > b).unwrap_or(true) {
+                best = Some((cand, r0 + 1, score));
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profilecollect::ProfileCollector;
+
+    /// 6-expert layer; pivot 0 buddies with [1, 2, 3] (descending).
+    fn profile() -> BuddyProfile {
+        let mut p = ProfileCollector::new(1, 6);
+        for _ in 0..8 {
+            p.record(0, &[0, 1], &[0.6, 0.4]).unwrap();
+        }
+        for _ in 0..4 {
+            p.record(0, &[0, 2], &[0.6, 0.4]).unwrap();
+        }
+        for _ in 0..2 {
+            p.record(0, &[0, 3], &[0.6, 0.4]).unwrap();
+        }
+        // Give the other pivots some mass too.
+        for _ in 0..3 {
+            p.record(0, &[4, 5], &[0.5, 0.5]).unwrap();
+            p.record(0, &[1, 2], &[0.5, 0.5]).unwrap();
+            p.record(0, &[3, 5], &[0.5, 0.5]).unwrap();
+        }
+        BuddyProfile::build(&p, &[1.0], 6, 1e-6, false).unwrap()
+    }
+
+    fn diffuse_token(selected: Vec<usize>) -> TokenRouting {
+        let k = selected.len();
+        TokenRouting { selected, weights: vec![1.0 / k as f32; k] }
+    }
+
+    fn engine(p: &BuddyProfile) -> SubstitutionEngine<'_> {
+        let mut e = SubstitutionEngine::new(p);
+        e.gates.tau = 0.5; // diffuse test tokens pass
+        e.gates.beta = 1.0; // distribution gate permissive unless tested
+        e
+    }
+
+    #[test]
+    fn substitutes_top_ranked_resident_buddy() {
+        let p = profile();
+        let eng = engine(&p);
+        // Expert 0 missing; buddy 1 not resident, buddy 2 resident.
+        let residency = [false, false, true, true, true, true];
+        let mut toks = vec![diffuse_token(vec![0, 4])];
+        let mut c = Counters::new();
+        let mut rng = Rng::new(1);
+        let (dec, ev) = eng.apply(
+            0, &mut toks, &residency, MissPolicy::Buddy, None, &mut c, &mut rng,
+        );
+        assert_eq!(dec[0][0], SlotDecision::Substitute { to: 2, rank: 2 });
+        assert_eq!(toks[0].selected, vec![2, 4]);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].from, 0);
+        assert_eq!(c.get("substitutions"), 1);
+    }
+
+    #[test]
+    fn uniqueness_constraint_respected() {
+        let p = profile();
+        let eng = engine(&p);
+        // Token already uses expert 1; pivot 0's best buddy is 1 -> must
+        // fall through to 2.
+        let residency = [false, true, true, true, true, true];
+        let mut toks = vec![diffuse_token(vec![0, 1])];
+        let mut c = Counters::new();
+        let mut rng = Rng::new(1);
+        let (dec, _) = eng.apply(
+            0, &mut toks, &residency, MissPolicy::Buddy, None, &mut c, &mut rng,
+        );
+        assert_eq!(dec[0][0], SlotDecision::Substitute { to: 2, rank: 2 });
+        // No duplicate experts in the final set.
+        let mut s = toks[0].selected.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), toks[0].selected.len());
+    }
+
+    #[test]
+    fn search_rank_h_limits() {
+        let p = profile();
+        let mut eng = engine(&p);
+        eng.search_h = 1; // only rank-1 buddy (expert 1) may be used
+        let residency = [false, false, true, true, true, true];
+        let mut toks = vec![diffuse_token(vec![0, 4])];
+        let mut c = Counters::new();
+        let mut rng = Rng::new(1);
+        let (dec, _) = eng.apply(
+            0, &mut toks, &residency, MissPolicy::Buddy, None, &mut c, &mut rng,
+        );
+        assert_eq!(dec[0][0], SlotDecision::Fetch);
+        assert_eq!(c.get("no_buddy_resident"), 1);
+    }
+
+    #[test]
+    fn tae_gate_blocks_peaky_tokens() {
+        let p = profile();
+        let mut eng = engine(&p);
+        eng.gates.tau = 0.95;
+        let residency = [false, true, true, true, true, true];
+        let mut toks = vec![TokenRouting {
+            selected: vec![0, 4],
+            weights: vec![0.98, 0.02], // peaky -> sensitive
+        }];
+        let mut c = Counters::new();
+        let mut rng = Rng::new(1);
+        let (dec, _) = eng.apply(
+            0, &mut toks, &residency, MissPolicy::Buddy, None, &mut c, &mut rng,
+        );
+        assert_eq!(dec[0][0], SlotDecision::Fetch);
+        assert_eq!(c.get("gate_tae_blocked"), 1);
+    }
+
+    #[test]
+    fn distribution_gate_blocks_broad_replacement() {
+        let p = profile();
+        let mut eng = engine(&p);
+        eng.gates.beta = 0.4; // δ = 2 cpu / 3 requested = 0.67 >= β
+        let residency = [false, true, true, false, true, true];
+        let mut toks = vec![diffuse_token(vec![0, 3, 1])];
+        let mut c = Counters::new();
+        let mut rng = Rng::new(1);
+        let (dec, _) = eng.apply(
+            0, &mut toks, &residency, MissPolicy::Buddy, None, &mut c, &mut rng,
+        );
+        assert_eq!(dec[0][0], SlotDecision::Fetch);
+        assert_eq!(dec[0][1], SlotDecision::Fetch);
+        assert!(c.get("gate_dist_blocked") >= 2);
+    }
+
+    #[test]
+    fn rho_budget_limits_substitutions() {
+        let p = profile();
+        let mut eng = engine(&p);
+        eng.rho = Some(1);
+        // Experts 0 and 3 both missing; only one substitution allowed.
+        // (4 is resident so the batch-level δ = 2/3 < β = 1.0 passes.)
+        let residency = [false, true, true, false, true, true];
+        let mut toks = vec![diffuse_token(vec![0, 3, 4])];
+        let mut c = Counters::new();
+        let mut rng = Rng::new(1);
+        eng.gates.beta = 1.0;
+        let (dec, _) = eng.apply(
+            0, &mut toks, &residency, MissPolicy::Buddy, None, &mut c, &mut rng,
+        );
+        let subs = dec[0]
+            .iter()
+            .filter(|d| matches!(d, SlotDecision::Substitute { .. }))
+            .count();
+        assert_eq!(subs, 1);
+        assert_eq!(c.get("budget_blocked"), 1);
+    }
+
+    #[test]
+    fn on_demand_always_fetches() {
+        let p = profile();
+        let eng = engine(&p);
+        let residency = [false, true, true, true, true, true];
+        let mut toks = vec![diffuse_token(vec![0, 1])];
+        let mut c = Counters::new();
+        let mut rng = Rng::new(1);
+        let (dec, ev) = eng.apply(
+            0, &mut toks, &residency, MissPolicy::OnDemand, None, &mut c, &mut rng,
+        );
+        assert_eq!(dec[0][0], SlotDecision::Fetch);
+        assert!(ev.is_empty());
+        assert_eq!(toks[0].selected, vec![0, 1]); // unchanged
+    }
+
+    #[test]
+    fn random_substitutes_resident_non_active() {
+        let p = profile();
+        let eng = engine(&p);
+        let residency = [false, true, true, true, true, true];
+        let mut toks = vec![diffuse_token(vec![0, 1])];
+        let mut c = Counters::new();
+        let mut rng = Rng::new(7);
+        let (dec, _) = eng.apply(
+            0, &mut toks, &residency, MissPolicy::Random, None, &mut c, &mut rng,
+        );
+        match dec[0][0] {
+            SlotDecision::Substitute { to, .. } => {
+                assert!(residency[to]);
+                assert_ne!(to, 1, "must not duplicate an active expert");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn drop_renormalizes_weights() {
+        let p = profile();
+        let eng = engine(&p);
+        let residency = [false, true, true, true, true, true];
+        let mut toks = vec![TokenRouting {
+            selected: vec![0, 1, 2],
+            weights: vec![0.5, 0.3, 0.2],
+        }];
+        let mut c = Counters::new();
+        let mut rng = Rng::new(1);
+        let (dec, _) = eng.apply(
+            0, &mut toks, &residency, MissPolicy::Drop, None, &mut c, &mut rng,
+        );
+        assert_eq!(dec[0][0], SlotDecision::Dropped);
+        assert_eq!(toks[0].weights[0], 0.0);
+        let sum: f32 = toks[0].weights.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!((toks[0].weights[1] - 0.6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn eta_prefers_locally_compatible_buddy() {
+        let p = profile();
+        let mut eng = engine(&p);
+        eng.psi_params.eta = 10.0; // exaggerate local compatibility
+        let residency = [false, true, true, true, true, true];
+        // Full probs make expert 3 (rank 3, q small) hugely compatible.
+        let mut probs = vec![0.0f32; 6];
+        probs[1] = 0.01;
+        probs[2] = 0.01;
+        probs[3] = 0.9;
+        let mut toks = vec![diffuse_token(vec![0, 4])];
+        let mut c = Counters::new();
+        let mut rng = Rng::new(1);
+        let (dec, _) = eng.apply(
+            0,
+            &mut toks,
+            &residency,
+            MissPolicy::Buddy,
+            Some(&[probs]),
+            &mut c,
+            &mut rng,
+        );
+        assert!(matches!(dec[0][0], SlotDecision::Substitute { to: 3, .. }));
+    }
+
+    #[test]
+    fn counters_consistency() {
+        let p = profile();
+        let eng = engine(&p);
+        let residency = [false, false, true, true, true, true];
+        let mut toks = vec![diffuse_token(vec![0, 1, 4]), diffuse_token(vec![2, 3])];
+        let mut c = Counters::new();
+        let mut rng = Rng::new(1);
+        eng.apply(0, &mut toks, &residency, MissPolicy::Buddy, None, &mut c, &mut rng);
+        assert_eq!(c.get("slots_total"), 5);
+        assert_eq!(
+            c.get("slots_total"),
+            c.get("slots_resident") + c.get("slots_miss")
+        );
+        assert_eq!(
+            c.get("slots_miss"),
+            c.get("substitutions") + c.get("fetches") + c.get("drops")
+        );
+    }
+}

@@ -1,0 +1,9 @@
+//! Configuration: the model spec (read from `artifacts/model_config.json`,
+//! whose source of truth is `python/compile/configs.py`) and the serving
+//! config (cache rate, PCIe model, gate parameters, miss policy).
+
+mod model;
+mod serving;
+
+pub use model::{ArtifactInfo, ModelConfig};
+pub use serving::{MissPolicy, PrefetchKind, ServingConfig};

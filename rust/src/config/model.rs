@@ -1,0 +1,210 @@
+//! Model architecture config, deserialized from artifacts/model_config.json.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One AOT artifact (stage x bucket) from the manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub file: String,
+    pub num_args: usize,
+    pub arg_shapes: Vec<Vec<usize>>,
+    pub tuple_output: bool,
+}
+
+/// Mirror of `python/compile/configs.py::ModelSpec` plus artifact manifest.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub n_layers: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub rms_eps: f64,
+    pub token_buckets: Vec<usize>,
+    pub batch_buckets: Vec<usize>,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    pub weights_file: String,
+    pub hlo_dir: String,
+    pub golden_file: String,
+    pub family_size: usize,
+    /// Directory the config was loaded from; artifact paths resolve under it.
+    pub root: PathBuf,
+}
+
+impl ModelConfig {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("model_config.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing model_config.json")?;
+        Self::from_json(&j, dir)
+    }
+
+    pub fn from_json(j: &Json, root: &Path) -> Result<Self> {
+        let spec = j.get("spec")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.get("artifacts")?.as_obj()? {
+            let shapes = a
+                .get("arg_shapes")?
+                .as_arr()?
+                .iter()
+                .map(|s| s.as_usize_vec())
+                .collect::<Result<Vec<_>, _>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    file: a.get("file")?.as_str()?.to_string(),
+                    num_args: a.get("num_args")?.as_usize()?,
+                    arg_shapes: shapes,
+                    tuple_output: a.get("tuple_output")?.as_bool()?,
+                },
+            );
+        }
+        Ok(Self {
+            name: spec.get("name")?.as_str()?.to_string(),
+            vocab_size: spec.get("vocab_size")?.as_usize()?,
+            d_model: spec.get("d_model")?.as_usize()?,
+            n_heads: spec.get("n_heads")?.as_usize()?,
+            head_dim: spec.get("head_dim")?.as_usize()?,
+            n_layers: spec.get("n_layers")?.as_usize()?,
+            n_experts: spec.get("n_experts")?.as_usize()?,
+            top_k: spec.get("top_k")?.as_usize()?,
+            d_ff: spec.get("d_ff")?.as_usize()?,
+            max_seq: spec.get("max_seq")?.as_usize()?,
+            rms_eps: spec.get("rms_eps")?.as_f64()?,
+            token_buckets: spec.get("token_buckets")?.as_usize_vec()?,
+            batch_buckets: spec.get("batch_buckets")?.as_usize_vec()?,
+            artifacts,
+            weights_file: j.get("weights_file")?.as_str()?.to_string(),
+            hlo_dir: j.get("hlo_dir")?.as_str()?.to_string(),
+            golden_file: j.get("golden_file")?.as_str()?.to_string(),
+            family_size: j.get("weightgen")?.get("family_size")?.as_usize()?,
+            root: root.to_path_buf(),
+        })
+    }
+
+    /// f32 parameters in one expert (w1 + w3 + w2).
+    pub fn expert_param_count(&self) -> usize {
+        3 * self.d_model * self.d_ff
+    }
+
+    pub fn expert_bytes(&self) -> usize {
+        4 * self.expert_param_count()
+    }
+
+    /// Total experts across all layers.
+    pub fn total_experts(&self) -> usize {
+        self.n_layers * self.n_experts
+    }
+
+    /// Smallest token bucket >= n (serving pads token groups up to this).
+    pub fn token_bucket_for(&self, n: usize) -> Option<usize> {
+        self.token_buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    pub fn batch_bucket_for(&self, n: usize) -> Option<usize> {
+        self.batch_buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    pub fn hlo_path(&self, artifact: &str) -> Result<PathBuf> {
+        let info = self
+            .artifacts
+            .get(artifact)
+            .with_context(|| format!("unknown artifact {artifact}"))?;
+        Ok(self.root.join(&self.hlo_dir).join(&info.file))
+    }
+
+    pub fn weights_path(&self) -> PathBuf {
+        self.root.join(&self.weights_file)
+    }
+
+    pub fn golden_path(&self) -> PathBuf {
+        self.root.join(&self.golden_file)
+    }
+
+    /// A tiny hand-built config for unit tests that never touch artifacts.
+    pub fn test_tiny() -> Self {
+        Self {
+            name: "test-tiny".into(),
+            vocab_size: 64,
+            d_model: 16,
+            n_heads: 2,
+            head_dim: 8,
+            n_layers: 3,
+            n_experts: 8,
+            top_k: 2,
+            d_ff: 32,
+            max_seq: 16,
+            rms_eps: 1e-5,
+            token_buckets: vec![1, 2, 4, 8, 16],
+            batch_buckets: vec![1, 2, 4],
+            artifacts: BTreeMap::new(),
+            weights_file: "weights.bmw".into(),
+            hlo_dir: "hlo".into(),
+            golden_file: "golden/decode.json".into(),
+            family_size: 4,
+            root: PathBuf::from("/nonexistent"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "spec": {"name": "x", "vocab_size": 8, "d_model": 4, "n_heads": 2,
+               "head_dim": 2, "n_layers": 1, "n_experts": 4, "top_k": 2,
+               "d_ff": 8, "max_seq": 4, "rms_eps": 1e-5,
+               "token_buckets": [1, 2, 4], "batch_buckets": [1, 2]},
+      "weights_file": "weights.bmw",
+      "hlo_dir": "hlo",
+      "golden_file": "golden/decode.json",
+      "weightgen": {"seed": 7, "family_size": 2, "n_families": 2},
+      "artifacts": {
+        "expert_T1": {"file": "expert_T1.hlo.txt", "num_args": 4,
+                       "arg_shapes": [[1,4],[4,8],[4,8],[8,4]],
+                       "tuple_output": false}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let j = Json::parse(SAMPLE).unwrap();
+        let c = ModelConfig::from_json(&j, Path::new("/tmp/a")).unwrap();
+        assert_eq!(c.n_experts, 4);
+        assert_eq!(c.expert_param_count(), 3 * 4 * 8);
+        assert_eq!(c.artifacts["expert_T1"].num_args, 4);
+        assert!(!c.artifacts["expert_T1"].tuple_output);
+        assert_eq!(
+            c.hlo_path("expert_T1").unwrap(),
+            PathBuf::from("/tmp/a/hlo/expert_T1.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let c = ModelConfig::test_tiny();
+        assert_eq!(c.token_bucket_for(1), Some(1));
+        assert_eq!(c.token_bucket_for(3), Some(4));
+        assert_eq!(c.token_bucket_for(16), Some(16));
+        assert_eq!(c.token_bucket_for(17), None);
+    }
+
+    #[test]
+    fn expert_bytes() {
+        let c = ModelConfig::test_tiny();
+        assert_eq!(c.expert_bytes(), 4 * 3 * 16 * 32);
+        assert_eq!(c.total_experts(), 24);
+    }
+}

@@ -1,0 +1,310 @@
+//! Serving-time configuration: memory budget, PCIe model, BuddyMoE gate
+//! parameters, miss policy, and the preset grids used by Tables 2–4.
+
+use anyhow::{bail, Result};
+
+/// What to do when a selected expert is CPU-resident (paper §5.1 baselines
+/// plus the BuddyMoE policy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MissPolicy {
+    /// Synchronously fetch the true expert over PCIe (lossless, slow).
+    OnDemand,
+    /// Substitute a uniformly random GPU-resident expert (fast, lossy).
+    Random,
+    /// Drop the expert from the computation and renormalize the rest.
+    Drop,
+    /// BuddyMoE: gated substitution with a CFT buddy list; falls back to
+    /// OnDemand when gates forbid or no buddy is resident.
+    Buddy,
+}
+
+impl MissPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "on-demand" | "original" => MissPolicy::OnDemand,
+            "random" => MissPolicy::Random,
+            "drop" => MissPolicy::Drop,
+            "buddy" => MissPolicy::Buddy,
+            other => bail!("unknown miss policy '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MissPolicy::OnDemand => "on-demand",
+            MissPolicy::Random => "random",
+            MissPolicy::Drop => "drop",
+            MissPolicy::Buddy => "buddy",
+        }
+    }
+}
+
+/// Expert prefetcher flavour (paper §2.3 related systems).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefetchKind {
+    /// No prefetching: every miss is an on-demand load.
+    None,
+    /// Historical activation frequency (MoE-Infinity-style).
+    TopFreq,
+    /// Run layer l+1's router on layer l's hidden state (Pre-gated-style,
+    /// the Figure 3 pipeline).
+    PreGate,
+    /// Oracle with a controllable false-negative rate (Table 1 harness).
+    OracleNoisy,
+}
+
+impl PrefetchKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "none" => PrefetchKind::None,
+            "topfreq" => PrefetchKind::TopFreq,
+            "pregate" => PrefetchKind::PreGate,
+            "oracle" => PrefetchKind::OracleNoisy,
+            other => bail!("unknown prefetcher '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PrefetchKind::None => "none",
+            PrefetchKind::TopFreq => "topfreq",
+            PrefetchKind::PreGate => "pregate",
+            PrefetchKind::OracleNoisy => "oracle",
+        }
+    }
+}
+
+/// Full serving configuration. Field names follow the paper's symbols.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Fraction of each layer's experts kept GPU-resident (paper `c`).
+    pub cache_rate: f64,
+    /// Simulated PCIe bandwidth GPU<-CPU, bytes/second.
+    pub pcie_bandwidth: f64,
+    /// Simulated fixed per-transfer latency, seconds.
+    pub pcie_base_latency: f64,
+    /// Artificial scaling of expert bytes for the latency model, so one
+    /// mini expert (384 KiB real) costs what one DeepSeek-V2-Lite expert
+    /// (~thousands of KiB over 16 GB/s, i.e. ~10 ms) costs in the paper.
+    pub transfer_bytes_scale: f64,
+    pub miss_policy: MissPolicy,
+    pub prefetch: PrefetchKind,
+    /// Oracle prefetcher false-negative rate (Table 1 harness only).
+    pub oracle_miss_rate: f64,
+    /// Max experts prefetched per (layer, step).
+    pub prefetch_width: usize,
+
+    // --- BuddyMoE gates (paper §3.1) ---
+    /// TAE threshold tau: forbid substitution when TAE <= tau.
+    pub tae_tau: f64,
+    /// Optional probability-margin threshold gamma (None = disabled).
+    pub margin_gamma: Option<f64>,
+    /// Distribution-gate threshold beta: bypass substitution when the
+    /// CPU-resident fraction of requested experts >= beta.
+    pub dist_beta: f64,
+    /// CFT alpha for buddy-list construction.
+    pub cft_alpha: f64,
+    /// Cap on buddy-list length (paper K_max).
+    pub k_max: usize,
+    /// Maximum buddy search rank at runtime (paper Algorithm 1 H).
+    pub search_h: usize,
+    /// Per-token replacement budget rho (None = unlimited).
+    pub rho: Option<usize>,
+    /// Psi score: local router-logit compatibility weight eta.
+    pub eta: f64,
+    /// Psi score: cross-partition hop penalty kappa.
+    pub kappa: f64,
+    /// Psi score: multiplicative diversity discount for re-picking the
+    /// same buddy for one token.
+    pub diversity_discount: f64,
+
+    // --- serving shape ---
+    pub max_batch: usize,
+    pub batch_timeout_us: u64,
+    pub seed: u64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self {
+            cache_rate: 0.75,
+            // 16 GB/s PCIe 4.0-ish with 10us base latency; bytes scale
+            // chosen so one expert transfer ~= 9.8 ms (paper Table 1 says
+            // 9-10 ms): 98304 B * 1600 / 16e9 ~= 9.8e-3 s.
+            pcie_bandwidth: 16e9,
+            pcie_base_latency: 10e-6,
+            transfer_bytes_scale: 1600.0,
+            miss_policy: MissPolicy::Buddy,
+            prefetch: PrefetchKind::TopFreq,
+            oracle_miss_rate: 0.0,
+            prefetch_width: 12,
+            tae_tau: 0.95,
+            margin_gamma: None,
+            dist_beta: 0.9,
+            cft_alpha: 0.8,
+            k_max: 16,
+            search_h: 16,
+            rho: Some(3),
+            eta: 0.0,
+            kappa: 0.0,
+            diversity_discount: 0.5,
+            max_batch: 8,
+            batch_timeout_us: 2_000,
+            seed: 0x00ddf00d,
+        }
+    }
+}
+
+impl ServingConfig {
+    /// Simulated seconds to move one expert of `bytes` real bytes.
+    pub fn transfer_seconds(&self, bytes: usize) -> f64 {
+        self.pcie_base_latency + (bytes as f64 * self.transfer_bytes_scale) / self.pcie_bandwidth
+    }
+
+    /// Experts per layer kept on GPU for `n_experts` total.
+    pub fn gpu_experts_per_layer(&self, n_experts: usize) -> usize {
+        ((n_experts as f64) * self.cache_rate).round() as usize
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.cache_rate) {
+            bail!("cache_rate must be in [0,1]");
+        }
+        if !(0.0..=1.0).contains(&self.tae_tau) {
+            bail!("tae_tau must be in [0,1]");
+        }
+        if !(0.0..=1.0).contains(&self.dist_beta) {
+            bail!("dist_beta must be in [0,1]");
+        }
+        if !(0.0..=1.0).contains(&self.cft_alpha) || self.cft_alpha == 0.0 {
+            bail!("cft_alpha must be in (0,1]");
+        }
+        if self.k_max == 0 || self.search_h == 0 {
+            bail!("k_max and search_h must be >= 1");
+        }
+        if self.pcie_bandwidth <= 0.0 {
+            bail!("pcie_bandwidth must be positive");
+        }
+        Ok(())
+    }
+
+    /// Named presets matching the paper's table rows.
+    ///
+    /// Mapping note (EXPERIMENTS.md §Params): in the paper's tables the
+    /// "τ" column acts as an *aggressiveness* knob — τ=0.95/|B|=16 rows
+    /// substitute far more (and lose more accuracy) than τ=0.75/|B|=4.
+    /// Under the Eq. 1 gate semantics (forbid when TAE ≤ τ) a larger τ is
+    /// *more* conservative, so we map each row to gate settings that
+    /// reproduce its observed behaviour: wide lists pair with a permissive
+    /// TAE threshold, tight lists with a strict one.
+    pub fn preset(mut self, name: &str) -> Result<Self> {
+        match name {
+            "original" => {
+                self.miss_policy = MissPolicy::OnDemand;
+            }
+            "random" => {
+                self.miss_policy = MissPolicy::Random;
+            }
+            "buddy-tight" => {
+                // Paper row (τ=0.75, |B|=4): conservative substitution.
+                self.miss_policy = MissPolicy::Buddy;
+                self.tae_tau = 0.80;
+                self.cft_alpha = 0.5;
+                self.k_max = 4;
+                self.search_h = 4;
+                self.rho = None;
+            }
+            "buddy-wide" => {
+                // Paper row (τ=0.95, |B|=16, no ρ): aggressive — wide
+                // lists, permissive gate, unlimited replacements.
+                self.miss_policy = MissPolicy::Buddy;
+                self.tae_tau = 0.45;
+                self.cft_alpha = 0.9;
+                self.k_max = 16;
+                self.search_h = 16;
+                self.rho = None;
+            }
+            "buddy-rho3" => {
+                // Paper row (τ=0.95, |B|=16, ρ=3): aggressive but budgeted
+                // — the paper's best configuration.
+                self = self.preset("buddy-wide")?;
+                self.rho = Some(3);
+            }
+            "buddy-rho4" => {
+                self = self.preset("buddy-wide")?;
+                self.rho = Some(4);
+            }
+            "buddy-strict" => {
+                // Paper row (τ=0.99, |B|=2): tiny lists, strict gate.
+                self.miss_policy = MissPolicy::Buddy;
+                self.tae_tau = 0.90;
+                self.cft_alpha = 0.3;
+                self.k_max = 2;
+                self.search_h = 2;
+                self.rho = None;
+            }
+            other => bail!("unknown preset '{other}'"),
+        }
+        Ok(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        ServingConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn transfer_time_matches_paper_scale() {
+        let c = ServingConfig::default();
+        // dsv2-mini expert = 3*64*128*4 bytes = 98304.
+        let t = c.transfer_seconds(98304);
+        assert!(
+            (0.008..0.011).contains(&t),
+            "expert transfer {t}s should match the paper's 9-10 ms"
+        );
+    }
+
+    #[test]
+    fn gpu_expert_counts() {
+        let mut c = ServingConfig::default();
+        c.cache_rate = 0.75;
+        assert_eq!(c.gpu_experts_per_layer(64), 48);
+        c.cache_rate = 0.375;
+        assert_eq!(c.gpu_experts_per_layer(64), 24);
+    }
+
+    #[test]
+    fn presets_match_table_rows() {
+        let c = ServingConfig::default().preset("buddy-rho3").unwrap();
+        assert_eq!(c.rho, Some(3));
+        assert_eq!(c.k_max, 16);
+        assert!((c.tae_tau - 0.45).abs() < 1e-9);
+        let c = ServingConfig::default().preset("original").unwrap();
+        assert_eq!(c.miss_policy, MissPolicy::OnDemand);
+        let c = ServingConfig::default().preset("buddy-strict").unwrap();
+        assert_eq!(c.k_max, 2);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = ServingConfig::default();
+        c.cache_rate = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = ServingConfig::default();
+        c.cft_alpha = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in ["on-demand", "random", "drop", "buddy"] {
+            assert_eq!(MissPolicy::parse(p).unwrap().name(), p);
+        }
+        assert!(MissPolicy::parse("bogus").is_err());
+    }
+}

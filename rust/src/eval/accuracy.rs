@@ -1,0 +1,130 @@
+//! Oracle-agreement accuracy: the ARC-score analogue (DESIGN.md §3).
+//!
+//! Accuracy of a served configuration = fraction of decode positions whose
+//! argmax token matches the *lossless oracle* (full GPU residency, no
+//! substitution) on the same prompts. The paper's ARC scores measure the
+//! same quantity — how much the serving approximation perturbs the model
+//! relative to the lossless baseline — on a natural-language benchmark we
+//! cannot run offline.
+
+use crate::server::InferenceResponse;
+use crate::util::math::{kl_divergence, softmax};
+
+/// Near-tie tolerance on oracle logits: a served prediction counts as a
+/// match if the oracle scored it within this logit gap of its own argmax.
+/// PJRT-CPU reductions are not bitwise deterministic run-to-run, so exact
+/// equality would punish ±ulp flips that carry no information.
+pub const TIE_EPS: f32 = 1e-3;
+
+/// Teacher-forced per-position agreement (the ARC-score analogue).
+///
+/// Both runs must be over the same prompts with the served run forced to
+/// the oracle's token stream, so position i is scored under the identical
+/// context — one near-tie flip cannot poison the continuation.
+pub fn forced_agreement(oracle: &[&InferenceResponse], served: &[&InferenceResponse]) -> f64 {
+    assert_eq!(oracle.len(), served.len(), "response count mismatch");
+    let mut matches = 0usize;
+    let mut total = 0usize;
+    for (o, s) in oracle.iter().zip(served) {
+        assert_eq!(o.id, s.id, "response alignment broken");
+        let n = o.predictions.len().min(s.predictions.len());
+        for i in 0..n {
+            total += 1;
+            if o.predictions[i] == s.predictions[i] {
+                matches += 1;
+            } else if let Some(logits) = o.logits.get(i) {
+                // Tolerate near-ties as judged by the oracle itself.
+                let top = logits[o.predictions[i] as usize];
+                let alt = logits[s.predictions[i] as usize];
+                if top - alt < TIE_EPS {
+                    matches += 1;
+                }
+            }
+        }
+    }
+    if total == 0 {
+        1.0
+    } else {
+        matches as f64 / total as f64
+    }
+}
+
+/// Token-level agreement between oracle and served generations.
+pub fn agreement(oracle: &[Vec<i32>], served: &[Vec<i32>]) -> f64 {
+    assert_eq!(oracle.len(), served.len(), "response count mismatch");
+    let mut match_count = 0usize;
+    let mut total = 0usize;
+    for (o, s) in oracle.iter().zip(served) {
+        assert_eq!(o.len(), s.len(), "generation length mismatch");
+        total += o.len();
+        match_count += o.iter().zip(s).filter(|(a, b)| a == b).count();
+    }
+    if total == 0 {
+        return 1.0;
+    }
+    match_count as f64 / total as f64
+}
+
+/// Mean per-step KL(oracle || served) over softmaxed logits.
+pub fn mean_logit_kl(oracle: &[Vec<Vec<f32>>], served: &[Vec<Vec<f32>>]) -> f64 {
+    let mut total = 0.0f64;
+    let mut n = 0usize;
+    for (ol, sl) in oracle.iter().zip(served) {
+        for (o, s) in ol.iter().zip(sl) {
+            let mut p = o.clone();
+            let mut q = s.clone();
+            softmax(&mut p);
+            softmax(&mut q);
+            total += kl_divergence(&p, &q);
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        total / n as f64
+    }
+}
+
+/// Accuracy numbers for one (method, workload) cell.
+#[derive(Debug, Clone)]
+pub struct AccuracyReport {
+    pub agreement: f64,
+    pub mean_kl: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_agreement() {
+        let o = vec![vec![1, 2, 3], vec![4, 5]];
+        assert_eq!(agreement(&o, &o), 1.0);
+    }
+
+    #[test]
+    fn partial_agreement() {
+        let o = vec![vec![1, 2, 3, 4]];
+        let s = vec![vec![1, 9, 3, 9]];
+        assert!((agreement(&o, &s) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_is_perfect() {
+        assert_eq!(agreement(&[], &[]), 1.0);
+    }
+
+    #[test]
+    fn kl_zero_for_identical_logits() {
+        let l = vec![vec![vec![1.0f32, 2.0, 3.0]]];
+        assert!(mean_logit_kl(&l, &l).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kl_positive_for_different() {
+        let o = vec![vec![vec![5.0f32, 0.0, 0.0]]];
+        let s = vec![vec![vec![0.0f32, 5.0, 0.0]]];
+        assert!(mean_logit_kl(&o, &s) > 1.0);
+    }
+}

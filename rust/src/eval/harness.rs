@@ -1,0 +1,298 @@
+//! Table runner: profile → build buddy lists → serve each method preset on
+//! the same workload → report accuracy (vs oracle) and throughput.
+//!
+//! This is the machinery behind Tables 2, 3, 4 and Figure 8.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::buddy::BuddyProfile;
+use crate::config::{ModelConfig, ServingConfig};
+use crate::eval::accuracy::{forced_agreement, mean_logit_kl};
+use crate::eval::workload::{Domain, WorkloadGen};
+use crate::memory::PcieStats;
+use crate::model::{Engine, EngineOptions};
+use crate::profilecollect::ProfileCollector;
+use crate::server::{InferenceRequest, InferenceResponse, Server};
+use crate::weights::WeightStore;
+
+/// Workload shape shared by every method in one table.
+#[derive(Debug, Clone)]
+pub struct TableSettings {
+    pub cache_rate: f64,
+    pub n_easy: usize,
+    pub n_hard: usize,
+    pub max_new: usize,
+    pub seed: u64,
+    /// PCIe sleep scaling (1.0 = real stalls; 0.0 = instant, tests only).
+    pub time_scale: f64,
+}
+
+impl Default for TableSettings {
+    fn default() -> Self {
+        Self {
+            cache_rate: 0.75,
+            n_easy: 8,
+            n_hard: 8,
+            max_new: 16,
+            seed: 42,
+            time_scale: 1.0,
+        }
+    }
+}
+
+/// One table row: a named serving configuration.
+#[derive(Debug, Clone)]
+pub struct MethodSpec {
+    pub label: String,
+    /// `ServingConfig::preset` name.
+    pub preset: String,
+}
+
+impl MethodSpec {
+    pub fn new(label: &str, preset: &str) -> Self {
+        Self { label: label.into(), preset: preset.into() }
+    }
+}
+
+/// Everything measured for one method.
+#[derive(Debug, Clone)]
+pub struct EvalOutcome {
+    pub label: String,
+    pub acc_easy: f64,
+    pub acc_hard: f64,
+    pub avg: f64,
+    pub kl_easy: f64,
+    pub kl_hard: f64,
+    pub tok_s: f64,
+    pub substitutions: u64,
+    pub fetches: u64,
+    pub pcie: PcieStats,
+    pub prefetch_hit_rate: f64,
+    pub wall_s: f64,
+}
+
+/// Deterministic request mix: easy ids in [0, n_easy), hard ids >= 1000.
+pub fn build_requests(cfg: &ModelConfig, st: &TableSettings) -> Vec<InferenceRequest> {
+    let mut gen = WorkloadGen::new(cfg, st.seed);
+    gen.max_new = st.max_new;
+    let mut reqs = gen.requests(Domain::Easy, st.n_easy, 0);
+    reqs.extend(gen.requests(Domain::Hard, st.n_hard, 1000));
+    // Interleave easy/hard so batches mix domains (as a real queue would).
+    let mut inter = Vec::with_capacity(reqs.len());
+    for i in 0..st.n_easy.max(st.n_hard) {
+        if i < st.n_easy {
+            inter.push(reqs[i].clone());
+        }
+        if i < st.n_hard {
+            inter.push(reqs[st.n_easy + i].clone());
+        }
+    }
+    inter
+}
+
+/// Run the profiling corpus through a full-residency engine and collect
+/// co-activation statistics (the offline phase; held-out seed).
+pub fn profile_model(
+    cfg: &ModelConfig,
+    store: Arc<WeightStore>,
+    n_prompts: usize,
+    seed: u64,
+) -> Result<ProfileCollector> {
+    let scfg = ServingConfig {
+        cache_rate: 1.0,
+        miss_policy: crate::config::MissPolicy::OnDemand,
+        prefetch: crate::config::PrefetchKind::None,
+        ..Default::default()
+    };
+    let opts = EngineOptions {
+        time_scale: 0.0,
+        collect_profile: true,
+        ..Default::default()
+    };
+    let engine = Engine::new(cfg.clone(), scfg, store, None, None, opts)?;
+    let mut server = Server::new(engine);
+    let mut gen = WorkloadGen::new(cfg, seed);
+    let reqs = gen.requests(Domain::Mixed, n_prompts, 0);
+    server.run_offline(reqs)?;
+    let pc = server
+        .engine
+        .profile_out
+        .take()
+        .context("profiling was not enabled")?;
+    server.engine.shutdown();
+    Ok(pc)
+}
+
+/// Expert rank per layer by profiled activation count (cache warm-up +
+/// TopFreq predictor input).
+pub fn warm_rank_from_profile(pc: &ProfileCollector) -> Vec<Vec<usize>> {
+    (0..pc.n_layers())
+        .map(|l| {
+            let acts = &pc.layer(l).activations;
+            let mut idx: Vec<usize> = (0..acts.len()).collect();
+            idx.sort_by(|&a, &b| acts[b].partial_cmp(&acts[a]).unwrap().then(a.cmp(&b)));
+            idx
+        })
+        .collect()
+}
+
+/// Oracle generations: the lossless reference for accuracy scoring.
+pub fn oracle_run(
+    cfg: &ModelConfig,
+    store: Arc<WeightStore>,
+    requests: Vec<InferenceRequest>,
+) -> Result<Vec<InferenceResponse>> {
+    let scfg = ServingConfig {
+        cache_rate: 1.0,
+        miss_policy: crate::config::MissPolicy::OnDemand,
+        prefetch: crate::config::PrefetchKind::None,
+        ..Default::default()
+    };
+    let opts = EngineOptions {
+        time_scale: 0.0,
+        record_logits: true,
+        ..Default::default()
+    };
+    let engine = Engine::new(cfg.clone(), scfg, store, None, None, opts)?;
+    let mut server = Server::new(engine);
+    let out = server.run_offline(requests)?;
+    server.engine.shutdown();
+    Ok(out)
+}
+
+fn by_domain(responses: &[InferenceResponse]) -> (Vec<&InferenceResponse>, Vec<&InferenceResponse>) {
+    let mut easy: Vec<&InferenceResponse> = responses.iter().filter(|r| r.id < 1000).collect();
+    let mut hard: Vec<&InferenceResponse> = responses.iter().filter(|r| r.id >= 1000).collect();
+    easy.sort_by_key(|r| r.id);
+    hard.sort_by_key(|r| r.id);
+    (easy, hard)
+}
+
+/// Serve one method configuration and score it against the oracle.
+#[allow(clippy::too_many_arguments)]
+pub fn run_method(
+    cfg: &ModelConfig,
+    store: Arc<WeightStore>,
+    collector: &ProfileCollector,
+    warm_rank: &[Vec<usize>],
+    spec: &MethodSpec,
+    base: &ServingConfig,
+    settings: &TableSettings,
+    oracle: &[InferenceResponse],
+) -> Result<EvalOutcome> {
+    let mut scfg = base.clone().preset(&spec.preset)?;
+    scfg.cache_rate = settings.cache_rate;
+    scfg.seed = settings.seed;
+
+    // Buddy lists rebuilt per method: α / K_max differ across rows.
+    let alphas = vec![scfg.cft_alpha; cfg.n_layers];
+    let profile = BuddyProfile::build(collector, &alphas, scfg.k_max, 1e-3, true)?;
+
+    let opts = EngineOptions {
+        time_scale: settings.time_scale,
+        record_logits: true,
+        ..Default::default()
+    };
+    let engine = Engine::new(
+        cfg.clone(),
+        scfg,
+        store,
+        Some(profile),
+        Some(warm_rank.to_vec()),
+        opts,
+    )?;
+    let mut server = Server::new(engine);
+    // Teacher-force every request to the oracle's token stream so each
+    // position is scored independently (see accuracy.rs). The compute path
+    // is identical to free-running decode, so throughput is unaffected.
+    let mut requests = build_requests(cfg, settings);
+    for req in requests.iter_mut() {
+        let o = oracle
+            .iter()
+            .find(|r| r.id == req.id)
+            .context("oracle response missing for request")?;
+        req.force_tokens = Some(o.predictions.clone());
+    }
+    let t0 = std::time::Instant::now();
+    let responses = server.run_offline(requests)?;
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let (o_easy, o_hard) = by_domain(oracle);
+    let (s_easy, s_hard) = by_domain(&responses);
+    let logs = |rs: &[&InferenceResponse]| rs.iter().map(|r| r.logits.clone()).collect::<Vec<_>>();
+
+    let acc_easy = forced_agreement(&o_easy, &s_easy);
+    let acc_hard = forced_agreement(&o_hard, &s_hard);
+    let kl_easy = mean_logit_kl(&logs(&o_easy), &logs(&s_easy));
+    let kl_hard = mean_logit_kl(&logs(&o_hard), &logs(&s_hard));
+
+    let pcie = server.engine.transfer_handle().with_state(|st| st.pcie.stats.clone());
+    let outcome = EvalOutcome {
+        label: spec.label.clone(),
+        acc_easy,
+        acc_hard,
+        avg: 0.5 * (acc_easy + acc_hard),
+        kl_easy,
+        kl_hard,
+        tok_s: server.metrics.tokens_out as f64 / wall_s,
+        substitutions: server.engine.counters.get("substitutions"),
+        fetches: server.engine.counters.get("fetches"),
+        pcie,
+        prefetch_hit_rate: server
+            .engine
+            .prefetch_counters()
+            .ratio("prefetch_useful", "prefetch_issued"),
+        wall_s,
+    };
+    server.engine.shutdown();
+    Ok(outcome)
+}
+
+/// Full table driver: profile -> oracle -> every method row. Returns the
+/// outcome rows plus a rendered markdown table.
+pub fn run_table(
+    cfg: &ModelConfig,
+    store: Arc<WeightStore>,
+    settings: &TableSettings,
+    methods: &[MethodSpec],
+) -> Result<(Vec<EvalOutcome>, String)> {
+    log::info!("profiling (held-out corpus)...");
+    let pc = profile_model(cfg, store.clone(), 64, 7777)?;
+    let warm = warm_rank_from_profile(&pc);
+    log::info!("oracle run...");
+    let oracle = oracle_run(cfg, store.clone(), build_requests(cfg, settings))?;
+    let base = ServingConfig::default();
+    let mut rows = Vec::new();
+    for m in methods {
+        log::info!("method {} ...", m.label);
+        let row = run_method(cfg, store.clone(), &pc, &warm, m, &base, settings, &oracle)?;
+        log::info!(
+            "  acc {:.3}/{:.3} tok/s {:.2} subs {} fetches {}",
+            row.acc_easy,
+            row.acc_hard,
+            row.tok_s,
+            row.substitutions,
+            row.fetches
+        );
+        rows.push(row);
+    }
+    let md = crate::eval::report::markdown_table(
+        &format!("cache rate c = {}", settings.cache_rate),
+        &rows,
+    );
+    Ok((rows, md))
+}
+
+/// The method grid a paper table sweeps (Tables 2–4 share this shape).
+pub fn table_methods() -> Vec<MethodSpec> {
+    vec![
+        MethodSpec::new("Original (on-demand)", "original"),
+        MethodSpec::new("Random", "random"),
+        MethodSpec::new("BuddyMoE t=0.75 |B|=4", "buddy-tight"),
+        MethodSpec::new("BuddyMoE t=0.95 |B|=16", "buddy-wide"),
+        MethodSpec::new("BuddyMoE t=0.95 |B|=16 rho=3", "buddy-rho3"),
+        MethodSpec::new("BuddyMoE t=0.95 |B|=16 rho=4", "buddy-rho4"),
+    ]
+}

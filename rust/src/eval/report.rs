@@ -1,0 +1,67 @@
+//! Report emitters: markdown tables for the bench output and
+//! EXPERIMENTS.md.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::eval::harness::EvalOutcome;
+
+/// Render outcomes as a markdown table matching the paper's columns.
+pub fn markdown_table(title: &str, rows: &[EvalOutcome]) -> String {
+    let mut out = format!("### {title}\n\n");
+    out.push_str("| Method | ACC-E | ACC-C | Avg | tok/s | KL-E | KL-C | subs | fetches | pf-hit |\n");
+    out.push_str("|---|---|---|---|---|---|---|---|---|---|\n");
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {:.3} | {:.3} | {:.3} | {:.2} | {:.4} | {:.4} | {} | {} | {:.2} |\n",
+            r.label,
+            r.acc_easy,
+            r.acc_hard,
+            r.avg,
+            r.tok_s,
+            r.kl_easy,
+            r.kl_hard,
+            r.substitutions,
+            r.fetches,
+            r.prefetch_hit_rate,
+        ));
+    }
+    out
+}
+
+pub fn write_report(path: &Path, content: &str) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, content)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::PcieStats;
+
+    #[test]
+    fn renders_rows() {
+        let rows = vec![EvalOutcome {
+            label: "Original".into(),
+            acc_easy: 1.0,
+            acc_hard: 1.0,
+            avg: 1.0,
+            kl_easy: 0.0,
+            kl_hard: 0.0,
+            tok_s: 34.2,
+            substitutions: 0,
+            fetches: 10,
+            pcie: PcieStats::default(),
+            prefetch_hit_rate: 0.9,
+            wall_s: 1.0,
+        }];
+        let md = markdown_table("Table 2 (c=0.75)", &rows);
+        assert!(md.contains("Original"));
+        assert!(md.contains("34.2"));
+        assert!(md.lines().count() >= 4);
+    }
+}

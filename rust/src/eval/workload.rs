@@ -1,0 +1,130 @@
+//! Synthetic workloads standing in for the paper's ARC-Easy / ARC-Challenge
+//! prompt sets (DESIGN.md §3):
+//!
+//! * `Easy`  — tokens from the lower vocab half: generic routing, mostly
+//!   popular experts, cache-friendly.
+//! * `Hard`  — tokens from the upper vocab half: weightgen aligned these
+//!   embeddings with *unpopular* expert families, so routing hits the
+//!   offloaded tail — more misses, more substitution pressure.
+
+use crate::config::ModelConfig;
+use crate::server::InferenceRequest;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Domain {
+    Easy,
+    Hard,
+    Mixed,
+}
+
+impl Domain {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Domain::Easy => "syn-e",
+            Domain::Hard => "syn-c",
+            Domain::Mixed => "mixed",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct WorkloadGen {
+    pub vocab_size: usize,
+    pub prompt_len_lo: usize,
+    pub prompt_len_hi: usize,
+    pub max_new: usize,
+    rng: Rng,
+}
+
+impl WorkloadGen {
+    pub fn new(cfg: &ModelConfig, seed: u64) -> Self {
+        Self {
+            vocab_size: cfg.vocab_size,
+            prompt_len_lo: 8,
+            prompt_len_hi: 16,
+            max_new: 16,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// One prompt from a domain (token 0 reserved as padding).
+    pub fn prompt(&mut self, domain: Domain) -> Vec<i32> {
+        let len = self.rng.range(self.prompt_len_lo, self.prompt_len_hi + 1);
+        let half = self.vocab_size / 2;
+        (0..len)
+            .map(|_| {
+                let d = match domain {
+                    Domain::Mixed => {
+                        if self.rng.bool(0.5) {
+                            Domain::Easy
+                        } else {
+                            Domain::Hard
+                        }
+                    }
+                    d => d,
+                };
+                match d {
+                    Domain::Easy => self.rng.range(1, half) as i32,
+                    Domain::Hard => self.rng.range(half, self.vocab_size) as i32,
+                    Domain::Mixed => unreachable!(),
+                }
+            })
+            .collect()
+    }
+
+    /// A request batch: `n` prompts from `domain`, ids starting at `id0`.
+    pub fn requests(&mut self, domain: Domain, n: usize, id0: u64) -> Vec<InferenceRequest> {
+        (0..n)
+            .map(|i| InferenceRequest::new(id0 + i as u64, self.prompt(domain), self.max_new))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn domains_split_vocab() {
+        let cfg = ModelConfig::test_tiny();
+        let mut g = WorkloadGen::new(&cfg, 1);
+        for _ in 0..20 {
+            for &t in &g.prompt(Domain::Easy) {
+                assert!((1..(cfg.vocab_size / 2) as i32).contains(&t));
+            }
+            for &t in &g.prompt(Domain::Hard) {
+                assert!(((cfg.vocab_size / 2) as i32..cfg.vocab_size as i32).contains(&t));
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = ModelConfig::test_tiny();
+        let mut a = WorkloadGen::new(&cfg, 5);
+        let mut b = WorkloadGen::new(&cfg, 5);
+        assert_eq!(a.prompt(Domain::Mixed), b.prompt(Domain::Mixed));
+    }
+
+    #[test]
+    fn request_ids_sequential() {
+        let cfg = ModelConfig::test_tiny();
+        let mut g = WorkloadGen::new(&cfg, 2);
+        let reqs = g.requests(Domain::Easy, 3, 10);
+        assert_eq!(reqs.iter().map(|r| r.id).collect::<Vec<_>>(), vec![10, 11, 12]);
+        assert!(reqs.iter().all(|r| r.max_new == g.max_new));
+    }
+
+    #[test]
+    fn prompt_lengths_in_range() {
+        let cfg = ModelConfig::test_tiny();
+        let mut g = WorkloadGen::new(&cfg, 3);
+        g.prompt_len_lo = 4;
+        g.prompt_len_hi = 6;
+        for _ in 0..10 {
+            let p = g.prompt(Domain::Easy);
+            assert!((4..=6).contains(&p.len()));
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! # BuddyMoE
+//!
+//! A reproduction of *BuddyMoE: Exploiting Expert Redundancy to Accelerate
+//! Memory-Constrained Mixture-of-Experts Inference* as a three-layer
+//! rust + JAX + Pallas serving stack:
+//!
+//! * **L3 (this crate)** — the serving coordinator: request batching, the
+//!   expert cache + PCIe offloading substrate, predictive prefetching, and
+//!   the paper's contribution: offline co-activation profiling, CFT buddy
+//!   lists, the TAE/distribution/Ψ gate pipeline, and Algorithm 1 buddy
+//!   substitution.
+//! * **L2** — a miniature DeepSeek-V2-class MoE transformer written in JAX
+//!   (`python/compile/model.py`), factored into per-stage functions and
+//!   AOT-lowered to HLO text at build time.
+//! * **L1** — Pallas kernels for the expert FFN, router, and decode
+//!   attention (`python/compile/kernels/`), validated against pure-jnp
+//!   oracles.
+//!
+//! Python never runs at serving time: the rust binary loads
+//! `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate) and owns the
+//! entire request path.
+
+pub mod buddy;
+pub mod config;
+pub mod eval;
+pub mod memory;
+pub mod model;
+pub mod prefetch;
+pub mod profilecollect;
+pub mod runtime;
+pub mod server;
+pub mod stats;
+pub mod testing;
+pub mod util;
+pub mod weights;

@@ -1,0 +1,281 @@
+//! BuddyMoE CLI — the serving leader binary.
+//!
+//! Subcommands:
+//!   profile   run the offline profiling corpus, save co-activation stats
+//!             + buddy lists
+//!   serve     offline serving run with a chosen method preset; prints
+//!             throughput/latency metrics
+//!   table     regenerate one of the paper's tables (2, 3, 4)
+//!   figures   dump the data behind Figures 4/6/7/9
+//!   smoke     end-to-end smoke test (tiny workload)
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+use buddymoe::buddy::BuddyProfile;
+use buddymoe::config::{ModelConfig, ServingConfig};
+use buddymoe::eval::{
+    self, profile_model, run_table, table_methods, warm_rank_from_profile, TableSettings,
+};
+use buddymoe::model::{Engine, EngineOptions};
+use buddymoe::profilecollect::{expert_similarity_matrix, ProfileCollector};
+use buddymoe::server::Server;
+use buddymoe::util::argparse::ArgSpec;
+use buddymoe::util::json::Json;
+use buddymoe::util::logging;
+use buddymoe::weights::WeightStore;
+
+fn main() {
+    logging::init();
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    "buddymoe <profile|serve|table|figures|smoke> [options]\n\
+     run `buddymoe <cmd> --help` for per-command options"
+        .to_string()
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        bail!("{}", usage());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "profile" => cmd_profile(rest),
+        "serve" => cmd_serve(rest),
+        "table" => cmd_table(rest),
+        "figures" => cmd_figures(rest),
+        "smoke" => cmd_smoke(rest),
+        _ => bail!("unknown command '{cmd}'\n{}", usage()),
+    }
+}
+
+fn load_model(dir: &str) -> Result<(ModelConfig, Arc<WeightStore>)> {
+    let dir = PathBuf::from(dir);
+    let cfg = ModelConfig::load(&dir)
+        .with_context(|| format!("loading model config from {}", dir.display()))?;
+    let store = Arc::new(WeightStore::load(&cfg)?);
+    Ok((cfg, store))
+}
+
+fn cmd_profile(rest: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("buddymoe profile", "offline co-activation profiling")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("prompts", "64", "profiling corpus size")
+        .opt("seed", "7777", "corpus seed (held out from eval)")
+        .opt("alpha", "0.8", "CFT alpha for buddy lists")
+        .opt("k-max", "16", "buddy list cap")
+        .opt("out", "artifacts/profile", "output directory");
+    let a = spec.parse(rest)?;
+    let (cfg, store) = load_model(a.get("artifacts"))?;
+    let pc = profile_model(&cfg, store, a.get_usize("prompts")?, a.get_u64("seed")?)?;
+    let out = PathBuf::from(a.get("out"));
+    std::fs::create_dir_all(&out)?;
+    std::fs::write(out.join("coactivation.json"), pc.to_json().to_string())?;
+    let alphas = vec![a.get_f64("alpha")?; cfg.n_layers];
+    let profile = BuddyProfile::build(&pc, &alphas, a.get_usize("k-max")?, 1e-3, true)?;
+    profile.save(&out.join("buddies.json"))?;
+    let sizes = profile.list_sizes(0);
+    println!(
+        "profiled {} prompts; layer-0 buddy list sizes: min {} max {} mean {:.1}",
+        a.get_usize("prompts")?,
+        sizes.iter().min().unwrap(),
+        sizes.iter().max().unwrap(),
+        sizes.iter().sum::<usize>() as f64 / sizes.len() as f64
+    );
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("buddymoe serve", "offline serving benchmark run")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt(
+            "preset",
+            "buddy-rho3",
+            "original|random|buddy-tight|buddy-wide|buddy-rho3|buddy-rho4|buddy-strict",
+        )
+        .opt("cache-rate", "0.75", "fraction of experts GPU-resident")
+        .opt("requests", "16", "number of requests")
+        .opt("max-new", "16", "tokens generated per request")
+        .opt("max-batch", "8", "continuous-batching width")
+        .opt("seed", "42", "workload seed")
+        .opt("profile-prompts", "64", "profiling corpus size")
+        .flag("no-stalls", "disable real PCIe sleeps (debug)");
+    let a = spec.parse(rest)?;
+    let (cfg, store) = load_model(a.get("artifacts"))?;
+
+    log::info!("profiling...");
+    let pc = profile_model(&cfg, store.clone(), a.get_usize("profile-prompts")?, 7777)?;
+    let warm = warm_rank_from_profile(&pc);
+
+    let mut scfg = ServingConfig::default().preset(a.get("preset"))?;
+    scfg.cache_rate = a.get_f64("cache-rate")?;
+    scfg.max_batch = a.get_usize("max-batch")?;
+    scfg.seed = a.get_u64("seed")?;
+    let alphas = vec![scfg.cft_alpha; cfg.n_layers];
+    let profile = BuddyProfile::build(&pc, &alphas, scfg.k_max, 1e-3, true)?;
+
+    let opts = EngineOptions {
+        time_scale: if a.flag("no-stalls") { 0.0 } else { 1.0 },
+        // §Perf A/B switch: literal path vs device-resident weight buffers.
+        weight_buffers: std::env::var("BUDDYMOE_NO_WEIGHT_BUFFERS").is_err(),
+        ..Default::default()
+    };
+    let engine = Engine::new(cfg.clone(), scfg, store, Some(profile), Some(warm), opts)?;
+    let mut server = Server::new(engine);
+    let settings = TableSettings {
+        cache_rate: a.get_f64("cache-rate")?,
+        n_easy: a.get_usize("requests")? / 2,
+        n_hard: a.get_usize("requests")? - a.get_usize("requests")? / 2,
+        max_new: a.get_usize("max-new")?,
+        seed: a.get_u64("seed")?,
+        time_scale: 1.0,
+    };
+    let reqs = eval::build_requests(&cfg, &settings);
+    log::info!("serving {} requests...", reqs.len());
+    let responses = server.run_offline(reqs)?;
+    println!("{}", server.metrics.report());
+    println!("engine counters:");
+    for (k, v) in server.engine.counters.iter() {
+        println!("  {k}: {v}");
+    }
+    println!(
+        "prefetch hit rate: {:.3}",
+        server
+            .engine
+            .prefetch_counters()
+            .ratio("prefetch_useful", "prefetch_issued")
+    );
+    let pcie = server
+        .engine
+        .transfer_handle()
+        .with_state(|st| st.pcie.stats.clone());
+    println!(
+        "pcie: demand {} B ({} transfers), prefetch {} B ({} transfers)",
+        pcie.demand_bytes, pcie.demand_transfers, pcie.prefetch_bytes, pcie.prefetch_transfers
+    );
+    println!("responses: {}", responses.len());
+    server.engine.shutdown();
+    Ok(())
+}
+
+fn cmd_table(rest: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("buddymoe table", "regenerate a paper table")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("cache-rate", "0.75", "paper tables: 0.75 (T2), 0.5 (T3), 0.375 (T4)")
+        .opt("n-easy", "8", "easy prompts")
+        .opt("n-hard", "8", "hard prompts")
+        .opt("max-new", "16", "tokens per request")
+        .opt("seed", "42", "workload seed")
+        .opt("out", "", "also write markdown to this path");
+    let a = spec.parse(rest)?;
+    let (cfg, store) = load_model(a.get("artifacts"))?;
+    let settings = TableSettings {
+        cache_rate: a.get_f64("cache-rate")?,
+        n_easy: a.get_usize("n-easy")?,
+        n_hard: a.get_usize("n-hard")?,
+        max_new: a.get_usize("max-new")?,
+        seed: a.get_u64("seed")?,
+        time_scale: 1.0,
+    };
+    let (_rows, md) = run_table(&cfg, store, &settings, &table_methods())?;
+    println!("{md}");
+    let out = a.get("out");
+    if !out.is_empty() {
+        eval::write_report(&PathBuf::from(out), &md)?;
+    }
+    Ok(())
+}
+
+fn cmd_figures(rest: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("buddymoe figures", "dump data behind Figures 4/6/7/9")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("prompts", "64", "profiling corpus size")
+        .opt("out", "artifacts/figures", "output directory");
+    let a = spec.parse(rest)?;
+    let (cfg, store) = load_model(a.get("artifacts"))?;
+    let out = PathBuf::from(a.get("out"));
+    std::fs::create_dir_all(&out)?;
+
+    // Fig 4: weight-space similarity heatmap (layer 0).
+    let sim = expert_similarity_matrix(&cfg, &store, 0)?;
+    let sim_json = Json::Arr(
+        sim.iter()
+            .map(|row| buddymoe::util::json::arr_f32(row))
+            .collect(),
+    );
+    std::fs::write(out.join("fig4_similarity_l0.json"), sim_json.to_string())?;
+
+    // Figs 6/7/9 need routing statistics.
+    let pc = profile_model(&cfg, store, a.get_usize("prompts")?, 7777)?;
+    let dump_layer = |pc: &ProfileCollector, l: usize| -> Json {
+        let la = pc.layer(l);
+        buddymoe::util::json::obj(vec![
+            (
+                "activations",
+                buddymoe::util::json::arr_f32(
+                    &la.activations.iter().map(|&x| x as f32).collect::<Vec<_>>(),
+                ),
+            ),
+            (
+                "coactivation",
+                buddymoe::util::json::arr_f32(
+                    &la.binary.iter().map(|&x| x as f32).collect::<Vec<_>>(),
+                ),
+            ),
+        ])
+    };
+    let fig6_layer = (cfg.n_layers - 1).min(11);
+    std::fs::write(
+        out.join(format!("fig6_activation_l{fig6_layer}.json")),
+        dump_layer(&pc, fig6_layer).to_string(),
+    )?;
+    std::fs::write(
+        out.join("fig7_coactivation_l0.json"),
+        dump_layer(&pc, 0).to_string(),
+    )?;
+    println!("wrote figure data to {}", out.display());
+    Ok(())
+}
+
+fn cmd_smoke(rest: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("buddymoe smoke", "tiny end-to-end smoke run")
+        .opt("artifacts", "artifacts", "artifacts directory");
+    let a = spec.parse(rest)?;
+    let (cfg, store) = load_model(a.get("artifacts"))?;
+    let pc = profile_model(&cfg, store.clone(), 8, 7777)?;
+    let warm = warm_rank_from_profile(&pc);
+    let mut scfg = ServingConfig::default().preset("buddy-rho3")?;
+    scfg.cache_rate = 0.5;
+    let alphas = vec![scfg.cft_alpha; cfg.n_layers];
+    let profile = BuddyProfile::build(&pc, &alphas, scfg.k_max, 1e-3, true)?;
+    let engine = Engine::new(
+        cfg.clone(),
+        scfg,
+        store,
+        Some(profile),
+        Some(warm),
+        EngineOptions::default(),
+    )?;
+    let mut server = Server::new(engine);
+    let mut gen = eval::WorkloadGen::new(&cfg, 1);
+    gen.max_new = 8;
+    let reqs = gen.requests(eval::Domain::Mixed, 4, 0);
+    let responses = server.run_offline(reqs)?;
+    println!("{}", server.metrics.report());
+    anyhow::ensure!(responses.len() == 4, "smoke run lost responses");
+    anyhow::ensure!(
+        responses.iter().all(|r| r.tokens.len() == 8),
+        "wrong generation lengths"
+    );
+    println!("smoke OK");
+    server.engine.shutdown();
+    Ok(())
+}

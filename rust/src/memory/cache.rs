@@ -1,0 +1,338 @@
+//! The GPU expert cache: per-layer residency accounting with pluggable
+//! eviction (paper §2.3's "expert cache"; EdgeMoE-style heuristics as one
+//! policy option).
+//!
+//! States: `Cpu` (offloaded), `Loading` (in flight on the PCIe engine),
+//! `Gpu` (resident and usable). Pinning protects experts scheduled in the
+//! current micro-batch from eviction mid-step.
+
+use anyhow::{bail, Result};
+
+use crate::weights::ExpertKey;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotState {
+    Cpu,
+    Loading,
+    Gpu,
+}
+
+#[derive(Debug, Clone)]
+struct Slot {
+    state: SlotState,
+    last_use: u64,
+    uses: u64,
+    pins: u32,
+}
+
+impl Default for Slot {
+    fn default() -> Self {
+        Self { state: SlotState::Cpu, last_use: 0, uses: 0, pins: 0 }
+    }
+}
+
+/// Eviction policy for choosing a victim among GPU-resident experts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictPolicy {
+    /// Least-recently used.
+    Lru,
+    /// Least-frequently used (activation count).
+    Lfu,
+    /// EdgeMoE-style: frequency weighted by layer depth — shallower layers
+    /// are favoured in cache because they are reached first every step.
+    FreqLayer,
+}
+
+impl EvictPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "lru" => EvictPolicy::Lru,
+            "lfu" => EvictPolicy::Lfu,
+            "freq-layer" => EvictPolicy::FreqLayer,
+            other => bail!("unknown eviction policy '{other}'"),
+        })
+    }
+}
+
+/// Outcome of a load request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadDecision {
+    AlreadyGpu,
+    AlreadyLoading,
+    /// Caller should enqueue a transfer; `evicted` was demoted to make room.
+    StartLoad { evicted: Option<ExpertKey> },
+    /// No room: every resident expert in the layer is pinned.
+    NoRoom,
+}
+
+#[derive(Debug)]
+pub struct ExpertCache {
+    n_layers: usize,
+    n_experts: usize,
+    capacity_per_layer: usize,
+    policy: EvictPolicy,
+    slots: Vec<Slot>, // [n_layers * n_experts]
+    clock: u64,
+}
+
+impl ExpertCache {
+    pub fn new(
+        n_layers: usize,
+        n_experts: usize,
+        capacity_per_layer: usize,
+        policy: EvictPolicy,
+    ) -> Self {
+        assert!(capacity_per_layer >= 1, "cache needs >= 1 slot per layer");
+        Self {
+            n_layers,
+            n_experts,
+            capacity_per_layer,
+            policy,
+            slots: vec![Slot::default(); n_layers * n_experts],
+            clock: 0,
+        }
+    }
+
+    fn idx(&self, k: ExpertKey) -> usize {
+        debug_assert!(k.layer < self.n_layers && k.expert < self.n_experts);
+        k.layer * self.n_experts + k.expert
+    }
+
+    pub fn capacity_per_layer(&self) -> usize {
+        self.capacity_per_layer
+    }
+
+    pub fn state(&self, k: ExpertKey) -> SlotState {
+        self.slots[self.idx(k)].state
+    }
+
+    pub fn is_gpu(&self, k: ExpertKey) -> bool {
+        self.state(k) == SlotState::Gpu
+    }
+
+    /// Residency mask for one layer (Algorithm 1's M).
+    pub fn residency_mask(&self, layer: usize) -> Vec<bool> {
+        (0..self.n_experts)
+            .map(|e| self.is_gpu(ExpertKey::new(layer, e)))
+            .collect()
+    }
+
+    pub fn gpu_count(&self, layer: usize) -> usize {
+        (0..self.n_experts)
+            .filter(|&e| self.is_gpu(ExpertKey::new(layer, e)))
+            .count()
+    }
+
+    /// Record a use (routing hit) for recency/frequency bookkeeping.
+    pub fn mark_use(&mut self, k: ExpertKey) {
+        self.clock += 1;
+        let clock = self.clock;
+        let i = self.idx(k);
+        self.slots[i].last_use = clock;
+        self.slots[i].uses += 1;
+    }
+
+    pub fn pin(&mut self, k: ExpertKey) {
+        let i = self.idx(k);
+        self.slots[i].pins += 1;
+    }
+
+    pub fn unpin(&mut self, k: ExpertKey) {
+        let i = self.idx(k);
+        assert!(self.slots[i].pins > 0, "unpin without pin");
+        self.slots[i].pins -= 1;
+    }
+
+    /// Ask to bring `k` onto the GPU. If the layer is full, a victim is
+    /// selected by the eviction policy, demoted to Cpu, and reported so the
+    /// engine can drop its device buffers.
+    pub fn request_load(&mut self, k: ExpertKey) -> LoadDecision {
+        match self.state(k) {
+            SlotState::Gpu => return LoadDecision::AlreadyGpu,
+            SlotState::Loading => return LoadDecision::AlreadyLoading,
+            SlotState::Cpu => {}
+        }
+        let in_flight_or_resident = (0..self.n_experts)
+            .filter(|&e| {
+                let s = self.state(ExpertKey::new(k.layer, e));
+                s == SlotState::Gpu || s == SlotState::Loading
+            })
+            .count();
+        let evicted = if in_flight_or_resident >= self.capacity_per_layer {
+            match self.select_victim(k.layer) {
+                Some(v) => {
+                    let vi = self.idx(v);
+                    self.slots[vi].state = SlotState::Cpu;
+                    Some(v)
+                }
+                None => return LoadDecision::NoRoom,
+            }
+        } else {
+            None
+        };
+        let i = self.idx(k);
+        self.slots[i].state = SlotState::Loading;
+        LoadDecision::StartLoad { evicted }
+    }
+
+    /// Transfer engine reports arrival.
+    pub fn complete_load(&mut self, k: ExpertKey) {
+        let i = self.idx(k);
+        debug_assert_eq!(self.slots[i].state, SlotState::Loading);
+        self.slots[i].state = SlotState::Gpu;
+    }
+
+    /// Abandon an in-flight load (failure injection / shutdown).
+    pub fn abort_load(&mut self, k: ExpertKey) {
+        let i = self.idx(k);
+        if self.slots[i].state == SlotState::Loading {
+            self.slots[i].state = SlotState::Cpu;
+        }
+    }
+
+    /// Directly admit an expert (initial cache warm-up).
+    pub fn admit(&mut self, k: ExpertKey) -> Result<()> {
+        if self.gpu_count(k.layer) >= self.capacity_per_layer {
+            bail!("layer {} cache full", k.layer);
+        }
+        let i = self.idx(k);
+        self.slots[i].state = SlotState::Gpu;
+        Ok(())
+    }
+
+    fn select_victim(&self, layer: usize) -> Option<ExpertKey> {
+        let mut best: Option<(f64, ExpertKey)> = None;
+        for e in 0..self.n_experts {
+            let k = ExpertKey::new(layer, e);
+            let s = &self.slots[self.idx(k)];
+            if s.state != SlotState::Gpu || s.pins > 0 {
+                continue;
+            }
+            // Lower score = better victim.
+            let score = match self.policy {
+                EvictPolicy::Lru => s.last_use as f64,
+                EvictPolicy::Lfu => s.uses as f64,
+                EvictPolicy::FreqLayer => {
+                    // EdgeMoE heuristic: deeper layers are cheaper to evict
+                    // (they are needed later in the step), so discount score
+                    // by depth.
+                    s.uses as f64 / (1.0 + layer as f64)
+                }
+            };
+            if best.map(|(b, _)| score < b).unwrap_or(true) {
+                best = Some((score, k));
+            }
+        }
+        best.map(|(_, k)| k)
+    }
+
+    /// Total GPU-resident experts (all layers).
+    pub fn total_gpu(&self) -> usize {
+        self.slots.iter().filter(|s| s.state == SlotState::Gpu).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k(l: usize, e: usize) -> ExpertKey {
+        ExpertKey::new(l, e)
+    }
+
+    fn cache(cap: usize) -> ExpertCache {
+        ExpertCache::new(2, 4, cap, EvictPolicy::Lru)
+    }
+
+    #[test]
+    fn admit_until_full() {
+        let mut c = cache(2);
+        c.admit(k(0, 0)).unwrap();
+        c.admit(k(0, 1)).unwrap();
+        assert!(c.admit(k(0, 2)).is_err());
+        assert_eq!(c.gpu_count(0), 2);
+        assert_eq!(c.gpu_count(1), 0); // capacity is per layer
+        c.admit(k(1, 0)).unwrap();
+    }
+
+    #[test]
+    fn load_path_and_states() {
+        let mut c = cache(2);
+        assert_eq!(c.request_load(k(0, 0)), LoadDecision::StartLoad { evicted: None });
+        assert_eq!(c.state(k(0, 0)), SlotState::Loading);
+        assert_eq!(c.request_load(k(0, 0)), LoadDecision::AlreadyLoading);
+        c.complete_load(k(0, 0));
+        assert!(c.is_gpu(k(0, 0)));
+        assert_eq!(c.request_load(k(0, 0)), LoadDecision::AlreadyGpu);
+    }
+
+    #[test]
+    fn lru_eviction() {
+        let mut c = cache(2);
+        c.admit(k(0, 0)).unwrap();
+        c.admit(k(0, 1)).unwrap();
+        c.mark_use(k(0, 0));
+        c.mark_use(k(0, 1));
+        c.mark_use(k(0, 0)); // 1 is now LRU
+        match c.request_load(k(0, 2)) {
+            LoadDecision::StartLoad { evicted: Some(v) } => assert_eq!(v, k(0, 1)),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(c.state(k(0, 1)), SlotState::Cpu);
+    }
+
+    #[test]
+    fn lfu_eviction() {
+        let mut c = ExpertCache::new(1, 4, 2, EvictPolicy::Lfu);
+        c.admit(k(0, 0)).unwrap();
+        c.admit(k(0, 1)).unwrap();
+        for _ in 0..5 {
+            c.mark_use(k(0, 0));
+        }
+        c.mark_use(k(0, 1));
+        match c.request_load(k(0, 3)) {
+            LoadDecision::StartLoad { evicted: Some(v) } => assert_eq!(v, k(0, 1)),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn pinned_never_evicted() {
+        let mut c = cache(1);
+        c.admit(k(0, 0)).unwrap();
+        c.pin(k(0, 0));
+        assert_eq!(c.request_load(k(0, 1)), LoadDecision::NoRoom);
+        c.unpin(k(0, 0));
+        assert!(matches!(
+            c.request_load(k(0, 1)),
+            LoadDecision::StartLoad { evicted: Some(_) }
+        ));
+    }
+
+    #[test]
+    fn loading_counts_toward_capacity() {
+        let mut c = cache(2);
+        assert!(matches!(c.request_load(k(0, 0)), LoadDecision::StartLoad { .. }));
+        assert!(matches!(c.request_load(k(0, 1)), LoadDecision::StartLoad { evicted: None }));
+        // Layer full with two in-flight loads; third must evict, but nothing
+        // is Gpu yet -> NoRoom.
+        assert_eq!(c.request_load(k(0, 2)), LoadDecision::NoRoom);
+    }
+
+    #[test]
+    fn abort_load_returns_to_cpu() {
+        let mut c = cache(2);
+        c.request_load(k(0, 0));
+        c.abort_load(k(0, 0));
+        assert_eq!(c.state(k(0, 0)), SlotState::Cpu);
+    }
+
+    #[test]
+    fn residency_mask_matches_states() {
+        let mut c = cache(3);
+        c.admit(k(0, 1)).unwrap();
+        c.admit(k(0, 3)).unwrap();
+        assert_eq!(c.residency_mask(0), vec![false, true, false, true]);
+        assert_eq!(c.total_gpu(), 2);
+    }
+}

@@ -1,0 +1,15 @@
+//! The offloading substrate: GPU residency accounting, the expert cache
+//! with eviction policies, the PCIe link simulator, and the background
+//! transfer engine that moves experts CPU -> GPU.
+//!
+//! Everything here is xla-free: "GPU residency" is an accounting state; the
+//! engine layer (`model::engine`) owns the corresponding device buffers and
+//! keeps them in sync with cache events.
+
+mod cache;
+mod pcie;
+mod transfer;
+
+pub use cache::{EvictPolicy, ExpertCache, LoadDecision, SlotState};
+pub use pcie::{PcieSim, PcieStats};
+pub use transfer::{EngineState, SharedCache, TransferEngine, TransferHandle, TransferPriority};

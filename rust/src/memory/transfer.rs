@@ -1,0 +1,321 @@
+//! The transfer engine: a background thread that serializes CPU->GPU
+//! expert movement over the simulated PCIe link.
+//!
+//! Two priority classes share the link: **demand** loads (synchronous
+//! misses — the pipeline is stalled on them) always preempt **prefetch**
+//! loads (speculative). Completed transfers flip the cache slot to `Gpu`
+//! and stage the host weights in an arrivals list the engine layer drains
+//! to create device buffers.
+//!
+//! Transfers take *real wall-clock time* (the thread sleeps for the
+//! simulated duration), so every latency/throughput number downstream is a
+//! genuine elapsed-time measurement.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::memory::cache::{ExpertCache, LoadDecision};
+use crate::memory::pcie::PcieSim;
+use crate::weights::{ExpertKey, ExpertWeights, WeightStore};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransferPriority {
+    Demand,
+    Prefetch,
+}
+
+/// Cache + link + arrival/eviction mailboxes, all behind one mutex.
+pub struct EngineState {
+    pub cache: ExpertCache,
+    pub pcie: PcieSim,
+    pub arrivals: Vec<(ExpertKey, ExpertWeights)>,
+    pub evictions: Vec<ExpertKey>,
+    demand_q: VecDeque<ExpertKey>,
+    prefetch_q: VecDeque<ExpertKey>,
+    shutdown: bool,
+}
+
+pub struct Inner {
+    state: Mutex<EngineState>,
+    cv: Condvar,
+}
+
+pub type SharedCache = Arc<Inner>;
+
+pub struct TransferEngine;
+
+/// Handle owned by the serving engine; cloneable for the prefetcher.
+#[derive(Clone)]
+pub struct TransferHandle {
+    inner: SharedCache,
+    thread: Arc<Mutex<Option<JoinHandle<()>>>>,
+}
+
+impl TransferEngine {
+    /// Spawn the engine thread. `time_scale` scales simulated sleeps
+    /// (1.0 = real simulated durations; 0.0 = instant, for unit tests).
+    pub fn spawn(
+        cache: ExpertCache,
+        pcie: PcieSim,
+        store: Arc<WeightStore>,
+        time_scale: f64,
+    ) -> TransferHandle {
+        let inner = Arc::new(Inner {
+            state: Mutex::new(EngineState {
+                cache,
+                pcie,
+                arrivals: Vec::new(),
+                evictions: Vec::new(),
+                demand_q: VecDeque::new(),
+                prefetch_q: VecDeque::new(),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        });
+        let inner2 = inner.clone();
+        let thread = std::thread::Builder::new()
+            .name("pcie-transfer".into())
+            .spawn(move || Self::run(inner2, store, time_scale))
+            .expect("spawn transfer engine");
+        TransferHandle { inner, thread: Arc::new(Mutex::new(Some(thread))) }
+    }
+
+    fn run(inner: SharedCache, store: Arc<WeightStore>, time_scale: f64) {
+        loop {
+            // Pop the next request (demand first), or wait.
+            let (key, prefetch, duration) = {
+                let mut st = inner.state.lock().unwrap();
+                loop {
+                    if st.shutdown {
+                        return;
+                    }
+                    if let Some(k) = st.demand_q.pop_front() {
+                        let d = st.pcie.transfer_duration(store.expert_bytes);
+                        break (k, false, d);
+                    }
+                    if let Some(k) = st.prefetch_q.pop_front() {
+                        let d = st.pcie.transfer_duration(store.expert_bytes);
+                        break (k, true, d);
+                    }
+                    st = inner.cv.wait(st).unwrap();
+                }
+            };
+            // Simulate the PCIe occupancy in real time (lock released).
+            if time_scale > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(
+                    duration.as_secs_f64() * time_scale,
+                ));
+            }
+            let weights = store
+                .expert(key)
+                .expect("transfer for unknown expert");
+            let mut st = inner.state.lock().unwrap();
+            st.pcie.record(store.expert_bytes, prefetch);
+            st.cache.complete_load(key);
+            st.arrivals.push((key, weights));
+            inner.cv.notify_all();
+        }
+    }
+}
+
+impl TransferHandle {
+    /// Run a closure with exclusive access to cache + link state.
+    pub fn with_state<R>(&self, f: impl FnOnce(&mut EngineState) -> R) -> R {
+        let mut st = self.inner.state.lock().unwrap();
+        f(&mut st)
+    }
+
+    /// Request that `key` be brought to GPU. Returns the cache decision;
+    /// enqueues a transfer (and records any eviction) when a load starts.
+    pub fn request(&self, key: ExpertKey, prio: TransferPriority) -> LoadDecision {
+        let mut st = self.inner.state.lock().unwrap();
+        let decision = st.cache.request_load(key);
+        if let LoadDecision::StartLoad { evicted } = decision {
+            if let Some(v) = evicted {
+                st.evictions.push(v);
+            }
+            match prio {
+                TransferPriority::Demand => st.demand_q.push_back(key),
+                TransferPriority::Prefetch => st.prefetch_q.push_back(key),
+            }
+            self.inner.cv.notify_all();
+        }
+        decision
+    }
+
+    /// Escalate an already-queued prefetch to demand priority (the
+    /// verification step of the prefetch pipeline, Fig 3).
+    pub fn escalate(&self, key: ExpertKey) {
+        let mut st = self.inner.state.lock().unwrap();
+        if let Some(pos) = st.prefetch_q.iter().position(|&k| k == key) {
+            st.prefetch_q.remove(pos);
+            st.demand_q.push_back(key);
+            self.inner.cv.notify_all();
+        }
+    }
+
+    /// Cancel a still-queued (not yet started) prefetch: the verification
+    /// step discovered it is not needed. Returns true if it was dequeued.
+    /// Saves PCIe occupancy that would otherwise serve speculative waste.
+    pub fn cancel_prefetch(&self, key: ExpertKey) -> bool {
+        let mut st = self.inner.state.lock().unwrap();
+        if let Some(pos) = st.prefetch_q.iter().position(|&k| k == key) {
+            st.prefetch_q.remove(pos);
+            st.cache.abort_load(key);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Block until `key` is GPU-resident (the synchronous miss stall).
+    pub fn wait_gpu(&self, key: ExpertKey) {
+        let mut st = self.inner.state.lock().unwrap();
+        while !st.cache.is_gpu(key) {
+            st = self.inner.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Drain completed transfers (engine layer creates device buffers).
+    pub fn drain_arrivals(&self) -> Vec<(ExpertKey, ExpertWeights)> {
+        std::mem::take(&mut self.inner.state.lock().unwrap().arrivals)
+    }
+
+    /// Drain evicted experts (engine layer drops device buffers).
+    pub fn drain_evictions(&self) -> Vec<ExpertKey> {
+        std::mem::take(&mut self.inner.state.lock().unwrap().evictions)
+    }
+
+    /// Number of queued (not yet started) transfers.
+    pub fn queue_depth(&self) -> (usize, usize) {
+        let st = self.inner.state.lock().unwrap();
+        (st.demand_q.len(), st.prefetch_q.len())
+    }
+
+    pub fn shutdown(&self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+            self.inner.cv.notify_all();
+        }
+        if let Some(t) = self.thread.lock().unwrap().take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::memory::cache::EvictPolicy;
+
+    fn setup(cap: usize) -> (TransferHandle, Arc<WeightStore>) {
+        let cfg = ModelConfig::test_tiny();
+        let store = Arc::new(WeightStore::synthetic(&cfg, 1));
+        let cache = ExpertCache::new(cfg.n_layers, cfg.n_experts, cap, EvictPolicy::Lru);
+        let pcie = PcieSim::new(16e9, 1e-6, 1.0);
+        let h = TransferEngine::spawn(cache, pcie, store.clone(), 0.0);
+        (h, store)
+    }
+
+    #[test]
+    fn demand_load_completes() {
+        let (h, _) = setup(4);
+        let k = ExpertKey::new(0, 2);
+        assert!(matches!(
+            h.request(k, TransferPriority::Demand),
+            LoadDecision::StartLoad { .. }
+        ));
+        h.wait_gpu(k);
+        assert!(h.with_state(|st| st.cache.is_gpu(k)));
+        let arr = h.drain_arrivals();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].0, k);
+        h.shutdown();
+    }
+
+    #[test]
+    fn stats_recorded_per_class() {
+        let (h, _) = setup(4);
+        h.request(ExpertKey::new(0, 0), TransferPriority::Demand);
+        h.request(ExpertKey::new(0, 1), TransferPriority::Prefetch);
+        h.wait_gpu(ExpertKey::new(0, 0));
+        h.wait_gpu(ExpertKey::new(0, 1));
+        let (d, p) = h.with_state(|st| {
+            (st.pcie.stats.demand_transfers, st.pcie.stats.prefetch_transfers)
+        });
+        assert_eq!((d, p), (1, 1));
+        h.shutdown();
+    }
+
+    #[test]
+    fn eviction_reported() {
+        let (h, _) = setup(1);
+        let a = ExpertKey::new(0, 0);
+        let b = ExpertKey::new(0, 1);
+        h.request(a, TransferPriority::Demand);
+        h.wait_gpu(a);
+        h.request(b, TransferPriority::Demand);
+        h.wait_gpu(b);
+        let ev = h.drain_evictions();
+        assert_eq!(ev, vec![a]);
+        h.shutdown();
+    }
+
+    #[test]
+    fn duplicate_requests_coalesce() {
+        let (h, _) = setup(4);
+        let k = ExpertKey::new(1, 3);
+        assert!(matches!(
+            h.request(k, TransferPriority::Demand),
+            LoadDecision::StartLoad { .. }
+        ));
+        // Second request while loading (or already loaded) never double-queues.
+        let d2 = h.request(k, TransferPriority::Demand);
+        assert!(matches!(
+            d2,
+            LoadDecision::AlreadyLoading | LoadDecision::AlreadyGpu
+        ));
+        h.wait_gpu(k);
+        assert_eq!(h.drain_arrivals().len(), 1);
+        h.shutdown();
+    }
+
+    #[test]
+    fn escalate_moves_queue() {
+        let (h, _) = setup(8);
+        // Saturate with prefetches, then escalate the last one.
+        for e in 0..4 {
+            h.request(ExpertKey::new(2, e), TransferPriority::Prefetch);
+        }
+        h.escalate(ExpertKey::new(2, 3));
+        h.wait_gpu(ExpertKey::new(2, 3));
+        h.shutdown();
+    }
+
+    #[test]
+    fn shutdown_idempotent() {
+        let (h, _) = setup(2);
+        h.shutdown();
+        h.shutdown();
+    }
+
+    #[test]
+    fn real_sleep_takes_time() {
+        let cfg = ModelConfig::test_tiny();
+        let store = Arc::new(WeightStore::synthetic(&cfg, 1));
+        let cache = ExpertCache::new(cfg.n_layers, cfg.n_experts, 4, EvictPolicy::Lru);
+        // 6144 bytes/expert * 1e6 scale / 1e9 B/s ~= 6.1ms per transfer.
+        let pcie = PcieSim::new(1e9, 0.0, 1e6);
+        let h = TransferEngine::spawn(cache, pcie, store, 1.0);
+        let k = ExpertKey::new(0, 0);
+        let t0 = std::time::Instant::now();
+        h.request(k, TransferPriority::Demand);
+        h.wait_gpu(k);
+        assert!(t0.elapsed().as_secs_f64() > 0.004, "stall must be real");
+        h.shutdown();
+    }
+}

@@ -1,0 +1,782 @@
+//! The inference engine: orchestrates the AOT stages per layer, routes
+//! tokens, applies the miss policy (buddy substitution / on-demand /
+//! random / drop), schedules expert execution against the cache, and
+//! drives the prefetcher — the complete Figure 3 + Algorithm 1 pipeline.
+//!
+//! All PJRT interaction happens on the thread that owns the `Engine`; the
+//! transfer engine thread only touches host-side state.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::buddy::{BuddyProfile, GateParams, PsiParams, SlotDecision, SubstitutionEngine, TokenRouting};
+use crate::config::{MissPolicy, ModelConfig, PrefetchKind, ServingConfig};
+use crate::memory::{EvictPolicy, ExpertCache, LoadDecision, PcieSim, TransferEngine, TransferHandle, TransferPriority};
+use crate::model::route::routings_from_probs;
+use crate::model::seq::Sequence;
+use crate::prefetch::{OracleNoisy, PreGate, PredictContext, Predictor, PrefetchEngine, TopFreq};
+use crate::profilecollect::ProfileCollector;
+use crate::runtime::{lit_i32, lit_tensor, ArtifactRegistry, Runtime};
+use crate::stats::Counters;
+use crate::util::math::argmax;
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+use crate::weights::{ExpertKey, WeightStore};
+
+/// Engine construction options orthogonal to the serving config.
+#[derive(Debug, Clone)]
+pub struct EngineOptions {
+    /// Scales simulated PCIe sleeps (1.0 = real; 0.0 = instant, tests).
+    pub time_scale: f64,
+    /// Record pre-substitution routing into a ProfileCollector.
+    pub collect_profile: bool,
+    /// Keep per-step logits on each sequence (accuracy evaluation).
+    pub record_logits: bool,
+    pub evict_policy: EvictPolicy,
+    /// Keep non-expert weights (embedding, attention, router) as device
+    /// buffers and run stages via the buffer path, instead of shipping
+    /// weight literals host->device on every call. §Perf optimization; the
+    /// literal path is retained for before/after measurement.
+    pub weight_buffers: bool,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        Self {
+            time_scale: 1.0,
+            collect_profile: false,
+            record_logits: false,
+            evict_policy: EvictPolicy::Lru,
+            weight_buffers: true,
+        }
+    }
+}
+
+/// Per-step telemetry (aggregated into server metrics).
+#[derive(Debug, Clone, Default)]
+pub struct StepTelemetry {
+    /// Wall seconds spent stalled on demand transfers this step.
+    pub stall_seconds: f64,
+    pub substitutions: u64,
+    pub fetches: u64,
+    /// Fetches served outside the cache (all slots pinned).
+    pub transient_fetches: u64,
+}
+
+struct LayerLits {
+    ln1: xla::Literal,
+    wq: xla::Literal,
+    wk: xla::Literal,
+    wv: xla::Literal,
+    wo: xla::Literal,
+    ln2: xla::Literal,
+    wg: xla::Literal,
+    rbias: xla::Literal,
+}
+
+/// Device-resident copies of per-layer non-expert weights (§Perf: created
+/// once, reused every call — saves one host->device weight copy per stage
+/// invocation on the hot path).
+struct LayerBufs {
+    ln1: xla::PjRtBuffer,
+    wq: xla::PjRtBuffer,
+    wk: xla::PjRtBuffer,
+    wv: xla::PjRtBuffer,
+    wo: xla::PjRtBuffer,
+    ln2: xla::PjRtBuffer,
+    wg: xla::PjRtBuffer,
+    rbias: xla::PjRtBuffer,
+}
+
+pub struct Engine {
+    pub cfg: ModelConfig,
+    pub scfg: ServingConfig,
+    pub opts: EngineOptions,
+    rt: Runtime,
+    reg: ArtifactRegistry,
+    store: Arc<WeightStore>,
+    transfer: TransferHandle,
+    buddy_profile: Option<BuddyProfile>,
+    predictor: Option<Box<dyn Predictor>>,
+    prefetcher: PrefetchEngine,
+    pub counters: Counters,
+    pub profile_out: Option<ProfileCollector>,
+    rng: Rng,
+    lit_embed: xla::Literal,
+    lit_final_gain: xla::Literal,
+    layer_lits: Vec<LayerLits>,
+    buf_embed: Option<xla::PjRtBuffer>,
+    buf_final_gain: Option<xla::PjRtBuffer>,
+    layer_bufs: Vec<LayerBufs>,
+    next_seq_id: u64,
+}
+
+impl Engine {
+    /// Build the engine: compile artifacts, warm the cache with the most
+    /// popular experts per layer, start the transfer engine.
+    ///
+    /// `warm_rank` ranks experts per layer for cache warm-up + the TopFreq
+    /// predictor (pass profiled activation ranks; falls back to router-bias
+    /// popularity).
+    pub fn new(
+        cfg: ModelConfig,
+        scfg: ServingConfig,
+        store: Arc<WeightStore>,
+        buddy_profile: Option<BuddyProfile>,
+        warm_rank: Option<Vec<Vec<usize>>>,
+        opts: EngineOptions,
+    ) -> Result<Self> {
+        scfg.validate()?;
+        let rt = Runtime::cpu()?;
+        let mut reg = rt.load_artifacts(&cfg)?;
+
+        let capacity = scfg.gpu_experts_per_layer(cfg.n_experts).max(1);
+        let mut cache = ExpertCache::new(cfg.n_layers, cfg.n_experts, capacity, opts.evict_policy);
+
+        let warm_rank = warm_rank.unwrap_or_else(|| Self::bias_rank(&cfg, &store));
+        for (l, ranked) in warm_rank.iter().enumerate() {
+            for &e in ranked.iter().take(capacity) {
+                let key = ExpertKey::new(l, e);
+                cache.admit(key).context("cache warm-up")?;
+                let w = store.expert(key)?;
+                reg.admit_expert(&rt, key, &w)?;
+            }
+        }
+        log::info!(
+            "cache warmed: {}/{} experts per layer ({}%)",
+            capacity,
+            cfg.n_experts,
+            (scfg.cache_rate * 100.0) as u32
+        );
+
+        let pcie = PcieSim::new(scfg.pcie_bandwidth, scfg.pcie_base_latency, scfg.transfer_bytes_scale);
+        let transfer = TransferEngine::spawn(cache, pcie, store.clone(), opts.time_scale);
+
+        let predictor: Option<Box<dyn Predictor>> = match scfg.prefetch {
+            PrefetchKind::None => None,
+            PrefetchKind::TopFreq => Some(Box::new(TopFreq::from_ranked(warm_rank.clone()))),
+            PrefetchKind::PreGate => Some(Box::new(PreGate::new(
+                store.clone(),
+                cfg.d_model,
+                cfg.top_k,
+                cfg.rms_eps as f32,
+            ))),
+            PrefetchKind::OracleNoisy => {
+                Some(Box::new(OracleNoisy::new(scfg.oracle_miss_rate, scfg.seed ^ 0xa5)))
+            }
+        };
+        let prefetcher = PrefetchEngine::new(transfer.clone(), cfg.n_layers, scfg.prefetch_width);
+
+        // Cache non-expert weights as literals once.
+        let lit_embed = lit_tensor(store.tensor("embed")?)?;
+        let lit_final_gain = lit_tensor(store.tensor("final_gain")?)?;
+        let mut layer_lits = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let g = |n: &str| -> Result<xla::Literal> {
+                lit_tensor(store.tensor(&format!("L{l}.{n}"))?)
+            };
+            layer_lits.push(LayerLits {
+                ln1: g("ln1")?,
+                wq: g("wq")?,
+                wk: g("wk")?,
+                wv: g("wv")?,
+                wo: g("wo")?,
+                ln2: g("ln2")?,
+                wg: g("wg")?,
+                rbias: g("rbias")?,
+            });
+        }
+
+        // §Perf: device-resident non-expert weights for the buffer path.
+        let (buf_embed, buf_final_gain, layer_bufs) = if opts.weight_buffers {
+            let te = store.tensor("embed")?;
+            let tg = store.tensor("final_gain")?;
+            let mut bufs = Vec::with_capacity(cfg.n_layers);
+            for l in 0..cfg.n_layers {
+                let g = |n: &str| -> Result<xla::PjRtBuffer> {
+                    let t = store.tensor(&format!("L{l}.{n}"))?;
+                    rt.to_device(&t.data, &t.dims)
+                };
+                bufs.push(LayerBufs {
+                    ln1: g("ln1")?,
+                    wq: g("wq")?,
+                    wk: g("wk")?,
+                    wv: g("wv")?,
+                    wo: g("wo")?,
+                    ln2: g("ln2")?,
+                    wg: g("wg")?,
+                    rbias: g("rbias")?,
+                });
+            }
+            (
+                Some(rt.to_device(&te.data, &te.dims)?),
+                Some(rt.to_device(&tg.data, &tg.dims)?),
+                bufs,
+            )
+        } else {
+            (None, None, Vec::new())
+        };
+
+        let profile_out = opts
+            .collect_profile
+            .then(|| ProfileCollector::new(cfg.n_layers, cfg.n_experts));
+
+        Ok(Self {
+            rng: Rng::new(scfg.seed),
+            cfg,
+            scfg,
+            opts,
+            rt,
+            reg,
+            store,
+            transfer,
+            buddy_profile,
+            predictor,
+            prefetcher,
+            counters: Counters::new(),
+            profile_out,
+            lit_embed,
+            lit_final_gain,
+            layer_lits,
+            buf_embed,
+            buf_final_gain,
+            layer_bufs,
+            next_seq_id: 0,
+        })
+    }
+
+    /// Rank experts per layer by router bias (popularity prior).
+    pub fn bias_rank(cfg: &ModelConfig, store: &WeightStore) -> Vec<Vec<usize>> {
+        (0..cfg.n_layers)
+            .map(|l| {
+                let bias = &store.tensor(&format!("L{l}.rbias")).unwrap().data;
+                let mut idx: Vec<usize> = (0..cfg.n_experts).collect();
+                idx.sort_by(|&a, &b| bias[b].partial_cmp(&bias[a]).unwrap().then(a.cmp(&b)));
+                idx
+            })
+            .collect()
+    }
+
+    pub fn new_sequence(&mut self, prompt: Vec<i32>, max_new: usize) -> Sequence {
+        self.next_seq_id += 1;
+        Sequence::new(&self.cfg, self.next_seq_id, prompt, max_new)
+    }
+
+    pub fn transfer_handle(&self) -> &TransferHandle {
+        &self.transfer
+    }
+
+    pub fn prefetch_counters(&self) -> &Counters {
+        &self.prefetcher.counters
+    }
+
+    pub fn shutdown(&self) {
+        self.transfer.shutdown();
+    }
+
+    // ------------------------------------------------------------------
+    // Stage wrappers: buffer path (weights device-resident) vs literal path
+    // ------------------------------------------------------------------
+
+    fn run_embed(&self, tb: usize, toks: &[i32]) -> Result<Tensor> {
+        let name = format!("embed_T{tb}");
+        if let Some(be) = &self.buf_embed {
+            let bt = self.rt.to_device_i32(toks, &[toks.len()])?;
+            self.reg.run_buffers(&name, &[&bt, be])?.single()
+        } else {
+            let lt = lit_i32(toks);
+            self.reg.run_lits(&name, &[&lt, &self.lit_embed])?.single()
+        }
+    }
+
+    fn run_attn_prefill(&self, l: usize, x: &Tensor, mask: &Tensor) -> Result<Vec<Tensor>> {
+        if !self.layer_bufs.is_empty() {
+            let lb = &self.layer_bufs[l];
+            let bx = self.rt.to_device(&x.data, &x.dims)?;
+            let bm = self.rt.to_device(&mask.data, &mask.dims)?;
+            Ok(self
+                .reg
+                .run_buffers(
+                    "attn_prefill",
+                    &[&bx, &bm, &lb.ln1, &lb.wq, &lb.wk, &lb.wv, &lb.wo],
+                )?
+                .outputs)
+        } else {
+            let ll = &self.layer_lits[l];
+            let lx = lit_tensor(x)?;
+            let lm = lit_tensor(mask)?;
+            Ok(self
+                .reg
+                .run_lits(
+                    "attn_prefill",
+                    &[&lx, &lm, &ll.ln1, &ll.wq, &ll.wk, &ll.wv, &ll.wo],
+                )?
+                .outputs)
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_attn_decode(
+        &self,
+        l: usize,
+        bb: usize,
+        x: &Tensor,
+        kc: &Tensor,
+        vc: &Tensor,
+        pos_mask: &Tensor,
+    ) -> Result<Vec<Tensor>> {
+        let name = format!("attn_decode_B{bb}");
+        if !self.layer_bufs.is_empty() {
+            let lb = &self.layer_bufs[l];
+            let bx = self.rt.to_device(&x.data, &x.dims)?;
+            let bk = self.rt.to_device(&kc.data, &kc.dims)?;
+            let bv = self.rt.to_device(&vc.data, &vc.dims)?;
+            let bm = self.rt.to_device(&pos_mask.data, &pos_mask.dims)?;
+            Ok(self
+                .reg
+                .run_buffers(
+                    &name,
+                    &[&bx, &bk, &bv, &bm, &lb.ln1, &lb.wq, &lb.wk, &lb.wv, &lb.wo],
+                )?
+                .outputs)
+        } else {
+            let ll = &self.layer_lits[l];
+            let lx = lit_tensor(x)?;
+            let lk = lit_tensor(kc)?;
+            let lv = lit_tensor(vc)?;
+            let lm = lit_tensor(pos_mask)?;
+            Ok(self
+                .reg
+                .run_lits(
+                    &name,
+                    &[&lx, &lk, &lv, &lm, &ll.ln1, &ll.wq, &ll.wk, &ll.wv, &ll.wo],
+                )?
+                .outputs)
+        }
+    }
+
+    fn run_lm_head(&self, tb: usize, x: &Tensor) -> Result<Tensor> {
+        let name = format!("lm_head_T{tb}");
+        if let (Some(bg), Some(be)) = (&self.buf_final_gain, &self.buf_embed) {
+            let bx = self.rt.to_device(&x.data, &x.dims)?;
+            self.reg.run_buffers(&name, &[&bx, bg, be])?.single()
+        } else {
+            let lx = lit_tensor(x)?;
+            self.reg
+                .run_lits(&name, &[&lx, &self.lit_final_gain, &self.lit_embed])?
+                .single()
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Prefill
+    // ------------------------------------------------------------------
+
+    /// Run the prompt through the model, filling the KV cache and setting
+    /// the first generated token.
+    pub fn prefill(&mut self, seq: &mut Sequence) -> Result<StepTelemetry> {
+        let s = self.cfg.max_seq;
+        let s0 = seq.prompt.len();
+        let mut tel = StepTelemetry::default();
+
+        // Embed the padded prompt.
+        let mut toks = vec![0i32; s];
+        toks[..s0].copy_from_slice(&seq.prompt);
+        let mut x = self.run_embed(s, &toks)?;
+
+        let mut len_mask = vec![0.0f32; s];
+        len_mask[..s0].fill(1.0);
+        let mask_t = Tensor::new(vec![s], len_mask)?;
+
+        for l in 0..self.cfg.n_layers {
+            let out = self.run_attn_prefill(l, &x, &mask_t)?;
+            let [y, k, v]: [Tensor; 3] = out
+                .try_into()
+                .map_err(|_| anyhow::anyhow!("attn_prefill output arity"))?;
+            for p in 0..s0 {
+                seq.kv_k[l].row_mut(p).copy_from_slice(k.row(p));
+                seq.kv_v[l].row_mut(p).copy_from_slice(v.row(p));
+            }
+            let (h, mut routings) = self.run_router(l, &y, s0)?;
+            let moe = self.run_moe(l, &h, &mut routings, &mut tel)?;
+            // Residual: x = y + moe on the real rows (padding rows unused).
+            x = y;
+            for t in 0..s0 {
+                let row = x.row_mut(t);
+                for (a, b) in row.iter_mut().zip(moe.row(t)) {
+                    *a += b;
+                }
+            }
+            self.prefetch_next(l, &x);
+        }
+        // LM head on the last real position.
+        let last = Tensor::new(vec![1, self.cfg.d_model], x.row(s0 - 1).to_vec())?;
+        let logits = self.run_lm_head(1, &last)?;
+        let pred = argmax(logits.row(0)) as i32;
+        seq.predictions.push(pred);
+        if self.opts.record_logits {
+            seq.prefill_logits = Some(logits.row(0).to_vec());
+        }
+        seq.next_token = seq.fed_token(pred, 0);
+        seq.pos = s0;
+        self.counters.inc("prefills");
+        Ok(tel)
+    }
+
+    // ------------------------------------------------------------------
+    // Decode
+    // ------------------------------------------------------------------
+
+    /// One decode step for a batch of prefilled sequences.
+    pub fn decode_step(&mut self, seqs: &mut [&mut Sequence]) -> Result<StepTelemetry> {
+        let b = seqs.len();
+        anyhow::ensure!(b > 0, "empty batch");
+        let bb = self
+            .cfg
+            .batch_bucket_for(b)
+            .context("batch larger than any bucket")?;
+        let d = self.cfg.d_model;
+        let s = self.cfg.max_seq;
+        let mut tel = StepTelemetry::default();
+
+        // Embed current tokens (token bucket >= b).
+        let tb = self.cfg.token_bucket_for(b).context("no token bucket")?;
+        let mut toks = vec![0i32; tb];
+        for (i, sq) in seqs.iter().enumerate() {
+            toks[i] = sq.next_token;
+        }
+        let emb = self.run_embed(tb, &toks)?;
+        // x: [bb, d]
+        let mut x = Tensor::zeros(vec![bb, d]);
+        for i in 0..b {
+            x.row_mut(i).copy_from_slice(emb.row(i));
+        }
+
+        // Batched KV + position masks.
+        let mut pos_mask = Tensor::zeros(vec![bb, s]);
+        for (i, sq) in seqs.iter().enumerate() {
+            pos_mask.row_mut(i)[..sq.pos].fill(1.0);
+        }
+
+        for l in 0..self.cfg.n_layers {
+            // Assemble [bb, s, d] caches.
+            let mut kc = vec![0.0f32; bb * s * d];
+            let mut vc = vec![0.0f32; bb * s * d];
+            for (i, sq) in seqs.iter().enumerate() {
+                kc[i * s * d..(i + 1) * s * d].copy_from_slice(&sq.kv_k[l].data);
+                vc[i * s * d..(i + 1) * s * d].copy_from_slice(&sq.kv_v[l].data);
+            }
+            let kc = Tensor::new(vec![bb, s, d], kc)?;
+            let vc = Tensor::new(vec![bb, s, d], vc)?;
+            let out = self.run_attn_decode(l, bb, &x, &kc, &vc, &pos_mask)?;
+            let [y, k_new, v_new]: [Tensor; 3] = out
+                .try_into()
+                .map_err(|_| anyhow::anyhow!("attn_decode output arity"))?;
+            for (i, sq) in seqs.iter_mut().enumerate() {
+                sq.write_kv(l, k_new.row(i), v_new.row(i));
+            }
+
+            let (h, mut routings) = self.run_router(l, &y, b)?;
+            let moe = self.run_moe(l, &h, &mut routings, &mut tel)?;
+            x = y;
+            for t in 0..b {
+                let row = x.row_mut(t);
+                for (a, mo) in row.iter_mut().zip(moe.row(t)) {
+                    *a += mo;
+                }
+            }
+            self.prefetch_next(l, &x);
+        }
+
+        // LM head over the batch.
+        let mut xb = Tensor::zeros(vec![tb, d]);
+        for i in 0..b {
+            xb.row_mut(i).copy_from_slice(x.row(i));
+        }
+        let logits = self.run_lm_head(tb, &xb)?;
+        for (i, sq) in seqs.iter_mut().enumerate() {
+            let row = logits.row(i);
+            if self.opts.record_logits {
+                sq.logits_log.push(row.to_vec());
+            }
+            let pred = argmax(row) as i32;
+            sq.predictions.push(pred);
+            // Position of the *next* fed token: generated.len()+1 (the
+            // prefill prediction occupies position 0).
+            let fed = sq.fed_token(pred, sq.generated.len() + 1);
+            sq.advance(fed);
+        }
+        self.counters.inc("decode_steps");
+        self.counters.add("decode_tokens", b as u64);
+        Ok(tel)
+    }
+
+    // ------------------------------------------------------------------
+    // Shared per-layer stages
+    // ------------------------------------------------------------------
+
+    /// Router stage on `y` ([T, d]); routes the first `n_real` rows.
+    fn run_router(&mut self, l: usize, y: &Tensor, n_real: usize) -> Result<(Tensor, Vec<TokenRouting>)> {
+        let t = y.dims[0];
+        let name = format!("router_T{t}");
+        let out = if !self.layer_bufs.is_empty() {
+            let lb = &self.layer_bufs[l];
+            let by = self.rt.to_device(&y.data, &y.dims)?;
+            self.reg
+                .run_buffers(&name, &[&by, &lb.ln2, &lb.wg, &lb.rbias])?
+        } else {
+            let ll = &self.layer_lits[l];
+            let ly = lit_tensor(y)?;
+            self.reg
+                .run_lits(&name, &[&ly, &ll.ln2, &ll.wg, &ll.rbias])?
+        };
+        let mut it = out.outputs.into_iter();
+        let h = it.next().context("router h")?;
+        let probs = it.next().context("router probs")?;
+        let routings = routings_from_probs(&probs, n_real, self.cfg.top_k);
+        if let Some(pc) = self.profile_out.as_mut() {
+            for r in &routings {
+                pc.record(l, &r.selected, &r.weights)?;
+            }
+        }
+        Ok((h, routings))
+    }
+
+    /// The MoE stage: miss policy + expert scheduling + weighted combine.
+    /// `h` is the normed input [T, d]; returns the MoE output for the first
+    /// `routings.len()` rows.
+    fn run_moe(
+        &mut self,
+        l: usize,
+        h: &Tensor,
+        routings: &mut Vec<TokenRouting>,
+        tel: &mut StepTelemetry,
+    ) -> Result<Tensor> {
+        let n_real = routings.len();
+        let d = self.cfg.d_model;
+
+        // Verification step of the prefetch pipeline (Fig 3).
+        let mut actual_unique: Vec<usize> = Vec::new();
+        for r in routings.iter() {
+            for &e in &r.selected {
+                if !actual_unique.contains(&e) {
+                    actual_unique.push(e);
+                }
+            }
+        }
+        self.prefetcher.verify(l, &actual_unique);
+
+        // Residency mask + policy application.
+        let residency = self.transfer.with_state(|st| {
+            for &e in &actual_unique {
+                st.cache.mark_use(ExpertKey::new(l, e));
+            }
+            st.cache.residency_mask(l)
+        });
+        let sub_counters_before = self.counters.get("substitutions");
+        let decisions = if let Some(profile) = self.buddy_profile.as_ref() {
+            let mut eng = SubstitutionEngine::new(profile);
+            eng.gates = GateParams {
+                tau: self.scfg.tae_tau,
+                margin_gamma: self.scfg.margin_gamma,
+                beta: self.scfg.dist_beta,
+                temperature: None,
+            };
+            eng.psi_params = PsiParams {
+                eta: self.scfg.eta,
+                kappa: self.scfg.kappa,
+                diversity_discount: self.scfg.diversity_discount,
+            };
+            eng.search_h = self.scfg.search_h;
+            eng.rho = self.scfg.rho;
+            let (dec, _) = eng.apply(
+                l,
+                routings,
+                &residency,
+                self.scfg.miss_policy,
+                None,
+                &mut self.counters,
+                &mut self.rng,
+            );
+            dec
+        } else {
+            // No buddy profile: degrade Buddy policy to OnDemand.
+            let policy = match self.scfg.miss_policy {
+                MissPolicy::Buddy => MissPolicy::OnDemand,
+                p => p,
+            };
+            let dummy_profile = BuddyProfile::build(
+                &ProfileCollector::new(self.cfg.n_layers, self.cfg.n_experts),
+                &vec![1.0; self.cfg.n_layers],
+                1,
+                1e-9,
+                false,
+            )?;
+            let eng = SubstitutionEngine::new(&dummy_profile);
+            let (dec, _) = eng.apply(
+                l,
+                routings,
+                &residency,
+                policy,
+                None,
+                &mut self.counters,
+                &mut self.rng,
+            );
+            dec
+        };
+        tel.substitutions += self.counters.get("substitutions") - sub_counters_before;
+
+        // Pin every expert we are about to use, then fetch the misses.
+        let mut used: Vec<usize> = Vec::new();
+        let mut fetches: Vec<usize> = Vec::new();
+        for (r, dec) in routings.iter().zip(&decisions) {
+            for (slot, d) in dec.iter().enumerate() {
+                let e = r.selected[slot];
+                match d {
+                    SlotDecision::Dropped => {}
+                    SlotDecision::Fetch => {
+                        if !fetches.contains(&e) {
+                            fetches.push(e);
+                        }
+                        if !used.contains(&e) {
+                            used.push(e);
+                        }
+                    }
+                    _ => {
+                        if !used.contains(&e) {
+                            used.push(e);
+                        }
+                    }
+                }
+            }
+        }
+        self.transfer.with_state(|st| {
+            for &e in &used {
+                st.cache.pin(ExpertKey::new(l, e));
+            }
+        });
+
+        // Demand loads (the synchronous miss stall).
+        let mut transient: Vec<usize> = Vec::new();
+        let mut pending: Vec<ExpertKey> = Vec::new();
+        for &e in &fetches {
+            let key = ExpertKey::new(l, e);
+            match self.transfer.request(key, TransferPriority::Demand) {
+                LoadDecision::StartLoad { .. } | LoadDecision::AlreadyLoading => {
+                    pending.push(key)
+                }
+                LoadDecision::AlreadyGpu => {}
+                LoadDecision::NoRoom => transient.push(e),
+            }
+        }
+        tel.fetches += fetches.len() as u64;
+        if !pending.is_empty() {
+            let t0 = Instant::now();
+            for key in &pending {
+                self.transfer.wait_gpu(*key);
+            }
+            tel.stall_seconds += t0.elapsed().as_secs_f64();
+        }
+        self.sync_device_buffers()?;
+
+        // Transient fetches: cache had no unpinned slot; stream the weights
+        // through without admission (still pays the PCIe time).
+        let mut transient_bufs: BTreeMap<usize, [xla::PjRtBuffer; 3]> = BTreeMap::new();
+        for &e in &transient {
+            let key = ExpertKey::new(l, e);
+            let dur = self
+                .transfer
+                .with_state(|st| st.pcie.transfer_duration(self.store.expert_bytes));
+            if self.opts.time_scale > 0.0 {
+                std::thread::sleep(dur.mul_f64(self.opts.time_scale));
+            }
+            self.transfer
+                .with_state(|st| st.pcie.record(self.store.expert_bytes, false));
+            let w = self.store.expert(key)?;
+            let b1 = self.rt.to_device(&w.0.data, &w.0.dims)?;
+            let b3 = self.rt.to_device(&w.1.data, &w.1.dims)?;
+            let b2 = self.rt.to_device(&w.2.data, &w.2.dims)?;
+            transient_bufs.insert(e, [b1, b3, b2]);
+            tel.transient_fetches += 1;
+        }
+
+        // Group tokens by expert and execute.
+        let mut groups: BTreeMap<usize, Vec<(usize, usize)>> = BTreeMap::new();
+        for (t, (r, dec)) in routings.iter().zip(&decisions).enumerate() {
+            for (slot, sd) in dec.iter().enumerate() {
+                if matches!(sd, SlotDecision::Dropped) {
+                    continue;
+                }
+                groups.entry(r.selected[slot]).or_default().push((t, slot));
+            }
+        }
+
+        let mut out = Tensor::zeros(vec![n_real, d]);
+        for (&e, members) in &groups {
+            let rows: Vec<usize> = members.iter().map(|&(t, _)| t).collect();
+            let grp = h.gather_rows(&rows);
+            let tb = self
+                .cfg
+                .token_bucket_for(rows.len())
+                .context("expert group exceeds largest bucket")?;
+            let grp = grp.pad_rows(tb);
+            let hbuf = self.rt.to_device(&grp.data, &grp.dims)?;
+            let key = ExpertKey::new(l, e);
+            let y = if let Some(bufs) = transient_bufs.get(&e) {
+                self.reg.run_buffers(
+                    &format!("expert_T{tb}"),
+                    &[&hbuf, &bufs[0], &bufs[1], &bufs[2]],
+                )?
+            } else {
+                let bufs = self.reg.expert_buffers(key)?;
+                self.reg.run_buffers(
+                    &format!("expert_T{tb}"),
+                    &[&hbuf, &bufs[0], &bufs[1], &bufs[2]],
+                )?
+            }
+            .single()?;
+            for (i, &(t, slot)) in members.iter().enumerate() {
+                let w = routings[t].weights[slot];
+                let orow = out.row_mut(t);
+                for (o, yv) in orow.iter_mut().zip(y.row(i)) {
+                    *o += w * yv;
+                }
+            }
+            self.counters.inc("expert_invocations");
+        }
+
+        self.transfer.with_state(|st| {
+            for &e in &used {
+                st.cache.unpin(ExpertKey::new(l, e));
+            }
+        });
+        Ok(out)
+    }
+
+    /// Mirror cache arrivals/evictions into device buffers.
+    fn sync_device_buffers(&mut self) -> Result<()> {
+        for key in self.transfer.drain_evictions() {
+            self.reg.evict_expert(key);
+        }
+        for (key, w) in self.transfer.drain_arrivals() {
+            self.reg.admit_expert(&self.rt, key, &w)?;
+        }
+        Ok(())
+    }
+
+    /// Issue prefetches for layer `l + 1` given the hidden state leaving
+    /// layer `l` (the Fig 3 overlap).
+    fn prefetch_next(&mut self, l: usize, hidden: &Tensor) {
+        let next = l + 1;
+        if next >= self.cfg.n_layers {
+            return;
+        }
+        if let Some(pred) = self.predictor.as_mut() {
+            let ctx = PredictContext { hidden: Some(hidden), actual: None };
+            self.prefetcher.prefetch_layer(next, pred.as_mut(), &ctx);
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! The serving-side model: sequences with KV caches, routing helpers, and
+//! the layer-orchestrating inference engine that glues the AOT artifacts to
+//! the offloading + buddy-substitution machinery.
+
+mod engine;
+mod route;
+mod seq;
+
+pub use engine::{Engine, EngineOptions, StepTelemetry};
+pub use route::routings_from_probs;
+pub use seq::Sequence;

@@ -1,0 +1,41 @@
+//! Routing helpers: turn router-stage probabilities into per-token top-k
+//! selections (the exact deterministic rule the golden fixtures use).
+
+use crate::buddy::TokenRouting;
+use crate::util::math::top_k;
+use crate::util::tensor::Tensor;
+
+/// probs: [T, E] -> per-token TokenRouting (top-k, renormalized weights).
+/// Only the first `n_real` rows are routed (bucket padding is skipped).
+pub fn routings_from_probs(probs: &Tensor, n_real: usize, k: usize) -> Vec<TokenRouting> {
+    assert_eq!(probs.rank(), 2);
+    (0..n_real)
+        .map(|t| {
+            let (selected, weights) = top_k(probs.row(t), k);
+            TokenRouting { selected, weights }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_and_skips_padding() {
+        let probs = Tensor::new(
+            vec![3, 4],
+            vec![
+                0.1, 0.4, 0.3, 0.2, // token 0 -> top2 = [1, 2]
+                0.7, 0.1, 0.1, 0.1, // token 1 -> top2 = [0, 1] (tie low idx)
+                0.25, 0.25, 0.25, 0.25, // padding row, ignored
+            ],
+        )
+        .unwrap();
+        let r = routings_from_probs(&probs, 2, 2);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r[0].selected, vec![1, 2]);
+        assert!((r[0].weights[0] - 0.4 / 0.7).abs() < 1e-6);
+        assert_eq!(r[1].selected, vec![0, 1]);
+    }
+}

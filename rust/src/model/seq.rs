@@ -1,0 +1,137 @@
+//! A serving sequence: prompt, generation state, and per-layer KV cache.
+
+use crate::config::ModelConfig;
+use crate::util::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct Sequence {
+    pub id: u64,
+    /// Prompt token ids.
+    pub prompt: Vec<i32>,
+    /// Generated token ids.
+    pub generated: Vec<i32>,
+    /// Token to feed at the next decode step.
+    pub next_token: i32,
+    /// Number of KV positions filled (prompt + generated so far).
+    pub pos: usize,
+    /// Per-layer K / V caches, each [max_seq, d_model].
+    pub kv_k: Vec<Tensor>,
+    pub kv_v: Vec<Tensor>,
+    /// Generation budget.
+    pub max_new: usize,
+    /// Per-step logits kept when telemetry is enabled (accuracy eval).
+    pub logits_log: Vec<Vec<f32>>,
+    /// Logits at the last prompt position (prefill), when recorded.
+    pub prefill_logits: Option<Vec<f32>>,
+    /// The model's argmax at every position (prefill + each decode step),
+    /// regardless of what token is actually fed next.
+    pub predictions: Vec<i32>,
+    /// Teacher forcing: when set, position i feeds `force_tokens[i]`
+    /// instead of the model's own argmax. Used by the accuracy harness so
+    /// every position is scored under the oracle's context (greedy
+    /// free-running comparison is chaotic: one near-tie fp flip poisons
+    /// the whole continuation).
+    pub force_tokens: Option<Vec<i32>>,
+}
+
+impl Sequence {
+    pub fn new(cfg: &ModelConfig, id: u64, prompt: Vec<i32>, max_new: usize) -> Self {
+        assert!(!prompt.is_empty(), "empty prompt");
+        assert!(
+            prompt.len() + max_new <= cfg.max_seq,
+            "prompt {} + max_new {} exceeds max_seq {}",
+            prompt.len(),
+            max_new,
+            cfg.max_seq
+        );
+        let mk = || {
+            (0..cfg.n_layers)
+                .map(|_| Tensor::zeros(vec![cfg.max_seq, cfg.d_model]))
+                .collect::<Vec<_>>()
+        };
+        Self {
+            id,
+            prompt,
+            generated: Vec::new(),
+            next_token: 0,
+            pos: 0,
+            kv_k: mk(),
+            kv_v: mk(),
+            max_new,
+            logits_log: Vec::new(),
+            prefill_logits: None,
+            predictions: Vec::new(),
+            force_tokens: None,
+        }
+    }
+
+    /// The token to feed after `n_generated` tokens have been produced,
+    /// honouring teacher forcing.
+    pub fn fed_token(&self, model_argmax: i32, position: usize) -> i32 {
+        match &self.force_tokens {
+            Some(f) => f.get(position).copied().unwrap_or(model_argmax),
+            None => model_argmax,
+        }
+    }
+
+    pub fn prefilled(&self) -> bool {
+        self.pos >= self.prompt.len()
+    }
+
+    pub fn done(&self) -> bool {
+        self.prefilled() && self.generated.len() >= self.max_new
+    }
+
+    /// Write this step's new K/V row for `layer` at the current position.
+    pub fn write_kv(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]) {
+        let pos = self.pos;
+        self.kv_k[layer].row_mut(pos).copy_from_slice(k_row);
+        self.kv_v[layer].row_mut(pos).copy_from_slice(v_row);
+    }
+
+    /// Advance after a completed decode step.
+    pub fn advance(&mut self, generated_token: i32) {
+        self.generated.push(self.next_token);
+        self.next_token = generated_token;
+        self.pos += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle() {
+        let cfg = ModelConfig::test_tiny();
+        let mut s = Sequence::new(&cfg, 1, vec![1, 2, 3], 4);
+        assert!(!s.prefilled());
+        assert!(!s.done());
+        s.pos = 3; // prefill done
+        s.next_token = 9;
+        assert!(s.prefilled());
+        s.advance(11);
+        assert_eq!(s.generated, vec![9]);
+        assert_eq!(s.next_token, 11);
+        assert_eq!(s.pos, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds max_seq")]
+    fn too_long_rejected() {
+        let cfg = ModelConfig::test_tiny();
+        Sequence::new(&cfg, 1, vec![0; 10], 10);
+    }
+
+    #[test]
+    fn kv_write() {
+        let cfg = ModelConfig::test_tiny();
+        let mut s = Sequence::new(&cfg, 1, vec![1], 2);
+        s.pos = 1;
+        let row = vec![0.5; cfg.d_model];
+        s.write_kv(0, &row, &row);
+        assert_eq!(s.kv_k[0].row(1), &row[..]);
+        assert_eq!(s.kv_v[0].row(1), &row[..]);
+        assert_eq!(s.kv_k[0].row(0), vec![0.0; cfg.d_model].as_slice());
+    }
+}

@@ -1,0 +1,146 @@
+//! The prefetch scheduler: turns predictions into prefetch-priority
+//! transfers and verifies them against actual routing (Fig 3's
+//! "verification step"), escalating mispredictions to demand priority and
+//! accounting prefetch hits / speculative waste.
+
+use crate::memory::{LoadDecision, TransferHandle, TransferPriority};
+use crate::prefetch::predictor::{PredictContext, Predictor};
+use crate::stats::Counters;
+use crate::weights::ExpertKey;
+
+pub struct PrefetchEngine {
+    handle: TransferHandle,
+    /// Max experts to prefetch per (layer, step).
+    pub width: usize,
+    /// Issued but not yet verified, per layer.
+    outstanding: Vec<Vec<usize>>,
+    pub counters: Counters,
+}
+
+impl PrefetchEngine {
+    pub fn new(handle: TransferHandle, n_layers: usize, width: usize) -> Self {
+        Self {
+            handle,
+            width,
+            outstanding: vec![Vec::new(); n_layers],
+            counters: Counters::new(),
+        }
+    }
+
+    /// Predict and enqueue prefetches for `layer`.
+    pub fn prefetch_layer(
+        &mut self,
+        layer: usize,
+        predictor: &mut dyn Predictor,
+        ctx: &PredictContext,
+    ) {
+        let predicted = predictor.predict(layer, self.width, ctx);
+        for &e in &predicted {
+            let key = ExpertKey::new(layer, e);
+            match self.handle.request(key, TransferPriority::Prefetch) {
+                LoadDecision::StartLoad { .. } => {
+                    self.counters.inc("prefetch_issued");
+                    self.outstanding[layer].push(e);
+                }
+                LoadDecision::AlreadyGpu => self.counters.inc("prefetch_already_resident"),
+                LoadDecision::AlreadyLoading => self.counters.inc("prefetch_inflight"),
+                LoadDecision::NoRoom => self.counters.inc("prefetch_no_room"),
+            }
+        }
+    }
+
+    /// Verification step: compare the layer's actual routed experts with
+    /// what was prefetched. Escalates still-queued useful prefetches to
+    /// demand priority, cancels still-queued useless ones (freeing PCIe
+    /// occupancy), and accounts hits vs speculative waste.
+    pub fn verify(&mut self, layer: usize, actual_unique: &[usize]) {
+        let issued = std::mem::take(&mut self.outstanding[layer]);
+        for &e in &issued {
+            if actual_unique.contains(&e) {
+                self.counters.inc("prefetch_useful");
+                self.handle.escalate(ExpertKey::new(layer, e));
+            } else {
+                self.counters.inc("prefetch_waste");
+                if self.handle.cancel_prefetch(ExpertKey::new(layer, e)) {
+                    self.counters.inc("prefetch_cancelled");
+                }
+            }
+        }
+        for &e in actual_unique {
+            if !issued.contains(&e) {
+                self.counters.inc("prefetch_unpredicted");
+            }
+        }
+    }
+
+    /// Prefetch hit rate so far (useful / issued).
+    pub fn hit_rate(&self) -> f64 {
+        self.counters.ratio("prefetch_useful", "prefetch_issued")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::memory::{EvictPolicy, ExpertCache, PcieSim, TransferEngine};
+    use crate::prefetch::predictor::{OracleNoisy, TopFreq};
+    use crate::profilecollect::ProfileCollector;
+    use crate::weights::WeightStore;
+    use std::sync::Arc;
+
+    fn handle() -> TransferHandle {
+        let cfg = ModelConfig::test_tiny();
+        let store = Arc::new(WeightStore::synthetic(&cfg, 1));
+        let cache = ExpertCache::new(cfg.n_layers, cfg.n_experts, 4, EvictPolicy::Lru);
+        TransferEngine::spawn(cache, PcieSim::new(16e9, 0.0, 1.0), store, 0.0)
+    }
+
+    #[test]
+    fn issues_and_verifies() {
+        let h = handle();
+        let mut pf = PrefetchEngine::new(h.clone(), 3, 2);
+        let mut p = ProfileCollector::new(3, 8);
+        p.record(0, &[1, 2], &[0.5, 0.5]).unwrap();
+        p.record(0, &[1, 3], &[0.5, 0.5]).unwrap();
+        let mut tf = TopFreq::from_profile(&p);
+        let ctx = PredictContext { hidden: None, actual: None };
+        pf.prefetch_layer(0, &mut tf, &ctx);
+        assert_eq!(pf.counters.get("prefetch_issued"), 2); // experts 1, 2|3
+        pf.verify(0, &[1, 5]);
+        assert_eq!(pf.counters.get("prefetch_useful"), 1);
+        assert_eq!(pf.counters.get("prefetch_waste"), 1);
+        assert_eq!(pf.counters.get("prefetch_unpredicted"), 1);
+        assert!((pf.hit_rate() - 0.5).abs() < 1e-9);
+        h.shutdown();
+    }
+
+    #[test]
+    fn oracle_gives_full_hit_rate() {
+        let h = handle();
+        let mut pf = PrefetchEngine::new(h.clone(), 3, 8);
+        let mut o = OracleNoisy::new(0.0, 1);
+        let actual = vec![vec![0usize, 1], vec![2usize]];
+        let ctx = PredictContext { hidden: None, actual: Some(&actual) };
+        pf.prefetch_layer(1, &mut o, &ctx);
+        pf.verify(1, &[0, 1, 2]);
+        assert_eq!(pf.counters.get("prefetch_waste"), 0);
+        assert_eq!(pf.counters.get("prefetch_unpredicted"), 0);
+        assert!((pf.hit_rate() - 1.0).abs() < 1e-9);
+        h.shutdown();
+    }
+
+    #[test]
+    fn resident_experts_not_reissued() {
+        let h = handle();
+        h.with_state(|st| st.cache.admit(ExpertKey::new(0, 1)).unwrap());
+        let mut pf = PrefetchEngine::new(h.clone(), 1, 4);
+        let mut o = OracleNoisy::new(0.0, 1);
+        let actual = vec![vec![1usize]];
+        let ctx = PredictContext { hidden: None, actual: Some(&actual) };
+        pf.prefetch_layer(0, &mut o, &ctx);
+        assert_eq!(pf.counters.get("prefetch_issued"), 0);
+        assert_eq!(pf.counters.get("prefetch_already_resident"), 1);
+        h.shutdown();
+    }
+}

@@ -1,0 +1,12 @@
+//! Predictive expert prefetching (paper §2.3, Fig 3).
+//!
+//! While the GPU computes block *l*, the predictor guesses which experts
+//! block *l+1* will need and enqueues prefetch transfers; a verification
+//! step escalates mispredicted-but-needed experts to demand priority.
+//! Speculative waste (prefetched-but-unused) is accounted for Fig 8.
+
+mod engine;
+mod predictor;
+
+pub use engine::PrefetchEngine;
+pub use predictor::{host_router_probs, OracleNoisy, PreGate, PredictContext, Predictor, TopFreq};

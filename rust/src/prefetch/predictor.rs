@@ -1,0 +1,266 @@
+//! Expert-demand predictors.
+//!
+//! * [`TopFreq`] — historical activation frequency (MoE-Infinity-style):
+//!   statically predicts each layer's most-activated experts.
+//! * [`PreGate`] — Pre-gated-MoE-style lookahead: run layer *l+1*'s router
+//!   on layer *l*'s hidden states (host-side matmul; the router is tiny).
+//!   Contextual but imperfect — exactly the paper's premise.
+//! * [`OracleNoisy`] — knows the true selection, forgets each expert with
+//!   probability `miss_rate`: the controllable-miss-rate harness behind
+//!   Table 1.
+
+use crate::profilecollect::ProfileCollector;
+use crate::util::math::{softmax, top_k};
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+use crate::weights::WeightStore;
+
+/// Context available when predicting layer `layer`'s experts.
+pub struct PredictContext<'a> {
+    /// Hidden states leaving the previous block, [T, D].
+    pub hidden: Option<&'a Tensor>,
+    /// True selection for the layer (oracle only).
+    pub actual: Option<&'a [Vec<usize>]>,
+}
+
+pub trait Predictor: Send {
+    /// Predict up to `width` experts needed at `layer`.
+    fn predict(&mut self, layer: usize, width: usize, ctx: &PredictContext) -> Vec<usize>;
+    fn name(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------------
+
+/// Historical-frequency predictor.
+pub struct TopFreq {
+    /// Experts per layer, descending activation count.
+    ranked: Vec<Vec<usize>>,
+}
+
+impl TopFreq {
+    pub fn from_profile(collector: &ProfileCollector) -> Self {
+        let ranked = (0..collector.n_layers())
+            .map(|l| {
+                let acts = &collector.layer(l).activations;
+                let mut idx: Vec<usize> = (0..acts.len()).collect();
+                idx.sort_by(|&a, &b| {
+                    acts[b].partial_cmp(&acts[a]).unwrap().then(a.cmp(&b))
+                });
+                idx
+            })
+            .collect();
+        Self { ranked }
+    }
+
+    /// From pre-ranked expert lists (e.g. router-bias popularity when no
+    /// profiling corpus has been run yet).
+    pub fn from_ranked(ranked: Vec<Vec<usize>>) -> Self {
+        Self { ranked }
+    }
+}
+
+impl Predictor for TopFreq {
+    fn predict(&mut self, layer: usize, width: usize, _ctx: &PredictContext) -> Vec<usize> {
+        self.ranked[layer].iter().copied().take(width).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "topfreq"
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Host-side router evaluation: probs = softmax(rmsnorm(x) @ wg + b), the
+/// same math as the `router` artifact but on the CPU for lookahead.
+pub fn host_router_probs(
+    x: &[f32],
+    d: usize,
+    ln2: &[f32],
+    wg: &Tensor,
+    rbias: &[f32],
+    eps: f32,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), d);
+    let e = wg.dims[1];
+    // RMS norm.
+    let ms: f32 = x.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+    let inv = 1.0 / (ms + eps).sqrt();
+    let mut logits = rbias.to_vec();
+    for (i, &xi) in x.iter().enumerate() {
+        let h = xi * inv * ln2[i];
+        let row = &wg.data[i * e..(i + 1) * e];
+        for (j, &w) in row.iter().enumerate() {
+            logits[j] += h * w;
+        }
+    }
+    softmax(&mut logits);
+    logits
+}
+
+/// Lookahead predictor: applies the *next* layer's router to the hidden
+/// state leaving the current layer.
+pub struct PreGate {
+    store: std::sync::Arc<WeightStore>,
+    d_model: usize,
+    top_k: usize,
+    rms_eps: f32,
+}
+
+impl PreGate {
+    pub fn new(
+        store: std::sync::Arc<WeightStore>,
+        d_model: usize,
+        top_k: usize,
+        rms_eps: f32,
+    ) -> Self {
+        Self { store, d_model, top_k, rms_eps }
+    }
+}
+
+impl Predictor for PreGate {
+    fn predict(&mut self, layer: usize, width: usize, ctx: &PredictContext) -> Vec<usize> {
+        let Some(hidden) = ctx.hidden else {
+            return Vec::new();
+        };
+        let (Ok(ln2), Ok(wg), Ok(rbias)) = (
+            self.store.tensor(&format!("L{layer}.ln2")),
+            self.store.tensor(&format!("L{layer}.wg")),
+            self.store.tensor(&format!("L{layer}.rbias")),
+        ) else {
+            return Vec::new();
+        };
+        // Union of per-token top-k predictions, ranked by summed prob.
+        let e = wg.dims[1];
+        let mut mass = vec![0.0f32; e];
+        let t = hidden.dims[0];
+        for ti in 0..t {
+            let probs = host_router_probs(
+                hidden.row(ti),
+                self.d_model,
+                &ln2.data,
+                wg,
+                &rbias.data,
+                self.rms_eps,
+            );
+            let (idx, _) = top_k(&probs, self.top_k);
+            for i in idx {
+                mass[i] += probs[i];
+            }
+        }
+        let mut ranked: Vec<usize> = (0..e).filter(|&i| mass[i] > 0.0).collect();
+        ranked.sort_by(|&a, &b| mass[b].partial_cmp(&mass[a]).unwrap().then(a.cmp(&b)));
+        ranked.truncate(width);
+        ranked
+    }
+
+    fn name(&self) -> &'static str {
+        "pregate"
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Oracle with controllable false-negative rate.
+pub struct OracleNoisy {
+    pub miss_rate: f64,
+    rng: Rng,
+}
+
+impl OracleNoisy {
+    pub fn new(miss_rate: f64, seed: u64) -> Self {
+        Self { miss_rate, rng: Rng::new(seed) }
+    }
+}
+
+impl Predictor for OracleNoisy {
+    fn predict(&mut self, _layer: usize, width: usize, ctx: &PredictContext) -> Vec<usize> {
+        let Some(actual) = ctx.actual else {
+            return Vec::new();
+        };
+        let mut out = Vec::new();
+        for sel in actual {
+            for &e in sel {
+                if !out.contains(&e) && !self.rng.bool(self.miss_rate) {
+                    out.push(e);
+                }
+            }
+        }
+        out.truncate(width);
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    #[test]
+    fn topfreq_ranks_by_activation() {
+        let mut p = ProfileCollector::new(1, 4);
+        for _ in 0..5 {
+            p.record(0, &[2, 1], &[0.5, 0.5]).unwrap();
+        }
+        p.record(0, &[0, 3], &[0.5, 0.5]).unwrap();
+        let mut tf = TopFreq::from_profile(&p);
+        let ctx = PredictContext { hidden: None, actual: None };
+        assert_eq!(tf.predict(0, 2, &ctx), vec![1, 2]);
+        assert_eq!(tf.predict(0, 10, &ctx).len(), 4);
+    }
+
+    #[test]
+    fn oracle_perfect_when_noiseless() {
+        let mut o = OracleNoisy::new(0.0, 1);
+        let actual = vec![vec![3, 1], vec![1, 2]];
+        let ctx = PredictContext { hidden: None, actual: Some(&actual) };
+        let p = o.predict(0, 10, &ctx);
+        assert_eq!(p, vec![3, 1, 2]);
+    }
+
+    #[test]
+    fn oracle_noise_drops_experts() {
+        let mut o = OracleNoisy::new(1.0, 1);
+        let actual = vec![vec![3, 1]];
+        let ctx = PredictContext { hidden: None, actual: Some(&actual) };
+        assert!(o.predict(0, 10, &ctx).is_empty());
+    }
+
+    #[test]
+    fn host_router_matches_softmax_props() {
+        let cfg = ModelConfig::test_tiny();
+        let store = WeightStore::synthetic(&cfg, 3);
+        let x: Vec<f32> = (0..cfg.d_model).map(|i| (i as f32) / 7.0 - 1.0).collect();
+        let probs = host_router_probs(
+            &x,
+            cfg.d_model,
+            &store.tensor("L0.ln2").unwrap().data,
+            store.tensor("L0.wg").unwrap(),
+            &store.tensor("L0.rbias").unwrap().data,
+            1e-5,
+        );
+        assert_eq!(probs.len(), cfg.n_experts);
+        assert!((probs.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(probs.iter().all(|&p| p >= 0.0));
+    }
+
+    #[test]
+    fn pregate_predicts_from_hidden() {
+        let cfg = ModelConfig::test_tiny();
+        let store = std::sync::Arc::new(WeightStore::synthetic(&cfg, 3));
+        let mut pg = PreGate::new(store, cfg.d_model, cfg.top_k, 1e-5);
+        let hidden = Tensor::new(
+            vec![2, cfg.d_model],
+            (0..2 * cfg.d_model).map(|i| (i % 5) as f32 - 2.0).collect(),
+        )
+        .unwrap();
+        let ctx = PredictContext { hidden: Some(&hidden), actual: None };
+        let pred = pg.predict(1, 4, &ctx);
+        assert!(!pred.is_empty() && pred.len() <= 4);
+        assert!(pred.iter().all(|&e| e < cfg.n_experts));
+    }
+}

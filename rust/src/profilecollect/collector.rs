@@ -1,0 +1,252 @@
+//! Co-activation statistics accumulator.
+//!
+//! For every token x and layer l with selected set S_l(x):
+//!   A_l(i)    += 1            for i in S
+//!   M_l(i,j)  += 1            for unordered pairs {i,j} ⊆ S  (binary)
+//!   W_l(i,j)  += min(p_i,p_j) (probability-weighted, paper §3.3 (i))
+//!
+//! Laplace smoothing is applied at read time (paper §3.3 (ii)), and an
+//! optional warm-up discount down-weights the first steps (§3.3 (iii)).
+
+use anyhow::{bail, Result};
+
+use crate::util::json::{arr_f32, num, obj, Json};
+
+/// Dense symmetric co-activation matrices for one layer.
+#[derive(Debug, Clone)]
+pub struct CoActivation {
+    pub n_experts: usize,
+    /// A_l(i): tokens that routed to i.
+    pub activations: Vec<f64>,
+    /// M_l(i,j): binary co-activation counts (symmetric, zero diagonal).
+    pub binary: Vec<f64>,
+    /// Probability-weighted co-activations.
+    pub weighted: Vec<f64>,
+}
+
+impl CoActivation {
+    fn new(n_experts: usize) -> Self {
+        Self {
+            n_experts,
+            activations: vec![0.0; n_experts],
+            binary: vec![0.0; n_experts * n_experts],
+            weighted: vec![0.0; n_experts * n_experts],
+        }
+    }
+
+    #[inline]
+    pub fn m(&self, i: usize, j: usize) -> f64 {
+        self.binary[i * self.n_experts + j]
+    }
+
+    #[inline]
+    pub fn w(&self, i: usize, j: usize) -> f64 {
+        self.weighted[i * self.n_experts + j]
+    }
+
+    /// Conditional co-activation q_{j|i} (paper Eq. 4) with Laplace
+    /// smoothing epsilon, over the `weighted` matrix when `use_weighted`.
+    pub fn q_given(&self, i: usize, eps: f64, use_weighted: bool) -> Vec<f64> {
+        let src = if use_weighted { &self.weighted } else { &self.binary };
+        let row = &src[i * self.n_experts..(i + 1) * self.n_experts];
+        let mut q: Vec<f64> = row.iter().map(|&x| x + eps).collect();
+        q[i] = 0.0; // q_{i|i} = 0
+        let sum: f64 = q.iter().sum();
+        if sum > 0.0 {
+            for x in q.iter_mut() {
+                *x /= sum;
+            }
+        }
+        q
+    }
+}
+
+/// Streaming collector over routing events.
+#[derive(Debug)]
+pub struct ProfileCollector {
+    layers: Vec<CoActivation>,
+    /// Down-weight applied to the first `warmup_tokens` tokens per layer.
+    warmup_tokens: usize,
+    warmup_weight: f64,
+    tokens_seen: Vec<usize>,
+}
+
+impl ProfileCollector {
+    pub fn new(n_layers: usize, n_experts: usize) -> Self {
+        Self {
+            layers: (0..n_layers).map(|_| CoActivation::new(n_experts)).collect(),
+            warmup_tokens: 0,
+            warmup_weight: 1.0,
+            tokens_seen: vec![0; n_layers],
+        }
+    }
+
+    /// Enable warm-up discounting (paper §3.3 (iii)).
+    pub fn with_warmup(mut self, tokens: usize, weight: f64) -> Self {
+        self.warmup_tokens = tokens;
+        self.warmup_weight = weight;
+        self
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Record one token's routing at one layer: selected experts and their
+    /// renormalized top-k probabilities.
+    pub fn record(&mut self, layer: usize, selected: &[usize], probs: &[f32]) -> Result<()> {
+        if selected.len() != probs.len() {
+            bail!("selected/probs length mismatch");
+        }
+        let la = &mut self.layers[layer];
+        for &e in selected {
+            if e >= la.n_experts {
+                bail!("expert {e} out of range");
+            }
+        }
+        let w = if self.tokens_seen[layer] < self.warmup_tokens {
+            self.warmup_weight
+        } else {
+            1.0
+        };
+        self.tokens_seen[layer] += 1;
+        let n = la.n_experts;
+        for (a, &i) in selected.iter().enumerate() {
+            la.activations[i] += w;
+            for (b, &j) in selected.iter().enumerate().skip(a + 1) {
+                let pw = probs[a].min(probs[b]) as f64 * w;
+                la.binary[i * n + j] += w;
+                la.binary[j * n + i] += w;
+                la.weighted[i * n + j] += pw;
+                la.weighted[j * n + i] += pw;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn layer(&self, l: usize) -> &CoActivation {
+        &self.layers[l]
+    }
+
+    pub fn tokens_seen(&self, l: usize) -> usize {
+        self.tokens_seen[l]
+    }
+
+    /// Serialize for `buddy::BuddyProfile::build` offline hand-off and the
+    /// Fig 6/7/9 data dumps.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.layers
+                .iter()
+                .map(|la| {
+                    obj(vec![
+                        ("n_experts", num(la.n_experts as f64)),
+                        (
+                            "activations",
+                            arr_f32(&la.activations.iter().map(|&x| x as f32).collect::<Vec<_>>()),
+                        ),
+                        (
+                            "binary",
+                            arr_f32(&la.binary.iter().map(|&x| x as f32).collect::<Vec<_>>()),
+                        ),
+                        (
+                            "weighted",
+                            arr_f32(&la.weighted.iter().map(|&x| x as f32).collect::<Vec<_>>()),
+                        ),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let arr = j.as_arr()?;
+        let mut layers = Vec::with_capacity(arr.len());
+        for la in arr {
+            let n = la.get("n_experts")?.as_usize()?;
+            let to64 = |v: Vec<f32>| v.into_iter().map(|x| x as f64).collect::<Vec<f64>>();
+            layers.push(CoActivation {
+                n_experts: n,
+                activations: to64(la.get("activations")?.as_f32_vec()?),
+                binary: to64(la.get("binary")?.as_f32_vec()?),
+                weighted: to64(la.get("weighted")?.as_f32_vec()?),
+            });
+        }
+        let n_layers = layers.len();
+        Ok(Self {
+            layers,
+            warmup_tokens: 0,
+            warmup_weight: 1.0,
+            tokens_seen: vec![0; n_layers],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_symmetric_counts() {
+        let mut p = ProfileCollector::new(1, 4);
+        p.record(0, &[0, 2], &[0.7, 0.3]).unwrap();
+        p.record(0, &[0, 2], &[0.6, 0.4]).unwrap();
+        p.record(0, &[1, 3], &[0.5, 0.5]).unwrap();
+        let la = p.layer(0);
+        assert_eq!(la.activations, vec![2.0, 1.0, 2.0, 1.0]);
+        assert_eq!(la.m(0, 2), 2.0);
+        assert_eq!(la.m(2, 0), 2.0);
+        assert_eq!(la.m(0, 1), 0.0);
+        assert!((la.w(0, 2) - (0.3 + 0.4)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn q_given_normalizes_and_zeroes_diagonal() {
+        let mut p = ProfileCollector::new(1, 3);
+        p.record(0, &[0, 1], &[0.5, 0.5]).unwrap();
+        p.record(0, &[0, 1], &[0.5, 0.5]).unwrap();
+        p.record(0, &[0, 2], &[0.5, 0.5]).unwrap();
+        let q = p.layer(0).q_given(0, 0.0, false);
+        assert_eq!(q[0], 0.0);
+        assert!((q[1] - 2.0 / 3.0).abs() < 1e-9);
+        assert!((q[2] - 1.0 / 3.0).abs() < 1e-9);
+        assert!((q.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn laplace_smoothing_gives_mass_to_unseen() {
+        let mut p = ProfileCollector::new(1, 3);
+        p.record(0, &[0, 1], &[0.5, 0.5]).unwrap();
+        let q = p.layer(0).q_given(0, 0.5, false);
+        assert!(q[2] > 0.0);
+        assert!(q[1] > q[2]);
+    }
+
+    #[test]
+    fn warmup_downweights() {
+        let mut p = ProfileCollector::new(1, 2).with_warmup(1, 0.1);
+        p.record(0, &[0, 1], &[0.5, 0.5]).unwrap(); // warm-up token
+        p.record(0, &[0, 1], &[0.5, 0.5]).unwrap();
+        let la = p.layer(0);
+        assert!((la.activations[0] - 1.1).abs() < 1e-9);
+        assert!((la.m(0, 1) - 1.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        let mut p = ProfileCollector::new(1, 2);
+        assert!(p.record(0, &[0, 5], &[0.5, 0.5]).is_err());
+        assert!(p.record(0, &[0], &[0.5, 0.5]).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut p = ProfileCollector::new(2, 3);
+        p.record(0, &[0, 1], &[0.6, 0.4]).unwrap();
+        p.record(1, &[1, 2], &[0.9, 0.1]).unwrap();
+        let j = p.to_json();
+        let back = ProfileCollector::from_json(&j).unwrap();
+        assert_eq!(back.layer(0).m(0, 1), p.layer(0).m(0, 1));
+        assert!((back.layer(1).w(1, 2) - p.layer(1).w(1, 2)).abs() < 1e-6);
+    }
+}

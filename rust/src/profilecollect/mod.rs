@@ -1,0 +1,11 @@
+//! Offline profiling (paper §3.2): per-layer activation counts, pairwise
+//! co-activation matrices (binary + probability-weighted), router trace
+//! record/replay, and weight-space similarity analysis (Fig 4).
+
+mod collector;
+mod similarity;
+mod traces;
+
+pub use collector::{CoActivation, ProfileCollector};
+pub use similarity::expert_similarity_matrix;
+pub use traces::{RoutingEvent, RoutingTrace};

@@ -1,0 +1,120 @@
+//! Routing trace record/replay.
+//!
+//! Serving runs can record every routing decision; benches replay traces
+//! through the substitution machinery deterministically (Table 1 and the
+//! micro benches don't need the full model in the loop).
+
+use anyhow::Result;
+
+use crate::util::json::{arr_f32, arr_usize, num, obj, Json};
+
+/// One token's routing at one layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoutingEvent {
+    pub layer: usize,
+    /// Selected (top-k) experts, descending probability.
+    pub selected: Vec<usize>,
+    /// Renormalized top-k probabilities, aligned with `selected`.
+    pub probs: Vec<f32>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct RoutingTrace {
+    pub events: Vec<RoutingEvent>,
+}
+
+impl RoutingTrace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, layer: usize, selected: Vec<usize>, probs: Vec<f32>) {
+        self.events.push(RoutingEvent { layer, selected, probs });
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events for one layer.
+    pub fn layer_events(&self, layer: usize) -> impl Iterator<Item = &RoutingEvent> {
+        self.events.iter().filter(move |e| e.layer == layer)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.events
+                .iter()
+                .map(|e| {
+                    obj(vec![
+                        ("layer", num(e.layer as f64)),
+                        ("selected", arr_usize(&e.selected)),
+                        ("probs", arr_f32(&e.probs)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut events = Vec::new();
+        for e in j.as_arr()? {
+            events.push(RoutingEvent {
+                layer: e.get("layer")?.as_usize()?,
+                selected: e.get("selected")?.as_usize_vec()?,
+                probs: e.get("probs")?.as_f32_vec()?,
+            });
+        }
+        Ok(Self { events })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_filter() {
+        let mut t = RoutingTrace::new();
+        t.push(0, vec![1, 2], vec![0.7, 0.3]);
+        t.push(1, vec![0], vec![1.0]);
+        t.push(0, vec![3, 1], vec![0.6, 0.4]);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.layer_events(0).count(), 2);
+        assert_eq!(t.layer_events(1).count(), 1);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut t = RoutingTrace::new();
+        t.push(2, vec![5, 7, 1], vec![0.5, 0.3, 0.2]);
+        let back = RoutingTrace::from_json(&t.to_json()).unwrap();
+        assert_eq!(back.events, t.events);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("bmw_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.json");
+        let mut t = RoutingTrace::new();
+        t.push(0, vec![1], vec![1.0]);
+        t.save(&p).unwrap();
+        let back = RoutingTrace::load(&p).unwrap();
+        assert_eq!(back.events, t.events);
+    }
+}

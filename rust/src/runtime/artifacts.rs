@@ -1,0 +1,149 @@
+//! The PJRT client wrapper and the compiled-artifact registry.
+//!
+//! Artifacts are compiled once at startup (stage x shape-bucket) and looked
+//! up by name on the hot path. The registry also owns device-resident
+//! expert weight buffers — creating one of those buffers is the "GPU side"
+//! of a PCIe transfer.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ArtifactInfo, ModelConfig};
+use crate::runtime::exec::ExecOutputs;
+use crate::util::tensor::Tensor;
+use crate::weights::{ExpertKey, ExpertWeights};
+
+/// Thin wrapper over the PJRT CPU client.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    /// Compile every artifact in the manifest.
+    pub fn load_artifacts(&self, cfg: &ModelConfig) -> Result<ArtifactRegistry> {
+        let mut exes = BTreeMap::new();
+        for (name, info) in &cfg.artifacts {
+            let path = cfg.hlo_path(name)?;
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?;
+            exes.insert(name.clone(), (exe, info.clone()));
+        }
+        log::info!("compiled {} artifacts", exes.len());
+        Ok(ArtifactRegistry { exes, expert_buffers: BTreeMap::new() })
+    }
+
+    /// Host f32 slice -> device buffer.
+    pub fn to_device(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("host->device transfer")
+    }
+
+    /// Host i32 slice -> device buffer (token ids).
+    pub fn to_device_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("host->device transfer (i32)")
+    }
+}
+
+/// Compiled executables plus device-resident expert weights.
+pub struct ArtifactRegistry {
+    exes: BTreeMap<String, (xla::PjRtLoadedExecutable, ArtifactInfo)>,
+    /// Device buffers for GPU-resident experts: the engine-side mirror of
+    /// `memory::ExpertCache` residency.
+    expert_buffers: BTreeMap<ExpertKey, [xla::PjRtBuffer; 3]>,
+}
+
+impl ArtifactRegistry {
+    pub fn has(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    pub fn info(&self, name: &str) -> Result<&ArtifactInfo> {
+        Ok(&self.exe(name)?.1)
+    }
+
+    fn exe(&self, name: &str) -> Result<&(xla::PjRtLoadedExecutable, ArtifactInfo)> {
+        self.exes
+            .get(name)
+            .with_context(|| format!("artifact {name} not compiled"))
+    }
+
+    /// Execute a stage with host-tensor arguments (literal path).
+    pub fn run(&self, name: &str, args: &[&Tensor]) -> Result<ExecOutputs> {
+        let (exe, info) = self.exe(name)?;
+        if args.len() != info.num_args {
+            bail!("{name}: expected {} args, got {}", info.num_args, args.len());
+        }
+        let lits = args
+            .iter()
+            .map(|t| super::exec::lit_tensor(t))
+            .collect::<Result<Vec<_>>>()?;
+        let result = exe.execute::<xla::Literal>(&lits)?;
+        ExecOutputs::from_result(result, info.tuple_output)
+    }
+
+    /// Execute a stage with pre-built literals (mix of fresh activations
+    /// and cached weight literals; embed takes i32 tokens).
+    pub fn run_lits(&self, name: &str, lits: &[&xla::Literal]) -> Result<ExecOutputs> {
+        let (exe, info) = self.exe(name)?;
+        if lits.len() != info.num_args {
+            bail!("{name}: expected {} args, got {}", info.num_args, lits.len());
+        }
+        let result = exe.execute::<&xla::Literal>(lits)?;
+        ExecOutputs::from_result(result, info.tuple_output)
+    }
+
+    /// Execute a stage with device buffers (the expert hot path: cached
+    /// expert weights stay on device across calls).
+    pub fn run_buffers(&self, name: &str, bufs: &[&xla::PjRtBuffer]) -> Result<ExecOutputs> {
+        let (exe, info) = self.exe(name)?;
+        if bufs.len() != info.num_args {
+            bail!("{name}: expected {} args, got {}", info.num_args, bufs.len());
+        }
+        let result = exe.execute_b::<&xla::PjRtBuffer>(bufs)?;
+        ExecOutputs::from_result(result, info.tuple_output)
+    }
+
+    // --- device expert-buffer mirror ------------------------------------
+
+    /// Admit an expert's weights to the device (the arrival side of a PCIe
+    /// transfer).
+    pub fn admit_expert(&mut self, rt: &Runtime, key: ExpertKey, w: &ExpertWeights) -> Result<()> {
+        let b1 = rt.to_device(&w.0.data, &w.0.dims)?;
+        let b3 = rt.to_device(&w.1.data, &w.1.dims)?;
+        let b2 = rt.to_device(&w.2.data, &w.2.dims)?;
+        self.expert_buffers.insert(key, [b1, b3, b2]);
+        Ok(())
+    }
+
+    pub fn evict_expert(&mut self, key: ExpertKey) {
+        self.expert_buffers.remove(&key);
+    }
+
+    pub fn expert_resident(&self, key: ExpertKey) -> bool {
+        self.expert_buffers.contains_key(&key)
+    }
+
+    pub fn expert_buffers(&self, key: ExpertKey) -> Result<&[xla::PjRtBuffer; 3]> {
+        self.expert_buffers
+            .get(&key)
+            .with_context(|| format!("expert L{}.E{} has no device buffers", key.layer, key.expert))
+    }
+
+    pub fn resident_expert_count(&self) -> usize {
+        self.expert_buffers.len()
+    }
+}

@@ -1,0 +1,81 @@
+//! Literal <-> host-tensor plumbing and output handling.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::tensor::Tensor;
+
+/// f32 tensor -> Literal with the tensor's shape.
+pub fn lit_tensor(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(&t.data)
+        .reshape(&dims)
+        .context("reshaping literal")
+}
+
+/// i32 vector -> rank-1 Literal.
+pub fn lit_i32(v: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// Literal -> host tensor (f32).
+pub fn tensor_from_lit(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.array_shape().context("literal has no array shape")?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = l.to_vec::<f32>().context("literal to_vec<f32>")?;
+    Tensor::new(dims, data)
+}
+
+/// Stage outputs, decomposed when the artifact root is a tuple.
+pub struct ExecOutputs {
+    pub outputs: Vec<Tensor>,
+}
+
+impl ExecOutputs {
+    /// From the raw PJRT result of one execute call.
+    pub fn from_result(
+        mut result: Vec<Vec<xla::PjRtBuffer>>,
+        tuple_output: bool,
+    ) -> Result<Self> {
+        if result.is_empty() || result[0].is_empty() {
+            bail!("empty execution result");
+        }
+        let buf = result.swap_remove(0).swap_remove(0);
+        let lit = buf.to_literal_sync().context("to_literal_sync")?;
+        let outputs = if tuple_output {
+            lit.to_tuple()
+                .context("decomposing tuple output")?
+                .iter()
+                .map(tensor_from_lit)
+                .collect::<Result<Vec<_>>>()?
+        } else {
+            vec![tensor_from_lit(&lit)?]
+        };
+        Ok(Self { outputs })
+    }
+
+    pub fn single(mut self) -> Result<Tensor> {
+        if self.outputs.len() != 1 {
+            bail!("expected single output, got {}", self.outputs.len());
+        }
+        Ok(self.outputs.swap_remove(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_tensor_roundtrip() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let l = lit_tensor(&t).unwrap();
+        let back = tensor_from_lit(&l).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn i32_literal() {
+        let l = lit_i32(&[1, 2, 3]);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2, 3]);
+    }
+}

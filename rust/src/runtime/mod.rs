@@ -1,0 +1,12 @@
+//! PJRT runtime bridge: load AOT HLO-text artifacts, compile them on the
+//! CPU PJRT client, and execute them from the serving hot path.
+//!
+//! Interchange is HLO **text** (not serialized protos): jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see DESIGN.md and /opt/xla-example/README.md).
+
+mod artifacts;
+mod exec;
+
+pub use artifacts::{ArtifactRegistry, Runtime};
+pub use exec::{lit_i32, lit_tensor, tensor_from_lit, ExecOutputs};

@@ -1,0 +1,154 @@
+//! Dynamic batcher: admission queue with max-batch and wait-timeout
+//! semantics. Thread-safe so an intake thread can feed a serving thread.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::request::InferenceRequest;
+
+#[derive(Default)]
+struct QueueState {
+    queue: VecDeque<InferenceRequest>,
+    closed: bool,
+}
+
+pub struct DynamicBatcher {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+    pub max_batch: usize,
+    pub timeout: Duration,
+}
+
+impl DynamicBatcher {
+    pub fn new(max_batch: usize, timeout: Duration) -> Self {
+        assert!(max_batch >= 1);
+        Self {
+            state: Mutex::new(QueueState::default()),
+            cv: Condvar::new(),
+            max_batch,
+            timeout,
+        }
+    }
+
+    pub fn submit(&self, req: InferenceRequest) {
+        let mut st = self.state.lock().unwrap();
+        st.queue.push_back(req);
+        self.cv.notify_all();
+    }
+
+    /// No more submissions; pending requests still drain.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn pending(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    /// Pull up to `room` requests. Blocks until at least one request is
+    /// available, the timeout elapses with a non-empty queue, or the
+    /// batcher is closed. Returns `None` when closed and drained.
+    pub fn next_admissions(&self, room: usize) -> Option<Vec<InferenceRequest>> {
+        if room == 0 {
+            return Some(Vec::new());
+        }
+        let deadline = Instant::now() + self.timeout;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if !st.queue.is_empty() {
+                // Wait briefly for more arrivals to batch together, unless
+                // we already have a full batch.
+                while st.queue.len() < room.min(self.max_batch) && Instant::now() < deadline {
+                    let (guard, timeout_res) = self
+                        .cv
+                        .wait_timeout(st, deadline.saturating_duration_since(Instant::now()))
+                        .unwrap();
+                    st = guard;
+                    if timeout_res.timed_out() || st.closed {
+                        break;
+                    }
+                }
+                let n = st.queue.len().min(room).min(self.max_batch);
+                return Some(st.queue.drain(..n).collect());
+            }
+            if st.closed {
+                return None;
+            }
+            let (guard, _) = self.cv.wait_timeout(st, self.timeout).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Non-blocking pull (scheduler already busy with active sequences).
+    pub fn try_admissions(&self, room: usize) -> Vec<InferenceRequest> {
+        if room == 0 {
+            return Vec::new();
+        }
+        let mut st = self.state.lock().unwrap();
+        let n = st.queue.len().min(room).min(self.max_batch);
+        st.queue.drain(..n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> InferenceRequest {
+        InferenceRequest::new(id, vec![1, 2], 4)
+    }
+
+    #[test]
+    fn submit_and_drain() {
+        let b = DynamicBatcher::new(4, Duration::from_millis(1));
+        b.submit(req(1));
+        b.submit(req(2));
+        b.submit(req(3));
+        let got = b.next_admissions(2).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].id, 1);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let b = DynamicBatcher::new(4, Duration::from_millis(1));
+        b.submit(req(1));
+        b.close();
+        assert_eq!(b.next_admissions(4).unwrap().len(), 1);
+        assert!(b.next_admissions(4).is_none());
+    }
+
+    #[test]
+    fn max_batch_respected() {
+        let b = DynamicBatcher::new(2, Duration::from_millis(1));
+        for i in 0..5 {
+            b.submit(req(i));
+        }
+        assert_eq!(b.next_admissions(10).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn try_admissions_nonblocking() {
+        let b = DynamicBatcher::new(4, Duration::from_secs(10));
+        assert!(b.try_admissions(4).is_empty());
+        b.submit(req(1));
+        assert_eq!(b.try_admissions(4).len(), 1);
+    }
+
+    #[test]
+    fn cross_thread_submit() {
+        let b = std::sync::Arc::new(DynamicBatcher::new(4, Duration::from_millis(50)));
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            b2.submit(req(42));
+            b2.close();
+        });
+        let got = b.next_admissions(4).unwrap();
+        assert_eq!(got[0].id, 42);
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,81 @@
+//! Aggregate serving metrics: throughput, TTFT/latency distributions,
+//! stall accounting — the numbers the paper's tables report.
+
+use std::time::Instant;
+
+use crate::stats::{Counters, Summary};
+
+#[derive(Debug)]
+pub struct ServerMetrics {
+    pub started: Instant,
+    pub ttft: Summary,
+    pub request_latency: Summary,
+    pub step_latency: Summary,
+    pub stall_seconds: Summary,
+    pub tokens_out: u64,
+    pub requests_done: u64,
+    pub counters: Counters,
+}
+
+impl Default for ServerMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServerMetrics {
+    pub fn new() -> Self {
+        Self {
+            started: Instant::now(),
+            ttft: Summary::new(),
+            request_latency: Summary::new(),
+            step_latency: Summary::new(),
+            stall_seconds: Summary::new(),
+            tokens_out: 0,
+            requests_done: 0,
+            counters: Counters::new(),
+        }
+    }
+
+    /// Decode throughput over the whole run (tokens/second).
+    pub fn tokens_per_second(&self) -> f64 {
+        let el = self.started.elapsed().as_secs_f64();
+        if el <= 0.0 {
+            0.0
+        } else {
+            self.tokens_out as f64 / el
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "throughput: {:.2} tok/s | requests: {} | tokens: {}\n\
+             ttft:    {}\n\
+             latency: {}\n\
+             step:    {}\n\
+             stalls:  {}",
+            self.tokens_per_second(),
+            self.requests_done,
+            self.tokens_out,
+            self.ttft.report("s"),
+            self.request_latency.report("s"),
+            self.step_latency.report("s"),
+            self.stall_seconds.report("s"),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_counts_tokens() {
+        let mut m = ServerMetrics::new();
+        m.tokens_out = 100;
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert!(m.tokens_per_second() > 0.0);
+        m.ttft.add(0.5);
+        assert!(m.report().contains("tok/s"));
+    }
+}

@@ -1,0 +1,13 @@
+//! The serving front-end: request types, the dynamic batcher, continuous-
+//! batching scheduler, and per-request metrics — the vLLM-router-shaped
+//! substrate the paper's runtime plugs into.
+
+mod batcher;
+mod metrics;
+mod request;
+mod scheduler;
+
+pub use batcher::DynamicBatcher;
+pub use metrics::ServerMetrics;
+pub use request::{InferenceRequest, InferenceResponse};
+pub use scheduler::Server;

@@ -1,0 +1,40 @@
+//! Request / response types.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    pub enqueued: Instant,
+    /// Teacher-forced token stream for scored (accuracy) runs.
+    pub force_tokens: Option<Vec<i32>>,
+}
+
+impl InferenceRequest {
+    pub fn new(id: u64, prompt: Vec<i32>, max_new: usize) -> Self {
+        Self { id, prompt, max_new, enqueued: Instant::now(), force_tokens: None }
+    }
+
+    pub fn forced(mut self, tokens: Vec<i32>) -> Self {
+        self.force_tokens = Some(tokens);
+        self
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// The model's own argmax at each position (prefill + decode steps);
+    /// equals `tokens` on free-running runs, diverges under forcing.
+    pub predictions: Vec<i32>,
+    /// Per-position logits aligned with `predictions` (prefill first),
+    /// present when the engine records them.
+    pub logits: Vec<Vec<f32>>,
+    /// Seconds from enqueue to first token (prefill complete).
+    pub ttft: f64,
+    /// Seconds from enqueue to completion.
+    pub total: f64,
+}

@@ -1,0 +1,133 @@
+//! Continuous-batching scheduler: the serving main loop.
+//!
+//! Holds up to `max_batch` active sequences; every iteration admits new
+//! requests into free slots (prefill), then runs one decode step across
+//! all active sequences, retiring finished ones. This is the standard
+//! continuous-batching shape (Orca/vLLM) with the paper's offloading +
+//! substitution machinery inside `Engine::decode_step`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::batcher::DynamicBatcher;
+use super::metrics::ServerMetrics;
+use super::request::{InferenceRequest, InferenceResponse};
+use crate::model::{Engine, Sequence};
+
+pub struct Server {
+    pub engine: Engine,
+    pub batcher: Arc<DynamicBatcher>,
+    pub metrics: ServerMetrics,
+}
+
+struct Active {
+    seq: Sequence,
+    enqueued: Instant,
+    ttft: f64,
+}
+
+impl Server {
+    pub fn new(engine: Engine) -> Self {
+        let max_batch = engine.scfg.max_batch;
+        let timeout = Duration::from_micros(engine.scfg.batch_timeout_us);
+        Self {
+            engine,
+            batcher: Arc::new(DynamicBatcher::new(max_batch, timeout)),
+            metrics: ServerMetrics::new(),
+        }
+    }
+
+    /// Serve until the batcher is closed and drained. Returns responses in
+    /// completion order.
+    pub fn run(&mut self) -> Result<Vec<InferenceResponse>> {
+        let mut active: Vec<Active> = Vec::new();
+        let mut done: Vec<InferenceResponse> = Vec::new();
+        self.metrics = ServerMetrics::new();
+
+        loop {
+            // Admit into free slots.
+            let room = self.engine.scfg.max_batch - active.len();
+            let admissions = if active.is_empty() {
+                match self.batcher.next_admissions(room) {
+                    Some(a) => a,
+                    None => break, // closed + drained + nothing active
+                }
+            } else {
+                self.batcher.try_admissions(room)
+            };
+            for req in admissions {
+                let mut act = self.admit(req)?;
+                // A request may complete at prefill (max_new reached by
+                // first token only when max_new == 0 is disallowed).
+                act.ttft = act.enqueued.elapsed().as_secs_f64();
+                self.metrics.ttft.add(act.ttft);
+                active.push(act);
+            }
+            if active.is_empty() {
+                continue;
+            }
+
+            // One decode step over all active sequences.
+            let t0 = Instant::now();
+            let mut refs: Vec<&mut Sequence> = active.iter_mut().map(|a| &mut a.seq).collect();
+            let tel = self.engine.decode_step(&mut refs)?;
+            drop(refs);
+            let dt = t0.elapsed().as_secs_f64();
+            self.metrics.step_latency.add(dt);
+            self.metrics.stall_seconds.add(tel.stall_seconds);
+            self.metrics.counters.add("substitutions", tel.substitutions);
+            self.metrics.counters.add("fetches", tel.fetches);
+            self.metrics.tokens_out += active.len() as u64;
+
+            // Retire finished sequences.
+            let mut i = 0;
+            while i < active.len() {
+                if active[i].seq.done() {
+                    let a = active.swap_remove(i);
+                    let total = a.enqueued.elapsed().as_secs_f64();
+                    self.metrics.request_latency.add(total);
+                    self.metrics.requests_done += 1;
+                    let mut logits = Vec::new();
+                    if let Some(p) = &a.seq.prefill_logits {
+                        logits.push(p.clone());
+                        logits.extend(a.seq.logits_log.iter().cloned());
+                    }
+                    done.push(InferenceResponse {
+                        id: a.seq.id,
+                        tokens: a.seq.generated.clone(),
+                        predictions: a.seq.predictions.clone(),
+                        logits,
+                        ttft: a.ttft,
+                        total,
+                    });
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        Ok(done)
+    }
+
+    /// Convenience: submit a fixed request list, close, and run to
+    /// completion (offline benchmark mode).
+    pub fn run_offline(&mut self, requests: Vec<InferenceRequest>) -> Result<Vec<InferenceResponse>> {
+        for r in requests {
+            self.batcher.submit(r);
+        }
+        self.batcher.close();
+        self.run()
+    }
+
+    fn admit(&mut self, req: InferenceRequest) -> Result<Active> {
+        let mut seq = self.engine.new_sequence(req.prompt, req.max_new);
+        seq.id = req.id;
+        seq.force_tokens = req.force_tokens;
+        let tel = self.engine.prefill(&mut seq)?;
+        self.metrics.stall_seconds.add(tel.stall_seconds);
+        self.metrics.counters.add("substitutions", tel.substitutions);
+        self.metrics.counters.add("fetches", tel.fetches);
+        Ok(Active { seq, enqueued: req.enqueued, ttft: 0.0 })
+    }
+}

@@ -1,0 +1,94 @@
+//! Named event counters for the serving pipeline (hits, misses,
+//! substitutions, gate rejections, ...).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{num, Json};
+
+#[derive(Debug, Clone, Default)]
+pub struct Counters {
+    map: BTreeMap<String, u64>,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&mut self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&mut self, name: &str, n: u64) {
+        *self.map.entry(name.to_string()).or_insert(0) += n;
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.map.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn merge(&mut self, other: &Counters) {
+        for (k, v) in &other.map {
+            *self.map.entry(k.clone()).or_insert(0) += v;
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.map.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.map
+                .iter()
+                .map(|(k, &v)| (k.clone(), num(v as f64)))
+                .collect(),
+        )
+    }
+
+    /// `a/b` as a fraction, 0 when b == 0 (e.g. hit rates).
+    pub fn ratio(&self, a: &str, b: &str) -> f64 {
+        let d = self.get(b);
+        if d == 0 {
+            0.0
+        } else {
+            self.get(a) as f64 / d as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inc_get_merge() {
+        let mut a = Counters::new();
+        a.inc("x");
+        a.add("x", 2);
+        assert_eq!(a.get("x"), 3);
+        assert_eq!(a.get("missing"), 0);
+        let mut b = Counters::new();
+        b.add("x", 1);
+        b.add("y", 5);
+        a.merge(&b);
+        assert_eq!(a.get("x"), 4);
+        assert_eq!(a.get("y"), 5);
+    }
+
+    #[test]
+    fn ratio_safe() {
+        let mut c = Counters::new();
+        assert_eq!(c.ratio("a", "b"), 0.0);
+        c.add("a", 1);
+        c.add("b", 4);
+        assert!((c.ratio("a", "b") - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_export() {
+        let mut c = Counters::new();
+        c.add("hits", 7);
+        assert_eq!(c.to_json().get("hits").unwrap().as_usize().unwrap(), 7);
+    }
+}

@@ -1,0 +1,107 @@
+//! Fixed-bucket histogram (linear buckets) for latency distributions.
+
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    buckets: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+    count: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, n_buckets: usize) -> Self {
+        assert!(hi > lo && n_buckets > 0);
+        Self {
+            lo,
+            hi,
+            buckets: vec![0; n_buckets],
+            underflow: 0,
+            overflow: 0,
+            count: 0,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.count += 1;
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let n = self.buckets.len();
+            let w = (self.hi - self.lo) / n as f64;
+            let i = (((x - self.lo) / w) as usize).min(n - 1);
+            self.buckets[i] += 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    /// (bucket midpoint, count) pairs — ready for plotting.
+    pub fn series(&self) -> Vec<(f64, u64)> {
+        let w = (self.hi - self.lo) / self.buckets.len() as f64;
+        self.buckets
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (self.lo + w * (i as f64 + 0.5), c))
+            .collect()
+    }
+
+    /// Simple ASCII rendering for terminal reports.
+    pub fn ascii(&self, width: usize) -> String {
+        let max = self.buckets.iter().copied().max().unwrap_or(1).max(1);
+        let mut out = String::new();
+        for (mid, c) in self.series() {
+            let bar = "#".repeat((c as usize * width / max as usize).max(usize::from(c > 0)));
+            out.push_str(&format!("{mid:10.4} | {bar} {c}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_and_flows() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.add(-1.0);
+        h.add(0.5);
+        h.add(9.9);
+        h.add(10.0);
+        h.add(42.0);
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 2);
+        assert_eq!(h.bucket_counts()[0], 1);
+        assert_eq!(h.bucket_counts()[9], 1);
+    }
+
+    #[test]
+    fn series_midpoints() {
+        let mut h = Histogram::new(0.0, 2.0, 2);
+        h.add(0.1);
+        let s = h.series();
+        assert_eq!(s.len(), 2);
+        assert!((s[0].0 - 0.5).abs() < 1e-9);
+        assert_eq!(s[0].1, 1);
+    }
+
+    #[test]
+    fn ascii_renders() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.add(0.1);
+        h.add(0.1);
+        let a = h.ascii(20);
+        assert!(a.contains('#'));
+    }
+}

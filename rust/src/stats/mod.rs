@@ -1,0 +1,10 @@
+//! Lightweight metrics primitives: streaming summaries, fixed-bucket
+//! histograms, and named counters used by the server and benches.
+
+mod counters;
+mod hist;
+mod summary;
+
+pub use counters::Counters;
+pub use hist::Histogram;
+pub use summary::Summary;

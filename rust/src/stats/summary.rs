@@ -1,0 +1,108 @@
+//! Streaming summary: count/mean/min/max plus exact percentiles over the
+//! retained samples (sample counts here are small enough to retain all).
+
+use crate::util::math::percentile;
+
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f32>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.samples.push(x as f32);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().map(|&x| x as f64).sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY as f32, f32::min) as f64
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64
+    }
+
+    pub fn p(&self, pct: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        percentile(&self.samples, pct) as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let v = self
+            .samples
+            .iter()
+            .map(|&x| (x as f64 - m).powi(2))
+            .sum::<f64>()
+            / (self.samples.len() - 1) as f64;
+        v.sqrt()
+    }
+
+    /// `mean ± std [p50 p95 p99] (n)` line for reports.
+    pub fn report(&self, unit: &str) -> String {
+        format!(
+            "{:.4}{u} ± {:.4} [p50 {:.4} p95 {:.4} p99 {:.4}] (n={})",
+            self.mean(),
+            self.std(),
+            self.p(50.0),
+            self.p(95.0),
+            self.p(99.0),
+            self.count(),
+            u = unit
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-9);
+        assert!((s.min() - 1.0).abs() < 1e-9);
+        assert!((s.max() - 4.0).abs() < 1e-9);
+        assert!((s.p(50.0) - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_is_safe() {
+        let s = Summary::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.p(50.0), 0.0);
+        assert_eq!(s.std(), 0.0);
+    }
+
+    #[test]
+    fn std_of_constant_is_zero() {
+        let mut s = Summary::new();
+        for _ in 0..5 {
+            s.add(7.0);
+        }
+        assert!(s.std() < 1e-9);
+    }
+}

@@ -1,0 +1,7 @@
+//! In-tree property-testing mini-framework (proptest is unavailable
+//! offline). Deterministic case generation from a seed, failure reporting
+//! with the case index + seed so any counterexample reproduces exactly.
+
+pub mod prop;
+
+pub use prop::{forall, PropConfig};

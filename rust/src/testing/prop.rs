@@ -1,0 +1,98 @@
+//! `forall(cfg, gen, check)` — run `check` over `cfg.cases` generated
+//! inputs; panic with the reproducing (seed, case) on the first failure.
+//!
+//! No shrinking: generators here produce small cases by construction, and
+//! the (seed, case index) pair pinpoints the exact counterexample.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self { cases: 100, seed: 0xb0dd7 }
+    }
+}
+
+/// Run a property. `gen` builds a case from the RNG; `check` returns
+/// `Err(reason)` on violation.
+pub fn forall<T, G, C>(cfg: PropConfig, mut gen: G, mut check: C)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let mut rng = Rng::new(cfg.seed.wrapping_add(case as u64));
+        let input = gen(&mut rng);
+        if let Err(reason) = check(&input) {
+            panic!(
+                "property failed at case {case} (seed {:#x}):\n  reason: {reason}\n  input: {input:?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        forall(
+            PropConfig { cases: 50, seed: 1 },
+            |rng| rng.below(100),
+            |&x| {
+                if x < 100 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_with_case_info() {
+        forall(
+            PropConfig { cases: 50, seed: 2 },
+            |rng| rng.below(10),
+            |&x| {
+                if x < 5 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} >= 5"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut seen_a = Vec::new();
+        forall(
+            PropConfig { cases: 5, seed: 3 },
+            |rng| rng.next_u64(),
+            |&x| {
+                seen_a.push(x);
+                Ok(())
+            },
+        );
+        let mut seen_b = Vec::new();
+        forall(
+            PropConfig { cases: 5, seed: 3 },
+            |rng| rng.next_u64(),
+            |&x| {
+                seen_b.push(x);
+                Ok(())
+            },
+        );
+        assert_eq!(seen_a, seen_b);
+    }
+}

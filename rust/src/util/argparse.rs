@@ -1,0 +1,242 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Each binary declares its options up front so `--help` is generated.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct ArgSpec {
+    prog: String,
+    about: String,
+    opts: Vec<OptSpec>,
+}
+
+impl ArgSpec {
+    pub fn new(prog: &str, about: &str) -> Self {
+        Self { prog: prog.into(), about: about.into(), opts: Vec::new() }
+    }
+
+    /// `--name <value>` option with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            default: Some(default.into()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// `--name <value>` option that must be provided.
+    pub fn required(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nOptions:\n", self.prog, self.about);
+        for o in &self.opts {
+            let lhs = if o.is_flag {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <v>", o.name)
+            };
+            let def = match &o.default {
+                Some(d) => format!(" [default: {d}]"),
+                None if o.is_flag => String::new(),
+                None => " [required]".to_string(),
+            };
+            out.push_str(&format!("{lhs:28} {}{def}\n", o.help));
+        }
+        out
+    }
+
+    /// Parse a raw arg list (without argv[0]).
+    pub fn parse(&self, args: &[String]) -> Result<Args> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: BTreeMap<String, bool> = BTreeMap::new();
+        let mut positional = Vec::new();
+        for o in &self.opts {
+            if o.is_flag {
+                flags.insert(o.name.clone(), false);
+            } else if let Some(d) = &o.default {
+                values.insert(o.name.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.usage());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .with_context(|| format!("unknown option --{key}\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        bail!("flag --{key} takes no value");
+                    }
+                    flags.insert(key, true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .with_context(|| format!("--{key} needs a value"))?
+                                .clone()
+                        }
+                    };
+                    values.insert(key, v);
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        for o in &self.opts {
+            if !o.is_flag && !values.contains_key(&o.name) {
+                bail!("missing required option --{}\n{}", o.name, self.usage());
+            }
+        }
+        Ok(Args { values, flags, positional })
+    }
+
+    pub fn parse_env(&self) -> Result<Args> {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        self.parse(&args)
+    }
+}
+
+#[derive(Debug)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        self.get(name)
+            .parse()
+            .with_context(|| format!("--{name} must be an integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        self.get(name)
+            .parse()
+            .with_context(|| format!("--{name} must be an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        self.get(name)
+            .parse()
+            .with_context(|| format!("--{name} must be a number"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        *self
+            .flags
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not declared"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("t", "test")
+            .opt("alpha", "0.5", "alpha")
+            .required("path", "a path")
+            .flag("verbose", "talk more")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = spec().parse(&sv(&["--path", "x"])).unwrap();
+        assert_eq!(a.get("alpha"), "0.5");
+        assert_eq!(a.get("path"), "x");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let a = spec()
+            .parse(&sv(&["--path=y", "--alpha=0.9", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.get_f64("alpha").unwrap(), 0.9);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_fails() {
+        assert!(spec().parse(&sv(&["--alpha", "1"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_fails() {
+        assert!(spec().parse(&sv(&["--path", "x", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = spec().parse(&sv(&["serve", "--path", "x"])).unwrap();
+        assert_eq!(a.positional, vec!["serve"]);
+    }
+
+    #[test]
+    fn value_missing_fails() {
+        assert!(spec().parse(&sv(&["--path"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_fails() {
+        assert!(spec().parse(&sv(&["--path=x", "--verbose=1"])).is_err());
+    }
+}

@@ -1,0 +1,60 @@
+//! Minimal `log` facade backend: timestamped stderr logger with an
+//! environment-controlled level (`BUDDYMOE_LOG=debug|info|warn|error`).
+
+use std::sync::Once;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+use once_cell::sync::Lazy;
+
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+static INIT: Once = Once::new();
+
+struct StderrLogger {
+    level: Level,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            let t = START.elapsed().as_secs_f64();
+            eprintln!(
+                "[{t:9.3}s {:5} {}] {}",
+                record.level(),
+                record.target(),
+                record.args()
+            );
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger (idempotent). Level from `BUDDYMOE_LOG`, default info.
+pub fn init() {
+    INIT.call_once(|| {
+        let level = match std::env::var("BUDDYMOE_LOG").as_deref() {
+            Ok("debug") => Level::Debug,
+            Ok("trace") => Level::Trace,
+            Ok("warn") => Level::Warn,
+            Ok("error") => Level::Error,
+            _ => Level::Info,
+        };
+        let _ = log::set_boxed_logger(Box::new(StderrLogger { level }));
+        log::set_max_level(LevelFilter::Trace);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke");
+    }
+}

@@ -1,0 +1,209 @@
+//! Small numeric helpers shared across the coordinator: softmax, top-k,
+//! entropy (the TAE building block), percentiles, cosine similarity.
+
+/// Numerically-stable in-place softmax.
+pub fn softmax(xs: &mut [f32]) {
+    if xs.is_empty() {
+        return;
+    }
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - m).exp();
+        sum += *x;
+    }
+    for x in xs.iter_mut() {
+        *x /= sum;
+    }
+}
+
+/// Deterministic top-k: probability descending, index ascending on ties.
+/// Mirrors `python/compile/model.py::top_k_select` exactly (binary contract
+/// for the golden fixtures). Returns (indices, renormalized weights).
+pub fn top_k(probs: &[f32], k: usize) -> (Vec<usize>, Vec<f32>) {
+    assert!(k <= probs.len());
+    let mut idx: Vec<usize> = (0..probs.len()).collect();
+    idx.sort_by(|&a, &b| {
+        probs[b]
+            .partial_cmp(&probs[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    let sum: f32 = idx.iter().map(|&i| probs[i]).sum();
+    let w = idx
+        .iter()
+        .map(|&i| if sum > 0.0 { probs[i] / sum } else { 1.0 / k as f32 })
+        .collect();
+    (idx, w)
+}
+
+/// Token Activating Entropy (paper Eq. 1): normalized entropy of the
+/// renormalized top-k weights, in [0, 1].
+pub fn tae(weights: &[f32]) -> f32 {
+    let k = weights.len();
+    if k <= 1 {
+        return 0.0;
+    }
+    let mut h = 0.0f64;
+    for &w in weights {
+        if w > 0.0 {
+            let w = w as f64;
+            h -= w * w.ln();
+        }
+    }
+    (h / (k as f64).ln()) as f32
+}
+
+/// Probability margin `p_max - p_2nd` over renormalized top-k weights
+/// (the optional extra-caution gate in paper §3.1).
+pub fn prob_margin(weights: &[f32]) -> f32 {
+    if weights.len() < 2 {
+        return 1.0;
+    }
+    let mut top = f32::NEG_INFINITY;
+    let mut second = f32::NEG_INFINITY;
+    for &w in weights {
+        if w > top {
+            second = top;
+            top = w;
+        } else if w > second {
+            second = w;
+        }
+    }
+    top - second
+}
+
+/// p-th percentile (linear interpolation) of unsorted data; p in [0, 100].
+pub fn percentile(xs: &[f32], p: f64) -> f32 {
+    assert!(!xs.is_empty());
+    let mut s: Vec<f32> = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let rank = (p / 100.0) * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        let f = (rank - lo as f64) as f32;
+        s[lo] * (1.0 - f) + s[hi] * f
+    }
+}
+
+/// Cosine similarity of two equal-length vectors.
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+    for i in 0..a.len() {
+        dot += a[i] as f64 * b[i] as f64;
+        na += (a[i] as f64).powi(2);
+        nb += (b[i] as f64).powi(2);
+    }
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    (dot / (na.sqrt() * nb.sqrt())) as f32
+}
+
+/// argmax with lowest-index tie-break.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// KL(p || q) for probability vectors (natural log).
+pub fn kl_divergence(p: &[f32], q: &[f32]) -> f64 {
+    assert_eq!(p.len(), q.len());
+    let mut kl = 0.0f64;
+    for i in 0..p.len() {
+        if p[i] > 0.0 {
+            kl += p[i] as f64 * ((p[i] as f64) / (q[i] as f64).max(1e-12)).ln();
+        }
+    }
+    kl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut xs = vec![1.0, 2.0, 3.0, -1.0];
+        softmax(&mut xs);
+        let s: f32 = xs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(xs[2] > xs[1] && xs[1] > xs[0] && xs[0] > xs[3]);
+    }
+
+    #[test]
+    fn softmax_stable_for_large_logits() {
+        let mut xs = vec![1e4, 1e4 - 1.0];
+        softmax(&mut xs);
+        assert!(xs.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn top_k_orders_and_renormalizes() {
+        let probs = vec![0.1, 0.4, 0.2, 0.3];
+        let (idx, w) = top_k(&probs, 2);
+        assert_eq!(idx, vec![1, 3]);
+        assert!((w[0] - 0.4 / 0.7).abs() < 1e-6);
+        assert!((w.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn top_k_tie_break_low_index() {
+        let probs = vec![0.25, 0.25, 0.25, 0.25];
+        let (idx, _) = top_k(&probs, 2);
+        assert_eq!(idx, vec![0, 1]);
+    }
+
+    #[test]
+    fn tae_extremes() {
+        assert!((tae(&[0.25, 0.25, 0.25, 0.25]) - 1.0).abs() < 1e-6);
+        assert!(tae(&[1.0, 0.0, 0.0, 0.0]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tae_monotone_in_peakiness() {
+        let diffuse = tae(&[0.3, 0.25, 0.25, 0.2]);
+        let peaky = tae(&[0.9, 0.05, 0.03, 0.02]);
+        assert!(diffuse > peaky);
+    }
+
+    #[test]
+    fn margin_basic() {
+        assert!((prob_margin(&[0.7, 0.2, 0.1]) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = vec![1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-6);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-6);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_identity_and_orthogonal() {
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-6);
+        assert!(cosine(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn kl_zero_for_identical() {
+        let p = vec![0.5, 0.3, 0.2];
+        assert!(kl_divergence(&p, &p).abs() < 1e-9);
+    }
+
+    #[test]
+    fn argmax_tie_break() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+    }
+}

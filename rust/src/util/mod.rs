@@ -1,0 +1,9 @@
+//! Infrastructure substrates built in-tree (the environment is offline, so
+//! the usual crates — rand, serde, clap — are hand-rolled here).
+
+pub mod argparse;
+pub mod json;
+pub mod logging;
+pub mod math;
+pub mod rng;
+pub mod tensor;

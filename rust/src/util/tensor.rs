@@ -1,0 +1,118 @@
+//! Row-major f32 host tensor used throughout the coordinator for
+//! activations, KV caches, and weight staging.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", dims, n, data.len());
+        }
+        Ok(Self { dims, data })
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> Self {
+        let n: usize = dims.iter().product();
+        Self { dims, data: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Row `i` of a rank-2 tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.rank(), 2, "row() needs rank-2");
+        let w = self.dims[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        assert_eq!(self.rank(), 2, "row_mut() needs rank-2");
+        let w = self.dims[1];
+        &mut self.data[i * w..(i + 1) * w]
+    }
+
+    /// Gather rows into a new [idx.len(), W] tensor.
+    pub fn gather_rows(&self, idx: &[usize]) -> Tensor {
+        let w = self.dims[1];
+        let mut data = Vec::with_capacity(idx.len() * w);
+        for &i in idx {
+            data.extend_from_slice(self.row(i));
+        }
+        Tensor { dims: vec![idx.len(), w], data }
+    }
+
+    /// Pad the leading dimension up to `n` rows with zeros (bucket padding).
+    pub fn pad_rows(&self, n: usize) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert!(n >= self.dims[0]);
+        let w = self.dims[1];
+        let mut data = self.data.clone();
+        data.resize(n * w, 0.0);
+        Tensor { dims: vec![n, w], data }
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.dims, other.dims);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_shape() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn rows_and_gather() {
+        let t = Tensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.row(1), &[3., 4.]);
+        let g = t.gather_rows(&[2, 0]);
+        assert_eq!(g.dims, vec![2, 2]);
+        assert_eq!(g.data, vec![5., 6., 1., 2.]);
+    }
+
+    #[test]
+    fn pad_rows_zero_fills() {
+        let t = Tensor::new(vec![1, 2], vec![7., 8.]).unwrap();
+        let p = t.pad_rows(3);
+        assert_eq!(p.dims, vec![3, 2]);
+        assert_eq!(p.data, vec![7., 8., 0., 0., 0., 0.]);
+    }
+
+    #[test]
+    fn diff() {
+        let a = Tensor::new(vec![2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::new(vec![2], vec![1.5, 2.0]).unwrap();
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-6);
+    }
+}

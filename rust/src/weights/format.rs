@@ -1,0 +1,126 @@
+//! BMW weight-bundle reader/writer. Layout (little-endian):
+//!
+//! ```text
+//! magic  4B  b"BMW1"
+//! count  u32
+//! per tensor: name_len u16, name utf8, ndim u8, dims u32*ndim, data f32*n
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::tensor::Tensor;
+
+const MAGIC: &[u8; 4] = b"BMW1";
+
+pub fn read_bmw(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad BMW magic {:?}", magic);
+    }
+    let count = read_u32(&mut r)?;
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let nlen = read_u16(&mut r)? as usize;
+        let mut name = vec![0u8; nlen];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("tensor name not utf8")?;
+        let ndim = read_u8(&mut r)? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u32(&mut r)? as usize);
+        }
+        let n: usize = dims.iter().product();
+        let mut bytes = vec![0u8; n * 4];
+        r.read_exact(&mut bytes)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.insert(name, Tensor::new(dims, data)?);
+    }
+    Ok(out)
+}
+
+pub fn write_bmw(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        w.write_all(&(nb.len() as u16).to_le_bytes())?;
+        w.write_all(nb)?;
+        w.write_all(&[t.dims.len() as u8])?;
+        for &d in &t.dims {
+            w.write_all(&(d as u32).to_le_bytes())?;
+        }
+        for &x in &t.data {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+fn read_u8(r: &mut impl Read) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+fn read_u16(r: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("bmw_test_rt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bmw");
+        let mut m = BTreeMap::new();
+        m.insert(
+            "a.b".to_string(),
+            Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap(),
+        );
+        m.insert("c".to_string(), Tensor::new(vec![4], vec![0.5; 4]).unwrap());
+        write_bmw(&path, &m).unwrap();
+        let back = read_bmw(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back["a.b"], m["a.b"]);
+        assert_eq!(back["c"], m["c"]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("bmw_test_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bmw");
+        std::fs::write(&path, b"NOPE").unwrap();
+        assert!(read_bmw(&path).is_err());
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(read_bmw(Path::new("/nonexistent/x.bmw")).is_err());
+    }
+}

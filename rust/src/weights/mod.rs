@@ -1,0 +1,9 @@
+//! Weight handling: the BMW bundle reader (binary contract with
+//! `python/compile/bmw.py`) and the CPU-side weight store the offloading
+//! system fetches experts from.
+
+mod format;
+mod store;
+
+pub use format::{read_bmw, write_bmw};
+pub use store::{ExpertKey, ExpertWeights, WeightStore};

@@ -1,0 +1,175 @@
+//! CPU-side weight store: the "host memory" tier of the offloading system.
+//!
+//! Non-expert weights (attention, router, embeddings) are always
+//! GPU-resident in the paper's setting and are exposed directly. Expert
+//! weights are fetched through [`WeightStore::expert`] by the transfer
+//! engine when the cache loads them.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::format::read_bmw;
+use crate::config::ModelConfig;
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+/// (layer, expert) identifier used across the whole system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ExpertKey {
+    pub layer: usize,
+    pub expert: usize,
+}
+
+impl ExpertKey {
+    pub fn new(layer: usize, expert: usize) -> Self {
+        Self { layer, expert }
+    }
+}
+
+/// One expert's three projection tensors, shared behind Arc so "transfers"
+/// can hand them around without copying host memory twice.
+pub type ExpertWeights = Arc<(Tensor, Tensor, Tensor)>;
+
+#[derive(Debug)]
+pub struct WeightStore {
+    tensors: BTreeMap<String, Tensor>,
+    experts: BTreeMap<ExpertKey, ExpertWeights>,
+    pub expert_bytes: usize,
+}
+
+impl WeightStore {
+    pub fn load(cfg: &ModelConfig) -> Result<Self> {
+        let tensors = read_bmw(&cfg.weights_path())?;
+        Self::from_tensors(cfg, tensors)
+    }
+
+    pub fn from_tensors(
+        cfg: &ModelConfig,
+        mut tensors: BTreeMap<String, Tensor>,
+    ) -> Result<Self> {
+        let mut experts = BTreeMap::new();
+        for l in 0..cfg.n_layers {
+            for e in 0..cfg.n_experts {
+                let k = ExpertKey::new(l, e);
+                let w1 = tensors
+                    .remove(&format!("L{l}.E{e}.w1"))
+                    .with_context(|| format!("missing L{l}.E{e}.w1"))?;
+                let w3 = tensors
+                    .remove(&format!("L{l}.E{e}.w3"))
+                    .with_context(|| format!("missing L{l}.E{e}.w3"))?;
+                let w2 = tensors
+                    .remove(&format!("L{l}.E{e}.w2"))
+                    .with_context(|| format!("missing L{l}.E{e}.w2"))?;
+                experts.insert(k, Arc::new((w1, w3, w2)));
+            }
+        }
+        Ok(Self { tensors, experts, expert_bytes: cfg.expert_bytes() })
+    }
+
+    /// Synthetic random weights for unit tests (no artifacts needed).
+    pub fn synthetic(cfg: &ModelConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut tensors = BTreeMap::new();
+        let d = cfg.d_model;
+        let (v, e, f) = (cfg.vocab_size, cfg.n_experts, cfg.d_ff);
+        let mut randt = |dims: Vec<usize>, scale: f32| {
+            let n: usize = dims.iter().product();
+            let data = (0..n).map(|_| rng.normal() as f32 * scale).collect();
+            Tensor::new(dims, data).unwrap()
+        };
+        tensors.insert("embed".into(), randt(vec![v, d], 1.0));
+        tensors.insert("final_gain".into(), Tensor::new(vec![d], vec![1.0; d]).unwrap());
+        let mut experts = BTreeMap::new();
+        for l in 0..cfg.n_layers {
+            let p = format!("L{l}.");
+            tensors.insert(p.clone() + "ln1", Tensor::new(vec![d], vec![1.0; d]).unwrap());
+            tensors.insert(p.clone() + "ln2", Tensor::new(vec![d], vec![1.0; d]).unwrap());
+            for n in ["wq", "wk", "wv", "wo"] {
+                tensors.insert(p.clone() + n, randt(vec![d, d], 1.0 / (d as f32).sqrt()));
+            }
+            tensors.insert(p.clone() + "wg", randt(vec![d, e], 1.0));
+            tensors.insert(p.clone() + "rbias", randt(vec![e], 1.0));
+            for ei in 0..e {
+                let w1 = randt(vec![d, f], 1.0 / (d as f32).sqrt());
+                let w3 = randt(vec![d, f], 1.0 / (d as f32).sqrt());
+                let w2 = randt(vec![f, d], 1.0 / (f as f32).sqrt());
+                experts.insert(ExpertKey::new(l, ei), Arc::new((w1, w3, w2)));
+            }
+        }
+        Self { tensors, experts, expert_bytes: cfg.expert_bytes() }
+    }
+
+    pub fn tensor(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("missing tensor {name}"))
+    }
+
+    pub fn expert(&self, key: ExpertKey) -> Result<ExpertWeights> {
+        self.experts
+            .get(&key)
+            .cloned()
+            .with_context(|| format!("missing expert L{}.E{}", key.layer, key.expert))
+    }
+
+    pub fn expert_count(&self) -> usize {
+        self.experts.len()
+    }
+
+    /// Flattened concatenation of one expert's parameters (similarity
+    /// analysis, Fig 4).
+    pub fn expert_flat(&self, key: ExpertKey) -> Result<Vec<f32>> {
+        let w = self.expert(key)?;
+        let mut flat = Vec::with_capacity(w.0.len() + w.1.len() + w.2.len());
+        flat.extend_from_slice(&w.0.data);
+        flat.extend_from_slice(&w.1.data);
+        flat.extend_from_slice(&w.2.data);
+        Ok(flat)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_store_complete() {
+        let cfg = ModelConfig::test_tiny();
+        let s = WeightStore::synthetic(&cfg, 1);
+        assert_eq!(s.expert_count(), cfg.total_experts());
+        assert!(s.tensor("embed").is_ok());
+        assert!(s.tensor("L0.wq").is_ok());
+        assert!(s.tensor("nope").is_err());
+        let e = s.expert(ExpertKey::new(0, 0)).unwrap();
+        assert_eq!(e.0.dims, vec![cfg.d_model, cfg.d_ff]);
+        assert_eq!(e.2.dims, vec![cfg.d_ff, cfg.d_model]);
+    }
+
+    #[test]
+    fn expert_flat_length() {
+        let cfg = ModelConfig::test_tiny();
+        let s = WeightStore::synthetic(&cfg, 2);
+        let flat = s.expert_flat(ExpertKey::new(1, 3)).unwrap();
+        assert_eq!(flat.len(), cfg.expert_param_count());
+    }
+
+    #[test]
+    fn deterministic_synthetic() {
+        let cfg = ModelConfig::test_tiny();
+        let a = WeightStore::synthetic(&cfg, 5);
+        let b = WeightStore::synthetic(&cfg, 5);
+        assert_eq!(
+            a.expert(ExpertKey::new(0, 1)).unwrap().0.data,
+            b.expert(ExpertKey::new(0, 1)).unwrap().0.data
+        );
+    }
+
+    #[test]
+    fn missing_expert_errors() {
+        let cfg = ModelConfig::test_tiny();
+        let s = WeightStore::synthetic(&cfg, 1);
+        assert!(s.expert(ExpertKey::new(99, 0)).is_err());
+    }
+}

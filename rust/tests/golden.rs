@@ -1,0 +1,164 @@
+//! End-to-end numeric validation: the rust-orchestrated engine (full
+//! residency, no substitution) must reproduce the python reference model's
+//! decode trace (artifacts/golden/decode.json) token-for-token and
+//! logit-for-logit.
+//!
+//! This closes the L1→L2→L3 loop: pallas kernels → AOT HLO artifacts →
+//! PJRT execution → rust routing/combine — against pure-jnp numerics.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use buddymoe::config::{MissPolicy, ModelConfig, PrefetchKind, ServingConfig};
+use buddymoe::model::{Engine, EngineOptions};
+use buddymoe::util::json::Json;
+use buddymoe::weights::WeightStore;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("model_config.json").exists()
+}
+
+fn oracle_engine(cfg: &ModelConfig, store: Arc<WeightStore>) -> Engine {
+    let scfg = ServingConfig {
+        cache_rate: 1.0,
+        miss_policy: MissPolicy::OnDemand,
+        prefetch: PrefetchKind::None,
+        ..Default::default()
+    };
+    let opts = EngineOptions {
+        time_scale: 0.0,
+        record_logits: true,
+        ..Default::default()
+    };
+    Engine::new(cfg.clone(), scfg, store, None, None, opts).expect("engine")
+}
+
+#[test]
+fn engine_matches_python_reference() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let dir = artifacts_dir();
+    let cfg = ModelConfig::load(&dir).expect("config");
+    let store = Arc::new(WeightStore::load(&cfg).expect("weights"));
+    let mut eng = oracle_engine(&cfg, store);
+
+    let golden_text = std::fs::read_to_string(cfg.golden_path()).expect("golden file");
+    let golden = Json::parse(&golden_text).expect("golden json");
+    let n_steps = golden.get("n_steps").unwrap().as_usize().unwrap();
+
+    for (ci, case) in golden.get("cases").unwrap().as_arr().unwrap().iter().enumerate() {
+        let prompt: Vec<i32> = case
+            .get("prompt")
+            .unwrap()
+            .as_usize_vec()
+            .unwrap()
+            .into_iter()
+            .map(|x| x as i32)
+            .collect();
+        let want_tokens: Vec<i32> = case
+            .get("gen_tokens")
+            .unwrap()
+            .as_usize_vec()
+            .unwrap()
+            .into_iter()
+            .map(|x| x as i32)
+            .collect();
+        let want_logits: Vec<Vec<f32>> = case
+            .get("logits")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|r| r.as_f32_vec().unwrap())
+            .collect();
+
+        let mut seq = eng.new_sequence(prompt, n_steps);
+        eng.prefill(&mut seq).expect("prefill");
+        for _ in 0..n_steps {
+            let mut batch = [&mut seq];
+            eng.decode_step(&mut batch).expect("decode");
+        }
+        assert_eq!(
+            seq.generated, want_tokens,
+            "case {ci}: generated tokens diverge from python reference"
+        );
+        let mut max_diff = 0f32;
+        for (got, want) in seq.logits_log.iter().zip(&want_logits) {
+            for (g, w) in got.iter().zip(want) {
+                max_diff = max_diff.max((g - w).abs());
+            }
+        }
+        assert!(
+            max_diff < 1e-2,
+            "case {ci}: logits diverge (max abs diff {max_diff})"
+        );
+        eprintln!("case {ci}: tokens match, max logit diff {max_diff:.2e}");
+    }
+    eng.shutdown();
+}
+
+#[test]
+fn router_fixture_matches() {
+    if !have_artifacts() {
+        return;
+    }
+    // The golden file records layer-0 routing of the first decode step;
+    // an oracle engine with profiling enabled must reproduce it.
+    let dir = artifacts_dir();
+    let cfg = ModelConfig::load(&dir).expect("config");
+    let store = Arc::new(WeightStore::load(&cfg).expect("weights"));
+    let scfg = ServingConfig {
+        cache_rate: 1.0,
+        miss_policy: MissPolicy::OnDemand,
+        prefetch: PrefetchKind::None,
+        ..Default::default()
+    };
+    let opts = EngineOptions {
+        time_scale: 0.0,
+        collect_profile: true,
+        ..Default::default()
+    };
+    let mut eng = Engine::new(cfg.clone(), scfg, store, None, None, opts).expect("engine");
+
+    let golden_text = std::fs::read_to_string(cfg.golden_path()).unwrap();
+    let golden = Json::parse(&golden_text).unwrap();
+    let case = &golden.get("cases").unwrap().as_arr().unwrap()[0];
+    let prompt: Vec<i32> = case
+        .get("prompt")
+        .unwrap()
+        .as_usize_vec()
+        .unwrap()
+        .into_iter()
+        .map(|x| x as i32)
+        .collect();
+    let want_idx = case.get("router_l0_step0_idx").unwrap().as_usize_vec().unwrap();
+    let want_tae = case.get("router_l0_step0_tae").unwrap().as_f64().unwrap();
+
+    let s0 = prompt.len();
+    let mut seq = eng.new_sequence(prompt, 1);
+    eng.prefill(&mut seq).unwrap();
+    // Reset the profile so only the decode step is recorded.
+    eng.profile_out = Some(buddymoe::profilecollect::ProfileCollector::new(
+        cfg.n_layers,
+        cfg.n_experts,
+    ));
+    let mut batch = [&mut seq];
+    eng.decode_step(&mut batch).unwrap();
+    let pc = eng.profile_out.take().unwrap();
+    // One decode token recorded at layer 0; check its selected experts.
+    assert_eq!(pc.tokens_seen(0), 1, "profiled decode tokens");
+    let acts = &pc.layer(0).activations;
+    for &e in &want_idx {
+        assert!(acts[e] > 0.0, "expert {e} (rank from python) not selected; prompt len {s0}");
+    }
+    // TAE from recorded weights: recompute via the trace-free route —
+    // activations can't give TAE, so just sanity-bound it.
+    assert!((0.0..=1.0).contains(&want_tae));
+    eng.shutdown();
+}

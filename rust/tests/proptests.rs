@@ -1,0 +1,374 @@
+//! Property-based tests over coordinator invariants (in-tree prop
+//! framework; see rust/src/testing/prop.rs).
+
+use buddymoe::buddy::{BuddyProfile, SlotDecision, SubstitutionEngine, TokenRouting};
+use buddymoe::config::MissPolicy;
+use buddymoe::memory::{EvictPolicy, ExpertCache, LoadDecision};
+use buddymoe::profilecollect::ProfileCollector;
+use buddymoe::stats::Counters;
+use buddymoe::testing::{forall, PropConfig};
+use buddymoe::util::math::{softmax, tae, top_k};
+use buddymoe::util::rng::Rng;
+use buddymoe::weights::ExpertKey;
+
+// ---------------------------------------------------------------------
+// math invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_softmax_is_distribution() {
+    forall(
+        PropConfig { cases: 200, seed: 11 },
+        |rng| {
+            let n = rng.range(1, 65);
+            (0..n).map(|_| (rng.f32() - 0.5) * 40.0).collect::<Vec<f32>>()
+        },
+        |xs| {
+            let mut p = xs.clone();
+            softmax(&mut p);
+            let sum: f32 = p.iter().sum();
+            if (sum - 1.0).abs() > 1e-4 {
+                return Err(format!("sum {sum}"));
+            }
+            if p.iter().any(|&x| !(0.0..=1.0 + 1e-6).contains(&x)) {
+                return Err("probability out of range".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_top_k_selects_maximal_mass() {
+    forall(
+        PropConfig { cases: 200, seed: 12 },
+        |rng| {
+            let n = rng.range(2, 64);
+            let k = rng.range(1, n);
+            let mut p: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            softmax(&mut p);
+            (p, k)
+        },
+        |(p, k)| {
+            let (idx, w) = top_k(p, *k);
+            if idx.len() != *k {
+                return Err("wrong k".into());
+            }
+            // Every non-selected prob <= every selected prob.
+            let min_sel = idx.iter().map(|&i| p[i]).fold(f32::INFINITY, f32::min);
+            for (i, &pi) in p.iter().enumerate() {
+                if !idx.contains(&i) && pi > min_sel + 1e-7 {
+                    return Err(format!("expert {i} ({pi}) beats selected ({min_sel})"));
+                }
+            }
+            let sum: f32 = w.iter().sum();
+            if (sum - 1.0).abs() > 1e-4 {
+                return Err(format!("weights sum {sum}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tae_bounded_and_normalized() {
+    forall(
+        PropConfig { cases: 300, seed: 13 },
+        |rng| {
+            let k = rng.range(2, 9);
+            let mut w: Vec<f32> = (0..k).map(|_| rng.f32() + 1e-6).collect();
+            let s: f32 = w.iter().sum();
+            for x in w.iter_mut() {
+                *x /= s;
+            }
+            w
+        },
+        |w| {
+            let t = tae(w);
+            if !(0.0..=1.0 + 1e-5).contains(&t) {
+                return Err(format!("TAE {t} out of [0,1]"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// cache invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_cache_never_exceeds_capacity() {
+    forall(
+        PropConfig { cases: 60, seed: 21 },
+        |rng| {
+            let cap = rng.range(1, 5);
+            let ops: Vec<(usize, usize)> = (0..200)
+                .map(|_| (rng.below(3), rng.below(8)))
+                .collect();
+            (cap, ops)
+        },
+        |(cap, ops)| {
+            let mut cache = ExpertCache::new(2, 8, *cap, EvictPolicy::Lru);
+            for &(op, e) in ops {
+                let k = ExpertKey::new(e % 2, e);
+                match op {
+                    0 => {
+                        if let LoadDecision::StartLoad { .. } = cache.request_load(k) {
+                            cache.complete_load(k);
+                        }
+                    }
+                    1 => cache.mark_use(k),
+                    _ => {
+                        let _ = cache.request_load(k);
+                    }
+                }
+                for layer in 0..2 {
+                    if cache.gpu_count(layer) > *cap {
+                        return Err(format!(
+                            "layer {layer} holds {} > cap {cap}",
+                            cache.gpu_count(layer)
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_residency_mask_consistent() {
+    forall(
+        PropConfig { cases: 60, seed: 22 },
+        |rng| (0..40).map(|_| rng.below(6)).collect::<Vec<usize>>(),
+        |admits| {
+            let mut cache = ExpertCache::new(1, 6, 3, EvictPolicy::Lfu);
+            for &e in admits {
+                let k = ExpertKey::new(0, e);
+                if let LoadDecision::StartLoad { .. } = cache.request_load(k) {
+                    cache.complete_load(k);
+                }
+            }
+            let mask = cache.residency_mask(0);
+            for (e, &m) in mask.iter().enumerate() {
+                if m != cache.is_gpu(ExpertKey::new(0, e)) {
+                    return Err("mask mismatch".into());
+                }
+            }
+            if mask.iter().filter(|&&m| m).count() != cache.gpu_count(0) {
+                return Err("count mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Algorithm 1 invariants (the paper's correctness contract)
+// ---------------------------------------------------------------------
+
+struct SubCase {
+    residency: Vec<bool>,
+    tokens: Vec<TokenRouting>,
+    rho: Option<usize>,
+    h: usize,
+    tau: f64,
+    beta: f64,
+}
+
+impl std::fmt::Debug for SubCase {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "SubCase(res={:?}, toks={}, rho={:?}, h={}, tau={}, beta={})",
+            self.residency,
+            self.tokens.len(),
+            self.rho,
+            self.h,
+            self.tau,
+            self.beta
+        )
+    }
+}
+
+fn shared_profile() -> BuddyProfile {
+    let mut pc = ProfileCollector::new(1, 12);
+    let mut rng = Rng::new(99);
+    for _ in 0..4000 {
+        let a = rng.below(12);
+        let b = rng.below(12);
+        if a != b {
+            pc.record(0, &[a, b], &[0.6, 0.4]).unwrap();
+        }
+    }
+    BuddyProfile::build(&pc, &[1.0], 12, 1e-3, true).unwrap()
+}
+
+#[test]
+fn prop_algorithm1_invariants() {
+    let profile = shared_profile();
+    forall(
+        PropConfig { cases: 150, seed: 31 },
+        |rng| {
+            let residency: Vec<bool> = (0..12).map(|_| rng.bool(0.5)).collect();
+            let k = rng.range(2, 5);
+            let tokens: Vec<TokenRouting> = (0..rng.range(1, 6))
+                .map(|_| {
+                    let mut sel = Vec::new();
+                    while sel.len() < k {
+                        let e = rng.below(12);
+                        if !sel.contains(&e) {
+                            sel.push(e);
+                        }
+                    }
+                    let mut w: Vec<f32> = (0..k).map(|_| rng.f32() + 0.01).collect();
+                    let s: f32 = w.iter().sum();
+                    w.iter_mut().for_each(|x| *x /= s);
+                    w.sort_by(|a, b| b.partial_cmp(a).unwrap());
+                    TokenRouting { selected: sel, weights: w }
+                })
+                .collect();
+            SubCase {
+                residency,
+                tokens,
+                rho: if rng.bool(0.5) { Some(rng.range(1, 4)) } else { None },
+                h: rng.range(1, 13),
+                tau: rng.f64(),
+                beta: rng.f64(),
+            }
+        },
+        |case| {
+            let mut eng = SubstitutionEngine::new(&profile);
+            eng.gates.tau = case.tau;
+            eng.gates.beta = case.beta;
+            eng.search_h = case.h;
+            eng.rho = case.rho;
+            let mut tokens = case.tokens.clone();
+            let mut counters = Counters::new();
+            let mut rng = Rng::new(1);
+            let (decisions, events) = eng.apply(
+                0,
+                &mut tokens,
+                &case.residency,
+                MissPolicy::Buddy,
+                None,
+                &mut counters,
+                &mut rng,
+            );
+            for (ti, (tok, dec)) in tokens.iter().zip(&decisions).enumerate() {
+                // 1. No duplicate experts per token.
+                let mut s = tok.selected.clone();
+                s.sort_unstable();
+                s.dedup();
+                if s.len() != tok.selected.len() {
+                    return Err(format!("token {ti} has duplicate experts"));
+                }
+                let mut subs = 0;
+                for (slot, d) in dec.iter().enumerate() {
+                    match d {
+                        SlotDecision::Substitute { to, rank } => {
+                            subs += 1;
+                            // 2. Substitutes are GPU-resident.
+                            if !case.residency[*to] {
+                                return Err(format!("token {ti} slot {slot}: non-resident buddy"));
+                            }
+                            // 3. Within search rank H.
+                            if *rank > case.h {
+                                return Err(format!("rank {rank} > H {}", case.h));
+                            }
+                            // 4. Original expert really was missing.
+                            if case.residency[case.tokens[ti].selected[slot]] {
+                                return Err("substituted a resident expert".into());
+                            }
+                        }
+                        SlotDecision::Keep => {
+                            if !case.residency[tok.selected[slot]] {
+                                return Err("kept a non-resident expert".into());
+                            }
+                        }
+                        SlotDecision::Fetch => {
+                            // Fetched slots keep the ORIGINAL expert.
+                            if tok.selected[slot] != case.tokens[ti].selected[slot] {
+                                return Err("fetch mutated selection".into());
+                            }
+                        }
+                        SlotDecision::Dropped => return Err("buddy policy never drops".into()),
+                    }
+                }
+                // 5. Replacement budget respected.
+                if let Some(rho) = case.rho {
+                    if subs > rho {
+                        return Err(format!("token {ti}: {subs} subs > rho {rho}"));
+                    }
+                }
+            }
+            // 6. Counter consistency.
+            if counters.get("slots_miss")
+                != counters.get("substitutions") + counters.get("fetches") + counters.get("drops")
+            {
+                return Err("miss accounting broken".into());
+            }
+            // 7. Events match decisions.
+            let dec_subs: usize = decisions
+                .iter()
+                .flatten()
+                .filter(|d| matches!(d, SlotDecision::Substitute { .. }))
+                .count();
+            if events.len() != dec_subs {
+                return Err("event count mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_drop_policy_weights_renormalize() {
+    let profile = shared_profile();
+    forall(
+        PropConfig { cases: 100, seed: 41 },
+        |rng| {
+            let residency: Vec<bool> = (0..12).map(|_| rng.bool(0.4)).collect();
+            let mut sel = Vec::new();
+            while sel.len() < 4 {
+                let e = rng.below(12);
+                if !sel.contains(&e) {
+                    sel.push(e);
+                }
+            }
+            (residency, sel)
+        },
+        |(residency, sel)| {
+            let eng = SubstitutionEngine::new(&profile);
+            let mut tokens = vec![TokenRouting {
+                selected: sel.clone(),
+                weights: vec![0.4, 0.3, 0.2, 0.1],
+            }];
+            let mut counters = Counters::new();
+            let mut rng = Rng::new(2);
+            let (decisions, _) = eng.apply(
+                0,
+                &mut tokens,
+                residency,
+                MissPolicy::Drop,
+                None,
+                &mut counters,
+                &mut rng,
+            );
+            let kept_any = decisions[0]
+                .iter()
+                .any(|d| !matches!(d, SlotDecision::Dropped));
+            let sum: f32 = tokens[0].weights.iter().sum();
+            if kept_any && (sum - 1.0).abs() > 1e-4 {
+                return Err(format!("weights sum {sum} after drop"));
+            }
+            for (d, &w) in decisions[0].iter().zip(&tokens[0].weights) {
+                if matches!(d, SlotDecision::Dropped) && w != 0.0 {
+                    return Err("dropped slot kept weight".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,200 @@
+//! End-to-end serving tests over the real artifacts: continuous batching,
+//! policy behaviour under memory pressure, teacher forcing, failure modes.
+//! (Time-scale 0: instant simulated transfers — these tests check
+//! correctness and accounting, not latency.)
+
+use std::path::Path;
+use std::sync::Arc;
+
+use buddymoe::buddy::BuddyProfile;
+use buddymoe::config::{MissPolicy, ModelConfig, PrefetchKind, ServingConfig};
+use buddymoe::eval::{forced_agreement, profile_model, warm_rank_from_profile, Domain, WorkloadGen};
+use buddymoe::model::{Engine, EngineOptions};
+use buddymoe::server::{InferenceRequest, Server};
+use buddymoe::weights::WeightStore;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn setup() -> Option<(ModelConfig, Arc<WeightStore>)> {
+    let dir = artifacts_dir();
+    if !dir.join("model_config.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let cfg = ModelConfig::load(&dir).unwrap();
+    let store = Arc::new(WeightStore::load(&cfg).unwrap());
+    Some((cfg, store))
+}
+
+fn engine_with(
+    cfg: &ModelConfig,
+    store: Arc<WeightStore>,
+    policy: MissPolicy,
+    cache_rate: f64,
+) -> Engine {
+    let pc = profile_model(cfg, store.clone(), 8, 555).unwrap();
+    let warm = warm_rank_from_profile(&pc);
+    let mut scfg = ServingConfig {
+        cache_rate,
+        miss_policy: policy,
+        prefetch: PrefetchKind::TopFreq,
+        ..Default::default()
+    };
+    scfg.tae_tau = 0.5;
+    let buddies =
+        BuddyProfile::build(&pc, &vec![scfg.cft_alpha; cfg.n_layers], scfg.k_max, 1e-3, true)
+            .unwrap();
+    Engine::new(
+        cfg.clone(),
+        scfg,
+        store,
+        Some(buddies),
+        Some(warm),
+        EngineOptions { time_scale: 0.0, record_logits: true, ..Default::default() },
+    )
+    .unwrap()
+}
+
+#[test]
+fn continuous_batching_completes_all_requests() {
+    let Some((cfg, store)) = setup() else { return };
+    let engine = engine_with(&cfg, store, MissPolicy::Buddy, 0.5);
+    let mut server = Server::new(engine);
+    let mut gen = WorkloadGen::new(&cfg, 9);
+    gen.max_new = 6;
+    // More requests than max_batch: forces multiple admission waves.
+    let n = server.engine.scfg.max_batch * 2 + 3;
+    let reqs = gen.requests(Domain::Mixed, n, 0);
+    let responses = server.run_offline(reqs).unwrap();
+    assert_eq!(responses.len(), n);
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n as u64).collect::<Vec<_>>());
+    for r in &responses {
+        assert_eq!(r.tokens.len(), 6);
+        assert_eq!(r.predictions.len(), 7); // prefill + 6 steps
+        assert_eq!(r.logits.len(), 7);
+        assert!(r.ttft <= r.total);
+    }
+    assert_eq!(server.metrics.requests_done as usize, n);
+    server.engine.shutdown();
+}
+
+#[test]
+fn on_demand_is_lossless_under_pressure() {
+    let Some((cfg, store)) = setup() else { return };
+    // Oracle: full residency.
+    let oracle_engine = engine_with(&cfg, store.clone(), MissPolicy::OnDemand, 1.0);
+    let mut oracle_server = Server::new(oracle_engine);
+    let mut gen = WorkloadGen::new(&cfg, 10);
+    gen.max_new = 5;
+    let reqs = gen.requests(Domain::Mixed, 4, 0);
+    let mut oracle = oracle_server.run_offline(reqs.clone()).unwrap();
+    oracle.sort_by_key(|r| r.id);
+    oracle_server.engine.shutdown();
+
+    // Served: c=0.375, on-demand (lossless, teacher-forced to oracle).
+    let engine = engine_with(&cfg, store, MissPolicy::OnDemand, 0.375);
+    let mut server = Server::new(engine);
+    let forced: Vec<InferenceRequest> = reqs
+        .into_iter()
+        .map(|r| {
+            let o = oracle.iter().find(|x| x.id == r.id).unwrap();
+            r.forced(o.predictions.clone())
+        })
+        .collect();
+    let mut served = server.run_offline(forced).unwrap();
+    served.sort_by_key(|r| r.id);
+    let o_refs: Vec<_> = oracle.iter().collect();
+    let s_refs: Vec<_> = served.iter().collect();
+    let acc = forced_agreement(&o_refs, &s_refs);
+    assert!(
+        acc > 0.999,
+        "on-demand must be lossless (got agreement {acc})"
+    );
+    assert!(server.engine.counters.get("fetches") > 0, "pressure must cause fetches");
+    assert_eq!(server.engine.counters.get("substitutions"), 0);
+    server.engine.shutdown();
+}
+
+#[test]
+fn buddy_policy_substitutes_and_stays_usable() {
+    let Some((cfg, store)) = setup() else { return };
+    let oracle_engine = engine_with(&cfg, store.clone(), MissPolicy::OnDemand, 1.0);
+    let mut oracle_server = Server::new(oracle_engine);
+    let mut gen = WorkloadGen::new(&cfg, 11);
+    gen.max_new = 5;
+    let reqs = gen.requests(Domain::Mixed, 4, 0);
+    let mut oracle = oracle_server.run_offline(reqs.clone()).unwrap();
+    oracle.sort_by_key(|r| r.id);
+    oracle_server.engine.shutdown();
+
+    let engine = engine_with(&cfg, store, MissPolicy::Buddy, 0.375);
+    let mut server = Server::new(engine);
+    let forced: Vec<InferenceRequest> = reqs
+        .into_iter()
+        .map(|r| {
+            let o = oracle.iter().find(|x| x.id == r.id).unwrap();
+            r.forced(o.predictions.clone())
+        })
+        .collect();
+    let mut served = server.run_offline(forced).unwrap();
+    served.sort_by_key(|r| r.id);
+    let o_refs: Vec<_> = oracle.iter().collect();
+    let s_refs: Vec<_> = served.iter().collect();
+    let acc = forced_agreement(&o_refs, &s_refs);
+    let subs = server.engine.counters.get("substitutions");
+    assert!(subs > 0, "buddy policy must substitute under c=0.375");
+    assert!(
+        acc > 0.5,
+        "substitution must keep the model usable (got {acc})"
+    );
+    server.engine.shutdown();
+}
+
+#[test]
+fn drop_policy_runs_and_degrades_gracefully() {
+    let Some((cfg, store)) = setup() else { return };
+    let engine = engine_with(&cfg, store, MissPolicy::Drop, 0.375);
+    let mut server = Server::new(engine);
+    let mut gen = WorkloadGen::new(&cfg, 12);
+    gen.max_new = 4;
+    let reqs = gen.requests(Domain::Mixed, 3, 0);
+    let responses = server.run_offline(reqs).unwrap();
+    assert_eq!(responses.len(), 3);
+    assert!(server.engine.counters.get("drops") > 0);
+    assert_eq!(server.engine.counters.get("fetches"), 0, "drop never fetches");
+    server.engine.shutdown();
+}
+
+#[test]
+fn teacher_forcing_follows_oracle_tokens() {
+    let Some((cfg, store)) = setup() else { return };
+    let engine = engine_with(&cfg, store, MissPolicy::OnDemand, 1.0);
+    let mut server = Server::new(engine);
+    let forced_tokens: Vec<i32> = vec![5, 6, 7, 8, 9];
+    let req = InferenceRequest::new(0, vec![3, 4, 5], 4).forced(forced_tokens.clone());
+    let responses = server.run_offline(vec![req]).unwrap();
+    // generated = fed tokens = forced stream positions 0..4.
+    assert_eq!(responses[0].tokens, vec![5, 6, 7, 8]);
+    // predictions are the model's own argmaxes - present and full length.
+    assert_eq!(responses[0].predictions.len(), 5);
+    server.engine.shutdown();
+}
+
+#[test]
+fn cache_rate_one_never_fetches() {
+    let Some((cfg, store)) = setup() else { return };
+    let engine = engine_with(&cfg, store, MissPolicy::Buddy, 1.0);
+    let mut server = Server::new(engine);
+    let mut gen = WorkloadGen::new(&cfg, 13);
+    gen.max_new = 4;
+    let reqs = gen.requests(Domain::Mixed, 2, 0);
+    server.run_offline(reqs).unwrap();
+    assert_eq!(server.engine.counters.get("fetches"), 0);
+    assert_eq!(server.engine.counters.get("substitutions"), 0);
+    assert_eq!(server.engine.counters.get("slots_miss"), 0);
+    server.engine.shutdown();
+}

@@ -1,0 +1,172 @@
+//! Integration tests of the substitution machinery over the full
+//! profile -> CFT -> gates -> Algorithm 1 pipeline (no PJRT involved).
+
+use buddymoe::buddy::{BuddyProfile, SlotDecision, SubstitutionEngine, TokenRouting};
+use buddymoe::config::MissPolicy;
+use buddymoe::profilecollect::ProfileCollector;
+use buddymoe::stats::Counters;
+use buddymoe::util::rng::Rng;
+
+const E: usize = 16;
+const FAM: usize = 4;
+
+/// Family-structured profile over 16 experts (families of 4).
+fn family_profile(seed: u64) -> ProfileCollector {
+    let mut pc = ProfileCollector::new(2, E);
+    let mut rng = Rng::new(seed);
+    for _ in 0..5000 {
+        let layer = rng.below(2);
+        let fam = rng.below(E / FAM);
+        let a = fam * FAM + rng.below(FAM);
+        let mut b = fam * FAM + rng.below(FAM);
+        if rng.bool(0.1) {
+            b = rng.below(E); // occasional cross-family noise
+        }
+        if a != b {
+            pc.record(layer, &[a, b], &[0.55, 0.45]).unwrap();
+        }
+    }
+    pc
+}
+
+#[test]
+fn cft_lists_are_family_dominated() {
+    let pc = family_profile(1);
+    let profile = BuddyProfile::build(&pc, &[0.8, 0.8], 8, 1e-3, true).unwrap();
+    let mut same_family_top1 = 0;
+    for pivot in 0..E {
+        let list = profile.list(0, pivot);
+        assert!(!list.is_empty());
+        if list.ranked[0].0 / FAM == pivot / FAM {
+            same_family_top1 += 1;
+        }
+    }
+    assert!(
+        same_family_top1 >= E * 3 / 4,
+        "top-1 buddy should be same-family for most pivots, got {same_family_top1}/{E}"
+    );
+}
+
+#[test]
+fn alpha_monotone_in_list_size() {
+    let pc = family_profile(2);
+    let small = BuddyProfile::build(&pc, &[0.3, 0.3], 16, 1e-3, true).unwrap();
+    let large = BuddyProfile::build(&pc, &[0.95, 0.95], 16, 1e-3, true).unwrap();
+    for pivot in 0..E {
+        assert!(
+            small.list(0, pivot).len() <= large.list(0, pivot).len(),
+            "CFT prefix must grow with alpha"
+        );
+    }
+}
+
+#[test]
+fn substitution_prefers_family_under_full_pipeline() {
+    let pc = family_profile(3);
+    let profile = BuddyProfile::build(&pc, &[0.9, 0.9], 8, 1e-3, true).unwrap();
+    let mut eng = SubstitutionEngine::new(&profile);
+    eng.gates.tau = 0.3;
+    eng.gates.beta = 0.9;
+    // Families 0,1 resident; families 2,3 offloaded.
+    let residency: Vec<bool> = (0..E).map(|e| e / FAM < 2).collect();
+    let mut counters = Counters::new();
+    let mut rng = Rng::new(4);
+    // Tokens that want offloaded experts 8..16 but also one resident.
+    let mut toks: Vec<TokenRouting> = (0..6)
+        .map(|i| TokenRouting {
+            selected: vec![8 + (i % 8), 0, 1],
+            weights: vec![0.4, 0.3, 0.3],
+        })
+        .collect();
+    let (decisions, events) = eng.apply(
+        0,
+        &mut toks,
+        &residency,
+        MissPolicy::Buddy,
+        None,
+        &mut counters,
+        &mut rng,
+    );
+    // Every substituted slot now points at a resident expert.
+    for (tok, dec) in toks.iter().zip(&decisions) {
+        for (slot, d) in dec.iter().enumerate() {
+            if matches!(d, SlotDecision::Substitute { .. }) {
+                assert!(residency[tok.selected[slot]]);
+            }
+        }
+    }
+    // All events stay within the buddy search rank.
+    for ev in &events {
+        assert!(ev.rank <= eng.search_h);
+        assert!(residency[ev.to]);
+        assert!(!residency[ev.from]);
+    }
+}
+
+#[test]
+fn policies_ordering_on_same_workload() {
+    // Random substitutes everything it can, buddy is gated, on-demand never
+    // substitutes: check the ordering of substitution counts.
+    let pc = family_profile(5);
+    let profile = BuddyProfile::build(&pc, &[0.9, 0.9], 8, 1e-3, true).unwrap();
+    let residency: Vec<bool> = (0..E).map(|e| e % 2 == 0).collect();
+
+    let count_subs = |policy: MissPolicy, tau: f64| {
+        let mut eng = SubstitutionEngine::new(&profile);
+        eng.gates.tau = tau;
+        eng.gates.beta = 1.0;
+        eng.rho = None;
+        let mut counters = Counters::new();
+        let mut rng = Rng::new(6);
+        let mut toks: Vec<TokenRouting> = (0..8)
+            .map(|i| TokenRouting {
+                selected: vec![(2 * i + 1) % E, (2 * i) % E],
+                // TAE([0.7, 0.3]) ~= 0.881: above tau=0.3, below tau=0.95.
+                weights: vec![0.7, 0.3],
+            })
+            .collect();
+        eng.apply(0, &mut toks, &residency, policy, None, &mut counters, &mut rng);
+        counters.get("substitutions")
+    };
+
+    let on_demand = count_subs(MissPolicy::OnDemand, 0.3);
+    let buddy = count_subs(MissPolicy::Buddy, 0.3);
+    let buddy_strict = count_subs(MissPolicy::Buddy, 0.95);
+    let random = count_subs(MissPolicy::Random, 0.3);
+    assert_eq!(on_demand, 0);
+    assert_eq!(buddy_strict, 0, "tau=0.95 forbids these tokens (TAE <= tau)");
+    assert!(buddy > 0);
+    assert!(random >= buddy, "random substitutes unconditionally");
+}
+
+#[test]
+fn per_layer_alpha_schedule() {
+    // Early layers broad (large alpha), late layers tight — the paper's
+    // layer-wise heterogeneity calibration.
+    let pc = family_profile(7);
+    let profile = BuddyProfile::build(&pc, &[0.95, 0.4], 16, 1e-3, true).unwrap();
+    let mean = |l: usize| {
+        let s = profile.list_sizes(l);
+        s.iter().sum::<usize>() as f64 / s.len() as f64
+    };
+    assert!(
+        mean(0) > mean(1),
+        "alpha 0.95 layer should have longer lists than alpha 0.4 layer"
+    );
+}
+
+#[test]
+fn serialization_roundtrip_preserves_behaviour() {
+    let pc = family_profile(8);
+    let profile = BuddyProfile::build(&pc, &[0.8, 0.8], 8, 1e-3, true).unwrap();
+    let dir = std::env::temp_dir().join("buddymoe_profile_rt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("p.json");
+    profile.save(&path).unwrap();
+    let back = BuddyProfile::load(&path).unwrap();
+    for l in 0..2 {
+        for p in 0..E {
+            assert_eq!(profile.list(l, p), back.list(l, p));
+        }
+    }
+}
