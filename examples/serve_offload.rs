@@ -41,7 +41,7 @@ fn main() -> Result<()> {
             n_hard: if fast { 3 } else { 6 },
             max_new: if fast { 8 } else { 16 },
             seed: 42,
-            time_scale: 1.0,
+            clock: buddymoe::util::clock::ClockMode::Virtual,
         };
         let oracle = oracle_run(
             &cfg,

@@ -31,7 +31,7 @@ fn main() -> Result<()> {
         n_hard: if fast { 3 } else { 5 },
         max_new: if fast { 8 } else { 12 },
         seed: 99,
-        time_scale: 1.0,
+        clock: buddymoe::util::clock::ClockMode::Virtual,
     };
     let pc = profile_model(&cfg, store.clone(), if fast { 16 } else { 48 }, 7777)?;
     let warm = warm_rank_from_profile(&pc);
@@ -56,7 +56,11 @@ fn main() -> Result<()> {
                 store.clone(),
                 Some(buddies),
                 Some(warm.clone()),
-                EngineOptions { time_scale: 1.0, record_logits: true, ..Default::default() },
+                EngineOptions {
+                    clock: settings.clock,
+                    record_logits: true,
+                    ..Default::default()
+                },
             )?;
             let mut server = Server::new(engine);
             let mut requests = build_requests(&cfg, &settings);
@@ -64,9 +68,10 @@ fn main() -> Result<()> {
                 let o = oracle.iter().find(|r| r.id == req.id).unwrap();
                 req.force_tokens = Some(o.predictions.clone());
             }
-            let t0 = std::time::Instant::now();
+            let clock = server.engine.clock();
+            let t0 = clock.now();
             let mut responses = server.run_offline(requests)?;
-            let wall = t0.elapsed().as_secs_f64();
+            let wall = clock.since(t0).max(1e-12);
             responses.sort_by_key(|r| r.id);
             let o_refs: Vec<_> = oracle.iter().collect();
             let s_refs: Vec<_> = responses.iter().collect();

@@ -50,3 +50,15 @@ pub fn load_model() -> Option<(ModelConfig, Arc<WeightStore>)> {
 pub fn fast_mode() -> bool {
     std::env::args().any(|a| a == "--fast") || std::env::var("BENCH_FAST").is_ok()
 }
+
+/// Benches default to the deterministic virtual clock (a full table sweep
+/// finishes in milliseconds); pass `--real-time` to measure on the wall
+/// clock with real PCIe stalls.
+#[allow(dead_code)]
+pub fn clock_mode() -> buddymoe::util::clock::ClockMode {
+    if std::env::args().any(|a| a == "--real-time") {
+        buddymoe::util::clock::ClockMode::RealTime
+    } else {
+        buddymoe::util::clock::ClockMode::Virtual
+    }
+}

@@ -26,7 +26,7 @@ fn main() {
         n_hard: if fast { 3 } else { 6 },
         max_new: if fast { 8 } else { 16 },
         seed: 42,
-        time_scale: 1.0,
+        clock: bench_support::clock_mode(),
     };
     let pc = profile_model(&cfg, store.clone(), if fast { 16 } else { 64 }, 7777).unwrap();
     let warm = warm_rank_from_profile(&pc);
@@ -47,19 +47,24 @@ fn main() {
             Arc::clone(&store),
             Some(buddies),
             Some(warm.clone()),
-            EngineOptions { time_scale: settings.time_scale, ..Default::default() },
+            EngineOptions { clock: settings.clock, ..Default::default() },
         )
         .unwrap();
         let mut server = Server::new(engine);
-        let t0 = std::time::Instant::now();
+        let clock = server.engine.clock();
+        let t0 = clock.now();
         server.run_offline(build_requests(&cfg, &settings)).unwrap();
-        let wall = t0.elapsed().as_secs_f64();
+        let wall = clock.since(t0);
         let stats = server
             .engine
             .transfer_handle()
             .with_state(|st| st.pcie.stats.clone());
         let mb = |b: u64| b as f64 / (1024.0 * 1024.0);
-        let scaled_bw = stats.total_bytes() as f64 * 1600.0 / wall / 1e9;
+        let scaled_bw = if wall > 0.0 {
+            stats.total_bytes() as f64 * 1600.0 / wall / 1e9
+        } else {
+            0.0
+        };
         println!(
             "| {} | {:.2} | {:.2} | {:.2} | {:.2} | {:.1} |",
             preset,

@@ -11,12 +11,9 @@ use buddymoe::buddy::{BuddyProfile, GateParams, SubstitutionEngine, TokenRouting
 use buddymoe::config::{MissPolicy, ServingConfig};
 use buddymoe::prefetch::host_router_probs;
 use buddymoe::profilecollect::ProfileCollector;
-use buddymoe::runtime::Runtime;
 use buddymoe::stats::Counters;
 use buddymoe::util::math::{tae, top_k};
 use buddymoe::util::rng::Rng;
-use buddymoe::util::tensor::Tensor;
-use buddymoe::weights::ExpertKey;
 
 fn main() {
     let Some((cfg, store)) = bench_support::load_model() else {
@@ -101,9 +98,35 @@ fn main() {
     });
     println!("| host router probs (PreGate, 1 token) | {:.2} us | {:.2} us |", m * 1e6, p * 1e6);
 
-    // One expert FFN through PJRT (T=8) — the compute substitution enables.
+    // One expert FFN through the stage backend (T=8) — the compute
+    // substitution enables. PJRT when compiled in; reference otherwise.
+    expert_ffn_bench(&cfg, &store, iters);
+
+    // PCIe transfer for contrast (simulated link model).
+    let scfg = ServingConfig::default();
+    println!(
+        "| PCIe expert transfer (simulated) | {:.0} us | — |",
+        scfg.transfer_seconds(store.expert_bytes) * 1e6
+    );
+    println!(
+        "\nclaim check: substitution (~us) is negligible vs the ~{:.1} ms transfer it avoids.",
+        scfg.transfer_seconds(store.expert_bytes) * 1e3
+    );
+    let _ = Arc::strong_count(&store);
+}
+
+#[cfg(feature = "pjrt")]
+fn expert_ffn_bench(
+    cfg: &buddymoe::config::ModelConfig,
+    store: &Arc<buddymoe::weights::WeightStore>,
+    iters: usize,
+) {
+    use buddymoe::runtime::Runtime;
+    use buddymoe::util::tensor::Tensor;
+    use buddymoe::weights::ExpertKey;
+
     let rt = Runtime::cpu().unwrap();
-    let mut reg = rt.load_artifacts(&cfg).unwrap();
+    let mut reg = rt.load_artifacts(cfg).unwrap();
     let key = ExpertKey::new(0, 0);
     let ew = store.expert(key).unwrap();
     reg.admit_expert(&rt, key, &ew).unwrap();
@@ -120,16 +143,33 @@ fn main() {
             .unwrap();
     });
     println!("| expert FFN via PJRT (T=8) | {:.2} us | {:.2} us |", m * 1e6, p * 1e6);
+}
 
-    // PCIe transfer for contrast (simulated, real sleep).
-    let scfg = ServingConfig::default();
+#[cfg(not(feature = "pjrt"))]
+fn expert_ffn_bench(
+    cfg: &buddymoe::config::ModelConfig,
+    store: &Arc<buddymoe::weights::WeightStore>,
+    iters: usize,
+) {
+    use buddymoe::runtime::{RefStages, StageRunner};
+    use buddymoe::util::tensor::Tensor;
+    use buddymoe::weights::ExpertKey;
+
+    let mut stages = RefStages::new(cfg.clone(), store.clone());
+    let key = ExpertKey::new(0, 0);
+    let ew = store.expert(key).unwrap();
+    stages.admit_expert(key, &ew).unwrap();
+    let h = Tensor::new(
+        vec![8, cfg.d_model],
+        (0..8 * cfg.d_model).map(|i| ((i % 13) as f32) / 13.0 - 0.5).collect(),
+    )
+    .unwrap();
+    let (m, p) = bench_support::time_it(20, iters.min(500), || {
+        let _ = stages.expert_resident(8, key, &h).unwrap();
+    });
     println!(
-        "| PCIe expert transfer (simulated) | {:.0} us | — |",
-        scfg.transfer_seconds(store.expert_bytes) * 1e6
+        "| expert FFN via reference backend (T=8) | {:.2} us | {:.2} us |",
+        m * 1e6,
+        p * 1e6
     );
-    println!(
-        "\nclaim check: substitution (~us) is negligible vs the ~{:.1} ms transfer it avoids.",
-        scfg.transfer_seconds(store.expert_bytes) * 1e3
-    );
-    let _ = Arc::strong_count(&store);
 }

@@ -8,8 +8,9 @@
 //!   BuddyMoE miss          ~0        minimal loss
 //!
 //! We measure each scenario directly against the PCIe simulator + the
-//! substitution engine: the "latency" column is the measured wall time the
-//! serving thread is stalled for one missing expert.
+//! substitution engine: the "latency" column is the time the serving
+//! thread is stalled for one missing expert, measured on the transfer
+//! engine's clock (virtual by default, wall time with `--real-time`).
 
 mod bench_support;
 
@@ -43,10 +44,16 @@ fn main() {
     }
     let profile = BuddyProfile::build(&pc, &vec![0.9; cfg.n_layers], 16, 1e-3, true).unwrap();
 
+    // Latencies are measured on the transfer engine's clock: virtual by
+    // default (instant, deterministic), real with `--real-time`.
     let spawn = |cap: usize| {
         let cache = ExpertCache::new(cfg.n_layers, cfg.n_experts, cap, EvictPolicy::Lru);
         let pcie = PcieSim::new(scfg.pcie_bandwidth, scfg.pcie_base_latency, scfg.transfer_bytes_scale);
-        TransferEngine::spawn(cache, pcie, store.clone(), 1.0)
+        let clock = buddymoe::util::clock::SimClock::new(bench_support::clock_mode());
+        (
+            TransferEngine::spawn(cache, pcie, store.clone(), clock.clone()),
+            clock,
+        )
     };
 
     println!("# Table 1 — miss-handling latency per missing expert\n");
@@ -55,21 +62,19 @@ fn main() {
 
     // --- Baseline (on demand): synchronous PCIe fetch -------------------
     {
-        let h = spawn(cfg.n_experts);
+        let (h, clock) = spawn(cfg.n_experts);
         let mut lat = Vec::new();
         for i in 0..iters {
             let key = ExpertKey::new(0, i % cfg.n_experts);
-            let t0 = std::time::Instant::now();
+            let t0 = clock.now();
             h.request(key, TransferPriority::Demand);
             h.wait_gpu(key);
-            lat.push(t0.elapsed().as_secs_f64() * 1e3);
-            // evict it again so the next iteration misses
+            lat.push(clock.since(t0) * 1e3);
+            // Demote everything again so the next iteration misses even
+            // when iters wraps past n_experts.
             h.with_state(|st| {
                 for e in 0..cfg.n_experts {
-                    let k = ExpertKey::new(0, e);
-                    if st.cache.is_gpu(k) {
-                        st.cache.abort_load(k);
-                    }
+                    st.cache.demote(ExpertKey::new(0, e));
                 }
             });
             h.drain_arrivals();
@@ -81,7 +86,7 @@ fn main() {
 
     // --- Prefetch hit: expert already resident when needed --------------
     {
-        let h = spawn(cfg.n_experts);
+        let (h, _clock) = spawn(cfg.n_experts);
         let key = ExpertKey::new(0, 3);
         h.request(key, TransferPriority::Prefetch);
         h.wait_gpu(key);
@@ -94,7 +99,7 @@ fn main() {
 
     // --- Prefetch miss: mispredicted; pay a full synchronous fetch ------
     {
-        let h = spawn(cfg.n_experts);
+        let (h, clock) = spawn(cfg.n_experts);
         let mut lat = Vec::new();
         for i in 0..iters {
             // Prefetcher warmed the WRONG expert (transfer already done by
@@ -104,10 +109,16 @@ fn main() {
             let needed = ExpertKey::new(1, (2 * i + 1) % cfg.n_experts);
             h.request(wrong, TransferPriority::Prefetch);
             h.wait_gpu(wrong);
-            let t0 = std::time::Instant::now();
+            let t0 = clock.now();
             h.request(needed, TransferPriority::Demand);
             h.wait_gpu(needed);
-            lat.push(t0.elapsed().as_secs_f64() * 1e3);
+            lat.push(clock.since(t0) * 1e3);
+            h.with_state(|st| {
+                for e in 0..cfg.n_experts {
+                    st.cache.demote(ExpertKey::new(1, e));
+                }
+            });
+            h.drain_arrivals();
         }
         let mean = lat.iter().sum::<f64>() / lat.len() as f64;
         println!("| Prefetch miss | {mean:.2} | lossless |");

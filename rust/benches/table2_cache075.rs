@@ -21,7 +21,7 @@ fn main() {
         n_hard: if fast { 3 } else { 8 },
         max_new: if fast { 8 } else { 16 },
         seed: 42,
-        time_scale: 1.0,
+        clock: bench_support::clock_mode(),
     };
     let (_rows, md) = run_table(&cfg, store, &settings, &table_methods()).expect("table 2");
     println!("# Table 2 — {md}");

@@ -18,7 +18,7 @@ fn main() {
         n_hard: if fast { 3 } else { 8 },
         max_new: if fast { 8 } else { 16 },
         seed: 42,
-        time_scale: 1.0,
+        clock: bench_support::clock_mode(),
     };
     // Table 3 adds the strict (tau=0.99, |B|=2) row.
     let methods = vec![

@@ -18,7 +18,7 @@ fn main() {
         n_hard: if fast { 3 } else { 8 },
         max_new: if fast { 8 } else { 16 },
         seed: 42,
-        time_scale: 1.0,
+        clock: bench_support::clock_mode(),
     };
     let (rows, md) = run_table(&cfg, store, &settings, &table_methods()).expect("table 4");
     println!("# Table 4 — {md}");

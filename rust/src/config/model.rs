@@ -132,6 +132,35 @@ impl ModelConfig {
         self.root.join(&self.golden_file)
     }
 
+    /// A hand-built config sized for full-pipeline integration tests on
+    /// the reference backend (no artifacts): big enough for continuous
+    /// batching at the default `max_batch` and the standard workload
+    /// generator's prompt lengths, small enough that a whole table sweep
+    /// under the virtual clock takes well under a second.
+    pub fn synthetic_small() -> Self {
+        Self {
+            name: "synthetic-small".into(),
+            vocab_size: 64,
+            d_model: 16,
+            n_heads: 2,
+            head_dim: 8,
+            n_layers: 3,
+            n_experts: 8,
+            top_k: 2,
+            d_ff: 32,
+            max_seq: 48,
+            rms_eps: 1e-5,
+            token_buckets: vec![1, 2, 4, 8, 16, 32, 48],
+            batch_buckets: vec![1, 2, 4, 8, 16],
+            artifacts: BTreeMap::new(),
+            weights_file: "weights.bmw".into(),
+            hlo_dir: "hlo".into(),
+            golden_file: "golden/decode.json".into(),
+            family_size: 4,
+            root: PathBuf::from("/nonexistent"),
+        }
+    }
+
     /// A tiny hand-built config for unit tests that never touch artifacts.
     pub fn test_tiny() -> Self {
         Self {

@@ -122,6 +122,16 @@ pub struct ServingConfig {
     pub max_batch: usize,
     pub batch_timeout_us: u64,
     pub seed: u64,
+
+    // --- virtual-clock compute model ---
+    /// Simulated seconds of non-expert compute (attention + router) per
+    /// layer per step. Only consumed by the virtual clock; under a
+    /// real-time clock compute takes the real time it takes.
+    pub sim_attn_s: f64,
+    /// Simulated seconds per expert-FFN invocation (paper §2.2: expert
+    /// compute ~1 ms vs ~10 ms PCIe fetch — that 10:1 ratio is the whole
+    /// scheduling game).
+    pub sim_expert_s: f64,
 }
 
 impl Default for ServingConfig {
@@ -151,6 +161,8 @@ impl Default for ServingConfig {
             max_batch: 8,
             batch_timeout_us: 2_000,
             seed: 0x00ddf00d,
+            sim_attn_s: 0.3e-3,
+            sim_expert_s: 1.0e-3,
         }
     }
 }
@@ -184,6 +196,11 @@ impl ServingConfig {
         }
         if self.pcie_bandwidth <= 0.0 {
             bail!("pcie_bandwidth must be positive");
+        }
+        if !(self.sim_attn_s.is_finite() && self.sim_attn_s >= 0.0)
+            || !(self.sim_expert_s.is_finite() && self.sim_expert_s >= 0.0)
+        {
+            bail!("sim_attn_s / sim_expert_s must be finite and non-negative");
         }
         Ok(())
     }

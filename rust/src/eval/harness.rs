@@ -15,6 +15,7 @@ use crate::memory::PcieStats;
 use crate::model::{Engine, EngineOptions};
 use crate::profilecollect::ProfileCollector;
 use crate::server::{InferenceRequest, InferenceResponse, Server};
+use crate::util::clock::ClockMode;
 use crate::weights::WeightStore;
 
 /// Workload shape shared by every method in one table.
@@ -25,8 +26,11 @@ pub struct TableSettings {
     pub n_hard: usize,
     pub max_new: usize,
     pub seed: u64,
-    /// PCIe sleep scaling (1.0 = real stalls; 0.0 = instant, tests only).
-    pub time_scale: f64,
+    /// Time source for the served methods. `Virtual` (default) runs the
+    /// whole sweep on the simulated timeline — milliseconds of wall time,
+    /// byte-identical reports per seed; `RealTime` measures genuine
+    /// elapsed time (PCIe stalls really sleep).
+    pub clock: ClockMode,
 }
 
 impl Default for TableSettings {
@@ -37,7 +41,7 @@ impl Default for TableSettings {
             n_hard: 8,
             max_new: 16,
             seed: 42,
-            time_scale: 1.0,
+            clock: ClockMode::Virtual,
         }
     }
 }
@@ -56,8 +60,10 @@ impl MethodSpec {
     }
 }
 
-/// Everything measured for one method.
-#[derive(Debug, Clone)]
+/// Everything measured for one method. `wall_s`/`tok_s` are measured on
+/// the run's clock: virtual seconds under `ClockMode::Virtual` (and then
+/// exactly reproducible per seed), real seconds under `RealTime`.
+#[derive(Debug, Clone, PartialEq)]
 pub struct EvalOutcome {
     pub label: String,
     pub acc_easy: f64,
@@ -107,7 +113,7 @@ pub fn profile_model(
         ..Default::default()
     };
     let opts = EngineOptions {
-        time_scale: 0.0,
+        clock: ClockMode::Virtual,
         collect_profile: true,
         ..Default::default()
     };
@@ -151,7 +157,7 @@ pub fn oracle_run(
         ..Default::default()
     };
     let opts = EngineOptions {
-        time_scale: 0.0,
+        clock: ClockMode::Virtual,
         record_logits: true,
         ..Default::default()
     };
@@ -191,7 +197,7 @@ pub fn run_method(
     let profile = BuddyProfile::build(collector, &alphas, scfg.k_max, 1e-3, true)?;
 
     let opts = EngineOptions {
-        time_scale: settings.time_scale,
+        clock: settings.clock,
         record_logits: true,
         ..Default::default()
     };
@@ -215,9 +221,10 @@ pub fn run_method(
             .context("oracle response missing for request")?;
         req.force_tokens = Some(o.predictions.clone());
     }
-    let t0 = std::time::Instant::now();
+    let clock = server.engine.clock();
+    let t0 = clock.now();
     let responses = server.run_offline(requests)?;
-    let wall_s = t0.elapsed().as_secs_f64();
+    let wall_s = clock.since(t0);
 
     let (o_easy, o_hard) = by_domain(oracle);
     let (s_easy, s_hard) = by_domain(&responses);
@@ -236,7 +243,11 @@ pub fn run_method(
         avg: 0.5 * (acc_easy + acc_hard),
         kl_easy,
         kl_hard,
-        tok_s: server.metrics.tokens_out as f64 / wall_s,
+        tok_s: if wall_s > 0.0 {
+            server.metrics.tokens_out as f64 / wall_s
+        } else {
+            0.0
+        },
         substitutions: server.engine.counters.get("substitutions"),
         fetches: server.engine.counters.get("fetches"),
         pcie,

@@ -16,9 +16,33 @@
 //!   attention (`python/compile/kernels/`), validated against pure-jnp
 //!   oracles.
 //!
-//! Python never runs at serving time: the rust binary loads
-//! `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate) and owns the
-//! entire request path.
+//! Python never runs at serving time: the rust binary owns the entire
+//! request path, executing stages through one of two backends
+//! ([`runtime::StageRunner`]): the PJRT executor for `artifacts/*.hlo.txt`
+//! (`xla` crate, behind the `pjrt` cargo feature) or a pure-Rust reference
+//! interpreter of the same stage math that needs no artifacts at all —
+//! the default build, and what the integration tests run end-to-end
+//! against synthetic weights.
+//!
+//! ## Clock modes
+//!
+//! Every time consumer — PCIe transfers, compute-time accounting, batcher
+//! deadlines, metrics, request timestamps, the table harness — reads one
+//! [`util::clock::SimClock`], in one of two modes
+//! ([`util::clock::ClockMode`]):
+//!
+//! * **`Virtual`** (default): discrete-event simulated time. Transfers
+//!   and modeled compute advance a virtual timeline instead of sleeping;
+//!   a full Tables 2–4 sweep finishes in milliseconds of wall time, and
+//!   the same seed yields byte-identical reports (golden-tested). The
+//!   compute model is `ServingConfig::sim_attn_s` per layer per step plus
+//!   `ServingConfig::sim_expert_s` per expert invocation, against the
+//!   PCIe link model's transfer durations — the paper's ~1 ms compute vs
+//!   ~10 ms fetch race.
+//! * **`RealTime`**: wall-clock execution — the transfer engine really
+//!   sleeps for each simulated transfer and all measurements are genuine
+//!   elapsed time (`EngineOptions::clock = ClockMode::RealTime`, or
+//!   `--real-time` on the CLI).
 
 pub mod buddy;
 pub mod config;

@@ -22,6 +22,7 @@ use buddymoe::model::{Engine, EngineOptions};
 use buddymoe::profilecollect::{expert_similarity_matrix, ProfileCollector};
 use buddymoe::server::Server;
 use buddymoe::util::argparse::ArgSpec;
+use buddymoe::util::clock::ClockMode;
 use buddymoe::util::json::Json;
 use buddymoe::util::logging;
 use buddymoe::weights::WeightStore;
@@ -107,7 +108,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .opt("max-batch", "8", "continuous-batching width")
         .opt("seed", "42", "workload seed")
         .opt("profile-prompts", "64", "profiling corpus size")
-        .flag("no-stalls", "disable real PCIe sleeps (debug)");
+        .flag("real-time", "run on the wall clock (PCIe stalls really sleep); default is deterministic virtual time");
     let a = spec.parse(rest)?;
     let (cfg, store) = load_model(a.get("artifacts"))?;
 
@@ -122,8 +123,13 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     let alphas = vec![scfg.cft_alpha; cfg.n_layers];
     let profile = BuddyProfile::build(&pc, &alphas, scfg.k_max, 1e-3, true)?;
 
+    let clock_mode = if a.flag("real-time") {
+        ClockMode::RealTime
+    } else {
+        ClockMode::Virtual
+    };
     let opts = EngineOptions {
-        time_scale: if a.flag("no-stalls") { 0.0 } else { 1.0 },
+        clock: clock_mode,
         // §Perf A/B switch: literal path vs device-resident weight buffers.
         weight_buffers: std::env::var("BUDDYMOE_NO_WEIGHT_BUFFERS").is_err(),
         ..Default::default()
@@ -136,7 +142,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         n_hard: a.get_usize("requests")? - a.get_usize("requests")? / 2,
         max_new: a.get_usize("max-new")?,
         seed: a.get_u64("seed")?,
-        time_scale: 1.0,
+        clock: clock_mode,
     };
     let reqs = eval::build_requests(&cfg, &settings);
     log::info!("serving {} requests...", reqs.len());
@@ -174,7 +180,8 @@ fn cmd_table(rest: &[String]) -> Result<()> {
         .opt("n-hard", "8", "hard prompts")
         .opt("max-new", "16", "tokens per request")
         .opt("seed", "42", "workload seed")
-        .opt("out", "", "also write markdown to this path");
+        .opt("out", "", "also write markdown to this path")
+        .flag("real-time", "measure wall-clock throughput instead of deterministic virtual time");
     let a = spec.parse(rest)?;
     let (cfg, store) = load_model(a.get("artifacts"))?;
     let settings = TableSettings {
@@ -183,7 +190,7 @@ fn cmd_table(rest: &[String]) -> Result<()> {
         n_hard: a.get_usize("n-hard")?,
         max_new: a.get_usize("max-new")?,
         seed: a.get_u64("seed")?,
-        time_scale: 1.0,
+        clock: if a.flag("real-time") { ClockMode::RealTime } else { ClockMode::Virtual },
     };
     let (_rows, md) = run_table(&cfg, store, &settings, &table_methods())?;
     println!("{md}");

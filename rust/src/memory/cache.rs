@@ -190,6 +190,20 @@ impl ExpertCache {
         }
     }
 
+    /// Forcibly demote a GPU-resident, unpinned expert back to Cpu
+    /// (benchmark/test harnesses re-creating miss pressure; not used on
+    /// the serving path, which evicts via `request_load`). Returns whether
+    /// the expert was demoted.
+    pub fn demote(&mut self, k: ExpertKey) -> bool {
+        let i = self.idx(k);
+        if self.slots[i].state == SlotState::Gpu && self.slots[i].pins == 0 {
+            self.slots[i].state = SlotState::Cpu;
+            true
+        } else {
+            false
+        }
+    }
+
     /// Directly admit an expert (initial cache warm-up).
     pub fn admit(&mut self, k: ExpertKey) -> Result<()> {
         if self.gpu_count(k.layer) >= self.capacity_per_layer {
@@ -325,6 +339,21 @@ mod tests {
         c.request_load(k(0, 0));
         c.abort_load(k(0, 0));
         assert_eq!(c.state(k(0, 0)), SlotState::Cpu);
+    }
+
+    #[test]
+    fn demote_only_touches_unpinned_gpu_slots() {
+        let mut c = cache(3);
+        c.admit(k(0, 0)).unwrap();
+        c.admit(k(0, 1)).unwrap();
+        c.pin(k(0, 1));
+        assert!(c.demote(k(0, 0)));
+        assert_eq!(c.state(k(0, 0)), SlotState::Cpu);
+        assert!(!c.demote(k(0, 1)), "pinned expert must not demote");
+        assert!(c.is_gpu(k(0, 1)));
+        assert!(!c.demote(k(0, 2)), "Cpu slot demote is a no-op");
+        c.request_load(k(0, 2));
+        assert!(!c.demote(k(0, 2)), "Loading slot demote is a no-op");
     }
 
     #[test]

@@ -6,9 +6,13 @@
 //! a serialized link with `base_latency + bytes/bandwidth` per transfer,
 //! with per-direction byte counters for the Fig 8 bandwidth analysis.
 //!
-//! Durations are *simulated* but enforced in *real wall-clock time* by the
-//! transfer engine (it sleeps), so end-to-end throughput measurements
-//! compare methods on real elapsed time.
+//! Durations are *simulated*; how they are enforced depends on the
+//! [`crate::util::clock::SimClock`] mode the transfer engine runs on.
+//! Under a virtual clock (the default) each transfer advances the shared
+//! virtual timeline — deterministic and instant in wall time — while under
+//! a real-time clock the engine thread sleeps for the duration, so
+//! measurements are genuine elapsed time. Either way the serialization and
+//! priority semantics are identical.
 
 use std::time::Duration;
 

@@ -1,14 +1,19 @@
-//! The inference engine: orchestrates the AOT stages per layer, routes
-//! tokens, applies the miss policy (buddy substitution / on-demand /
-//! random / drop), schedules expert execution against the cache, and
-//! drives the prefetcher — the complete Figure 3 + Algorithm 1 pipeline.
+//! The inference engine: orchestrates the stages per layer, routes tokens,
+//! applies the miss policy (buddy substitution / on-demand / random /
+//! drop), schedules expert execution against the cache, and drives the
+//! prefetcher — the complete Figure 3 + Algorithm 1 pipeline.
 //!
-//! All PJRT interaction happens on the thread that owns the `Engine`; the
-//! transfer engine thread only touches host-side state.
+//! Stage execution is delegated to a [`StageRunner`] backend (PJRT
+//! artifacts or the pure-Rust reference interpreter); all timing flows
+//! through the engine's [`SimClock`]. Under a virtual clock the engine
+//! *models* compute time (`ServingConfig::sim_attn_s` per layer,
+//! `sim_expert_s` per expert invocation) and transfer stalls advance the
+//! clock, so throughput/latency numbers are deterministic simulated
+//! measurements; under a real-time clock they are genuine elapsed time.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -19,38 +24,44 @@ use crate::model::route::routings_from_probs;
 use crate::model::seq::Sequence;
 use crate::prefetch::{OracleNoisy, PreGate, PredictContext, Predictor, PrefetchEngine, TopFreq};
 use crate::profilecollect::ProfileCollector;
-use crate::runtime::{lit_i32, lit_tensor, ArtifactRegistry, Runtime};
+use crate::runtime::{BackendKind, RefStages, StageRunner};
 use crate::stats::Counters;
+use crate::util::clock::{ClockMode, SimClock};
 use crate::util::math::argmax;
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
-use crate::weights::{ExpertKey, WeightStore};
+use crate::weights::{ExpertKey, ExpertWeights, WeightStore};
 
 /// Engine construction options orthogonal to the serving config.
 #[derive(Debug, Clone)]
 pub struct EngineOptions {
-    /// Scales simulated PCIe sleeps (1.0 = real; 0.0 = instant, tests).
-    pub time_scale: f64,
+    /// Time source for the whole stack: `Virtual` (default) simulates the
+    /// timeline deterministically with no sleeping; `RealTime` measures
+    /// and enforces wall-clock time (PCIe stalls really sleep).
+    pub clock: ClockMode,
     /// Record pre-substitution routing into a ProfileCollector.
     pub collect_profile: bool,
     /// Keep per-step logits on each sequence (accuracy evaluation).
     pub record_logits: bool,
     pub evict_policy: EvictPolicy,
-    /// Keep non-expert weights (embedding, attention, router) as device
-    /// buffers and run stages via the buffer path, instead of shipping
-    /// weight literals host->device on every call. §Perf optimization; the
-    /// literal path is retained for before/after measurement.
+    /// PJRT backend only: keep non-expert weights as device buffers and run
+    /// stages via the buffer path instead of shipping weight literals
+    /// host->device on every call (§Perf; the literal path is retained for
+    /// before/after measurement).
     pub weight_buffers: bool,
+    /// Stage backend selection (PJRT artifacts vs reference interpreter).
+    pub backend: BackendKind,
 }
 
 impl Default for EngineOptions {
     fn default() -> Self {
         Self {
-            time_scale: 1.0,
+            clock: ClockMode::Virtual,
             collect_profile: false,
             record_logits: false,
             evict_policy: EvictPolicy::Lru,
             weight_buffers: true,
+            backend: BackendKind::Auto,
         }
     }
 }
@@ -58,7 +69,7 @@ impl Default for EngineOptions {
 /// Per-step telemetry (aggregated into server metrics).
 #[derive(Debug, Clone, Default)]
 pub struct StepTelemetry {
-    /// Wall seconds spent stalled on demand transfers this step.
+    /// Seconds (virtual or real) spent stalled on demand transfers this step.
     pub stall_seconds: f64,
     pub substitutions: u64,
     pub fetches: u64,
@@ -66,57 +77,26 @@ pub struct StepTelemetry {
     pub transient_fetches: u64,
 }
 
-struct LayerLits {
-    ln1: xla::Literal,
-    wq: xla::Literal,
-    wk: xla::Literal,
-    wv: xla::Literal,
-    wo: xla::Literal,
-    ln2: xla::Literal,
-    wg: xla::Literal,
-    rbias: xla::Literal,
-}
-
-/// Device-resident copies of per-layer non-expert weights (§Perf: created
-/// once, reused every call — saves one host->device weight copy per stage
-/// invocation on the hot path).
-struct LayerBufs {
-    ln1: xla::PjRtBuffer,
-    wq: xla::PjRtBuffer,
-    wk: xla::PjRtBuffer,
-    wv: xla::PjRtBuffer,
-    wo: xla::PjRtBuffer,
-    ln2: xla::PjRtBuffer,
-    wg: xla::PjRtBuffer,
-    rbias: xla::PjRtBuffer,
-}
-
 pub struct Engine {
     pub cfg: ModelConfig,
     pub scfg: ServingConfig,
     pub opts: EngineOptions,
-    rt: Runtime,
-    reg: ArtifactRegistry,
+    stages: Box<dyn StageRunner>,
     store: Arc<WeightStore>,
     transfer: TransferHandle,
+    clock: SimClock,
     buddy_profile: Option<BuddyProfile>,
     predictor: Option<Box<dyn Predictor>>,
     prefetcher: PrefetchEngine,
     pub counters: Counters,
     pub profile_out: Option<ProfileCollector>,
     rng: Rng,
-    lit_embed: xla::Literal,
-    lit_final_gain: xla::Literal,
-    layer_lits: Vec<LayerLits>,
-    buf_embed: Option<xla::PjRtBuffer>,
-    buf_final_gain: Option<xla::PjRtBuffer>,
-    layer_bufs: Vec<LayerBufs>,
     next_seq_id: u64,
 }
 
 impl Engine {
-    /// Build the engine: compile artifacts, warm the cache with the most
-    /// popular experts per layer, start the transfer engine.
+    /// Build the engine: construct the stage backend, warm the cache with
+    /// the most popular experts per layer, start the transfer engine.
     ///
     /// `warm_rank` ranks experts per layer for cache warm-up + the TopFreq
     /// predictor (pass profiled activation ranks; falls back to router-bias
@@ -130,8 +110,9 @@ impl Engine {
         opts: EngineOptions,
     ) -> Result<Self> {
         scfg.validate()?;
-        let rt = Runtime::cpu()?;
-        let mut reg = rt.load_artifacts(&cfg)?;
+        let clock = SimClock::new(opts.clock);
+        let mut stages = Self::build_stages(&cfg, &store, &opts)?;
+        log::info!("engine backend: {}, clock: {}", stages.name(), opts.clock.name());
 
         let capacity = scfg.gpu_experts_per_layer(cfg.n_experts).max(1);
         let mut cache = ExpertCache::new(cfg.n_layers, cfg.n_experts, capacity, opts.evict_policy);
@@ -142,7 +123,7 @@ impl Engine {
                 let key = ExpertKey::new(l, e);
                 cache.admit(key).context("cache warm-up")?;
                 let w = store.expert(key)?;
-                reg.admit_expert(&rt, key, &w)?;
+                stages.admit_expert(key, &w)?;
             }
         }
         log::info!(
@@ -153,7 +134,7 @@ impl Engine {
         );
 
         let pcie = PcieSim::new(scfg.pcie_bandwidth, scfg.pcie_base_latency, scfg.transfer_bytes_scale);
-        let transfer = TransferEngine::spawn(cache, pcie, store.clone(), opts.time_scale);
+        let transfer = TransferEngine::spawn(cache, pcie, store.clone(), clock.clone());
 
         let predictor: Option<Box<dyn Predictor>> = match scfg.prefetch {
             PrefetchKind::None => None,
@@ -170,56 +151,6 @@ impl Engine {
         };
         let prefetcher = PrefetchEngine::new(transfer.clone(), cfg.n_layers, scfg.prefetch_width);
 
-        // Cache non-expert weights as literals once.
-        let lit_embed = lit_tensor(store.tensor("embed")?)?;
-        let lit_final_gain = lit_tensor(store.tensor("final_gain")?)?;
-        let mut layer_lits = Vec::with_capacity(cfg.n_layers);
-        for l in 0..cfg.n_layers {
-            let g = |n: &str| -> Result<xla::Literal> {
-                lit_tensor(store.tensor(&format!("L{l}.{n}"))?)
-            };
-            layer_lits.push(LayerLits {
-                ln1: g("ln1")?,
-                wq: g("wq")?,
-                wk: g("wk")?,
-                wv: g("wv")?,
-                wo: g("wo")?,
-                ln2: g("ln2")?,
-                wg: g("wg")?,
-                rbias: g("rbias")?,
-            });
-        }
-
-        // §Perf: device-resident non-expert weights for the buffer path.
-        let (buf_embed, buf_final_gain, layer_bufs) = if opts.weight_buffers {
-            let te = store.tensor("embed")?;
-            let tg = store.tensor("final_gain")?;
-            let mut bufs = Vec::with_capacity(cfg.n_layers);
-            for l in 0..cfg.n_layers {
-                let g = |n: &str| -> Result<xla::PjRtBuffer> {
-                    let t = store.tensor(&format!("L{l}.{n}"))?;
-                    rt.to_device(&t.data, &t.dims)
-                };
-                bufs.push(LayerBufs {
-                    ln1: g("ln1")?,
-                    wq: g("wq")?,
-                    wk: g("wk")?,
-                    wv: g("wv")?,
-                    wo: g("wo")?,
-                    ln2: g("ln2")?,
-                    wg: g("wg")?,
-                    rbias: g("rbias")?,
-                });
-            }
-            (
-                Some(rt.to_device(&te.data, &te.dims)?),
-                Some(rt.to_device(&tg.data, &tg.dims)?),
-                bufs,
-            )
-        } else {
-            (None, None, Vec::new())
-        };
-
         let profile_out = opts
             .collect_profile
             .then(|| ProfileCollector::new(cfg.n_layers, cfg.n_experts));
@@ -229,23 +160,60 @@ impl Engine {
             cfg,
             scfg,
             opts,
-            rt,
-            reg,
+            stages,
             store,
             transfer,
+            clock,
             buddy_profile,
             predictor,
             prefetcher,
             counters: Counters::new(),
             profile_out,
-            lit_embed,
-            lit_final_gain,
-            layer_lits,
-            buf_embed,
-            buf_final_gain,
-            layer_bufs,
             next_seq_id: 0,
         })
+    }
+
+    /// Select and construct the stage backend.
+    fn build_stages(
+        cfg: &ModelConfig,
+        store: &Arc<WeightStore>,
+        opts: &EngineOptions,
+    ) -> Result<Box<dyn StageRunner>> {
+        match opts.backend {
+            BackendKind::Reference => {
+                Ok(Box::new(RefStages::new(cfg.clone(), store.clone())))
+            }
+            BackendKind::Pjrt => Self::build_pjrt(cfg, store, opts),
+            BackendKind::Auto => {
+                if cfg!(feature = "pjrt") && !cfg.artifacts.is_empty() {
+                    Self::build_pjrt(cfg, store, opts)
+                } else {
+                    Ok(Box::new(RefStages::new(cfg.clone(), store.clone())))
+                }
+            }
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn build_pjrt(
+        cfg: &ModelConfig,
+        store: &Arc<WeightStore>,
+        opts: &EngineOptions,
+    ) -> Result<Box<dyn StageRunner>> {
+        Ok(Box::new(crate::runtime::PjrtStages::new(
+            cfg,
+            store,
+            opts.weight_buffers,
+        )?))
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn build_pjrt(
+        _cfg: &ModelConfig,
+        _store: &Arc<WeightStore>,
+        _opts: &EngineOptions,
+    ) -> Result<Box<dyn StageRunner>> {
+        anyhow::bail!("PJRT backend requested but the 'pjrt' cargo feature is not enabled")
     }
 
     /// Rank experts per layer by router bias (popularity prior).
@@ -269,6 +237,17 @@ impl Engine {
         &self.transfer
     }
 
+    /// The engine's time source (shared with the transfer engine, batcher,
+    /// and metrics).
+    pub fn clock(&self) -> SimClock {
+        self.clock.clone()
+    }
+
+    /// Which stage backend is executing ("pjrt" or "reference").
+    pub fn backend_name(&self) -> &'static str {
+        self.stages.name()
+    }
+
     pub fn prefetch_counters(&self) -> &Counters {
         &self.prefetcher.counters
     }
@@ -277,98 +256,11 @@ impl Engine {
         self.transfer.shutdown();
     }
 
-    // ------------------------------------------------------------------
-    // Stage wrappers: buffer path (weights device-resident) vs literal path
-    // ------------------------------------------------------------------
-
-    fn run_embed(&self, tb: usize, toks: &[i32]) -> Result<Tensor> {
-        let name = format!("embed_T{tb}");
-        if let Some(be) = &self.buf_embed {
-            let bt = self.rt.to_device_i32(toks, &[toks.len()])?;
-            self.reg.run_buffers(&name, &[&bt, be])?.single()
-        } else {
-            let lt = lit_i32(toks);
-            self.reg.run_lits(&name, &[&lt, &self.lit_embed])?.single()
-        }
-    }
-
-    fn run_attn_prefill(&self, l: usize, x: &Tensor, mask: &Tensor) -> Result<Vec<Tensor>> {
-        if !self.layer_bufs.is_empty() {
-            let lb = &self.layer_bufs[l];
-            let bx = self.rt.to_device(&x.data, &x.dims)?;
-            let bm = self.rt.to_device(&mask.data, &mask.dims)?;
-            Ok(self
-                .reg
-                .run_buffers(
-                    "attn_prefill",
-                    &[&bx, &bm, &lb.ln1, &lb.wq, &lb.wk, &lb.wv, &lb.wo],
-                )?
-                .outputs)
-        } else {
-            let ll = &self.layer_lits[l];
-            let lx = lit_tensor(x)?;
-            let lm = lit_tensor(mask)?;
-            Ok(self
-                .reg
-                .run_lits(
-                    "attn_prefill",
-                    &[&lx, &lm, &ll.ln1, &ll.wq, &ll.wk, &ll.wv, &ll.wo],
-                )?
-                .outputs)
-        }
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    fn run_attn_decode(
-        &self,
-        l: usize,
-        bb: usize,
-        x: &Tensor,
-        kc: &Tensor,
-        vc: &Tensor,
-        pos_mask: &Tensor,
-    ) -> Result<Vec<Tensor>> {
-        let name = format!("attn_decode_B{bb}");
-        if !self.layer_bufs.is_empty() {
-            let lb = &self.layer_bufs[l];
-            let bx = self.rt.to_device(&x.data, &x.dims)?;
-            let bk = self.rt.to_device(&kc.data, &kc.dims)?;
-            let bv = self.rt.to_device(&vc.data, &vc.dims)?;
-            let bm = self.rt.to_device(&pos_mask.data, &pos_mask.dims)?;
-            Ok(self
-                .reg
-                .run_buffers(
-                    &name,
-                    &[&bx, &bk, &bv, &bm, &lb.ln1, &lb.wq, &lb.wk, &lb.wv, &lb.wo],
-                )?
-                .outputs)
-        } else {
-            let ll = &self.layer_lits[l];
-            let lx = lit_tensor(x)?;
-            let lk = lit_tensor(kc)?;
-            let lv = lit_tensor(vc)?;
-            let lm = lit_tensor(pos_mask)?;
-            Ok(self
-                .reg
-                .run_lits(
-                    &name,
-                    &[&lx, &lk, &lv, &lm, &ll.ln1, &ll.wq, &ll.wk, &ll.wv, &ll.wo],
-                )?
-                .outputs)
-        }
-    }
-
-    fn run_lm_head(&self, tb: usize, x: &Tensor) -> Result<Tensor> {
-        let name = format!("lm_head_T{tb}");
-        if let (Some(bg), Some(be)) = (&self.buf_final_gain, &self.buf_embed) {
-            let bx = self.rt.to_device(&x.data, &x.dims)?;
-            self.reg.run_buffers(&name, &[&bx, bg, be])?.single()
-        } else {
-            let lx = lit_tensor(x)?;
-            self.reg
-                .run_lits(&name, &[&lx, &self.lit_final_gain, &self.lit_embed])?
-                .single()
-        }
+    /// Model one layer's non-expert compute cost on the virtual timeline
+    /// (no-op under a real-time clock: real compute takes real time).
+    fn advance_layer_compute(&self) {
+        self.clock
+            .advance(Duration::from_secs_f64(self.scfg.sim_attn_s));
     }
 
     // ------------------------------------------------------------------
@@ -385,17 +277,15 @@ impl Engine {
         // Embed the padded prompt.
         let mut toks = vec![0i32; s];
         toks[..s0].copy_from_slice(&seq.prompt);
-        let mut x = self.run_embed(s, &toks)?;
+        let mut x = self.stages.embed(s, &toks)?;
 
         let mut len_mask = vec![0.0f32; s];
         len_mask[..s0].fill(1.0);
         let mask_t = Tensor::new(vec![s], len_mask)?;
 
         for l in 0..self.cfg.n_layers {
-            let out = self.run_attn_prefill(l, &x, &mask_t)?;
-            let [y, k, v]: [Tensor; 3] = out
-                .try_into()
-                .map_err(|_| anyhow::anyhow!("attn_prefill output arity"))?;
+            let [y, k, v] = self.stages.attn_prefill(l, &x, &mask_t)?;
+            self.advance_layer_compute();
             for p in 0..s0 {
                 seq.kv_k[l].row_mut(p).copy_from_slice(k.row(p));
                 seq.kv_v[l].row_mut(p).copy_from_slice(v.row(p));
@@ -414,7 +304,7 @@ impl Engine {
         }
         // LM head on the last real position.
         let last = Tensor::new(vec![1, self.cfg.d_model], x.row(s0 - 1).to_vec())?;
-        let logits = self.run_lm_head(1, &last)?;
+        let logits = self.stages.lm_head(1, &last)?;
         let pred = argmax(logits.row(0)) as i32;
         seq.predictions.push(pred);
         if self.opts.record_logits {
@@ -448,7 +338,7 @@ impl Engine {
         for (i, sq) in seqs.iter().enumerate() {
             toks[i] = sq.next_token;
         }
-        let emb = self.run_embed(tb, &toks)?;
+        let emb = self.stages.embed(tb, &toks)?;
         // x: [bb, d]
         let mut x = Tensor::zeros(vec![bb, d]);
         for i in 0..b {
@@ -471,10 +361,8 @@ impl Engine {
             }
             let kc = Tensor::new(vec![bb, s, d], kc)?;
             let vc = Tensor::new(vec![bb, s, d], vc)?;
-            let out = self.run_attn_decode(l, bb, &x, &kc, &vc, &pos_mask)?;
-            let [y, k_new, v_new]: [Tensor; 3] = out
-                .try_into()
-                .map_err(|_| anyhow::anyhow!("attn_decode output arity"))?;
+            let [y, k_new, v_new] = self.stages.attn_decode(l, bb, &x, &kc, &vc, &pos_mask)?;
+            self.advance_layer_compute();
             for (i, sq) in seqs.iter_mut().enumerate() {
                 sq.write_kv(l, k_new.row(i), v_new.row(i));
             }
@@ -496,7 +384,7 @@ impl Engine {
         for i in 0..b {
             xb.row_mut(i).copy_from_slice(x.row(i));
         }
-        let logits = self.run_lm_head(tb, &xb)?;
+        let logits = self.stages.lm_head(tb, &xb)?;
         for (i, sq) in seqs.iter_mut().enumerate() {
             let row = logits.row(i);
             if self.opts.record_logits {
@@ -520,22 +408,7 @@ impl Engine {
 
     /// Router stage on `y` ([T, d]); routes the first `n_real` rows.
     fn run_router(&mut self, l: usize, y: &Tensor, n_real: usize) -> Result<(Tensor, Vec<TokenRouting>)> {
-        let t = y.dims[0];
-        let name = format!("router_T{t}");
-        let out = if !self.layer_bufs.is_empty() {
-            let lb = &self.layer_bufs[l];
-            let by = self.rt.to_device(&y.data, &y.dims)?;
-            self.reg
-                .run_buffers(&name, &[&by, &lb.ln2, &lb.wg, &lb.rbias])?
-        } else {
-            let ll = &self.layer_lits[l];
-            let ly = lit_tensor(y)?;
-            self.reg
-                .run_lits(&name, &[&ly, &ll.ln2, &ll.wg, &ll.rbias])?
-        };
-        let mut it = out.outputs.into_iter();
-        let h = it.next().context("router h")?;
-        let probs = it.next().context("router probs")?;
+        let (h, probs) = self.stages.router(l, y)?;
         let routings = routings_from_probs(&probs, n_real, self.cfg.top_k);
         if let Some(pc) = self.profile_out.as_mut() {
             for r in &routings {
@@ -674,32 +547,21 @@ impl Engine {
         }
         tel.fetches += fetches.len() as u64;
         if !pending.is_empty() {
-            let t0 = Instant::now();
+            let t0 = self.clock.now();
             for key in &pending {
                 self.transfer.wait_gpu(*key);
             }
-            tel.stall_seconds += t0.elapsed().as_secs_f64();
+            tel.stall_seconds += self.clock.since(t0);
         }
         self.sync_device_buffers()?;
 
         // Transient fetches: cache had no unpinned slot; stream the weights
         // through without admission (still pays the PCIe time).
-        let mut transient_bufs: BTreeMap<usize, [xla::PjRtBuffer; 3]> = BTreeMap::new();
+        let mut transient_weights: BTreeMap<usize, ExpertWeights> = BTreeMap::new();
         for &e in &transient {
             let key = ExpertKey::new(l, e);
-            let dur = self
-                .transfer
-                .with_state(|st| st.pcie.transfer_duration(self.store.expert_bytes));
-            if self.opts.time_scale > 0.0 {
-                std::thread::sleep(dur.mul_f64(self.opts.time_scale));
-            }
-            self.transfer
-                .with_state(|st| st.pcie.record(self.store.expert_bytes, false));
-            let w = self.store.expert(key)?;
-            let b1 = self.rt.to_device(&w.0.data, &w.0.dims)?;
-            let b3 = self.rt.to_device(&w.1.data, &w.1.dims)?;
-            let b2 = self.rt.to_device(&w.2.data, &w.2.dims)?;
-            transient_bufs.insert(e, [b1, b3, b2]);
+            self.transfer.transient_fetch(self.store.expert_bytes);
+            transient_weights.insert(e, self.store.expert(key)?);
             tel.transient_fetches += 1;
         }
 
@@ -723,21 +585,12 @@ impl Engine {
                 .token_bucket_for(rows.len())
                 .context("expert group exceeds largest bucket")?;
             let grp = grp.pad_rows(tb);
-            let hbuf = self.rt.to_device(&grp.data, &grp.dims)?;
             let key = ExpertKey::new(l, e);
-            let y = if let Some(bufs) = transient_bufs.get(&e) {
-                self.reg.run_buffers(
-                    &format!("expert_T{tb}"),
-                    &[&hbuf, &bufs[0], &bufs[1], &bufs[2]],
-                )?
+            let y = if let Some(w) = transient_weights.get(&e) {
+                self.stages.expert_transient(tb, w, &grp)?
             } else {
-                let bufs = self.reg.expert_buffers(key)?;
-                self.reg.run_buffers(
-                    &format!("expert_T{tb}"),
-                    &[&hbuf, &bufs[0], &bufs[1], &bufs[2]],
-                )?
-            }
-            .single()?;
+                self.stages.expert_resident(tb, key, &grp)?
+            };
             for (i, &(t, slot)) in members.iter().enumerate() {
                 let w = routings[t].weights[slot];
                 let orow = out.row_mut(t);
@@ -747,6 +600,10 @@ impl Engine {
             }
             self.counters.inc("expert_invocations");
         }
+        // Model the MoE compute cost (one FFN pass per invoked expert).
+        self.clock.advance(Duration::from_secs_f64(
+            self.scfg.sim_expert_s * groups.len() as f64,
+        ));
 
         self.transfer.with_state(|st| {
             for &e in &used {
@@ -758,11 +615,13 @@ impl Engine {
 
     /// Mirror cache arrivals/evictions into device buffers.
     fn sync_device_buffers(&mut self) -> Result<()> {
-        for key in self.transfer.drain_evictions() {
-            self.reg.evict_expert(key);
+        let evictions = self.transfer.drain_evictions();
+        for key in evictions {
+            self.stages.evict_expert(key);
         }
-        for (key, w) in self.transfer.drain_arrivals() {
-            self.reg.admit_expert(&self.rt, key, &w)?;
+        let arrivals = self.transfer.drain_arrivals();
+        for (key, w) in arrivals {
+            self.stages.admit_expert(key, &w)?;
         }
         Ok(())
     }

@@ -93,7 +93,12 @@ mod tests {
         let cfg = ModelConfig::test_tiny();
         let store = Arc::new(WeightStore::synthetic(&cfg, 1));
         let cache = ExpertCache::new(cfg.n_layers, cfg.n_experts, 4, EvictPolicy::Lru);
-        TransferEngine::spawn(cache, PcieSim::new(16e9, 0.0, 1.0), store, 0.0)
+        TransferEngine::spawn(
+            cache,
+            PcieSim::new(16e9, 0.0, 1.0),
+            store,
+            crate::util::clock::SimClock::virtual_clock(),
+        )
     }
 
     #[test]

@@ -1,12 +1,102 @@
-//! PJRT runtime bridge: load AOT HLO-text artifacts, compile them on the
-//! CPU PJRT client, and execute them from the serving hot path.
+//! Stage-execution backends.
 //!
-//! Interchange is HLO **text** (not serialized protos): jax >= 0.5 emits
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see DESIGN.md and /opt/xla-example/README.md).
+//! The serving engine orchestrates the model as a sequence of *stages*
+//! (embed, attention, router, expert FFN, lm head). This module defines
+//! the [`StageRunner`] contract the engine drives, with two backends:
+//!
+//! * **Reference** ([`RefStages`], always available) — a pure-Rust
+//!   interpreter of the stage math, numerically mirroring
+//!   `python/compile/kernels/ref.py` / `model.py`. It needs no artifacts
+//!   and no PJRT, so the full serving pipeline (cache, transfers, buddy
+//!   substitution, continuous batching) runs anywhere — this is what the
+//!   integration tests exercise against synthetic weights.
+//! * **PJRT** (`PjrtStages`, behind the `pjrt` cargo feature) — loads AOT
+//!   HLO-text artifacts, compiles them on the CPU PJRT client (`xla`
+//!   crate), and executes them from the hot path. Interchange is HLO
+//!   **text** (not serialized protos): jax >= 0.5 emits 64-bit instruction
+//!   ids that xla_extension 0.5.1 rejects; the text parser reassigns ids
+//!   (see DESIGN.md).
 
+mod reference;
+
+#[cfg(feature = "pjrt")]
 mod artifacts;
+#[cfg(feature = "pjrt")]
 mod exec;
+#[cfg(feature = "pjrt")]
+mod pjrt;
 
+pub use reference::RefStages;
+
+#[cfg(feature = "pjrt")]
 pub use artifacts::{ArtifactRegistry, Runtime};
+#[cfg(feature = "pjrt")]
 pub use exec::{lit_i32, lit_tensor, tensor_from_lit, ExecOutputs};
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtStages;
+
+use anyhow::Result;
+
+use crate::util::tensor::Tensor;
+use crate::weights::{ExpertKey, ExpertWeights};
+
+/// Which stage backend the engine should use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// PJRT when compiled in and artifacts are present; reference otherwise.
+    #[default]
+    Auto,
+    /// The pure-Rust interpreter (no artifacts needed).
+    Reference,
+    /// The PJRT artifact executor (requires the `pjrt` feature).
+    Pjrt,
+}
+
+/// One model-stage executor. All tensors are host-side row-major f32; a
+/// backend is free to stage them onto a device internally. `tb`/`bb` are
+/// the token/batch shape buckets the AOT artifacts were compiled for — the
+/// reference backend accepts any shape and ignores them beyond the padded
+/// tensor sizes it receives.
+pub trait StageRunner {
+    /// tokens (padded to `tb`) -> x [tb, D].
+    fn embed(&self, tb: usize, toks: &[i32]) -> Result<Tensor>;
+
+    /// Full-prompt causal attention with residual:
+    /// (x [S, D], len_mask [S]) -> [y [S, D], k [S, D], v [S, D]].
+    fn attn_prefill(&self, layer: usize, x: &Tensor, len_mask: &Tensor) -> Result<[Tensor; 3]>;
+
+    /// Single-step attention for `bb` sequences against padded KV caches:
+    /// -> [y [bb, D], k_new [bb, D], v_new [bb, D]].
+    fn attn_decode(
+        &self,
+        layer: usize,
+        bb: usize,
+        x: &Tensor,
+        k_cache: &Tensor,
+        v_cache: &Tensor,
+        pos_mask: &Tensor,
+    ) -> Result<[Tensor; 3]>;
+
+    /// MoE pre-norm + router softmax: y [T, D] -> (h [T, D], probs [T, E]).
+    fn router(&self, layer: usize, y: &Tensor) -> Result<(Tensor, Tensor)>;
+
+    /// Run one *admitted* expert over a routed token group h [tb, D].
+    fn expert_resident(&self, tb: usize, key: ExpertKey, h: &Tensor) -> Result<Tensor>;
+
+    /// Run an expert from explicitly-provided weights (the transient-fetch
+    /// path: weights streamed through without cache admission).
+    fn expert_transient(&self, tb: usize, w: &ExpertWeights, h: &Tensor) -> Result<Tensor>;
+
+    /// x [tb, D] -> logits [tb, V] (tied embedding).
+    fn lm_head(&self, tb: usize, x: &Tensor) -> Result<Tensor>;
+
+    /// Admit an expert's weights "onto the device" (the arrival side of a
+    /// PCIe transfer). `expert_resident` may only be called for admitted
+    /// keys.
+    fn admit_expert(&mut self, key: ExpertKey, w: &ExpertWeights) -> Result<()>;
+
+    /// Drop an evicted expert's device-side weights.
+    fn evict_expert(&mut self, key: ExpertKey);
+
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,267 @@
+//! The PJRT stage backend: AOT HLO artifacts compiled and executed through
+//! the PJRT CPU client (`xla` crate). All PJRT interaction happens on the
+//! thread that owns the engine; the transfer thread only touches host
+//! state.
+//!
+//! Two execution paths per stage, selected by `weight_buffers`:
+//! * **buffer path** (default) — non-expert weights live as device-resident
+//!   buffers created once at startup (§Perf: saves one host->device weight
+//!   copy per stage invocation on the hot path);
+//! * **literal path** — weights shipped as literals on every call, retained
+//!   for before/after measurement.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::ModelConfig;
+use crate::runtime::artifacts::{ArtifactRegistry, Runtime};
+use crate::runtime::exec::{lit_i32, lit_tensor};
+use crate::runtime::StageRunner;
+use crate::util::tensor::Tensor;
+use crate::weights::{ExpertKey, ExpertWeights, WeightStore};
+
+struct LayerLits {
+    ln1: xla::Literal,
+    wq: xla::Literal,
+    wk: xla::Literal,
+    wv: xla::Literal,
+    wo: xla::Literal,
+    ln2: xla::Literal,
+    wg: xla::Literal,
+    rbias: xla::Literal,
+}
+
+/// Device-resident copies of per-layer non-expert weights (§Perf: created
+/// once, reused every call).
+struct LayerBufs {
+    ln1: xla::PjRtBuffer,
+    wq: xla::PjRtBuffer,
+    wk: xla::PjRtBuffer,
+    wv: xla::PjRtBuffer,
+    wo: xla::PjRtBuffer,
+    ln2: xla::PjRtBuffer,
+    wg: xla::PjRtBuffer,
+    rbias: xla::PjRtBuffer,
+}
+
+pub struct PjrtStages {
+    rt: Runtime,
+    reg: ArtifactRegistry,
+    lit_embed: xla::Literal,
+    lit_final_gain: xla::Literal,
+    layer_lits: Vec<LayerLits>,
+    buf_embed: Option<xla::PjRtBuffer>,
+    buf_final_gain: Option<xla::PjRtBuffer>,
+    layer_bufs: Vec<LayerBufs>,
+}
+
+impl PjrtStages {
+    pub fn new(cfg: &ModelConfig, store: &Arc<WeightStore>, weight_buffers: bool) -> Result<Self> {
+        let rt = Runtime::cpu()?;
+        let reg = rt.load_artifacts(cfg)?;
+
+        // Cache non-expert weights as literals once.
+        let lit_embed = lit_tensor(store.tensor("embed")?)?;
+        let lit_final_gain = lit_tensor(store.tensor("final_gain")?)?;
+        let mut layer_lits = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let g = |n: &str| -> Result<xla::Literal> {
+                lit_tensor(store.tensor(&format!("L{l}.{n}"))?)
+            };
+            layer_lits.push(LayerLits {
+                ln1: g("ln1")?,
+                wq: g("wq")?,
+                wk: g("wk")?,
+                wv: g("wv")?,
+                wo: g("wo")?,
+                ln2: g("ln2")?,
+                wg: g("wg")?,
+                rbias: g("rbias")?,
+            });
+        }
+
+        // §Perf: device-resident non-expert weights for the buffer path.
+        let (buf_embed, buf_final_gain, layer_bufs) = if weight_buffers {
+            let te = store.tensor("embed")?;
+            let tg = store.tensor("final_gain")?;
+            let mut bufs = Vec::with_capacity(cfg.n_layers);
+            for l in 0..cfg.n_layers {
+                let g = |n: &str| -> Result<xla::PjRtBuffer> {
+                    let t = store.tensor(&format!("L{l}.{n}"))?;
+                    rt.to_device(&t.data, &t.dims)
+                };
+                bufs.push(LayerBufs {
+                    ln1: g("ln1")?,
+                    wq: g("wq")?,
+                    wk: g("wk")?,
+                    wv: g("wv")?,
+                    wo: g("wo")?,
+                    ln2: g("ln2")?,
+                    wg: g("wg")?,
+                    rbias: g("rbias")?,
+                });
+            }
+            (
+                Some(rt.to_device(&te.data, &te.dims)?),
+                Some(rt.to_device(&tg.data, &tg.dims)?),
+                bufs,
+            )
+        } else {
+            (None, None, Vec::new())
+        };
+
+        Ok(Self {
+            rt,
+            reg,
+            lit_embed,
+            lit_final_gain,
+            layer_lits,
+            buf_embed,
+            buf_final_gain,
+            layer_bufs,
+        })
+    }
+
+    fn triple(out: Vec<Tensor>, stage: &str) -> Result<[Tensor; 3]> {
+        out.try_into()
+            .map_err(|_| anyhow::anyhow!("{stage} output arity"))
+    }
+}
+
+impl StageRunner for PjrtStages {
+    fn embed(&self, tb: usize, toks: &[i32]) -> Result<Tensor> {
+        let name = format!("embed_T{tb}");
+        if let Some(be) = &self.buf_embed {
+            let bt = self.rt.to_device_i32(toks, &[toks.len()])?;
+            self.reg.run_buffers(&name, &[&bt, be])?.single()
+        } else {
+            let lt = lit_i32(toks);
+            self.reg.run_lits(&name, &[&lt, &self.lit_embed])?.single()
+        }
+    }
+
+    fn attn_prefill(&self, layer: usize, x: &Tensor, len_mask: &Tensor) -> Result<[Tensor; 3]> {
+        let out = if !self.layer_bufs.is_empty() {
+            let lb = &self.layer_bufs[layer];
+            let bx = self.rt.to_device(&x.data, &x.dims)?;
+            let bm = self.rt.to_device(&len_mask.data, &len_mask.dims)?;
+            self.reg
+                .run_buffers(
+                    "attn_prefill",
+                    &[&bx, &bm, &lb.ln1, &lb.wq, &lb.wk, &lb.wv, &lb.wo],
+                )?
+                .outputs
+        } else {
+            let ll = &self.layer_lits[layer];
+            let lx = lit_tensor(x)?;
+            let lm = lit_tensor(len_mask)?;
+            self.reg
+                .run_lits(
+                    "attn_prefill",
+                    &[&lx, &lm, &ll.ln1, &ll.wq, &ll.wk, &ll.wv, &ll.wo],
+                )?
+                .outputs
+        };
+        Self::triple(out, "attn_prefill")
+    }
+
+    fn attn_decode(
+        &self,
+        layer: usize,
+        bb: usize,
+        x: &Tensor,
+        k_cache: &Tensor,
+        v_cache: &Tensor,
+        pos_mask: &Tensor,
+    ) -> Result<[Tensor; 3]> {
+        let name = format!("attn_decode_B{bb}");
+        let out = if !self.layer_bufs.is_empty() {
+            let lb = &self.layer_bufs[layer];
+            let bx = self.rt.to_device(&x.data, &x.dims)?;
+            let bk = self.rt.to_device(&k_cache.data, &k_cache.dims)?;
+            let bv = self.rt.to_device(&v_cache.data, &v_cache.dims)?;
+            let bm = self.rt.to_device(&pos_mask.data, &pos_mask.dims)?;
+            self.reg
+                .run_buffers(
+                    &name,
+                    &[&bx, &bk, &bv, &bm, &lb.ln1, &lb.wq, &lb.wk, &lb.wv, &lb.wo],
+                )?
+                .outputs
+        } else {
+            let ll = &self.layer_lits[layer];
+            let lx = lit_tensor(x)?;
+            let lk = lit_tensor(k_cache)?;
+            let lv = lit_tensor(v_cache)?;
+            let lm = lit_tensor(pos_mask)?;
+            self.reg
+                .run_lits(
+                    &name,
+                    &[&lx, &lk, &lv, &lm, &ll.ln1, &ll.wq, &ll.wk, &ll.wv, &ll.wo],
+                )?
+                .outputs
+        };
+        Self::triple(out, "attn_decode")
+    }
+
+    fn router(&self, layer: usize, y: &Tensor) -> Result<(Tensor, Tensor)> {
+        let t = y.dims[0];
+        let name = format!("router_T{t}");
+        let out = if !self.layer_bufs.is_empty() {
+            let lb = &self.layer_bufs[layer];
+            let by = self.rt.to_device(&y.data, &y.dims)?;
+            self.reg.run_buffers(&name, &[&by, &lb.ln2, &lb.wg, &lb.rbias])?
+        } else {
+            let ll = &self.layer_lits[layer];
+            let ly = lit_tensor(y)?;
+            self.reg.run_lits(&name, &[&ly, &ll.ln2, &ll.wg, &ll.rbias])?
+        };
+        let mut it = out.outputs.into_iter();
+        let h = it.next().context("router h")?;
+        let probs = it.next().context("router probs")?;
+        Ok((h, probs))
+    }
+
+    fn expert_resident(&self, tb: usize, key: ExpertKey, h: &Tensor) -> Result<Tensor> {
+        let hbuf = self.rt.to_device(&h.data, &h.dims)?;
+        let bufs = self.reg.expert_buffers(key)?;
+        self.reg
+            .run_buffers(&format!("expert_T{tb}"), &[&hbuf, &bufs[0], &bufs[1], &bufs[2]])?
+            .single()
+    }
+
+    fn expert_transient(&self, tb: usize, w: &ExpertWeights, h: &Tensor) -> Result<Tensor> {
+        let hbuf = self.rt.to_device(&h.data, &h.dims)?;
+        let b1 = self.rt.to_device(&w.0.data, &w.0.dims)?;
+        let b3 = self.rt.to_device(&w.1.data, &w.1.dims)?;
+        let b2 = self.rt.to_device(&w.2.data, &w.2.dims)?;
+        self.reg
+            .run_buffers(&format!("expert_T{tb}"), &[&hbuf, &b1, &b3, &b2])?
+            .single()
+    }
+
+    fn lm_head(&self, tb: usize, x: &Tensor) -> Result<Tensor> {
+        let name = format!("lm_head_T{tb}");
+        if let (Some(bg), Some(be)) = (&self.buf_final_gain, &self.buf_embed) {
+            let bx = self.rt.to_device(&x.data, &x.dims)?;
+            self.reg.run_buffers(&name, &[&bx, bg, be])?.single()
+        } else {
+            let lx = lit_tensor(x)?;
+            self.reg
+                .run_lits(&name, &[&lx, &self.lit_final_gain, &self.lit_embed])?
+                .single()
+        }
+    }
+
+    fn admit_expert(&mut self, key: ExpertKey, w: &ExpertWeights) -> Result<()> {
+        self.reg.admit_expert(&self.rt, key, w)
+    }
+
+    fn evict_expert(&mut self, key: ExpertKey) {
+        self.reg.evict_expert(key);
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

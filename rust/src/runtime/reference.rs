@@ -1,0 +1,473 @@
+//! The reference stage backend: a pure-Rust interpreter of the dsv2-mini
+//! stage math, numerically mirroring `python/compile/kernels/ref.py` and
+//! `python/compile/model.py`.
+//!
+//! This backend needs no AOT artifacts and no PJRT, so the complete
+//! serving pipeline — expert cache, PCIe transfer simulation, buddy
+//! substitution, continuous batching — runs end-to-end against a
+//! synthetic [`WeightStore`]. The integration tests and the virtual-clock
+//! table sweeps use it; with real artifacts present (and the `pjrt`
+//! feature) the engine picks the PJRT backend instead.
+//!
+//! "Device residency" here is an accounting map of admitted expert
+//! weights: running a non-admitted expert is a bug upstream (the cache /
+//! transfer bookkeeping went wrong) and errors just like the PJRT
+//! registry's missing-buffer lookup would.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::runtime::StageRunner;
+use crate::util::math::softmax;
+use crate::util::tensor::Tensor;
+use crate::weights::{ExpertKey, ExpertWeights, WeightStore};
+
+pub struct RefStages {
+    cfg: ModelConfig,
+    store: Arc<WeightStore>,
+    resident: BTreeMap<ExpertKey, ExpertWeights>,
+}
+
+/// Row-major matmul: a [m, k] @ b [k, n] -> [m, n].
+fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let ar = &a[i * k..(i + 1) * k];
+        let or = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in ar.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let br = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in or.iter_mut().zip(br) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// RMSNorm each row of x [rows, d]: x * rsqrt(mean(x^2) + eps) * gain.
+fn rms_norm_rows(x: &[f32], rows: usize, d: usize, gain: &[f32], eps: f32) -> Vec<f32> {
+    debug_assert_eq!(x.len(), rows * d);
+    debug_assert_eq!(gain.len(), d);
+    let mut out = vec![0.0f32; rows * d];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let ms: f32 = xr.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        let or = &mut out[r * d..(r + 1) * d];
+        for i in 0..d {
+            or[i] = xr[i] * inv * gain[i];
+        }
+    }
+    out
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+impl RefStages {
+    pub fn new(cfg: ModelConfig, store: Arc<WeightStore>) -> Self {
+        debug_assert_eq!(cfg.d_model, cfg.n_heads * cfg.head_dim);
+        Self { cfg, store, resident: BTreeMap::new() }
+    }
+
+    fn layer_tensor(&self, layer: usize, name: &str) -> Result<&Tensor> {
+        self.store.tensor(&format!("L{layer}.{name}"))
+    }
+
+    /// Shared FFN math: (silu(h @ w1) * (h @ w3)) @ w2 over h [t, D].
+    fn expert_ffn(&self, h: &Tensor, w: &ExpertWeights) -> Result<Tensor> {
+        let (t, d) = (h.dims[0], self.cfg.d_model);
+        let f = self.cfg.d_ff;
+        let a = matmul(&h.data, t, d, &w.0.data, f);
+        let b = matmul(&h.data, t, d, &w.1.data, f);
+        let mut g = vec![0.0f32; t * f];
+        for i in 0..t * f {
+            g[i] = silu(a[i]) * b[i];
+        }
+        let out = matmul(&g, t, f, &w.2.data, d);
+        Tensor::new(vec![t, d], out)
+    }
+
+    /// Multi-head attention core for one query row against a key/value
+    /// window laid out as index closures; writes the context into `o_row`.
+    #[allow(clippy::too_many_arguments)]
+    fn attend(
+        &self,
+        q_row: &[f32],
+        n_keys: usize,
+        key_at: impl Fn(usize, usize) -> f32,   // (t, dim) -> k value
+        value_at: impl Fn(usize, usize) -> f32, // (t, dim) -> v value
+        valid: impl Fn(usize) -> bool,
+        o_row: &mut [f32],
+    ) {
+        let (heads, hd) = (self.cfg.n_heads, self.cfg.head_dim);
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut scores = vec![0.0f32; n_keys];
+        for head in 0..heads {
+            let base = head * hd;
+            for (t, s) in scores.iter_mut().enumerate() {
+                if valid(t) {
+                    let mut dot = 0.0f32;
+                    for j in 0..hd {
+                        dot += q_row[base + j] * key_at(t, base + j);
+                    }
+                    *s = dot * scale;
+                } else {
+                    *s = f32::NEG_INFINITY;
+                }
+            }
+            softmax(&mut scores);
+            for j in 0..hd {
+                let mut acc = 0.0f32;
+                for (t, &w) in scores.iter().enumerate() {
+                    if w > 0.0 {
+                        acc += w * value_at(t, base + j);
+                    }
+                }
+                o_row[base + j] = acc;
+            }
+        }
+    }
+}
+
+impl StageRunner for RefStages {
+    fn embed(&self, tb: usize, toks: &[i32]) -> Result<Tensor> {
+        anyhow::ensure!(toks.len() == tb, "embed: {} tokens for bucket {tb}", toks.len());
+        let emb = self.store.tensor("embed")?;
+        let d = self.cfg.d_model;
+        let mut out = vec![0.0f32; tb * d];
+        for (i, &t) in toks.iter().enumerate() {
+            let t = t as usize;
+            anyhow::ensure!(t < self.cfg.vocab_size, "token {t} out of vocab");
+            out[i * d..(i + 1) * d].copy_from_slice(emb.row(t));
+        }
+        Tensor::new(vec![tb, d], out)
+    }
+
+    fn attn_prefill(&self, layer: usize, x: &Tensor, len_mask: &Tensor) -> Result<[Tensor; 3]> {
+        let (s, d) = (x.dims[0], self.cfg.d_model);
+        let ln1 = self.layer_tensor(layer, "ln1")?;
+        let wq = self.layer_tensor(layer, "wq")?;
+        let wk = self.layer_tensor(layer, "wk")?;
+        let wv = self.layer_tensor(layer, "wv")?;
+        let wo = self.layer_tensor(layer, "wo")?;
+
+        let h = rms_norm_rows(&x.data, s, d, &ln1.data, self.cfg.rms_eps as f32);
+        let q = matmul(&h, s, d, &wq.data, d);
+        let k = matmul(&h, s, d, &wk.data, d);
+        let v = matmul(&h, s, d, &wv.data, d);
+
+        let mask = &len_mask.data;
+        let mut o = vec![0.0f32; s * d];
+        for si in 0..s {
+            let mut o_row = vec![0.0f32; d];
+            self.attend(
+                &q[si * d..(si + 1) * d],
+                s,
+                |t, j| k[t * d + j],
+                |t, j| v[t * d + j],
+                |t| t <= si && mask[t] > 0.0,
+                &mut o_row,
+            );
+            o[si * d..(si + 1) * d].copy_from_slice(&o_row);
+        }
+        // y = x + o @ wo
+        let proj = matmul(&o, s, d, &wo.data, d);
+        let mut y = x.data.clone();
+        for (a, b) in y.iter_mut().zip(&proj) {
+            *a += b;
+        }
+        Ok([
+            Tensor::new(vec![s, d], y)?,
+            Tensor::new(vec![s, d], k)?,
+            Tensor::new(vec![s, d], v)?,
+        ])
+    }
+
+    fn attn_decode(
+        &self,
+        layer: usize,
+        bb: usize,
+        x: &Tensor,
+        k_cache: &Tensor,
+        v_cache: &Tensor,
+        pos_mask: &Tensor,
+    ) -> Result<[Tensor; 3]> {
+        let d = self.cfg.d_model;
+        let s = k_cache.dims[1];
+        anyhow::ensure!(x.dims == vec![bb, d], "attn_decode x shape {:?}", x.dims);
+        let ln1 = self.layer_tensor(layer, "ln1")?;
+        let wq = self.layer_tensor(layer, "wq")?;
+        let wk = self.layer_tensor(layer, "wk")?;
+        let wv = self.layer_tensor(layer, "wv")?;
+        let wo = self.layer_tensor(layer, "wo")?;
+
+        let h = rms_norm_rows(&x.data, bb, d, &ln1.data, self.cfg.rms_eps as f32);
+        let q = matmul(&h, bb, d, &wq.data, d);
+        let k_new = matmul(&h, bb, d, &wk.data, d);
+        let v_new = matmul(&h, bb, d, &wv.data, d);
+
+        let mut o = vec![0.0f32; bb * d];
+        for b in 0..bb {
+            let kc = &k_cache.data[b * s * d..(b + 1) * s * d];
+            let vc = &v_cache.data[b * s * d..(b + 1) * s * d];
+            let kn = &k_new[b * d..(b + 1) * d];
+            let vn = &v_new[b * d..(b + 1) * d];
+            let mask = &pos_mask.data[b * s..(b + 1) * s];
+            let mut o_row = vec![0.0f32; d];
+            // Window = S cached slots plus the current token appended at
+            // index S (always valid), exactly like attn_decode_stage.
+            self.attend(
+                &q[b * d..(b + 1) * d],
+                s + 1,
+                |t, j| if t < s { kc[t * d + j] } else { kn[j] },
+                |t, j| if t < s { vc[t * d + j] } else { vn[j] },
+                |t| t >= s || mask[t] > 0.0,
+                &mut o_row,
+            );
+            o[b * d..(b + 1) * d].copy_from_slice(&o_row);
+        }
+        let proj = matmul(&o, bb, d, &wo.data, d);
+        let mut y = x.data.clone();
+        for (a, b) in y.iter_mut().zip(&proj) {
+            *a += b;
+        }
+        Ok([
+            Tensor::new(vec![bb, d], y)?,
+            Tensor::new(vec![bb, d], k_new)?,
+            Tensor::new(vec![bb, d], v_new)?,
+        ])
+    }
+
+    fn router(&self, layer: usize, y: &Tensor) -> Result<(Tensor, Tensor)> {
+        let (t, d) = (y.dims[0], self.cfg.d_model);
+        let e = self.cfg.n_experts;
+        let ln2 = self.layer_tensor(layer, "ln2")?;
+        let wg = self.layer_tensor(layer, "wg")?;
+        let rbias = self.layer_tensor(layer, "rbias")?;
+        let h = rms_norm_rows(&y.data, t, d, &ln2.data, self.cfg.rms_eps as f32);
+        let mut logits = matmul(&h, t, d, &wg.data, e);
+        for r in 0..t {
+            let row = &mut logits[r * e..(r + 1) * e];
+            for (l, &b) in row.iter_mut().zip(&rbias.data) {
+                *l += b;
+            }
+            softmax(row);
+        }
+        Ok((Tensor::new(vec![t, d], h)?, Tensor::new(vec![t, e], logits)?))
+    }
+
+    fn expert_resident(&self, _tb: usize, key: ExpertKey, h: &Tensor) -> Result<Tensor> {
+        let w = self
+            .resident
+            .get(&key)
+            .with_context(|| {
+                format!("expert L{}.E{} has no device buffers", key.layer, key.expert)
+            })?
+            .clone();
+        self.expert_ffn(h, &w)
+    }
+
+    fn expert_transient(&self, _tb: usize, w: &ExpertWeights, h: &Tensor) -> Result<Tensor> {
+        self.expert_ffn(h, w)
+    }
+
+    fn lm_head(&self, tb: usize, x: &Tensor) -> Result<Tensor> {
+        let d = self.cfg.d_model;
+        anyhow::ensure!(x.dims == vec![tb, d], "lm_head x shape {:?}", x.dims);
+        let gain = self.store.tensor("final_gain")?;
+        let emb = self.store.tensor("embed")?;
+        let v = self.cfg.vocab_size;
+        let h = rms_norm_rows(&x.data, tb, d, &gain.data, self.cfg.rms_eps as f32);
+        let mut logits = vec![0.0f32; tb * v];
+        for t in 0..tb {
+            let hr = &h[t * d..(t + 1) * d];
+            let lr = &mut logits[t * v..(t + 1) * v];
+            for (vi, l) in lr.iter_mut().enumerate() {
+                let er = emb.row(vi);
+                let mut dot = 0.0f32;
+                for j in 0..d {
+                    dot += hr[j] * er[j];
+                }
+                *l = dot;
+            }
+        }
+        Tensor::new(vec![tb, v], logits)
+    }
+
+    fn admit_expert(&mut self, key: ExpertKey, w: &ExpertWeights) -> Result<()> {
+        if key.layer >= self.cfg.n_layers || key.expert >= self.cfg.n_experts {
+            bail!("admit_expert: key L{}.E{} out of range", key.layer, key.expert);
+        }
+        self.resident.insert(key, w.clone());
+        Ok(())
+    }
+
+    fn evict_expert(&mut self, key: ExpertKey) {
+        self.resident.remove(&key);
+    }
+
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stages() -> RefStages {
+        let cfg = ModelConfig::test_tiny();
+        let store = Arc::new(WeightStore::synthetic(&cfg, 7));
+        RefStages::new(cfg, store)
+    }
+
+    #[test]
+    fn matmul_small() {
+        // [2,2] @ [2,2]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        let c = matmul(&a, 2, 2, &b, 2);
+        assert_eq!(c, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn rms_norm_unit_gain_scale() {
+        let x = [3.0f32, 4.0];
+        let out = rms_norm_rows(&x, 1, 2, &[1.0, 1.0], 0.0);
+        // rms = sqrt((9+16)/2) = sqrt(12.5)
+        let rms = 12.5f32.sqrt();
+        assert!((out[0] - 3.0 / rms).abs() < 1e-6);
+        assert!((out[1] - 4.0 / rms).abs() < 1e-6);
+    }
+
+    #[test]
+    fn router_probs_are_distributions() {
+        let s = stages();
+        let t = 3;
+        let y = Tensor::new(
+            vec![t, 16],
+            (0..t * 16).map(|i| (i % 7) as f32 / 7.0 - 0.5).collect(),
+        )
+        .unwrap();
+        let (h, probs) = s.router(0, &y).unwrap();
+        assert_eq!(h.dims, vec![t, 16]);
+        assert_eq!(probs.dims, vec![t, 8]);
+        for r in 0..t {
+            let sum: f32 = probs.row(r).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            assert!(probs.row(r).iter().all(|&p| p >= 0.0));
+        }
+    }
+
+    #[test]
+    fn router_matches_host_router_probs() {
+        // The PreGate predictor's host router math is an independent
+        // implementation of the same stage; they must agree.
+        let s = stages();
+        let y = Tensor::new(vec![1, 16], (0..16).map(|i| i as f32 / 9.0 - 0.8).collect()).unwrap();
+        let (_, probs) = s.router(1, &y).unwrap();
+        let expect = crate::prefetch::host_router_probs(
+            y.row(0),
+            16,
+            &s.store.tensor("L1.ln2").unwrap().data,
+            s.store.tensor("L1.wg").unwrap(),
+            &s.store.tensor("L1.rbias").unwrap().data,
+            s.cfg.rms_eps as f32,
+        );
+        for (a, b) in probs.row(0).iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-5, "router mismatch: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn expert_requires_admission() {
+        let mut s = stages();
+        let key = ExpertKey::new(0, 3);
+        let h = Tensor::zeros(vec![2, 16]);
+        assert!(s.expert_resident(2, key, &h).is_err());
+        let w = s.store.expert(key).unwrap();
+        s.admit_expert(key, &w).unwrap();
+        let y = s.expert_resident(2, key, &h).unwrap();
+        assert_eq!(y.dims, vec![2, 16]);
+        s.evict_expert(key);
+        assert!(s.expert_resident(2, key, &h).is_err());
+    }
+
+    #[test]
+    fn expert_zero_input_zero_output() {
+        let s = stages();
+        let w = s.store.expert(ExpertKey::new(1, 1)).unwrap();
+        let h = Tensor::zeros(vec![1, 16]);
+        let y = s.expert_transient(1, &w, &h).unwrap();
+        assert!(y.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn attn_decode_shapes_and_mask() {
+        let s = stages();
+        let (bb, d, sq) = (2, 16, 16);
+        let x = Tensor::new(vec![bb, d], (0..bb * d).map(|i| (i % 5) as f32 - 2.0).collect())
+            .unwrap();
+        let kc = Tensor::zeros(vec![bb, sq, d]);
+        let vc = Tensor::zeros(vec![bb, sq, d]);
+        // No cached positions valid: attention sees only the current token.
+        let pm = Tensor::zeros(vec![bb, sq]);
+        let [y, kn, vn] = s.attn_decode(0, bb, &x, &kc, &vc, &pm).unwrap();
+        assert_eq!(y.dims, vec![bb, d]);
+        assert_eq!(kn.dims, vec![bb, d]);
+        assert_eq!(vn.dims, vec![bb, d]);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn prefill_is_causal() {
+        // Changing a later token must not change an earlier row's output.
+        let s = stages();
+        let d = 16;
+        let sq = 8;
+        let mk = |last: f32| {
+            let mut x = Tensor::zeros(vec![sq, d]);
+            for t in 0..sq {
+                for j in 0..d {
+                    x.row_mut(t)[j] = ((t * d + j) % 11) as f32 / 11.0 - 0.5;
+                }
+            }
+            x.row_mut(sq - 1)[0] = last;
+            x
+        };
+        let mask = Tensor::new(vec![sq], vec![1.0; sq]).unwrap();
+        let [y_a, _, _] = s.attn_prefill(0, &mk(0.3), &mask).unwrap();
+        let [y_b, _, _] = s.attn_prefill(0, &mk(9.0), &mask).unwrap();
+        for t in 0..sq - 1 {
+            assert_eq!(y_a.row(t), y_b.row(t), "row {t} must not see the future");
+        }
+        assert_ne!(y_a.row(sq - 1), y_b.row(sq - 1));
+    }
+
+    #[test]
+    fn lm_head_is_tied_embedding() {
+        let s = stages();
+        // With unit final_gain, logits of a row equal rms-normed dot with
+        // each embedding row; check against a direct computation.
+        let x = Tensor::new(vec![1, 16], (0..16).map(|i| i as f32 / 16.0).collect()).unwrap();
+        let logits = s.lm_head(1, &x).unwrap();
+        assert_eq!(logits.dims, vec![1, 64]);
+        let emb = s.store.tensor("embed").unwrap();
+        let h = rms_norm_rows(&x.data, 1, 16, &[1.0; 16], s.cfg.rms_eps as f32);
+        let mut dot0 = 0.0f32;
+        for j in 0..16 {
+            dot0 += h[j] * emb.row(0)[j];
+        }
+        assert!((logits.row(0)[0] - dot0).abs() < 1e-5);
+    }
+}

@@ -1,11 +1,24 @@
 //! Dynamic batcher: admission queue with max-batch and wait-timeout
-//! semantics. Thread-safe so an intake thread can feed a serving thread.
+//! semantics, running on the serving stack's [`SimClock`].
+//!
+//! * Real-time clock — thread-safe blocking queue: an intake thread feeds
+//!   a serving thread, and `next_admissions` waits on a condvar with the
+//!   configured batching-window timeout.
+//! * Virtual clock — the batching window is *modeled*: a partial batch
+//!   "waits" by advancing the virtual clock by the timeout, then admits
+//!   whatever is queued. No blocking, fully deterministic. Virtual mode is
+//!   single-driver: producers must enqueue (and `close`) before or between
+//!   `next_admissions` calls, as offline benchmark runs do — there is no
+//!   other thread whose arrival could end the window early. An empty,
+//!   still-open queue is therefore unservable (no future arrival can
+//!   exist) and is treated as drained, with a warning — never a busy-spin.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::request::InferenceRequest;
+use crate::util::clock::SimClock;
 
 #[derive(Default)]
 struct QueueState {
@@ -16,22 +29,26 @@ struct QueueState {
 pub struct DynamicBatcher {
     state: Mutex<QueueState>,
     cv: Condvar,
+    clock: SimClock,
     pub max_batch: usize,
     pub timeout: Duration,
 }
 
 impl DynamicBatcher {
-    pub fn new(max_batch: usize, timeout: Duration) -> Self {
+    pub fn new(max_batch: usize, timeout: Duration, clock: SimClock) -> Self {
         assert!(max_batch >= 1);
         Self {
             state: Mutex::new(QueueState::default()),
             cv: Condvar::new(),
+            clock,
             max_batch,
             timeout,
         }
     }
 
-    pub fn submit(&self, req: InferenceRequest) {
+    /// Enqueue a request, stamping its arrival time off the shared clock.
+    pub fn submit(&self, mut req: InferenceRequest) {
+        req.enqueued = self.clock.now();
         let mut st = self.state.lock().unwrap();
         st.queue.push_back(req);
         self.cv.notify_all();
@@ -47,20 +64,48 @@ impl DynamicBatcher {
         self.state.lock().unwrap().queue.len()
     }
 
-    /// Pull up to `room` requests. Blocks until at least one request is
-    /// available, the timeout elapses with a non-empty queue, or the
-    /// batcher is closed. Returns `None` when closed and drained.
+    /// Pull up to `room` requests. Blocks (or advances virtual time) until
+    /// at least one request is available, the batching window elapses, or
+    /// the batcher is closed. Returns `None` when closed and drained — and,
+    /// in virtual mode, when the queue is empty while still open: virtual
+    /// mode is single-driver, so no future arrival can exist and blocking
+    /// (or spinning) would hang forever. That case warns, since it usually
+    /// means a caller forgot `close()` before `run()`.
     pub fn next_admissions(&self, room: usize) -> Option<Vec<InferenceRequest>> {
         if room == 0 {
             return Some(Vec::new());
         }
+        let want = room.min(self.max_batch);
+        if self.clock.is_virtual() {
+            let mut st = self.state.lock().unwrap();
+            if st.queue.is_empty() {
+                if !st.closed {
+                    log::warn!(
+                        "virtual-clock batcher polled while empty and open: \
+                         treating as drained (submit + close before run)"
+                    );
+                }
+                return None;
+            }
+            if st.queue.len() < want && !st.closed {
+                // Partial batch: model holding the window open for more
+                // arrivals (none can come — single-driver — so the full
+                // timeout elapses).
+                self.clock.advance(self.timeout);
+            }
+            let n = st.queue.len().min(want);
+            return Some(st.queue.drain(..n).collect());
+        }
+
         let deadline = Instant::now() + self.timeout;
         let mut st = self.state.lock().unwrap();
         loop {
             if !st.queue.is_empty() {
                 // Wait briefly for more arrivals to batch together, unless
-                // we already have a full batch.
-                while st.queue.len() < room.min(self.max_batch) && Instant::now() < deadline {
+                // we already have a full batch — or the batcher is closed,
+                // in which case no arrival can come (matching the virtual
+                // path's closed-drains-immediately behavior).
+                while st.queue.len() < want && !st.closed && Instant::now() < deadline {
                     let (guard, timeout_res) = self
                         .cv
                         .wait_timeout(st, deadline.saturating_duration_since(Instant::now()))
@@ -70,7 +115,7 @@ impl DynamicBatcher {
                         break;
                     }
                 }
-                let n = st.queue.len().min(room).min(self.max_batch);
+                let n = st.queue.len().min(want);
                 return Some(st.queue.drain(..n).collect());
             }
             if st.closed {
@@ -100,9 +145,17 @@ mod tests {
         InferenceRequest::new(id, vec![1, 2], 4)
     }
 
+    fn virt(max_batch: usize, timeout_ms: u64) -> (DynamicBatcher, SimClock) {
+        let clock = SimClock::virtual_clock();
+        (
+            DynamicBatcher::new(max_batch, Duration::from_millis(timeout_ms), clock.clone()),
+            clock,
+        )
+    }
+
     #[test]
     fn submit_and_drain() {
-        let b = DynamicBatcher::new(4, Duration::from_millis(1));
+        let (b, _) = virt(4, 1);
         b.submit(req(1));
         b.submit(req(2));
         b.submit(req(3));
@@ -113,8 +166,56 @@ mod tests {
     }
 
     #[test]
+    fn full_batch_admits_without_waiting() {
+        let (b, clock) = virt(2, 50);
+        b.submit(req(1));
+        b.submit(req(2));
+        let t0 = clock.now();
+        assert_eq!(b.next_admissions(10).unwrap().len(), 2);
+        assert_eq!(clock.now(), t0, "full batch must not spend the window");
+    }
+
+    #[test]
+    fn partial_batch_spends_exactly_one_window() {
+        let (b, clock) = virt(4, 50);
+        b.submit(req(1));
+        let t0 = clock.now();
+        let got = b.next_admissions(4).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(
+            clock.now() - t0,
+            Duration::from_millis(50),
+            "partial batch holds the window open for the full timeout"
+        );
+    }
+
+    #[test]
+    fn closed_partial_batch_skips_the_window() {
+        let (b, clock) = virt(4, 50);
+        b.submit(req(1));
+        b.close();
+        let t0 = clock.now();
+        assert_eq!(b.next_admissions(4).unwrap().len(), 1);
+        assert_eq!(clock.now(), t0, "closed batcher drains immediately");
+    }
+
+    #[test]
+    fn empty_open_queue_is_drained_not_spun() {
+        // Single-driver virtual mode: nothing can ever arrive while we
+        // poll, so an empty open queue ends the serve loop (with a warning)
+        // instead of spinning the virtual clock forever.
+        let (b, clock) = virt(4, 7);
+        let t0 = clock.now();
+        assert!(b.next_admissions(4).is_none());
+        assert_eq!(clock.now(), t0, "no virtual time burned on an unservable poll");
+        // Later submissions still work: the batcher itself is not closed.
+        b.submit(req(1));
+        assert_eq!(b.next_admissions(4).unwrap().len(), 1);
+    }
+
+    #[test]
     fn close_drains_then_none() {
-        let b = DynamicBatcher::new(4, Duration::from_millis(1));
+        let (b, _) = virt(4, 1);
         b.submit(req(1));
         b.close();
         assert_eq!(b.next_admissions(4).unwrap().len(), 1);
@@ -123,7 +224,7 @@ mod tests {
 
     #[test]
     fn max_batch_respected() {
-        let b = DynamicBatcher::new(2, Duration::from_millis(1));
+        let (b, _) = virt(2, 1);
         for i in 0..5 {
             b.submit(req(i));
         }
@@ -132,15 +233,41 @@ mod tests {
 
     #[test]
     fn try_admissions_nonblocking() {
-        let b = DynamicBatcher::new(4, Duration::from_secs(10));
+        let (b, _) = virt(4, 10_000);
         assert!(b.try_admissions(4).is_empty());
         b.submit(req(1));
         assert_eq!(b.try_admissions(4).len(), 1);
     }
 
     #[test]
-    fn cross_thread_submit() {
-        let b = std::sync::Arc::new(DynamicBatcher::new(4, Duration::from_millis(50)));
+    fn enqueue_timestamps_come_from_the_clock() {
+        let (b, clock) = virt(4, 1);
+        clock.advance(Duration::from_millis(30));
+        b.submit(req(1));
+        let got = b.next_admissions(4).unwrap();
+        assert_eq!(got[0].enqueued, Duration::from_millis(30));
+    }
+
+    #[test]
+    fn real_time_closed_partial_batch_drains_immediately() {
+        let b = DynamicBatcher::new(4, Duration::from_millis(200), SimClock::real_time());
+        b.submit(req(1));
+        b.close();
+        let t0 = std::time::Instant::now();
+        assert_eq!(b.next_admissions(4).unwrap().len(), 1);
+        assert!(
+            t0.elapsed() < Duration::from_millis(150),
+            "closed batcher must not wait out the batching window"
+        );
+    }
+
+    #[test]
+    fn cross_thread_submit_real_time() {
+        let b = std::sync::Arc::new(DynamicBatcher::new(
+            4,
+            Duration::from_millis(50),
+            SimClock::real_time(),
+        ));
         let b2 = b.clone();
         let t = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(5));

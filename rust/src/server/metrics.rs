@@ -1,13 +1,20 @@
 //! Aggregate serving metrics: throughput, TTFT/latency distributions,
 //! stall accounting — the numbers the paper's tables report.
+//!
+//! All timestamps come from the serving stack's [`SimClock`], so under a
+//! virtual clock every figure here is a deterministic simulated
+//! measurement and under a real-time clock a genuine elapsed one.
 
-use std::time::Instant;
+use std::time::Duration;
 
 use crate::stats::{Counters, Summary};
+use crate::util::clock::SimClock;
 
 #[derive(Debug)]
 pub struct ServerMetrics {
-    pub started: Instant,
+    clock: SimClock,
+    /// Clock timestamp at which this metrics window opened.
+    pub started: Duration,
     pub ttft: Summary,
     pub request_latency: Summary,
     pub step_latency: Summary,
@@ -17,16 +24,12 @@ pub struct ServerMetrics {
     pub counters: Counters,
 }
 
-impl Default for ServerMetrics {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
 impl ServerMetrics {
-    pub fn new() -> Self {
+    pub fn new(clock: SimClock) -> Self {
+        let started = clock.now();
         Self {
-            started: Instant::now(),
+            clock,
+            started,
             ttft: Summary::new(),
             request_latency: Summary::new(),
             step_latency: Summary::new(),
@@ -37,9 +40,14 @@ impl ServerMetrics {
         }
     }
 
+    /// Seconds (virtual or real) elapsed since this window opened.
+    pub fn elapsed_seconds(&self) -> f64 {
+        self.clock.since(self.started)
+    }
+
     /// Decode throughput over the whole run (tokens/second).
     pub fn tokens_per_second(&self) -> f64 {
-        let el = self.started.elapsed().as_secs_f64();
+        let el = self.elapsed_seconds();
         if el <= 0.0 {
             0.0
         } else {
@@ -70,12 +78,29 @@ mod tests {
     use super::*;
 
     #[test]
-    fn throughput_counts_tokens() {
-        let mut m = ServerMetrics::new();
+    fn throughput_counts_tokens_in_virtual_time() {
+        let clock = SimClock::virtual_clock();
+        let mut m = ServerMetrics::new(clock.clone());
         m.tokens_out = 100;
-        std::thread::sleep(std::time::Duration::from_millis(10));
-        assert!(m.tokens_per_second() > 0.0);
+        clock.advance(Duration::from_secs(2));
+        assert!((m.tokens_per_second() - 50.0).abs() < 1e-9);
         m.ttft.add(0.5);
         assert!(m.report().contains("tok/s"));
+    }
+
+    #[test]
+    fn zero_elapsed_is_safe() {
+        let m = ServerMetrics::new(SimClock::virtual_clock());
+        assert_eq!(m.tokens_per_second(), 0.0);
+    }
+
+    #[test]
+    fn window_starts_at_construction() {
+        let clock = SimClock::virtual_clock();
+        clock.advance(Duration::from_secs(5));
+        let mut m = ServerMetrics::new(clock.clone());
+        m.tokens_out = 10;
+        clock.advance(Duration::from_secs(1));
+        assert!((m.tokens_per_second() - 10.0).abs() < 1e-9);
     }
 }

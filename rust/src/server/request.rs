@@ -1,20 +1,22 @@
 //! Request / response types.
 
-use std::time::Instant;
+use std::time::Duration;
 
 #[derive(Debug, Clone)]
 pub struct InferenceRequest {
     pub id: u64,
     pub prompt: Vec<i32>,
     pub max_new: usize,
-    pub enqueued: Instant,
+    /// Clock timestamp ([`crate::util::clock::SimClock::now`]) at which the
+    /// request entered the batcher; stamped by `DynamicBatcher::submit`.
+    pub enqueued: Duration,
     /// Teacher-forced token stream for scored (accuracy) runs.
     pub force_tokens: Option<Vec<i32>>,
 }
 
 impl InferenceRequest {
     pub fn new(id: u64, prompt: Vec<i32>, max_new: usize) -> Self {
-        Self { id, prompt, max_new, enqueued: Instant::now(), force_tokens: None }
+        Self { id, prompt, max_new, enqueued: Duration::ZERO, force_tokens: None }
     }
 
     pub fn forced(mut self, tokens: Vec<i32>) -> Self {
@@ -33,8 +35,9 @@ pub struct InferenceResponse {
     /// Per-position logits aligned with `predictions` (prefill first),
     /// present when the engine records them.
     pub logits: Vec<Vec<f32>>,
-    /// Seconds from enqueue to first token (prefill complete).
+    /// Seconds (virtual or real) from enqueue to first token (prefill
+    /// complete).
     pub ttft: f64,
-    /// Seconds from enqueue to completion.
+    /// Seconds (virtual or real) from enqueue to completion.
     pub total: f64,
 }

@@ -4,10 +4,12 @@
 //! requests into free slots (prefill), then runs one decode step across
 //! all active sequences, retiring finished ones. This is the standard
 //! continuous-batching shape (Orca/vLLM) with the paper's offloading +
-//! substitution machinery inside `Engine::decode_step`.
+//! substitution machinery inside `Engine::decode_step`. All timing reads
+//! the engine's [`crate::util::clock::SimClock`], so the same loop serves
+//! both deterministic virtual-time sweeps and real-time measurement runs.
 
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::Result;
 
@@ -24,7 +26,8 @@ pub struct Server {
 
 struct Active {
     seq: Sequence,
-    enqueued: Instant,
+    /// Clock timestamp the request entered the batcher.
+    enqueued: Duration,
     ttft: f64,
 }
 
@@ -32,19 +35,21 @@ impl Server {
     pub fn new(engine: Engine) -> Self {
         let max_batch = engine.scfg.max_batch;
         let timeout = Duration::from_micros(engine.scfg.batch_timeout_us);
+        let clock = engine.clock();
         Self {
+            batcher: Arc::new(DynamicBatcher::new(max_batch, timeout, clock.clone())),
+            metrics: ServerMetrics::new(clock),
             engine,
-            batcher: Arc::new(DynamicBatcher::new(max_batch, timeout)),
-            metrics: ServerMetrics::new(),
         }
     }
 
     /// Serve until the batcher is closed and drained. Returns responses in
     /// completion order.
     pub fn run(&mut self) -> Result<Vec<InferenceResponse>> {
+        let clock = self.engine.clock();
         let mut active: Vec<Active> = Vec::new();
         let mut done: Vec<InferenceResponse> = Vec::new();
-        self.metrics = ServerMetrics::new();
+        self.metrics = ServerMetrics::new(clock.clone());
 
         loop {
             // Admit into free slots.
@@ -59,9 +64,7 @@ impl Server {
             };
             for req in admissions {
                 let mut act = self.admit(req)?;
-                // A request may complete at prefill (max_new reached by
-                // first token only when max_new == 0 is disallowed).
-                act.ttft = act.enqueued.elapsed().as_secs_f64();
+                act.ttft = clock.since(act.enqueued);
                 self.metrics.ttft.add(act.ttft);
                 active.push(act);
             }
@@ -70,12 +73,11 @@ impl Server {
             }
 
             // One decode step over all active sequences.
-            let t0 = Instant::now();
+            let t0 = clock.now();
             let mut refs: Vec<&mut Sequence> = active.iter_mut().map(|a| &mut a.seq).collect();
             let tel = self.engine.decode_step(&mut refs)?;
             drop(refs);
-            let dt = t0.elapsed().as_secs_f64();
-            self.metrics.step_latency.add(dt);
+            self.metrics.step_latency.add(clock.since(t0));
             self.metrics.stall_seconds.add(tel.stall_seconds);
             self.metrics.counters.add("substitutions", tel.substitutions);
             self.metrics.counters.add("fetches", tel.fetches);
@@ -86,7 +88,7 @@ impl Server {
             while i < active.len() {
                 if active[i].seq.done() {
                     let a = active.swap_remove(i);
-                    let total = a.enqueued.elapsed().as_secs_f64();
+                    let total = clock.since(a.enqueued);
                     self.metrics.request_latency.add(total);
                     self.metrics.requests_done += 1;
                     let mut logits = Vec::new();

@@ -1,0 +1,203 @@
+//! Simulation clock: one time source for the whole serving stack.
+//!
+//! Every time consumer in the system — the PCIe transfer engine, the
+//! engine's compute-time model, batcher deadlines, server metrics, request
+//! timestamps, and the eval harness — reads time from a [`SimClock`]
+//! instead of `Instant::now()`. The clock runs in one of two modes:
+//!
+//! * [`ClockMode::Virtual`] — discrete-event time. `now()` returns a
+//!   virtual duration since the clock's epoch; nothing ever sleeps.
+//!   Components *advance* the clock by their modeled cost (a PCIe transfer,
+//!   a decode step's compute), so a full Tables 2–4 sweep that used to take
+//!   minutes of real sleeping completes in milliseconds, and the same seed
+//!   produces byte-identical timelines (the golden-report tests rely on
+//!   this).
+//! * [`ClockMode::RealTime`] — wall-clock time. `now()` is elapsed real
+//!   time since construction, `sleep()` really sleeps, and `advance()` is a
+//!   no-op (real work already takes real time). This is the mode for
+//!   genuine elapsed-time measurements on hardware.
+//!
+//! The clock is cheap to clone (it is a handle onto shared state) and
+//! thread-safe; in virtual mode it is a monotone counter behind a mutex.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// How the serving stack experiences time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ClockMode {
+    /// Discrete-event virtual time: deterministic, never sleeps.
+    #[default]
+    Virtual,
+    /// Wall-clock time: sleeps are real, measurements are real.
+    RealTime,
+}
+
+impl ClockMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClockMode::Virtual => "virtual",
+            ClockMode::RealTime => "real-time",
+        }
+    }
+}
+
+enum Inner {
+    Virtual(Mutex<Duration>),
+    Real(Instant),
+}
+
+/// Shared time source (cheap clone; all clones observe the same timeline).
+#[derive(Clone)]
+pub struct SimClock {
+    inner: Arc<Inner>,
+}
+
+impl std::fmt::Debug for SimClock {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &*self.inner {
+            Inner::Virtual(now) => {
+                write!(f, "SimClock::Virtual({:?})", *now.lock().unwrap())
+            }
+            Inner::Real(epoch) => write!(f, "SimClock::Real(+{:?})", epoch.elapsed()),
+        }
+    }
+}
+
+impl SimClock {
+    pub fn new(mode: ClockMode) -> Self {
+        match mode {
+            ClockMode::Virtual => Self::virtual_clock(),
+            ClockMode::RealTime => Self::real_time(),
+        }
+    }
+
+    /// A virtual clock starting at t = 0.
+    pub fn virtual_clock() -> Self {
+        Self { inner: Arc::new(Inner::Virtual(Mutex::new(Duration::ZERO))) }
+    }
+
+    /// A wall-clock handle with its epoch at construction.
+    pub fn real_time() -> Self {
+        Self { inner: Arc::new(Inner::Real(Instant::now())) }
+    }
+
+    pub fn mode(&self) -> ClockMode {
+        match &*self.inner {
+            Inner::Virtual(_) => ClockMode::Virtual,
+            Inner::Real(_) => ClockMode::RealTime,
+        }
+    }
+
+    pub fn is_virtual(&self) -> bool {
+        self.mode() == ClockMode::Virtual
+    }
+
+    /// Elapsed (virtual or real) time since the clock's epoch.
+    pub fn now(&self) -> Duration {
+        match &*self.inner {
+            Inner::Virtual(now) => *now.lock().unwrap(),
+            Inner::Real(epoch) => epoch.elapsed(),
+        }
+    }
+
+    /// `now()` in seconds — the common unit for metrics.
+    pub fn now_s(&self) -> f64 {
+        self.now().as_secs_f64()
+    }
+
+    /// Seconds elapsed since an earlier `now()` reading, saturating at
+    /// zero (the one shared "stopwatch" helper, so no call site hand-rolls
+    /// an underflow-prone `Duration` subtraction).
+    pub fn since(&self, t0: Duration) -> f64 {
+        self.now().checked_sub(t0).unwrap_or_default().as_secs_f64()
+    }
+
+    /// Move virtual time forward by `d` (modeled compute, batching windows,
+    /// ...). In real-time mode this is a no-op: real work already consumed
+    /// the real seconds it took.
+    pub fn advance(&self, d: Duration) {
+        if let Inner::Virtual(now) = &*self.inner {
+            let mut t = now.lock().unwrap();
+            *t += d;
+        }
+    }
+
+    /// Move virtual time forward to `t` (monotone: earlier targets are
+    /// ignored). No-op in real-time mode.
+    pub fn advance_to(&self, t: Duration) {
+        if let Inner::Virtual(now) = &*self.inner {
+            let mut cur = now.lock().unwrap();
+            if t > *cur {
+                *cur = t;
+            }
+        }
+    }
+
+    /// Pass `d` of simulated time: advances the virtual clock, or really
+    /// sleeps in real-time mode.
+    pub fn sleep(&self, d: Duration) {
+        match &*self.inner {
+            Inner::Virtual(_) => self.advance(d),
+            Inner::Real(_) => std::thread::sleep(d),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_starts_at_zero_and_advances() {
+        let c = SimClock::virtual_clock();
+        assert!(c.is_virtual());
+        assert_eq!(c.now(), Duration::ZERO);
+        c.advance(Duration::from_millis(5));
+        assert_eq!(c.now(), Duration::from_millis(5));
+        c.sleep(Duration::from_millis(7)); // no real sleep in virtual mode
+        assert_eq!(c.now(), Duration::from_millis(12));
+    }
+
+    #[test]
+    fn advance_to_is_monotone() {
+        let c = SimClock::virtual_clock();
+        c.advance_to(Duration::from_millis(10));
+        c.advance_to(Duration::from_millis(4)); // ignored: in the past
+        assert_eq!(c.now(), Duration::from_millis(10));
+    }
+
+    #[test]
+    fn since_saturates_at_zero() {
+        let c = SimClock::virtual_clock();
+        c.advance(Duration::from_secs(3));
+        assert!((c.since(Duration::from_secs(1)) - 2.0).abs() < 1e-12);
+        assert_eq!(c.since(Duration::from_secs(9)), 0.0);
+    }
+
+    #[test]
+    fn clones_share_the_timeline() {
+        let a = SimClock::virtual_clock();
+        let b = a.clone();
+        a.advance(Duration::from_secs(1));
+        assert_eq!(b.now(), Duration::from_secs(1));
+    }
+
+    #[test]
+    fn real_time_moves_and_ignores_advance() {
+        let c = SimClock::real_time();
+        assert!(!c.is_virtual());
+        let t0 = c.now();
+        c.advance(Duration::from_secs(1000)); // no-op in real mode
+        std::thread::sleep(Duration::from_millis(2));
+        let t1 = c.now();
+        assert!(t1 > t0);
+        assert!(t1 < Duration::from_secs(500), "advance must not move real time");
+    }
+
+    #[test]
+    fn mode_names() {
+        assert_eq!(ClockMode::Virtual.name(), "virtual");
+        assert_eq!(ClockMode::RealTime.name(), "real-time");
+    }
+}

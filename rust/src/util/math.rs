@@ -1,12 +1,18 @@
 //! Small numeric helpers shared across the coordinator: softmax, top-k,
 //! entropy (the TAE building block), percentiles, cosine similarity.
 
-/// Numerically-stable in-place softmax.
+/// Numerically-stable in-place softmax. `-inf` entries get zero weight;
+/// an all-`-inf` row becomes all zeros (fully-masked attention rows)
+/// instead of NaN.
 pub fn softmax(xs: &mut [f32]) {
     if xs.is_empty() {
         return;
     }
     let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if m == f32::NEG_INFINITY {
+        xs.fill(0.0);
+        return;
+    }
     let mut sum = 0.0f32;
     for x in xs.iter_mut() {
         *x = (*x - m).exp();
@@ -146,6 +152,17 @@ mod tests {
         let mut xs = vec![1e4, 1e4 - 1.0];
         softmax(&mut xs);
         assert!(xs.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn softmax_masked_entries_and_rows() {
+        let mut xs = vec![0.0, f32::NEG_INFINITY, 0.0];
+        softmax(&mut xs);
+        assert_eq!(xs[1], 0.0);
+        assert!((xs[0] - 0.5).abs() < 1e-6);
+        let mut all_masked = vec![f32::NEG_INFINITY; 3];
+        softmax(&mut all_masked);
+        assert_eq!(all_masked, vec![0.0, 0.0, 0.0]);
     }
 
     #[test]

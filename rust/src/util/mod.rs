@@ -2,6 +2,7 @@
 //! the usual crates — rand, serde, clap — are hand-rolled here).
 
 pub mod argparse;
+pub mod clock;
 pub mod json;
 pub mod logging;
 pub mod math;

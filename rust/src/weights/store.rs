@@ -39,6 +39,11 @@ pub struct WeightStore {
     pub expert_bytes: usize,
 }
 
+/// `n` normal samples scaled by `scale` (synthetic weight generation).
+fn randv(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32 * scale).collect()
+}
+
 impl WeightStore {
     pub fn load(cfg: &ModelConfig) -> Result<Self> {
         let tensors = read_bmw(&cfg.weights_path())?;
@@ -68,34 +73,119 @@ impl WeightStore {
         Ok(Self { tensors, experts, expert_bytes: cfg.expert_bytes() })
     }
 
-    /// Synthetic random weights for unit tests (no artifacts needed).
-    pub fn synthetic(cfg: &ModelConfig, seed: u64) -> Self {
-        let mut rng = Rng::new(seed);
-        let mut tensors = BTreeMap::new();
+    /// Non-expert scaffolding shared by both synthetic stores: embedding,
+    /// final gain, and per-layer norms + attention projections.
+    fn synthetic_base(cfg: &ModelConfig, rng: &mut Rng) -> BTreeMap<String, Tensor> {
         let d = cfg.d_model;
-        let (v, e, f) = (cfg.vocab_size, cfg.n_experts, cfg.d_ff);
-        let mut randt = |dims: Vec<usize>, scale: f32| {
-            let n: usize = dims.iter().product();
-            let data = (0..n).map(|_| rng.normal() as f32 * scale).collect();
-            Tensor::new(dims, data).unwrap()
-        };
-        tensors.insert("embed".into(), randt(vec![v, d], 1.0));
+        let v = cfg.vocab_size;
+        let wscale = 1.0 / (d as f32).sqrt();
+        let mut tensors = BTreeMap::new();
+        tensors.insert(
+            "embed".into(),
+            Tensor::new(vec![v, d], randv(rng, v * d, 1.0)).unwrap(),
+        );
         tensors.insert("final_gain".into(), Tensor::new(vec![d], vec![1.0; d]).unwrap());
-        let mut experts = BTreeMap::new();
         for l in 0..cfg.n_layers {
             let p = format!("L{l}.");
             tensors.insert(p.clone() + "ln1", Tensor::new(vec![d], vec![1.0; d]).unwrap());
             tensors.insert(p.clone() + "ln2", Tensor::new(vec![d], vec![1.0; d]).unwrap());
             for n in ["wq", "wk", "wv", "wo"] {
-                tensors.insert(p.clone() + n, randt(vec![d, d], 1.0 / (d as f32).sqrt()));
+                tensors.insert(
+                    p.clone() + n,
+                    Tensor::new(vec![d, d], randv(rng, d * d, wscale)).unwrap(),
+                );
             }
-            tensors.insert(p.clone() + "wg", randt(vec![d, e], 1.0));
-            tensors.insert(p.clone() + "rbias", randt(vec![e], 1.0));
+        }
+        tensors
+    }
+
+    /// Synthetic random weights for unit tests (no artifacts needed).
+    pub fn synthetic(cfg: &ModelConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut tensors = Self::synthetic_base(cfg, &mut rng);
+        let d = cfg.d_model;
+        let (e, f) = (cfg.n_experts, cfg.d_ff);
+        let wscale = 1.0 / (d as f32).sqrt();
+        let w2scale = 1.0 / (f as f32).sqrt();
+        let mut experts = BTreeMap::new();
+        for l in 0..cfg.n_layers {
+            let p = format!("L{l}.");
+            tensors.insert(
+                p.clone() + "wg",
+                Tensor::new(vec![d, e], randv(&mut rng, d * e, 1.0)).unwrap(),
+            );
+            tensors.insert(
+                p.clone() + "rbias",
+                Tensor::new(vec![e], randv(&mut rng, e, 1.0)).unwrap(),
+            );
             for ei in 0..e {
-                let w1 = randt(vec![d, f], 1.0 / (d as f32).sqrt());
-                let w3 = randt(vec![d, f], 1.0 / (d as f32).sqrt());
-                let w2 = randt(vec![f, d], 1.0 / (f as f32).sqrt());
+                let w1 = Tensor::new(vec![d, f], randv(&mut rng, d * f, wscale)).unwrap();
+                let w3 = Tensor::new(vec![d, f], randv(&mut rng, d * f, wscale)).unwrap();
+                let w2 = Tensor::new(vec![f, d], randv(&mut rng, f * d, w2scale)).unwrap();
                 experts.insert(ExpertKey::new(l, ei), Arc::new((w1, w3, w2)));
+            }
+        }
+        Self { tensors, experts, expert_bytes: cfg.expert_bytes() }
+    }
+
+    /// Synthetic weights with *family structure*, mirroring what
+    /// `python/compile/weightgen.py` builds for the real artifacts: experts
+    /// within a family (of `cfg.family_size`) share a base weight matrix
+    /// plus small per-member noise, and the router projection gives family
+    /// members nearly identical logits. Consequences the integration tests
+    /// rely on: family members co-activate (so CFT buddy lists are
+    /// family-dominated) and substituting a missing expert with a resident
+    /// family buddy perturbs the output only slightly — the paper's
+    /// redundancy premise, reproduced without artifacts.
+    pub fn synthetic_families(cfg: &ModelConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut tensors = Self::synthetic_base(cfg, &mut rng);
+        let d = cfg.d_model;
+        let (e, f) = (cfg.n_experts, cfg.d_ff);
+        let fam = cfg.family_size.max(1);
+        let mut experts = BTreeMap::new();
+        let wscale = 1.0 / (d as f32).sqrt();
+        let w2scale = 1.0 / (f as f32).sqrt();
+        for l in 0..cfg.n_layers {
+            let p = format!("L{l}.");
+            // Router: family members get near-identical columns -> they
+            // co-select; per-member noise keeps popularity distinguishable.
+            let n_fam = e.div_ceil(fam);
+            let fam_cols: Vec<Vec<f32>> =
+                (0..n_fam).map(|_| randv(&mut rng, d, 1.0)).collect();
+            let mut wg = vec![0.0f32; d * e];
+            for ei in 0..e {
+                let base = &fam_cols[ei / fam];
+                let noise = randv(&mut rng, d, 0.15);
+                for di in 0..d {
+                    wg[di * e + ei] = base[di] + noise[di];
+                }
+            }
+            tensors.insert(p.clone() + "wg", Tensor::new(vec![d, e], wg).unwrap());
+            tensors.insert(
+                p.clone() + "rbias",
+                Tensor::new(vec![e], randv(&mut rng, e, 0.5)).unwrap(),
+            );
+            // Expert FFNs: shared family base + small member noise.
+            for fi in 0..n_fam {
+                let b1 = randv(&mut rng, d * f, wscale);
+                let b3 = randv(&mut rng, d * f, wscale);
+                let b2 = randv(&mut rng, f * d, w2scale);
+                for m in 0..fam {
+                    let ei = fi * fam + m;
+                    if ei >= e {
+                        break;
+                    }
+                    let perturb = |base: &[f32], scale: f32, rng: &mut Rng| -> Vec<f32> {
+                        base.iter()
+                            .map(|&x| x + rng.normal() as f32 * scale * 0.15)
+                            .collect()
+                    };
+                    let w1 = Tensor::new(vec![d, f], perturb(&b1, wscale, &mut rng)).unwrap();
+                    let w3 = Tensor::new(vec![d, f], perturb(&b3, wscale, &mut rng)).unwrap();
+                    let w2 = Tensor::new(vec![f, d], perturb(&b2, w2scale, &mut rng)).unwrap();
+                    experts.insert(ExpertKey::new(l, ei), Arc::new((w1, w3, w2)));
+                }
             }
         }
         Self { tensors, experts, expert_bytes: cfg.expert_bytes() }
@@ -163,6 +253,24 @@ mod tests {
         assert_eq!(
             a.expert(ExpertKey::new(0, 1)).unwrap().0.data,
             b.expert(ExpertKey::new(0, 1)).unwrap().0.data
+        );
+    }
+
+    #[test]
+    fn family_store_complete_and_family_structured() {
+        let cfg = ModelConfig::test_tiny();
+        let s = WeightStore::synthetic_families(&cfg, 3);
+        assert_eq!(s.expert_count(), cfg.total_experts());
+        assert!(s.tensor("L0.wg").is_ok());
+        // Same-family experts are closer in weight space than cross-family.
+        let flat = |e: usize| s.expert_flat(ExpertKey::new(0, e)).unwrap();
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f32>()
+        };
+        let (e0, e1, ex) = (flat(0), flat(1), flat(cfg.family_size));
+        assert!(
+            dist(&e0, &e1) < dist(&e0, &ex),
+            "family members must be nearer than strangers"
         );
     }
 

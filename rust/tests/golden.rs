@@ -10,7 +10,9 @@ use std::path::Path;
 use std::sync::Arc;
 
 use buddymoe::config::{MissPolicy, ModelConfig, PrefetchKind, ServingConfig};
+use buddymoe::eval::{run_table, MethodSpec, TableSettings};
 use buddymoe::model::{Engine, EngineOptions};
+use buddymoe::util::clock::ClockMode;
 use buddymoe::util::json::Json;
 use buddymoe::weights::WeightStore;
 
@@ -30,11 +32,73 @@ fn oracle_engine(cfg: &ModelConfig, store: Arc<WeightStore>) -> Engine {
         ..Default::default()
     };
     let opts = EngineOptions {
-        time_scale: 0.0,
+        clock: ClockMode::Virtual,
         record_logits: true,
         ..Default::default()
     };
     Engine::new(cfg.clone(), scfg, store, None, None, opts).expect("engine")
+}
+
+/// The virtual-clock determinism contract behind the whole eval harness: a
+/// Table-2-shaped sweep (4 methods, c = 0.75) run twice with the same seed
+/// must produce identical `EvalOutcome` rows — including the virtual-time
+/// `wall_s` / `tok_s` measurements — and byte-identical markdown. Runs on
+/// the reference backend with synthetic family weights, so it needs no
+/// artifacts and finishes in well under the acceptance budget.
+#[test]
+fn virtual_table_sweep_is_byte_identical() {
+    let cfg = ModelConfig::synthetic_small();
+    let store = Arc::new(WeightStore::synthetic_families(&cfg, 99));
+    let settings = TableSettings {
+        cache_rate: 0.75,
+        n_easy: 2,
+        n_hard: 2,
+        max_new: 4,
+        seed: 42,
+        clock: ClockMode::Virtual,
+    };
+    let methods = vec![
+        MethodSpec::new("Original (on-demand)", "original"),
+        MethodSpec::new("Random", "random"),
+        MethodSpec::new("BuddyMoE t=0.75 |B|=4", "buddy-tight"),
+        MethodSpec::new("BuddyMoE t=0.95 |B|=16 rho=3", "buddy-rho3"),
+    ];
+    let (rows_a, md_a) =
+        run_table(&cfg, store.clone(), &settings, &methods).expect("first sweep");
+    let (rows_b, md_b) = run_table(&cfg, store, &settings, &methods).expect("second sweep");
+
+    assert_eq!(rows_a.len(), 4);
+    assert_eq!(rows_a, rows_b, "same seed must reproduce every outcome row exactly");
+    assert_eq!(md_a, md_b, "markdown reports must be byte-identical");
+    // Virtual time passed (the simulation modeled compute + transfers) even
+    // though the sweep itself ran in milliseconds of wall time.
+    for r in &rows_a {
+        assert!(r.wall_s > 0.0, "virtual wall time must be positive");
+        assert!(r.tok_s > 0.0, "virtual throughput must be positive");
+    }
+}
+
+/// Cheaper sanity companion: two engines with the same seed generate the
+/// same tokens on the reference backend (determinism below the harness).
+#[test]
+fn reference_engine_decode_is_deterministic() {
+    let cfg = ModelConfig::synthetic_small();
+    let store = Arc::new(WeightStore::synthetic_families(&cfg, 7));
+    let run = || {
+        let mut eng = oracle_engine(&cfg, store.clone());
+        let mut seq = eng.new_sequence(vec![3, 9, 17, 4], 6);
+        eng.prefill(&mut seq).expect("prefill");
+        for _ in 0..6 {
+            let mut batch = [&mut seq];
+            eng.decode_step(&mut batch).expect("decode");
+        }
+        eng.shutdown();
+        (seq.generated.clone(), seq.logits_log.clone())
+    };
+    let (tok_a, log_a) = run();
+    let (tok_b, log_b) = run();
+    assert_eq!(tok_a, tok_b);
+    assert_eq!(log_a, log_b);
 }
 
 #[test]
@@ -47,6 +111,13 @@ fn engine_matches_python_reference() {
     let cfg = ModelConfig::load(&dir).expect("config");
     let store = Arc::new(WeightStore::load(&cfg).expect("weights"));
     let mut eng = oracle_engine(&cfg, store);
+    if eng.backend_name() != "pjrt" {
+        // The golden trace was produced through the python/PJRT numerics;
+        // reference-vs-PJRT parity is a separate (ROADMAP) contract.
+        eprintln!("skipping: golden decode trace requires the PJRT backend");
+        eng.shutdown();
+        return;
+    }
 
     let golden_text = std::fs::read_to_string(cfg.golden_path()).expect("golden file");
     let golden = Json::parse(&golden_text).expect("golden json");
@@ -120,11 +191,16 @@ fn router_fixture_matches() {
         ..Default::default()
     };
     let opts = EngineOptions {
-        time_scale: 0.0,
+        clock: ClockMode::Virtual,
         collect_profile: true,
         ..Default::default()
     };
     let mut eng = Engine::new(cfg.clone(), scfg, store, None, None, opts).expect("engine");
+    if eng.backend_name() != "pjrt" {
+        eprintln!("skipping: router golden fixture requires the PJRT backend");
+        eng.shutdown();
+        return;
+    }
 
     let golden_text = std::fs::read_to_string(cfg.golden_path()).unwrap();
     let golden = Json::parse(&golden_text).unwrap();

@@ -3,7 +3,7 @@
 
 use buddymoe::buddy::{BuddyProfile, SlotDecision, SubstitutionEngine, TokenRouting};
 use buddymoe::config::MissPolicy;
-use buddymoe::memory::{EvictPolicy, ExpertCache, LoadDecision};
+use buddymoe::memory::{EvictPolicy, ExpertCache, LoadDecision, SlotState};
 use buddymoe::profilecollect::ProfileCollector;
 use buddymoe::stats::Counters;
 use buddymoe::testing::{forall, PropConfig};
@@ -158,6 +158,191 @@ fn prop_residency_mask_consistent() {
             }
             if mask.iter().filter(|&&m| m).count() != cache.gpu_count(0) {
                 return Err("count mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Shadow model for the cache state machine: what SlotState should be,
+/// given only the legal transitions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ModelState {
+    Cpu,
+    Loading,
+    Gpu,
+}
+
+#[test]
+fn prop_cache_capacity_counts_loading_slots() {
+    // The layer budget covers GPU-resident *and* in-flight experts: a
+    // `Loading` slot owns real GPU memory the moment the transfer starts.
+    forall(
+        PropConfig { cases: 80, seed: 23 },
+        |rng| {
+            let cap = rng.range(1, 5);
+            // op: 0 = request_load, 1 = complete a random loading expert,
+            // 2 = abort a random loading expert, 3 = mark_use.
+            let ops: Vec<(usize, usize)> = (0..300)
+                .map(|_| (rng.below(4), rng.below(8)))
+                .collect();
+            (cap, ops)
+        },
+        |(cap, ops)| {
+            let mut cache = ExpertCache::new(2, 8, *cap, EvictPolicy::Lru);
+            for &(op, e) in ops {
+                let k = ExpertKey::new(e % 2, e);
+                match op {
+                    0 => {
+                        let _ = cache.request_load(k);
+                    }
+                    1 => {
+                        if cache.state(k) == SlotState::Loading {
+                            cache.complete_load(k);
+                        }
+                    }
+                    2 => cache.abort_load(k),
+                    _ => cache.mark_use(k),
+                }
+                for layer in 0..2 {
+                    let gpu = cache.gpu_count(layer);
+                    let loading = (0..8)
+                        .filter(|&ei| {
+                            cache.state(ExpertKey::new(layer, ei)) == SlotState::Loading
+                        })
+                        .count();
+                    if gpu + loading > *cap {
+                        return Err(format!(
+                            "layer {layer}: {gpu} gpu + {loading} loading > cap {cap}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pinned_experts_never_evicted() {
+    forall(
+        PropConfig { cases: 80, seed: 24 },
+        |rng| {
+            let n = 8;
+            let cap = rng.range(2, 5);
+            let pinned: Vec<usize> = (0..n).filter(|_| rng.bool(0.3)).collect();
+            let loads: Vec<usize> = (0..60).map(|_| rng.below(n)).collect();
+            (cap, pinned, loads)
+        },
+        |(cap, pinned, loads)| {
+            let mut cache = ExpertCache::new(1, 8, *cap, EvictPolicy::Lru);
+            // Admit + pin a subset (never more than the capacity).
+            for (i, &e) in pinned.iter().take(*cap).enumerate() {
+                let k = ExpertKey::new(0, e);
+                cache.admit(k).map_err(|err| format!("admit {i}: {err}"))?;
+                cache.pin(k);
+            }
+            let protected: Vec<usize> = pinned.iter().take(*cap).copied().collect();
+            for &e in loads {
+                let k = ExpertKey::new(0, e);
+                if let LoadDecision::StartLoad { evicted } = cache.request_load(k) {
+                    if let Some(v) = evicted {
+                        if protected.contains(&v.expert) {
+                            return Err(format!("evicted pinned expert {}", v.expert));
+                        }
+                    }
+                    cache.complete_load(k);
+                }
+                // Pinned experts must still be resident.
+                for &p in &protected {
+                    if !cache.is_gpu(ExpertKey::new(0, p)) {
+                        return Err(format!("pinned expert {p} left the GPU"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_load_state_machine_legality() {
+    // Random op sequences against a shadow model: request_load /
+    // complete_load / abort_load transitions must match the documented
+    // state machine exactly, and decisions must agree with the model.
+    forall(
+        PropConfig { cases: 100, seed: 25 },
+        |rng| {
+            let cap = rng.range(1, 4);
+            let ops: Vec<(usize, usize)> = (0..200)
+                .map(|_| (rng.below(3), rng.below(6)))
+                .collect();
+            (cap, ops)
+        },
+        |(cap, ops)| {
+            let mut cache = ExpertCache::new(1, 6, *cap, EvictPolicy::Lru);
+            let mut model = [ModelState::Cpu; 6];
+            for &(op, e) in ops {
+                let k = ExpertKey::new(0, e);
+                match op {
+                    0 => {
+                        let dec = cache.request_load(k);
+                        match (model[e], dec) {
+                            (ModelState::Gpu, LoadDecision::AlreadyGpu) => {}
+                            (ModelState::Loading, LoadDecision::AlreadyLoading) => {}
+                            (ModelState::Cpu, LoadDecision::StartLoad { evicted }) => {
+                                if let Some(v) = evicted {
+                                    if model[v.expert] != ModelState::Gpu {
+                                        return Err(format!(
+                                            "evicted expert {} was not Gpu",
+                                            v.expert
+                                        ));
+                                    }
+                                    model[v.expert] = ModelState::Cpu;
+                                }
+                                model[e] = ModelState::Loading;
+                            }
+                            (ModelState::Cpu, LoadDecision::NoRoom) => {
+                                // Legal only when no Gpu slot is evictable;
+                                // with no pins that means the layer is full
+                                // of Loading slots.
+                                let gpu = model.iter().filter(|&&s| s == ModelState::Gpu).count();
+                                if gpu != 0 {
+                                    return Err("NoRoom despite evictable Gpu slot".into());
+                                }
+                            }
+                            (m, d) => {
+                                return Err(format!("model {m:?} but decision {d:?}"))
+                            }
+                        }
+                    }
+                    1 => {
+                        // complete_load is only legal while Loading.
+                        if model[e] == ModelState::Loading {
+                            cache.complete_load(k);
+                            model[e] = ModelState::Gpu;
+                        }
+                    }
+                    _ => {
+                        // abort_load: Loading -> Cpu, no-op otherwise.
+                        cache.abort_load(k);
+                        if model[e] == ModelState::Loading {
+                            model[e] = ModelState::Cpu;
+                        }
+                    }
+                }
+                // Cache state must track the model everywhere.
+                for (ei, &m) in model.iter().enumerate() {
+                    let got = cache.state(ExpertKey::new(0, ei));
+                    let want = match m {
+                        ModelState::Cpu => SlotState::Cpu,
+                        ModelState::Loading => SlotState::Loading,
+                        ModelState::Gpu => SlotState::Gpu,
+                    };
+                    if got != want {
+                        return Err(format!("expert {ei}: cache {got:?} != model {want:?}"));
+                    }
+                }
             }
             Ok(())
         },
