@@ -1,0 +1,88 @@
+//! ROADMAP bandwidth sweep (the paper's Figure 8 axis): serve the same
+//! workload at PCIe bandwidths 4–64 GB/s under `ClockMode::Virtual` and
+//! print tok/s per miss policy. The whole sweep is a discrete-event
+//! simulation — milliseconds of wall time per point — and shows where
+//! buddy substitution stops mattering: once the link is fast enough,
+//! on-demand fetches are cheap and every policy converges.
+//!
+//! Run: `cargo run --release --example sweep_bandwidth [-- --fast]`
+//! Works with or without artifacts (synthetic-family fallback).
+
+use std::path::Path;
+
+use anyhow::Result;
+use buddymoe::buddy::BuddyProfile;
+use buddymoe::config::ServingConfig;
+use buddymoe::eval::{build_requests, profile_model, warm_rank_from_profile, TableSettings};
+use buddymoe::model::{Engine, EngineOptions};
+use buddymoe::server::Server;
+use buddymoe::util::clock::ClockMode;
+
+fn main() -> Result<()> {
+    buddymoe::util::logging::init();
+    let fast = std::env::args().any(|a| a == "--fast");
+
+    // Artifacts when built; otherwise the synthetic-family model (the
+    // shared eval fallback), so the sweep runs anywhere.
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let (cfg, store) = buddymoe::eval::load_model_or_synthetic(&dir, 4242)?;
+
+    let settings = TableSettings {
+        cache_rate: 0.5,
+        n_easy: if fast { 3 } else { 6 },
+        n_hard: if fast { 3 } else { 6 },
+        max_new: if fast { 8 } else { 16 },
+        seed: 42,
+        clock: ClockMode::Virtual,
+    };
+    let pc = profile_model(&cfg, store.clone(), if fast { 16 } else { 48 }, 7777)?;
+    let warm = warm_rank_from_profile(&pc);
+
+    println!(
+        "# PCIe bandwidth sweep at c = {} (virtual clock, seed {})\n",
+        settings.cache_rate, settings.seed
+    );
+    println!("| GB/s | policy | tok/s | demand MB | substitutions | fetches |");
+    println!("|---|---|---|---|---|---|");
+    for bw_gbps in [4.0f64, 8.0, 16.0, 32.0, 64.0] {
+        for preset in ["original", "random", "buddy-tight", "buddy-rho3"] {
+            let mut scfg = ServingConfig::default().preset(preset)?;
+            scfg.cache_rate = settings.cache_rate;
+            scfg.pcie_bandwidth = bw_gbps * 1e9;
+            scfg.seed = settings.seed;
+            let buddies = BuddyProfile::build(
+                &pc,
+                &vec![scfg.cft_alpha; cfg.n_layers],
+                scfg.k_max,
+                1e-3,
+                true,
+            )?;
+            let engine = Engine::new(
+                cfg.clone(),
+                scfg,
+                store.clone(),
+                Some(buddies),
+                Some(warm.clone()),
+                EngineOptions { clock: settings.clock, ..Default::default() },
+            )?;
+            let mut server = Server::new(engine);
+            let clock = server.engine.clock();
+            let t0 = clock.now();
+            server.run_offline(build_requests(&cfg, &settings))?;
+            let wall = clock.since(t0).max(1e-12);
+            let demand_mb = server
+                .engine
+                .transfer_handle()
+                .with_state(|st| st.pcie.stats.demand_bytes) as f64
+                / (1024.0 * 1024.0);
+            println!(
+                "| {bw_gbps:.0} | {preset} | {:.2} | {demand_mb:.2} | {} | {} |",
+                server.metrics.tokens_out as f64 / wall,
+                server.engine.counters.get("substitutions"),
+                server.engine.counters.get("fetches"),
+            );
+            server.engine.shutdown();
+        }
+    }
+    Ok(())
+}

@@ -45,6 +45,14 @@ pub fn load_model() -> Option<(ModelConfig, Arc<WeightStore>)> {
     Some((cfg, store))
 }
 
+/// The artifact model when built; otherwise the synthetic family model
+/// (the shared `eval::load_model_or_synthetic` fallback) so the bench
+/// runs anywhere — CI included.
+#[allow(dead_code)]
+pub fn load_model_or_synthetic() -> (ModelConfig, Arc<WeightStore>) {
+    buddymoe::eval::load_model_or_synthetic(&artifacts_dir(), 2024).expect("model")
+}
+
 /// `--fast` shrinks workloads for CI-style runs.
 #[allow(dead_code)]
 pub fn fast_mode() -> bool {

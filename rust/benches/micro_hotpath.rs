@@ -1,24 +1,36 @@
 //! Micro-benchmarks of the L3 hot path: the paper claims the substitution
 //! logic adds negligible latency next to expert compute. Quantify every
 //! piece: top-k, TAE gate, Algorithm 1, cache ops, host router (PreGate),
-//! and one expert FFN invocation through PJRT for scale.
+//! one expert FFN invocation, the raw kernels (naive vs blocked), and a
+//! full decode step through the reference backend across kernel modes and
+//! thread counts.
+//!
+//! Runs with or without artifacts (synthetic fallback), so CI can execute
+//! it in `--fast` mode. Emits machine-readable `BENCH_hotpath.json` next
+//! to Cargo.toml — the perf trajectory artifact uploaded by CI.
 
 mod bench_support;
 
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::sync::Arc;
 
 use buddymoe::buddy::{BuddyProfile, GateParams, SubstitutionEngine, TokenRouting};
-use buddymoe::config::{MissPolicy, ServingConfig};
+use buddymoe::config::{MissPolicy, ModelConfig, PrefetchKind, ServingConfig};
+use buddymoe::model::{Engine, EngineOptions};
 use buddymoe::prefetch::host_router_probs;
 use buddymoe::profilecollect::ProfileCollector;
+use buddymoe::runtime::{kernels, BackendKind};
 use buddymoe::stats::Counters;
+use buddymoe::util::clock::ClockMode;
+use buddymoe::util::json::{num, s, Json};
 use buddymoe::util::math::{tae, top_k};
+use buddymoe::util::par;
 use buddymoe::util::rng::Rng;
+use buddymoe::weights::WeightStore;
 
 fn main() {
-    let Some((cfg, store)) = bench_support::load_model() else {
-        return;
-    };
+    let (cfg, store) = bench_support::load_model_or_synthetic();
     let iters = if bench_support::fast_mode() { 200 } else { 2000 };
     let mut rng = Rng::new(3);
 
@@ -26,12 +38,18 @@ fn main() {
     println!("| op | mean | p95 |");
     println!("|---|---|---|");
 
-    // top-k over 64 experts
+    // top-k over the router width
     let probs: Vec<f32> = (0..cfg.n_experts).map(|_| rng.f32()).collect();
     let (m, p) = bench_support::time_it(100, iters, || {
         let _ = top_k(&probs, cfg.top_k);
     });
-    println!("| top-k (E=64, k=6) | {:.2} us | {:.2} us |", m * 1e6, p * 1e6);
+    println!(
+        "| top-k (E={}, k={}) | {:.2} us | {:.2} us |",
+        cfg.n_experts,
+        cfg.top_k,
+        m * 1e6,
+        p * 1e6
+    );
 
     // TAE gate
     let w = [0.3f32, 0.2, 0.18, 0.14, 0.1, 0.08];
@@ -40,7 +58,7 @@ fn main() {
     });
     println!("| TAE (k=6) | {:.3} us | {:.3} us |", m * 1e6, p * 1e6);
 
-    // Algorithm 1 over a full decode batch (8 tokens x top-6)
+    // Algorithm 1 over a full decode batch (8 tokens x top-k)
     let mut pc = ProfileCollector::new(cfg.n_layers, cfg.n_experts);
     for _ in 0..4000 {
         let fam = rng.below(cfg.n_experts / cfg.family_size);
@@ -55,6 +73,7 @@ fn main() {
     eng.gates = GateParams { tau: 0.2, beta: 1.0, margin_gamma: None, temperature: None };
     let residency: Vec<bool> = (0..cfg.n_experts).map(|e| e % 2 == 0).collect();
     let mut counters = Counters::new();
+    let top_k_w = vec![1.0 / cfg.top_k as f32; cfg.top_k];
     let mk_batch = |rng: &mut Rng| -> Vec<TokenRouting> {
         (0..8)
             .map(|_| {
@@ -65,7 +84,7 @@ fn main() {
                         sel.push(e);
                     }
                 }
-                TokenRouting { selected: sel, weights: vec![1.0 / 6.0; 6] }
+                TokenRouting { selected: sel, weights: top_k_w.clone() }
             })
             .collect()
     };
@@ -83,7 +102,8 @@ fn main() {
         );
     });
     println!(
-        "| Algorithm 1 (batch of 8 x top-6, ~50% miss) | {:.2} us | {:.2} us |",
+        "| Algorithm 1 (batch of 8 x top-{}, ~50% miss) | {:.2} us | {:.2} us |",
+        cfg.top_k,
         m * 1e6,
         p * 1e6
     );
@@ -113,6 +133,180 @@ fn main() {
         scfg.transfer_seconds(store.expert_bytes) * 1e3
     );
     let _ = Arc::strong_count(&store);
+
+    // ------------------------------------------------------------------
+    // Raw kernels + full decode step: naive vs blocked, 1..4 threads.
+    // ------------------------------------------------------------------
+    let mut json = BTreeMap::new();
+    kernel_bench(iters, &mut json);
+    decode_step_bench(&mut json);
+
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_hotpath.json");
+    std::fs::write(&path, Json::Obj(json).to_string() + "\n").expect("write BENCH_hotpath.json");
+    println!("\nwrote {}", path.display());
+}
+
+/// A synthetic model sized so kernels, not fixed overheads, dominate the
+/// decode step (the artifact/test models are deliberately tiny).
+fn perf_cfg() -> ModelConfig {
+    let mut cfg = ModelConfig::synthetic_small();
+    cfg.name = "bench-hotpath".into();
+    cfg.vocab_size = 2048;
+    cfg.d_model = 128;
+    cfg.n_heads = 4;
+    cfg.head_dim = 32;
+    cfg.n_layers = 4;
+    cfg.n_experts = 16;
+    cfg.top_k = 4;
+    cfg.d_ff = 256;
+    cfg.max_seq = 64;
+    cfg.token_buckets = vec![1, 2, 4, 8, 16, 32, 64];
+    cfg.batch_buckets = vec![1, 2, 4, 8];
+    cfg.family_size = 4;
+    cfg
+}
+
+/// Naive vs blocked kernels at decode-relevant shapes (single thread, so
+/// the delta is pure blocking/layout, no parallelism).
+fn kernel_bench(iters: usize, json: &mut BTreeMap<String, Json>) {
+    use buddymoe::runtime::kernels::naive;
+
+    let mut rng = Rng::new(17);
+    let iters = iters.min(500);
+    par::set_threads(1);
+
+    println!("\n# Kernels: naive vs blocked (single thread)\n");
+    println!("| kernel | shape | naive mean | blocked mean | speedup |");
+    println!("|---|---|---|---|---|");
+
+    // Expert-FFN-shaped matmul: [8, 128] @ [128, 256].
+    let (mm, k, n) = (8usize, 128usize, 256usize);
+    let a: Vec<f32> = (0..mm * k).map(|_| rng.f32() - 0.5).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.f32() - 0.5).collect();
+    let (nm, _) = bench_support::time_it(20, iters, || {
+        let _ = naive::matmul(&a, mm, k, &b, n);
+    });
+    let (bm, _) = bench_support::time_it(20, iters, || {
+        let _ = kernels::matmul(&a, mm, k, &b, n);
+    });
+    println!(
+        "| matmul | [{mm},{k}]@[{k},{n}] | {:.2} us | {:.2} us | {:.2}x |",
+        nm * 1e6,
+        bm * 1e6,
+        nm / bm.max(1e-12)
+    );
+    json.insert("matmul_naive_s".into(), num(nm));
+    json.insert("matmul_blocked_s".into(), num(bm));
+
+    // lm-head-shaped transposed matmul: [8, 128] @ [2048, 128]^T.
+    let v = 2048usize;
+    let bt: Vec<f32> = (0..v * k).map(|_| rng.f32() - 0.5).collect();
+    let (nm, _) = bench_support::time_it(10, iters.min(200), || {
+        let _ = naive::matmul_bt(&a, mm, k, &bt, v);
+    });
+    let (bm, _) = bench_support::time_it(10, iters.min(200), || {
+        let _ = kernels::matmul_bt(&a, mm, k, &bt, v);
+    });
+    println!(
+        "| matmul_bt | [{mm},{k}]@[{v},{k}]^T | {:.2} us | {:.2} us | {:.2}x |",
+        nm * 1e6,
+        bm * 1e6,
+        nm / bm.max(1e-12)
+    );
+    json.insert("matmul_bt_naive_s".into(), num(nm));
+    json.insert("matmul_bt_blocked_s".into(), num(bm));
+    par::set_threads(0);
+}
+
+/// Full decode step (embed → attention → router → experts → lm head) on
+/// the reference backend: naive baseline vs blocked kernels at 1/2/4
+/// threads. The ≥4x acceptance number is `speedup_best_vs_naive`.
+fn decode_step_bench(json: &mut BTreeMap<String, Json>) {
+    let cfg = perf_cfg();
+    let store = Arc::new(WeightStore::synthetic_families(&cfg, 2024));
+    let batch = 8usize;
+    // Stay within the KV budget: warmup + iters decode steps per engine.
+    let warmup = 3usize;
+    let iters = if bench_support::fast_mode() { 12 } else { 40 };
+
+    println!(
+        "\n# Decode step, reference backend (d={}, ff={}, V={}, L={}, batch={batch})\n",
+        cfg.d_model, cfg.d_ff, cfg.vocab_size, cfg.n_layers
+    );
+    println!("| kernels | threads | mean | p95 |");
+    println!("|---|---|---|---|");
+
+    let mut results: Vec<(String, f64)> = Vec::new();
+    for (mode_name, naive) in [("naive", true), ("blocked", false)] {
+        if naive {
+            std::env::set_var("PALLAS_NAIVE", "1");
+        } else {
+            std::env::remove_var("PALLAS_NAIVE");
+        }
+        for threads in [1usize, 2, 4] {
+            if naive && threads > 1 {
+                continue; // the baseline is the old single-core path
+            }
+            par::set_threads(threads);
+            let scfg = ServingConfig {
+                cache_rate: 1.0,
+                miss_policy: MissPolicy::OnDemand,
+                prefetch: PrefetchKind::None,
+                ..Default::default()
+            };
+            let opts = EngineOptions {
+                clock: ClockMode::Virtual,
+                backend: BackendKind::Reference,
+                ..Default::default()
+            };
+            let mut engine =
+                Engine::new(cfg.clone(), scfg, store.clone(), None, None, opts).unwrap();
+            let mut seqs: Vec<_> = (0..batch)
+                .map(|i| engine.new_sequence(vec![3 + i as i32, 9, 17, 4, 2, 11], iters + warmup))
+                .collect();
+            for sq in seqs.iter_mut() {
+                engine.prefill(sq).unwrap();
+            }
+            let (mean, p95) = bench_support::time_it(warmup, iters, || {
+                let mut batch_refs: Vec<&mut _> = seqs.iter_mut().collect();
+                engine.decode_step(&mut batch_refs).unwrap();
+            });
+            println!(
+                "| {mode_name} | {threads} | {:.3} ms | {:.3} ms |",
+                mean * 1e3,
+                p95 * 1e3
+            );
+            let label = format!("{mode_name}_t{threads}");
+            json.insert(format!("decode_step_mean_s_{label}"), num(mean));
+            json.insert(format!("decode_step_p95_s_{label}"), num(p95));
+            results.push((label, mean));
+            engine.shutdown();
+        }
+    }
+    par::set_threads(0);
+    std::env::remove_var("PALLAS_NAIVE");
+
+    json.insert("bench".into(), s("micro_hotpath"));
+    json.insert("d_model".into(), num(cfg.d_model as f64));
+    json.insert("d_ff".into(), num(cfg.d_ff as f64));
+    json.insert("vocab_size".into(), num(cfg.vocab_size as f64));
+    json.insert("n_layers".into(), num(cfg.n_layers as f64));
+    json.insert("batch".into(), num(batch as f64));
+
+    let naive1 = results.iter().find(|r| r.0 == "naive_t1").map(|r| r.1);
+    let blocked1 = results.iter().find(|r| r.0 == "blocked_t1").map(|r| r.1);
+    let best = results
+        .iter()
+        .filter(|r| r.0.starts_with("blocked"))
+        .map(|r| r.1)
+        .fold(f64::INFINITY, f64::min);
+    if let (Some(n1), Some(b1)) = (naive1, blocked1) {
+        let s1 = n1 / b1.max(1e-12);
+        let sb = n1 / best.max(1e-12);
+        json.insert("speedup_blocked1_vs_naive1".into(), num(s1));
+        json.insert("speedup_best_vs_naive".into(), num(sb));
+        println!("\nspeedup: blocked@1T = {s1:.2}x, best blocked = {sb:.2}x vs naive@1T");
+    }
 }
 
 #[cfg(feature = "pjrt")]
@@ -125,6 +319,10 @@ fn expert_ffn_bench(
     use buddymoe::util::tensor::Tensor;
     use buddymoe::weights::ExpertKey;
 
+    if cfg.artifacts.is_empty() {
+        eprintln!("SKIP expert FFN via PJRT: no artifacts");
+        return;
+    }
     let rt = Runtime::cpu().unwrap();
     let mut reg = rt.load_artifacts(cfg).unwrap();
     let key = ExpertKey::new(0, 0);

@@ -98,6 +98,26 @@ pub fn build_requests(cfg: &ModelConfig, st: &TableSettings) -> Vec<InferenceReq
     inter
 }
 
+/// The artifact model at `dir` when built; otherwise the synthetic family
+/// model (`ModelConfig::synthetic_small` + `WeightStore::synthetic_families`
+/// seeded with `seed`) — the single artifacts-or-synthetic fallback shared
+/// by benches, examples, and integration tests.
+pub fn load_model_or_synthetic(
+    dir: &std::path::Path,
+    seed: u64,
+) -> Result<(ModelConfig, Arc<WeightStore>)> {
+    if dir.join("model_config.json").exists() {
+        let cfg = ModelConfig::load(dir)?;
+        let store = Arc::new(WeightStore::load(&cfg)?);
+        Ok((cfg, store))
+    } else {
+        log::info!("artifacts not built — using synthetic family weights (seed {seed})");
+        let cfg = ModelConfig::synthetic_small();
+        let store = Arc::new(WeightStore::synthetic_families(&cfg, seed));
+        Ok((cfg, store))
+    }
+}
+
 /// Run the profiling corpus through a full-residency engine and collect
 /// co-activation statistics (the offline phase; held-out seed).
 pub fn profile_model(

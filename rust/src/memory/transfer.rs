@@ -56,6 +56,9 @@ struct InFlight {
 }
 
 /// Cache + link + arrival/eviction mailboxes, all behind one mutex.
+/// Arrivals carry [`ExpertWeights`] by `Arc` — staging a completed
+/// transfer is a pointer move, not a weight copy (the simulated link
+/// already charged the PCIe time for the bytes).
 pub struct EngineState {
     pub cache: ExpertCache,
     pub pcie: PcieSim,

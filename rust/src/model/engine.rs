@@ -11,7 +11,7 @@
 //! clock, so throughput/latency numbers are deterministic simulated
 //! measurements; under a real-time clock they are genuine elapsed time.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -28,6 +28,7 @@ use crate::runtime::{BackendKind, RefStages, StageRunner};
 use crate::stats::Counters;
 use crate::util::clock::{ClockMode, SimClock};
 use crate::util::math::argmax;
+use crate::util::par;
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
 use crate::weights::{ExpertKey, ExpertWeights, WeightStore};
@@ -86,6 +87,9 @@ pub struct Engine {
     transfer: TransferHandle,
     clock: SimClock,
     buddy_profile: Option<BuddyProfile>,
+    /// Empty profile built once at construction for the no-buddy path
+    /// (previously rebuilt inside every per-layer `run_moe` call).
+    fallback_profile: Option<BuddyProfile>,
     predictor: Option<Box<dyn Predictor>>,
     prefetcher: PrefetchEngine,
     pub counters: Counters,
@@ -155,6 +159,21 @@ impl Engine {
             .collect_profile
             .then(|| ProfileCollector::new(cfg.n_layers, cfg.n_experts));
 
+        // Without a buddy profile every run_moe call needs *some*
+        // SubstitutionEngine; build the empty profile once here instead of
+        // per layer per step.
+        let fallback_profile = if buddy_profile.is_none() {
+            Some(BuddyProfile::build(
+                &ProfileCollector::new(cfg.n_layers, cfg.n_experts),
+                &vec![1.0; cfg.n_layers],
+                1,
+                1e-9,
+                false,
+            )?)
+        } else {
+            None
+        };
+
         Ok(Self {
             rng: Rng::new(scfg.seed),
             cfg,
@@ -165,6 +184,7 @@ impl Engine {
             transfer,
             clock,
             buddy_profile,
+            fallback_profile,
             predictor,
             prefetcher,
             counters: Counters::new(),
@@ -431,11 +451,14 @@ impl Engine {
         let n_real = routings.len();
         let d = self.cfg.d_model;
 
-        // Verification step of the prefetch pipeline (Fig 3).
+        // Verification step of the prefetch pipeline (Fig 3). First-seen
+        // order is load-bearing (mark_use ticks, prefetch verification), so
+        // dedup with a set membership check but keep the Vec ordering.
         let mut actual_unique: Vec<usize> = Vec::new();
+        let mut actual_seen: BTreeSet<usize> = BTreeSet::new();
         for r in routings.iter() {
             for &e in &r.selected {
-                if !actual_unique.contains(&e) {
+                if actual_seen.insert(e) {
                     actual_unique.push(e);
                 }
             }
@@ -476,19 +499,17 @@ impl Engine {
             );
             dec
         } else {
-            // No buddy profile: degrade Buddy policy to OnDemand.
+            // No buddy profile: degrade Buddy policy to OnDemand and use
+            // the empty profile built once at engine construction.
             let policy = match self.scfg.miss_policy {
                 MissPolicy::Buddy => MissPolicy::OnDemand,
                 p => p,
             };
-            let dummy_profile = BuddyProfile::build(
-                &ProfileCollector::new(self.cfg.n_layers, self.cfg.n_experts),
-                &vec![1.0; self.cfg.n_layers],
-                1,
-                1e-9,
-                false,
-            )?;
-            let eng = SubstitutionEngine::new(&dummy_profile);
+            let dummy_profile = self
+                .fallback_profile
+                .as_ref()
+                .expect("fallback profile built when no buddy profile is given");
+            let eng = SubstitutionEngine::new(dummy_profile);
             let (dec, _) = eng.apply(
                 l,
                 routings,
@@ -503,23 +524,27 @@ impl Engine {
         tel.substitutions += self.counters.get("substitutions") - sub_counters_before;
 
         // Pin every expert we are about to use, then fetch the misses.
+        // First-seen order again drives transfer-request order, so dedup
+        // via sets without reordering the Vecs.
         let mut used: Vec<usize> = Vec::new();
+        let mut used_set: BTreeSet<usize> = BTreeSet::new();
         let mut fetches: Vec<usize> = Vec::new();
+        let mut fetch_set: BTreeSet<usize> = BTreeSet::new();
         for (r, dec) in routings.iter().zip(&decisions) {
             for (slot, d) in dec.iter().enumerate() {
                 let e = r.selected[slot];
                 match d {
                     SlotDecision::Dropped => {}
                     SlotDecision::Fetch => {
-                        if !fetches.contains(&e) {
+                        if fetch_set.insert(e) {
                             fetches.push(e);
                         }
-                        if !used.contains(&e) {
+                        if used_set.insert(e) {
                             used.push(e);
                         }
                     }
                     _ => {
-                        if !used.contains(&e) {
+                        if used_set.insert(e) {
                             used.push(e);
                         }
                     }
@@ -576,21 +601,40 @@ impl Engine {
             }
         }
 
-        let mut out = Tensor::zeros(vec![n_real, d]);
-        for (&e, members) in &groups {
+        // Expert FFNs are independent work units: fan them out over scoped
+        // threads (when the per-group work warrants it), then combine
+        // sequentially in ascending-expert order so the weighted summation
+        // order — and therefore the golden outputs — never changes.
+        let group_list: Vec<(usize, Vec<(usize, usize)>)> = groups.into_iter().collect();
+        let cfg = &self.cfg;
+        let stages: &dyn StageRunner = self.stages.as_ref();
+        let run_group = |gi: usize| -> Result<Tensor> {
+            let (e, members) = &group_list[gi];
             let rows: Vec<usize> = members.iter().map(|&(t, _)| t).collect();
-            let grp = h.gather_rows(&rows);
-            let tb = self
-                .cfg
+            let tb = cfg
                 .token_bucket_for(rows.len())
                 .context("expert group exceeds largest bucket")?;
-            let grp = grp.pad_rows(tb);
-            let key = ExpertKey::new(l, e);
-            let y = if let Some(w) = transient_weights.get(&e) {
-                self.stages.expert_transient(tb, w, &grp)?
+            let grp = h.gather_rows(&rows).pad_rows(tb);
+            let key = ExpertKey::new(l, *e);
+            if let Some(w) = transient_weights.get(e) {
+                stages.expert_transient(tb, w, &grp)
             } else {
-                self.stages.expert_resident(tb, key, &grp)?
-            };
+                stages.expert_resident(tb, key, &grp)
+            }
+        };
+        // Runtime dispatch, not a cargo feature: the PJRT backend's device
+        // handles are thread-confined (`supports_parallel` = false, see
+        // runtime/pjrt.rs), while the reference backend keeps its
+        // multi-core fan-out under every feature set.
+        let ys: Vec<Result<Tensor>> = if stages.supports_parallel() {
+            par::par_map(group_list.len(), cfg.d_model * cfg.d_ff * 3, &run_group)
+        } else {
+            (0..group_list.len()).map(&run_group).collect()
+        };
+
+        let mut out = Tensor::zeros(vec![n_real, d]);
+        for ((_, members), y) in group_list.iter().zip(ys) {
+            let y = y?;
             for (i, &(t, slot)) in members.iter().enumerate() {
                 let w = routings[t].weights[slot];
                 let orow = out.row_mut(t);
@@ -602,7 +646,7 @@ impl Engine {
         }
         // Model the MoE compute cost (one FFN pass per invoked expert).
         self.clock.advance(Duration::from_secs_f64(
-            self.scfg.sim_expert_s * groups.len() as f64,
+            self.scfg.sim_expert_s * group_list.len() as f64,
         ));
 
         self.transfer.with_state(|st| {

@@ -1,0 +1,296 @@
+//! Reference-backend compute kernels, in two bitwise-identical forms:
+//!
+//! * [`naive`] — the original triple-loop kernels. They are the numeric
+//!   contract (mirroring `python/compile/kernels/ref.py`) and the
+//!   benchmark baseline (`PALLAS_NAIVE=1` selects them end-to-end).
+//! * the module-level `*_into` kernels — cache-blocked over the i/j
+//!   (row/column) loops, multi-threaded over disjoint output rows or
+//!   column panels via [`crate::util::par`], and writing into
+//!   caller-provided buffers so the hot path reuses scratch memory
+//!   instead of allocating per call.
+//!
+//! The invariant every optimized kernel preserves: **the floating-point
+//! summation order of each output element never changes**. Tiling splits
+//! only the i and j loops; the k reduction always runs `0..k` ascending
+//! in a single accumulator (including the `a == 0.0` skip), and parallel
+//! workers own disjoint outputs. Consequently blocked output is
+//! bit-for-bit equal to naive output at every thread count — property
+//! tested in `tests/kernel_equivalence.rs`, and the reason the golden
+//! virtual-clock sweeps stay byte-identical under `PALLAS_THREADS=4`.
+
+use crate::util::par;
+
+/// Column-tile width for blocked matmuls: 128 f32 = 512 B of accumulator
+/// per row tile, L1-resident alongside the streamed weight rows.
+const TILE_J: usize = 128;
+
+/// Row-group height: each pass over a weight row updates up to this many
+/// output rows, dividing b-matrix memory traffic by the same factor
+/// (weight matrices are the operands that overflow L1).
+const TILE_I: usize = 4;
+
+/// The original allocating kernels — numeric contract and bench baseline.
+pub mod naive {
+    /// Row-major matmul: a [m, k] @ b [k, n] -> [m, n].
+    pub fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let ar = &a[i * k..(i + 1) * k];
+            let or = &mut out[i * n..(i + 1) * n];
+            for (kk, &av) in ar.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let br = &b[kk * n..(kk + 1) * n];
+                for (o, &bv) in or.iter_mut().zip(br) {
+                    *o += av * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// Matmul against a transposed second operand: a [m, k] @ bt^T where
+    /// bt is [n, k] row-major — i.e. out[i][j] = dot(a_row_i, bt_row_j).
+    /// The tied-embedding lm_head layout.
+    pub fn matmul_bt(a: &[f32], m: usize, k: usize, bt: &[f32], n: usize) -> Vec<f32> {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(bt.len(), n * k);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let ar = &a[i * k..(i + 1) * k];
+            let or = &mut out[i * n..(i + 1) * n];
+            for (j, o) in or.iter_mut().enumerate() {
+                let br = &bt[j * k..(j + 1) * k];
+                let mut dot = 0.0f32;
+                for jj in 0..k {
+                    dot += ar[jj] * br[jj];
+                }
+                *o = dot;
+            }
+        }
+        out
+    }
+
+    /// RMSNorm each row of x [rows, d]: x * rsqrt(mean(x^2) + eps) * gain.
+    pub fn rms_norm_rows(x: &[f32], rows: usize, d: usize, gain: &[f32], eps: f32) -> Vec<f32> {
+        debug_assert_eq!(x.len(), rows * d);
+        debug_assert_eq!(gain.len(), d);
+        let mut out = vec![0.0f32; rows * d];
+        for r in 0..rows {
+            let xr = &x[r * d..(r + 1) * d];
+            let ms: f32 = xr.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+            let inv = 1.0 / (ms + eps).sqrt();
+            let or = &mut out[r * d..(r + 1) * d];
+            for i in 0..d {
+                or[i] = xr[i] * inv * gain[i];
+            }
+        }
+        out
+    }
+}
+
+/// Blocked, parallel matmul into `out` (must be m*n long; fully
+/// overwritten): a [m, k] @ b [k, n] -> out [m, n]. Bitwise identical to
+/// [`naive::matmul`].
+pub fn matmul_into(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    par::par_rows(out, m, k.saturating_mul(n), |row0, rows| {
+        // i/j tiling only: for every output element the k reduction still
+        // runs 0..k ascending in one accumulator (with the same zero-skip),
+        // so each element's summation order matches the naive kernel
+        // exactly. The j-tile keeps the accumulator rows L1-hot; the
+        // i-group reuses each streamed b row for up to TILE_I output rows.
+        let nrows = rows.len() / n;
+        let mut ri0 = 0;
+        while ri0 < nrows {
+            let ri1 = (ri0 + TILE_I).min(nrows);
+            rows[ri0 * n..ri1 * n].fill(0.0);
+            let mut j0 = 0;
+            while j0 < n {
+                let j1 = (j0 + TILE_J).min(n);
+                for kk in 0..k {
+                    let br = &b[kk * n + j0..kk * n + j1];
+                    for ri in ri0..ri1 {
+                        let av = a[(row0 + ri) * k + kk];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let ot = &mut rows[ri * n + j0..ri * n + j1];
+                        for (o, &bv) in ot.iter_mut().zip(br) {
+                            *o += av * bv;
+                        }
+                    }
+                }
+                j0 = j1;
+            }
+            ri0 = ri1;
+        }
+    });
+}
+
+/// Allocating wrapper over [`matmul_into`].
+pub fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    matmul_into(a, m, k, b, n, &mut out);
+    out
+}
+
+/// Blocked, parallel transposed matmul into `out` [m, n]: out[i][j] =
+/// dot(a row i, bt row j) with bt [n, k] row-major. Workers own disjoint
+/// column panels; the dot runs `0..k` ascending in one accumulator, so
+/// output is bitwise identical to [`naive::matmul_bt`].
+pub fn matmul_bt_into(a: &[f32], m: usize, k: usize, bt: &[f32], n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(bt.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    // j outer / i inner: each bt row is streamed once and dotted against
+    // all m activation rows (which stay L1-resident). The dot itself runs
+    // 0..k ascending in one accumulator — naive order, bit-identical.
+    let dot_panel = |j0: usize, j1: usize, panel: &mut [f32]| {
+        let bw = j1 - j0;
+        for (pj, j) in (j0..j1).enumerate() {
+            let br = &bt[j * k..(j + 1) * k];
+            for i in 0..m {
+                let ar = &a[i * k..(i + 1) * k];
+                let mut dot = 0.0f32;
+                for jj in 0..k {
+                    dot += ar[jj] * br[jj];
+                }
+                panel[i * bw + pj] = dot;
+            }
+        }
+    };
+    let threads = par::plan_threads(n, m.saturating_mul(k));
+    if threads <= 1 {
+        dot_panel(0, n, out);
+        return;
+    }
+    // Fan out over contiguous column panels; each worker returns its
+    // [m, panel] block, scattered back into the row-major output (the
+    // scatter is O(m*n) copies against O(m*n*k) math).
+    let block = n.div_ceil(threads);
+    let panels = par::par_map(threads, block.saturating_mul(m).saturating_mul(k), |ci| {
+        let j0 = (ci * block).min(n);
+        let j1 = ((ci + 1) * block).min(n);
+        let mut panel = vec![0.0f32; m * (j1 - j0)];
+        dot_panel(j0, j1, &mut panel);
+        panel
+    });
+    for (ci, panel) in panels.iter().enumerate() {
+        let j0 = (ci * block).min(n);
+        let bw = panel.len() / m;
+        for i in 0..m {
+            out[i * n + j0..i * n + j0 + bw].copy_from_slice(&panel[i * bw..(i + 1) * bw]);
+        }
+    }
+}
+
+/// Allocating wrapper over [`matmul_bt_into`].
+pub fn matmul_bt(a: &[f32], m: usize, k: usize, bt: &[f32], n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    matmul_bt_into(a, m, k, bt, n, &mut out);
+    out
+}
+
+/// Parallel per-row RMSNorm into `out` (rows*d long; fully overwritten).
+/// Bitwise identical to [`naive::rms_norm_rows`].
+pub fn rms_norm_rows_into(
+    x: &[f32],
+    rows: usize,
+    d: usize,
+    gain: &[f32],
+    eps: f32,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), rows * d);
+    debug_assert_eq!(gain.len(), d);
+    debug_assert_eq!(out.len(), rows * d);
+    if rows == 0 || d == 0 {
+        return;
+    }
+    par::par_rows(out, rows, 2 * d, |row0, chunk| {
+        for (ri, or) in chunk.chunks_mut(d).enumerate() {
+            let r = row0 + ri;
+            let xr = &x[r * d..(r + 1) * d];
+            let ms: f32 = xr.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+            let inv = 1.0 / (ms + eps).sqrt();
+            for i in 0..d {
+                or[i] = xr[i] * inv * gain[i];
+            }
+        }
+    });
+}
+
+/// Allocating wrapper over [`rms_norm_rows_into`].
+pub fn rms_norm_rows(x: &[f32], rows: usize, d: usize, gain: &[f32], eps: f32) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * d];
+    rms_norm_rows_into(x, rows, d, gain, eps, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        // [2,2] @ [2,2]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        assert_eq!(naive::matmul(&a, 2, 2, &b, 2), vec![19.0, 22.0, 43.0, 50.0]);
+        assert_eq!(matmul(&a, 2, 2, &b, 2), vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_bt_is_transposed_matmul() {
+        // a [1,3] @ b [3,2] where bt is b transposed to [2,3].
+        let a = [1.0, 2.0, 3.0];
+        let b = [1.0, 4.0, 2.0, 5.0, 3.0, 6.0]; // [3,2]
+        let bt = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // [2,3]
+        let want = naive::matmul(&a, 1, 3, &b, 2);
+        assert_eq!(naive::matmul_bt(&a, 1, 3, &bt, 2), want);
+        assert_eq!(matmul_bt(&a, 1, 3, &bt, 2), want);
+    }
+
+    #[test]
+    fn blocked_matmul_crosses_tile_boundary() {
+        // n > TILE_J so at least two column tiles run.
+        let (m, k, n) = (3, 7, TILE_J + 13);
+        let a: Vec<f32> = (0..m * k).map(|i| (i % 11) as f32 - 5.0).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i % 13) as f32 / 13.0 - 0.5).collect();
+        assert_eq!(matmul(&a, m, k, &b, n), naive::matmul(&a, m, k, &b, n));
+    }
+
+    #[test]
+    fn rms_norm_unit_gain_scale() {
+        let x = [3.0f32, 4.0];
+        for out in [
+            naive::rms_norm_rows(&x, 1, 2, &[1.0, 1.0], 0.0),
+            rms_norm_rows(&x, 1, 2, &[1.0, 1.0], 0.0),
+        ] {
+            // rms = sqrt((9+16)/2) = sqrt(12.5)
+            let rms = 12.5f32.sqrt();
+            assert!((out[0] - 3.0 / rms).abs() < 1e-6);
+            assert!((out[1] - 4.0 / rms).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn zero_skip_matches() {
+        // Rows containing exact zeros take the skip path in both forms.
+        let a = [0.0f32, 2.0, 0.0, 0.0, 1.0, 0.0];
+        let b: Vec<f32> = (0..3 * 4).map(|i| i as f32).collect();
+        assert_eq!(matmul(&a, 2, 3, &b, 4), naive::matmul(&a, 2, 3, &b, 4));
+    }
+}

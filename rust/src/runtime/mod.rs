@@ -17,6 +17,7 @@
 //!   ids that xla_extension 0.5.1 rejects; the text parser reassigns ids
 //!   (see DESIGN.md).
 
+pub mod kernels;
 mod reference;
 
 #[cfg(feature = "pjrt")]
@@ -26,7 +27,7 @@ mod exec;
 #[cfg(feature = "pjrt")]
 mod pjrt;
 
-pub use reference::RefStages;
+pub use reference::{KernelMode, RefStages};
 
 #[cfg(feature = "pjrt")]
 pub use artifacts::{ArtifactRegistry, Runtime};
@@ -57,7 +58,11 @@ pub enum BackendKind {
 /// the token/batch shape buckets the AOT artifacts were compiled for — the
 /// reference backend accepts any shape and ignores them beyond the padded
 /// tensor sizes it receives.
-pub trait StageRunner {
+///
+/// `Send + Sync` because the engine fans independent expert groups out
+/// across scoped threads, sharing `&dyn StageRunner` (the `&self` stage
+/// methods must be safe to call concurrently).
+pub trait StageRunner: Send + Sync {
     /// tokens (padded to `tb`) -> x [tb, D].
     fn embed(&self, tb: usize, toks: &[i32]) -> Result<Tensor>;
 
@@ -97,6 +102,15 @@ pub trait StageRunner {
 
     /// Drop an evicted expert's device-side weights.
     fn evict_expert(&mut self, key: ExpertKey);
+
+    /// Whether the engine may call the `&self` stage methods from several
+    /// scoped worker threads at once (the expert-group fan-out). Defaults
+    /// to false; backends whose stage math is genuinely re-entrant (the
+    /// reference interpreter) opt in. The PJRT backend must stay false —
+    /// its device handles are thread-confined.
+    fn supports_parallel(&self) -> bool {
+        false
+    }
 
     fn name(&self) -> &'static str;
 }

@@ -56,6 +56,17 @@ pub struct PjrtStages {
     layer_bufs: Vec<LayerBufs>,
 }
 
+// SAFETY: PJRT interaction is thread-confined by construction — this
+// backend reports `StageRunner::supports_parallel() == false`, so the
+// engine's only fan-out site (model/engine.rs::run_moe) executes its stage
+// calls sequentially on the owning thread. These impls exist solely to
+// satisfy the `StageRunner: Send + Sync` bound shared with the genuinely
+// thread-safe reference backend; no PJRT handle is ever touched
+// concurrently. Do not override supports_parallel here without making the
+// xla handles actually synchronized.
+unsafe impl Send for PjrtStages {}
+unsafe impl Sync for PjrtStages {}
+
 impl PjrtStages {
     pub fn new(cfg: &ModelConfig, store: &Arc<WeightStore>, weight_buffers: bool) -> Result<Self> {
         let rt = Runtime::cpu()?;

@@ -13,60 +13,122 @@
 //! weights: running a non-admitted expert is a bug upstream (the cache /
 //! transfer bookkeeping went wrong) and errors just like the PJRT
 //! registry's missing-buffer lookup would.
+//!
+//! # Performance notes
+//!
+//! The hot path is allocation-light, zero-copy, and multi-core:
+//!
+//! * **Zero-copy residency** — [`ExpertWeights`] is `Arc`-shared, so
+//!   admission stores a pointer bump and [`RefStages::expert_resident`]
+//!   borrows the resident entry directly; no tensor bytes are copied
+//!   anywhere on the admit/evict/lookup path (`Arc::ptr_eq`-tested).
+//! * **Blocked kernels** — matmul / RMSNorm / the attention core /
+//!   lm_head run through [`super::kernels`]: i/j cache tiling, a
+//!   transposed-weight dot kernel for the tied-embedding lm head, and
+//!   slice-based attention lanes. The k reduction order per output
+//!   element is never changed, so results are bit-for-bit identical to
+//!   the naive forms (property-tested), keeping the golden sweeps
+//!   byte-identical.
+//! * **Scratch arena** — per-stage temporaries (normed activations, q
+//!   projections, attention outputs, FFN intermediates) come from a
+//!   mutex-pooled arena on this struct instead of fresh `Vec`s per call;
+//!   only tensors returned to the engine are freshly allocated.
+//! * **Threading** — independent work units (attention lanes, output
+//!   rows, lm-head vocab panels) fan out over `std::thread::scope` via
+//!   [`crate::util::par`], sized by the `PALLAS_THREADS` env var and
+//!   gated on a minimum work threshold so tiny test models stay inline.
+//!   Because parallel units own disjoint outputs and per-unit math is
+//!   unchanged, any thread count produces byte-identical results.
+//!
+//! Setting `PALLAS_NAIVE=1` (or constructing via
+//! [`RefStages::with_mode`]) selects the original naive kernels — the
+//! numeric contract and the `micro_hotpath` benchmark baseline.
 
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
 use crate::config::ModelConfig;
+use crate::runtime::kernels::{self, naive};
 use crate::runtime::StageRunner;
 use crate::util::math::softmax;
+use crate::util::par;
 use crate::util::tensor::Tensor;
 use crate::weights::{ExpertKey, ExpertWeights, WeightStore};
+
+/// Which kernel implementations a [`RefStages`] instance executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelMode {
+    /// The original triple-loop kernels, allocating per call: the numeric
+    /// contract and benchmark baseline (`PALLAS_NAIVE=1`).
+    Naive,
+    /// Cache-blocked, arena-backed, multi-threaded kernels with bitwise
+    /// identical outputs (the default).
+    Blocked,
+}
+
+impl KernelMode {
+    fn from_env() -> Self {
+        match std::env::var("PALLAS_NAIVE") {
+            Ok(v) if !v.is_empty() && v != "0" => KernelMode::Naive,
+            _ => KernelMode::Blocked,
+        }
+    }
+}
+
+/// A pool of reusable f32 scratch buffers. Mutex'd so `&self` stage calls
+/// (including ones running on engine worker threads) share it; the lock
+/// is held only for a pop/push, never across kernel work.
+struct Arena {
+    pool: Mutex<Vec<Vec<f32>>>,
+}
+
+impl Arena {
+    fn new() -> Self {
+        Self { pool: Mutex::new(Vec::new()) }
+    }
+
+    /// A zeroed scratch buffer of `len` elements, returned to the pool on
+    /// drop (capacity is retained across uses).
+    fn take(&self, len: usize) -> Scratch<'_> {
+        let mut buf = self.pool.lock().unwrap().pop().unwrap_or_default();
+        buf.clear();
+        buf.resize(len, 0.0);
+        Scratch { arena: self, buf }
+    }
+}
+
+struct Scratch<'a> {
+    arena: &'a Arena,
+    buf: Vec<f32>,
+}
+
+impl std::ops::Deref for Scratch<'_> {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.buf
+    }
+}
+
+impl std::ops::DerefMut for Scratch<'_> {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.buf
+    }
+}
+
+impl Drop for Scratch<'_> {
+    fn drop(&mut self) {
+        self.arena.pool.lock().unwrap().push(std::mem::take(&mut self.buf));
+    }
+}
 
 pub struct RefStages {
     cfg: ModelConfig,
     store: Arc<WeightStore>,
     resident: BTreeMap<ExpertKey, ExpertWeights>,
-}
-
-/// Row-major matmul: a [m, k] @ b [k, n] -> [m, n].
-fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let ar = &a[i * k..(i + 1) * k];
-        let or = &mut out[i * n..(i + 1) * n];
-        for (kk, &av) in ar.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let br = &b[kk * n..(kk + 1) * n];
-            for (o, &bv) in or.iter_mut().zip(br) {
-                *o += av * bv;
-            }
-        }
-    }
-    out
-}
-
-/// RMSNorm each row of x [rows, d]: x * rsqrt(mean(x^2) + eps) * gain.
-fn rms_norm_rows(x: &[f32], rows: usize, d: usize, gain: &[f32], eps: f32) -> Vec<f32> {
-    debug_assert_eq!(x.len(), rows * d);
-    debug_assert_eq!(gain.len(), d);
-    let mut out = vec![0.0f32; rows * d];
-    for r in 0..rows {
-        let xr = &x[r * d..(r + 1) * d];
-        let ms: f32 = xr.iter().map(|&v| v * v).sum::<f32>() / d as f32;
-        let inv = 1.0 / (ms + eps).sqrt();
-        let or = &mut out[r * d..(r + 1) * d];
-        for i in 0..d {
-            or[i] = xr[i] * inv * gain[i];
-        }
-    }
-    out
+    mode: KernelMode,
+    arena: Arena,
 }
 
 fn silu(x: f32) -> f32 {
@@ -74,9 +136,24 @@ fn silu(x: f32) -> f32 {
 }
 
 impl RefStages {
+    /// Kernel mode from the `PALLAS_NAIVE` env var (default: blocked).
     pub fn new(cfg: ModelConfig, store: Arc<WeightStore>) -> Self {
+        Self::with_mode(cfg, store, KernelMode::from_env())
+    }
+
+    pub fn with_mode(cfg: ModelConfig, store: Arc<WeightStore>, mode: KernelMode) -> Self {
         debug_assert_eq!(cfg.d_model, cfg.n_heads * cfg.head_dim);
-        Self { cfg, store, resident: BTreeMap::new() }
+        Self { cfg, store, resident: BTreeMap::new(), mode, arena: Arena::new() }
+    }
+
+    pub fn kernel_mode(&self) -> KernelMode {
+        self.mode
+    }
+
+    /// The Arc-shared weights admitted for `key`, if resident (zero-copy
+    /// contract inspection: `Arc::ptr_eq` against the store's handle).
+    pub fn resident_weights(&self, key: ExpertKey) -> Option<&ExpertWeights> {
+        self.resident.get(&key)
     }
 
     fn layer_tensor(&self, layer: usize, name: &str) -> Result<&Tensor> {
@@ -87,18 +164,37 @@ impl RefStages {
     fn expert_ffn(&self, h: &Tensor, w: &ExpertWeights) -> Result<Tensor> {
         let (t, d) = (h.dims[0], self.cfg.d_model);
         let f = self.cfg.d_ff;
-        let a = matmul(&h.data, t, d, &w.0.data, f);
-        let b = matmul(&h.data, t, d, &w.1.data, f);
-        let mut g = vec![0.0f32; t * f];
-        for i in 0..t * f {
-            g[i] = silu(a[i]) * b[i];
+        match self.mode {
+            KernelMode::Naive => {
+                let a = naive::matmul(&h.data, t, d, &w.0.data, f);
+                let b = naive::matmul(&h.data, t, d, &w.1.data, f);
+                let mut g = vec![0.0f32; t * f];
+                for i in 0..t * f {
+                    g[i] = silu(a[i]) * b[i];
+                }
+                let out = naive::matmul(&g, t, f, &w.2.data, d);
+                Tensor::new(vec![t, d], out)
+            }
+            KernelMode::Blocked => {
+                let mut a = self.arena.take(t * f);
+                let mut b = self.arena.take(t * f);
+                kernels::matmul_into(&h.data, t, d, &w.0.data, f, &mut a);
+                kernels::matmul_into(&h.data, t, d, &w.1.data, f, &mut b);
+                // g = silu(a) * b, in place over a's buffer.
+                for (g, &bv) in a.iter_mut().zip(b.iter()) {
+                    *g = silu(*g) * bv;
+                }
+                let mut out = vec![0.0f32; t * d];
+                kernels::matmul_into(&a, t, f, &w.2.data, d, &mut out);
+                Tensor::new(vec![t, d], out)
+            }
         }
-        let out = matmul(&g, t, f, &w.2.data, d);
-        Tensor::new(vec![t, d], out)
     }
 
     /// Multi-head attention core for one query row against a key/value
     /// window laid out as index closures; writes the context into `o_row`.
+    /// The naive-mode core (and the numeric contract the slice-based
+    /// blocked lanes reproduce bit-for-bit).
     #[allow(clippy::too_many_arguments)]
     fn attend(
         &self,
@@ -137,6 +233,22 @@ impl RefStages {
             }
         }
     }
+
+    fn rms(&self, x: &[f32], rows: usize, gain: &[f32], out: &mut [f32]) {
+        let d = self.cfg.d_model;
+        let eps = self.cfg.rms_eps as f32;
+        match self.mode {
+            KernelMode::Naive => out.copy_from_slice(&naive::rms_norm_rows(x, rows, d, gain, eps)),
+            KernelMode::Blocked => kernels::rms_norm_rows_into(x, rows, d, gain, eps, out),
+        }
+    }
+
+    fn mm(&self, a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out: &mut [f32]) {
+        match self.mode {
+            KernelMode::Naive => out.copy_from_slice(&naive::matmul(a, m, k, b, n)),
+            KernelMode::Blocked => kernels::matmul_into(a, m, k, b, n, out),
+        }
+    }
 }
 
 impl StageRunner for RefStages {
@@ -155,35 +267,84 @@ impl StageRunner for RefStages {
 
     fn attn_prefill(&self, layer: usize, x: &Tensor, len_mask: &Tensor) -> Result<[Tensor; 3]> {
         let (s, d) = (x.dims[0], self.cfg.d_model);
+        let (heads, hd) = (self.cfg.n_heads, self.cfg.head_dim);
         let ln1 = self.layer_tensor(layer, "ln1")?;
         let wq = self.layer_tensor(layer, "wq")?;
         let wk = self.layer_tensor(layer, "wk")?;
         let wv = self.layer_tensor(layer, "wv")?;
         let wo = self.layer_tensor(layer, "wo")?;
 
-        let h = rms_norm_rows(&x.data, s, d, &ln1.data, self.cfg.rms_eps as f32);
-        let q = matmul(&h, s, d, &wq.data, d);
-        let k = matmul(&h, s, d, &wk.data, d);
-        let v = matmul(&h, s, d, &wv.data, d);
+        let mut h = self.arena.take(s * d);
+        self.rms(&x.data, s, &ln1.data, &mut h);
+        let mut q = self.arena.take(s * d);
+        self.mm(&h, s, d, &wq.data, d, &mut q);
+        // k and v are returned to the engine as tensors: fresh allocations.
+        let mut k = vec![0.0f32; s * d];
+        self.mm(&h, s, d, &wk.data, d, &mut k);
+        let mut v = vec![0.0f32; s * d];
+        self.mm(&h, s, d, &wv.data, d, &mut v);
 
         let mask = &len_mask.data;
-        let mut o = vec![0.0f32; s * d];
-        for si in 0..s {
-            let mut o_row = vec![0.0f32; d];
-            self.attend(
-                &q[si * d..(si + 1) * d],
-                s,
-                |t, j| k[t * d + j],
-                |t, j| v[t * d + j],
-                |t| t <= si && mask[t] > 0.0,
-                &mut o_row,
-            );
-            o[si * d..(si + 1) * d].copy_from_slice(&o_row);
+        let mut o = self.arena.take(s * d);
+        match self.mode {
+            KernelMode::Naive => {
+                for si in 0..s {
+                    let mut o_row = vec![0.0f32; d];
+                    self.attend(
+                        &q[si * d..(si + 1) * d],
+                        s,
+                        |t, j| k[t * d + j],
+                        |t, j| v[t * d + j],
+                        |t| t <= si && mask[t] > 0.0,
+                        &mut o_row,
+                    );
+                    o[si * d..(si + 1) * d].copy_from_slice(&o_row);
+                }
+            }
+            KernelMode::Blocked => {
+                let (q, k, v) = (&q[..], &k[..], &v[..]);
+                let scale = 1.0 / (hd as f32).sqrt();
+                // Each query row is an independent lane (disjoint o rows).
+                par::par_rows(&mut o, s, 2 * s * d, |row0, chunk| {
+                    let mut scores = vec![0.0f32; s];
+                    for (ri, o_row) in chunk.chunks_mut(d).enumerate() {
+                        let si = row0 + ri;
+                        let q_row = &q[si * d..(si + 1) * d];
+                        for head in 0..heads {
+                            let base = head * hd;
+                            let qh = &q_row[base..base + hd];
+                            for (t, sc) in scores.iter_mut().enumerate() {
+                                *sc = if t <= si && mask[t] > 0.0 {
+                                    let kr = &k[t * d + base..t * d + base + hd];
+                                    let mut dot = 0.0f32;
+                                    for (&qv, &kv) in qh.iter().zip(kr) {
+                                        dot += qv * kv;
+                                    }
+                                    dot * scale
+                                } else {
+                                    f32::NEG_INFINITY
+                                };
+                            }
+                            softmax(&mut scores);
+                            let oh = &mut o_row[base..base + hd];
+                            for (t, &w) in scores.iter().enumerate() {
+                                if w > 0.0 {
+                                    let vr = &v[t * d + base..t * d + base + hd];
+                                    for (ov, &vv) in oh.iter_mut().zip(vr) {
+                                        *ov += w * vv;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                });
+            }
         }
         // y = x + o @ wo
-        let proj = matmul(&o, s, d, &wo.data, d);
+        let mut proj = self.arena.take(s * d);
+        self.mm(&o, s, d, &wo.data, d, &mut proj);
         let mut y = x.data.clone();
-        for (a, b) in y.iter_mut().zip(&proj) {
+        for (a, b) in y.iter_mut().zip(proj.iter()) {
             *a += b;
         }
         Ok([
@@ -203,6 +364,7 @@ impl StageRunner for RefStages {
         pos_mask: &Tensor,
     ) -> Result<[Tensor; 3]> {
         let d = self.cfg.d_model;
+        let (heads, hd) = (self.cfg.n_heads, self.cfg.head_dim);
         let s = k_cache.dims[1];
         anyhow::ensure!(x.dims == vec![bb, d], "attn_decode x shape {:?}", x.dims);
         let ln1 = self.layer_tensor(layer, "ln1")?;
@@ -211,34 +373,105 @@ impl StageRunner for RefStages {
         let wv = self.layer_tensor(layer, "wv")?;
         let wo = self.layer_tensor(layer, "wo")?;
 
-        let h = rms_norm_rows(&x.data, bb, d, &ln1.data, self.cfg.rms_eps as f32);
-        let q = matmul(&h, bb, d, &wq.data, d);
-        let k_new = matmul(&h, bb, d, &wk.data, d);
-        let v_new = matmul(&h, bb, d, &wv.data, d);
+        let mut h = self.arena.take(bb * d);
+        self.rms(&x.data, bb, &ln1.data, &mut h);
+        let mut q = self.arena.take(bb * d);
+        self.mm(&h, bb, d, &wq.data, d, &mut q);
+        let mut k_new = vec![0.0f32; bb * d];
+        self.mm(&h, bb, d, &wk.data, d, &mut k_new);
+        let mut v_new = vec![0.0f32; bb * d];
+        self.mm(&h, bb, d, &wv.data, d, &mut v_new);
 
-        let mut o = vec![0.0f32; bb * d];
-        for b in 0..bb {
-            let kc = &k_cache.data[b * s * d..(b + 1) * s * d];
-            let vc = &v_cache.data[b * s * d..(b + 1) * s * d];
-            let kn = &k_new[b * d..(b + 1) * d];
-            let vn = &v_new[b * d..(b + 1) * d];
-            let mask = &pos_mask.data[b * s..(b + 1) * s];
-            let mut o_row = vec![0.0f32; d];
-            // Window = S cached slots plus the current token appended at
-            // index S (always valid), exactly like attn_decode_stage.
-            self.attend(
-                &q[b * d..(b + 1) * d],
-                s + 1,
-                |t, j| if t < s { kc[t * d + j] } else { kn[j] },
-                |t, j| if t < s { vc[t * d + j] } else { vn[j] },
-                |t| t >= s || mask[t] > 0.0,
-                &mut o_row,
-            );
-            o[b * d..(b + 1) * d].copy_from_slice(&o_row);
+        let mut o = self.arena.take(bb * d);
+        match self.mode {
+            KernelMode::Naive => {
+                for b in 0..bb {
+                    let kc = &k_cache.data[b * s * d..(b + 1) * s * d];
+                    let vc = &v_cache.data[b * s * d..(b + 1) * s * d];
+                    let kn = &k_new[b * d..(b + 1) * d];
+                    let vn = &v_new[b * d..(b + 1) * d];
+                    let mask = &pos_mask.data[b * s..(b + 1) * s];
+                    let mut o_row = vec![0.0f32; d];
+                    // Window = S cached slots plus the current token appended
+                    // at index S (always valid), exactly like
+                    // attn_decode_stage.
+                    self.attend(
+                        &q[b * d..(b + 1) * d],
+                        s + 1,
+                        |t, j| if t < s { kc[t * d + j] } else { kn[j] },
+                        |t, j| if t < s { vc[t * d + j] } else { vn[j] },
+                        |t| t >= s || mask[t] > 0.0,
+                        &mut o_row,
+                    );
+                    o[b * d..(b + 1) * d].copy_from_slice(&o_row);
+                }
+            }
+            KernelMode::Blocked => {
+                let (q, k_new_r, v_new_r) = (&q[..], &k_new[..], &v_new[..]);
+                let scale = 1.0 / (hd as f32).sqrt();
+                // Each batch lane is independent (disjoint o rows); the
+                // window is the S cached slots plus the current token at
+                // index S (always valid), like the naive closure form.
+                par::par_rows(&mut o, bb, 2 * (s + 1) * d, |b0, chunk| {
+                    let mut scores = vec![0.0f32; s + 1];
+                    for (bi, o_row) in chunk.chunks_mut(d).enumerate() {
+                        let b = b0 + bi;
+                        let kc = &k_cache.data[b * s * d..(b + 1) * s * d];
+                        let vc = &v_cache.data[b * s * d..(b + 1) * s * d];
+                        let kn = &k_new_r[b * d..(b + 1) * d];
+                        let vn = &v_new_r[b * d..(b + 1) * d];
+                        let mask = &pos_mask.data[b * s..(b + 1) * s];
+                        let q_row = &q[b * d..(b + 1) * d];
+                        for head in 0..heads {
+                            let base = head * hd;
+                            let qh = &q_row[base..base + hd];
+                            for (t, sc) in scores[..s].iter_mut().enumerate() {
+                                *sc = if mask[t] > 0.0 {
+                                    let kr = &kc[t * d + base..t * d + base + hd];
+                                    let mut dot = 0.0f32;
+                                    for (&qv, &kv) in qh.iter().zip(kr) {
+                                        dot += qv * kv;
+                                    }
+                                    dot * scale
+                                } else {
+                                    f32::NEG_INFINITY
+                                };
+                            }
+                            {
+                                let kr = &kn[base..base + hd];
+                                let mut dot = 0.0f32;
+                                for (&qv, &kv) in qh.iter().zip(kr) {
+                                    dot += qv * kv;
+                                }
+                                scores[s] = dot * scale;
+                            }
+                            softmax(&mut scores);
+                            let oh = &mut o_row[base..base + hd];
+                            for t in 0..s {
+                                let w = scores[t];
+                                if w > 0.0 {
+                                    let vr = &vc[t * d + base..t * d + base + hd];
+                                    for (ov, &vv) in oh.iter_mut().zip(vr) {
+                                        *ov += w * vv;
+                                    }
+                                }
+                            }
+                            let w_cur = scores[s];
+                            if w_cur > 0.0 {
+                                let vr = &vn[base..base + hd];
+                                for (ov, &vv) in oh.iter_mut().zip(vr) {
+                                    *ov += w_cur * vv;
+                                }
+                            }
+                        }
+                    }
+                });
+            }
         }
-        let proj = matmul(&o, bb, d, &wo.data, d);
+        let mut proj = self.arena.take(bb * d);
+        self.mm(&o, bb, d, &wo.data, d, &mut proj);
         let mut y = x.data.clone();
-        for (a, b) in y.iter_mut().zip(&proj) {
+        for (a, b) in y.iter_mut().zip(proj.iter()) {
             *a += b;
         }
         Ok([
@@ -254,8 +487,11 @@ impl StageRunner for RefStages {
         let ln2 = self.layer_tensor(layer, "ln2")?;
         let wg = self.layer_tensor(layer, "wg")?;
         let rbias = self.layer_tensor(layer, "rbias")?;
-        let h = rms_norm_rows(&y.data, t, d, &ln2.data, self.cfg.rms_eps as f32);
-        let mut logits = matmul(&h, t, d, &wg.data, e);
+        // h and the probs are both returned: fresh allocations.
+        let mut h = vec![0.0f32; t * d];
+        self.rms(&y.data, t, &ln2.data, &mut h);
+        let mut logits = vec![0.0f32; t * e];
+        self.mm(&h, t, d, &wg.data, e, &mut logits);
         for r in 0..t {
             let row = &mut logits[r * e..(r + 1) * e];
             for (l, &b) in row.iter_mut().zip(&rbias.data) {
@@ -267,14 +503,12 @@ impl StageRunner for RefStages {
     }
 
     fn expert_resident(&self, _tb: usize, key: ExpertKey, h: &Tensor) -> Result<Tensor> {
-        let w = self
-            .resident
-            .get(&key)
-            .with_context(|| {
-                format!("expert L{}.E{} has no device buffers", key.layer, key.expert)
-            })?
-            .clone();
-        self.expert_ffn(h, &w)
+        // Borrow the admitted Arc directly — no clone of any kind on the
+        // per-invocation path.
+        let w = self.resident.get(&key).with_context(|| {
+            format!("expert L{}.E{} has no device buffers", key.layer, key.expert)
+        })?;
+        self.expert_ffn(h, w)
     }
 
     fn expert_transient(&self, _tb: usize, w: &ExpertWeights, h: &Tensor) -> Result<Tensor> {
@@ -287,33 +521,41 @@ impl StageRunner for RefStages {
         let gain = self.store.tensor("final_gain")?;
         let emb = self.store.tensor("embed")?;
         let v = self.cfg.vocab_size;
-        let h = rms_norm_rows(&x.data, tb, d, &gain.data, self.cfg.rms_eps as f32);
-        let mut logits = vec![0.0f32; tb * v];
-        for t in 0..tb {
-            let hr = &h[t * d..(t + 1) * d];
-            let lr = &mut logits[t * v..(t + 1) * v];
-            for (vi, l) in lr.iter_mut().enumerate() {
-                let er = emb.row(vi);
-                let mut dot = 0.0f32;
-                for j in 0..d {
-                    dot += hr[j] * er[j];
-                }
-                *l = dot;
+        match self.mode {
+            KernelMode::Naive => {
+                let h = naive::rms_norm_rows(&x.data, tb, d, &gain.data, self.cfg.rms_eps as f32);
+                // Tied embedding: logits = h @ embed^T, with embed stored
+                // [V, D] — the transposed (row-dot) layout.
+                let logits = naive::matmul_bt(&h, tb, d, &emb.data, v);
+                Tensor::new(vec![tb, v], logits)
+            }
+            KernelMode::Blocked => {
+                let mut h = self.arena.take(tb * d);
+                self.rms(&x.data, tb, &gain.data, &mut h);
+                let mut logits = vec![0.0f32; tb * v];
+                kernels::matmul_bt_into(&h, tb, d, &emb.data, v, &mut logits);
+                Tensor::new(vec![tb, v], logits)
             }
         }
-        Tensor::new(vec![tb, v], logits)
     }
 
     fn admit_expert(&mut self, key: ExpertKey, w: &ExpertWeights) -> Result<()> {
         if key.layer >= self.cfg.n_layers || key.expert >= self.cfg.n_experts {
             bail!("admit_expert: key L{}.E{} out of range", key.layer, key.expert);
         }
+        // Arc clone: a refcount bump, never a copy of the tensor bytes.
         self.resident.insert(key, w.clone());
         Ok(())
     }
 
     fn evict_expert(&mut self, key: ExpertKey) {
         self.resident.remove(&key);
+    }
+
+    /// All stage math is pure over `&self` (the arena is mutex-pooled), so
+    /// the engine may fan expert groups out across threads.
+    fn supports_parallel(&self) -> bool {
+        true
     }
 
     fn name(&self) -> &'static str {
@@ -324,30 +566,12 @@ impl StageRunner for RefStages {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::kernels::naive::rms_norm_rows;
 
     fn stages() -> RefStages {
         let cfg = ModelConfig::test_tiny();
         let store = Arc::new(WeightStore::synthetic(&cfg, 7));
         RefStages::new(cfg, store)
-    }
-
-    #[test]
-    fn matmul_small() {
-        // [2,2] @ [2,2]
-        let a = [1.0, 2.0, 3.0, 4.0];
-        let b = [5.0, 6.0, 7.0, 8.0];
-        let c = matmul(&a, 2, 2, &b, 2);
-        assert_eq!(c, vec![19.0, 22.0, 43.0, 50.0]);
-    }
-
-    #[test]
-    fn rms_norm_unit_gain_scale() {
-        let x = [3.0f32, 4.0];
-        let out = rms_norm_rows(&x, 1, 2, &[1.0, 1.0], 0.0);
-        // rms = sqrt((9+16)/2) = sqrt(12.5)
-        let rms = 12.5f32.sqrt();
-        assert!((out[0] - 3.0 / rms).abs() < 1e-6);
-        assert!((out[1] - 4.0 / rms).abs() < 1e-6);
     }
 
     #[test]
@@ -401,6 +625,19 @@ mod tests {
         assert_eq!(y.dims, vec![2, 16]);
         s.evict_expert(key);
         assert!(s.expert_resident(2, key, &h).is_err());
+    }
+
+    #[test]
+    fn admitted_weights_are_arc_shared() {
+        let mut s = stages();
+        let key = ExpertKey::new(1, 2);
+        let w = s.store.expert(key).unwrap();
+        s.admit_expert(key, &w).unwrap();
+        let resident = s.resident_weights(key).expect("resident after admit");
+        assert!(
+            Arc::ptr_eq(resident, &w),
+            "admit_expert must share the store's allocation, not copy it"
+        );
     }
 
     #[test]

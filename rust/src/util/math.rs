@@ -26,16 +26,27 @@ pub fn softmax(xs: &mut [f32]) {
 /// Deterministic top-k: probability descending, index ascending on ties.
 /// Mirrors `python/compile/model.py::top_k_select` exactly (binary contract
 /// for the golden fixtures). Returns (indices, renormalized weights).
+///
+/// O(n + k log k): an O(n) `select_nth_unstable_by` partition brings the
+/// top k to the front, then only those k are sorted — same descending-prob
+/// / ascending-index order the old full sort produced.
 pub fn top_k(probs: &[f32], k: usize) -> (Vec<usize>, Vec<f32>) {
     assert!(k <= probs.len());
+    if k == 0 {
+        return (Vec::new(), Vec::new());
+    }
     let mut idx: Vec<usize> = (0..probs.len()).collect();
-    idx.sort_by(|&a, &b| {
-        probs[b]
-            .partial_cmp(&probs[a])
+    let by_prob_desc = |a: &usize, b: &usize| {
+        probs[*b]
+            .partial_cmp(&probs[*a])
             .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.cmp(&b))
-    });
-    idx.truncate(k);
+            .then(a.cmp(b))
+    };
+    if k < idx.len() {
+        idx.select_nth_unstable_by(k - 1, by_prob_desc);
+        idx.truncate(k);
+    }
+    idx.sort_by(by_prob_desc);
     let sum: f32 = idx.iter().map(|&i| probs[i]).sum();
     let w = idx
         .iter()
@@ -80,19 +91,30 @@ pub fn prob_margin(weights: &[f32]) -> f32 {
     top - second
 }
 
-/// p-th percentile (linear interpolation) of unsorted data; p in [0, 100].
+/// p-th percentile (linear interpolation) of data; p in [0, 100].
+/// Already-sorted input is detected with one O(n) scan and used in place
+/// — no clone, no re-sort.
 pub fn percentile(xs: &[f32], p: f64) -> f32 {
     assert!(!xs.is_empty());
+    if xs.windows(2).all(|w| w[0] <= w[1]) {
+        return percentile_sorted(xs, p);
+    }
     let mut s: Vec<f32> = xs.to_vec();
     s.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-    let rank = (p / 100.0) * (s.len() - 1) as f64;
+    percentile_sorted(&s, p)
+}
+
+/// p-th percentile (linear interpolation) of ascending-sorted data.
+pub fn percentile_sorted(xs: &[f32], p: f64) -> f32 {
+    assert!(!xs.is_empty());
+    let rank = (p / 100.0) * (xs.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
     if lo == hi {
-        s[lo]
+        xs[lo]
     } else {
         let f = (rank - lo as f64) as f32;
-        s[lo] * (1.0 - f) + s[hi] * f
+        xs[lo] * (1.0 - f) + xs[hi] * f
     }
 }
 
@@ -182,6 +204,28 @@ mod tests {
     }
 
     #[test]
+    fn top_k_matches_full_sort_reference() {
+        // The select-then-sort path must reproduce the old full-sort
+        // contract exactly, ties (quantized probs) included.
+        let mut rng = crate::util::rng::Rng::new(77);
+        for _ in 0..300 {
+            let n = rng.range(1, 40);
+            let k = rng.range(0, n + 1);
+            let probs: Vec<f32> = (0..n).map(|_| (rng.below(6) as f32) / 5.0).collect();
+            let mut want: Vec<usize> = (0..n).collect();
+            want.sort_by(|&a, &b| {
+                probs[b]
+                    .partial_cmp(&probs[a])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            want.truncate(k);
+            let (got, _) = top_k(&probs, k);
+            assert_eq!(got, want, "n={n} k={k} probs={probs:?}");
+        }
+    }
+
+    #[test]
     fn tae_extremes() {
         assert!((tae(&[0.25, 0.25, 0.25, 0.25]) - 1.0).abs() < 1e-6);
         assert!(tae(&[1.0, 0.0, 0.0, 0.0]).abs() < 1e-6);
@@ -205,6 +249,18 @@ mod tests {
         assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-6);
         assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-6);
         assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_sorted_fast_path_agrees() {
+        let xs = vec![4.0, 1.0, 3.0, 2.0];
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for &p in &[0.0, 10.0, 50.0, 90.0, 100.0] {
+            assert_eq!(percentile(&xs, p), percentile_sorted(&sorted, p));
+            // Sorted input takes the no-clone path and must agree too.
+            assert_eq!(percentile(&sorted, p), percentile_sorted(&sorted, p));
+        }
     }
 
     #[test]

@@ -6,5 +6,6 @@ pub mod clock;
 pub mod json;
 pub mod logging;
 pub mod math;
+pub mod par;
 pub mod rng;
 pub mod tensor;

@@ -1,0 +1,198 @@
+//! Scoped-thread data parallelism for the reference-backend kernels and
+//! the engine's expert fan-out (no thread-pool crate offline; plain
+//! `std::thread::scope`).
+//!
+//! The determinism contract: work units are independent (disjoint output
+//! rows / independent tasks) and compute bitwise-identical results on any
+//! thread, so output is byte-identical at every thread count — the golden
+//! virtual-clock sweeps must not change under `PALLAS_THREADS=4`
+//! (asserted in `tests/kernel_equivalence.rs`).
+//!
+//! Thread count resolution, in priority order:
+//! 1. [`set_threads`] runtime override (benches / tests; `0` clears it),
+//! 2. the `PALLAS_THREADS` environment variable (read once),
+//! 3. `std::thread::available_parallelism()`.
+//!
+//! Fan-out only happens when the estimated work amortizes the scoped
+//! spawn cost (see [`MIN_WORK_PER_THREAD`]); tiny kernels stay inline, so
+//! the test-sized models never pay threading overhead.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+thread_local! {
+    /// True on threads spawned by this module. Nested fan-out (a kernel
+    /// called from an engine-level worker) runs inline instead of
+    /// multiplying thread counts — the outer fan-out already owns the
+    /// core budget.
+    static IN_PAR_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+fn in_worker() -> bool {
+    IN_PAR_WORKER.with(|c| c.get())
+}
+
+/// Minimum inner-loop operations per worker before fan-out pays for a
+/// scoped thread spawn (~10 us each on Linux). `1 << 16` f32 FMAs is a
+/// few tens of microseconds of work — roughly break-even at two workers.
+pub const MIN_WORK_PER_THREAD: usize = 1 << 16;
+
+static OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the thread count at runtime (benches / tests). `0` restores
+/// the `PALLAS_THREADS` / `available_parallelism` default. Changing this
+/// mid-run is safe: it alters scheduling, never results.
+pub fn set_threads(n: usize) {
+    OVERRIDE.store(n, Ordering::SeqCst);
+}
+
+/// The configured maximum worker count (>= 1).
+pub fn num_threads() -> usize {
+    let o = OVERRIDE.load(Ordering::SeqCst);
+    if o != 0 {
+        return o;
+    }
+    static FROM_ENV: OnceLock<usize> = OnceLock::new();
+    *FROM_ENV.get_or_init(|| {
+        std::env::var("PALLAS_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+/// Workers to actually use for `items` units of ~`work_per_item`
+/// inner-loop operations each: capped by the configured thread count, the
+/// item count, and the spawn-amortization floor. Always 1 on a thread
+/// that is itself a par worker (no nested fan-out).
+pub fn plan_threads(items: usize, work_per_item: usize) -> usize {
+    if items == 0 || in_worker() {
+        return 1;
+    }
+    let by_work = (items.saturating_mul(work_per_item) / MIN_WORK_PER_THREAD).max(1);
+    num_threads().min(items).min(by_work).max(1)
+}
+
+/// Split `out` — `rows` rows of `out.len() / rows` elements — into
+/// contiguous row chunks and run `f(first_row, chunk)` on each, fanning
+/// out when `rows * work_per_row` warrants it. Rows are never split, so
+/// each output element is produced by exactly one worker.
+pub fn par_rows<F>(out: &mut [f32], rows: usize, work_per_row: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    if rows == 0 || out.is_empty() {
+        return;
+    }
+    debug_assert_eq!(out.len() % rows, 0, "out must be rows * width");
+    let w = out.len() / rows;
+    let threads = plan_threads(rows, work_per_row);
+    if threads <= 1 {
+        f(0, out);
+        return;
+    }
+    let chunk_rows = rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (ci, chunk) in out.chunks_mut(chunk_rows * w).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                IN_PAR_WORKER.with(|c| c.set(true));
+                f(ci * chunk_rows, chunk)
+            });
+        }
+    });
+}
+
+/// Run `n` independent tasks of ~`work_per_item` operations each and
+/// collect their results in task order, fanning out over contiguous index
+/// ranges when the work warrants it.
+pub fn par_map<T, F>(n: usize, work_per_item: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = plan_threads(n, work_per_item);
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (ci, slots) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                IN_PAR_WORKER.with(|c| c.set(true));
+                for (k, slot) in slots.iter_mut().enumerate() {
+                    *slot = Some(f(ci * chunk + k));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|t| t.expect("par_map worker filled its slots")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn num_threads_positive() {
+        assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn plan_keeps_small_work_inline() {
+        // 8 rows of 100 ops is far under the spawn floor.
+        assert_eq!(plan_threads(8, 100), 1);
+        assert_eq!(plan_threads(0, 1_000_000), 1);
+    }
+
+    #[test]
+    fn par_rows_covers_every_row_once() {
+        let rows = 37;
+        let w = 5;
+        let mut out = vec![0.0f32; rows * w];
+        // Force enough planned work that fan-out triggers when >1 core.
+        par_rows(&mut out, rows, MIN_WORK_PER_THREAD, |row0, chunk| {
+            for (ri, r) in chunk.chunks_mut(w).enumerate() {
+                for x in r.iter_mut() {
+                    *x += (row0 + ri) as f32;
+                }
+            }
+        });
+        for r in 0..rows {
+            for j in 0..w {
+                assert_eq!(out[r * w + j], r as f32, "row {r} col {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let got = par_map(23, MIN_WORK_PER_THREAD, |i| i * i);
+        let want: Vec<usize> = (0..23).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn par_map_empty() {
+        let got: Vec<usize> = par_map(0, 1, |i| i);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn nested_fanout_runs_inline() {
+        // From inside a par worker (or a 1-thread plan), further fan-out
+        // must collapse to a single thread — no thread multiplication.
+        let mut out = vec![0.0f32; 8];
+        par_rows(&mut out, 8, MIN_WORK_PER_THREAD, |_, chunk| {
+            assert_eq!(plan_threads(64, MIN_WORK_PER_THREAD), 1);
+            chunk.fill(1.0);
+        });
+        assert!(out.iter().all(|&x| x == 1.0));
+    }
+}

@@ -28,8 +28,11 @@ impl ExpertKey {
     }
 }
 
-/// One expert's three projection tensors, shared behind Arc so "transfers"
-/// can hand them around without copying host memory twice.
+/// One expert's three projection tensors behind an `Arc` — the zero-copy
+/// contract of the whole transfer/cache/backend path: store fetches,
+/// transfer-engine arrivals, backend admission, and `expert_resident`
+/// lookups all move this pointer, never the 3x(d x d_ff) f32 payload
+/// (`Arc::ptr_eq`-asserted in `tests/kernel_equivalence.rs`).
 pub type ExpertWeights = Arc<(Tensor, Tensor, Tensor)>;
 
 #[derive(Debug)]

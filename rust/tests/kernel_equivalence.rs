@@ -1,0 +1,272 @@
+//! The tentpole determinism contract: the blocked/parallel reference
+//! kernels are bit-for-bit equal to the naive forms across random shapes
+//! and thread counts; full stages agree between kernel modes; the golden
+//! virtual-clock sweep is byte-identical at PALLAS_THREADS=1 and =4; and
+//! expert admission/lookup is zero-copy (`Arc::ptr_eq`).
+
+use std::sync::{Arc, Mutex};
+
+use buddymoe::config::ModelConfig;
+use buddymoe::eval::{run_table, MethodSpec, TableSettings};
+use buddymoe::runtime::kernels::{self, naive};
+use buddymoe::runtime::{KernelMode, RefStages, StageRunner};
+use buddymoe::testing::{forall, PropConfig};
+use buddymoe::util::clock::ClockMode;
+use buddymoe::util::par;
+use buddymoe::util::rng::Rng;
+use buddymoe::util::tensor::Tensor;
+use buddymoe::weights::{ExpertKey, WeightStore};
+
+/// `par::set_threads` is a process-global override and the test harness
+/// runs tests concurrently; serialize every test that drives it so each
+/// one really executes at the thread counts it claims to exercise.
+static PAR_LOCK: Mutex<()> = Mutex::new(());
+
+fn par_lock() -> std::sync::MutexGuard<'static, ()> {
+    PAR_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Random values with exact zeros mixed in (the matmul zero-skip path).
+fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|_| if rng.bool(0.1) { 0.0 } else { (rng.f32() - 0.5) * 4.0 })
+        .collect()
+}
+
+fn first_diff(a: &[f32], b: &[f32]) -> Option<usize> {
+    a.iter().zip(b).position(|(x, y)| x.to_bits() != y.to_bits())
+}
+
+#[test]
+fn prop_blocked_matmul_bitwise_matches_naive() {
+    let _serialize = par_lock();
+    forall(
+        PropConfig { cases: 120, seed: 61 },
+        |rng| {
+            // Shapes crossing both the TILE_I (4-row) and TILE_J (128-col)
+            // boundaries, at 1..4 threads.
+            let m = rng.range(1, 18);
+            let k = rng.range(1, 70);
+            let n = rng.range(1, 300);
+            let a = randv(rng, m * k);
+            let b = randv(rng, k * n);
+            let threads = rng.range(1, 5);
+            (m, k, n, a, b, threads)
+        },
+        |(m, k, n, a, b, threads)| {
+            par::set_threads(*threads);
+            let want = naive::matmul(a, *m, *k, b, *n);
+            let got = kernels::matmul(a, *m, *k, b, *n);
+            par::set_threads(0);
+            match first_diff(&got, &want) {
+                None => Ok(()),
+                Some(i) => Err(format!(
+                    "[{m}x{k}]@[{k}x{n}] t={threads}: first bit diff at {i}: {} vs {}",
+                    got[i], want[i]
+                )),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_blocked_matmul_bt_bitwise_matches_naive() {
+    let _serialize = par_lock();
+    forall(
+        PropConfig { cases: 100, seed: 62 },
+        |rng| {
+            let m = rng.range(1, 10);
+            let k = rng.range(1, 70);
+            let n = rng.range(1, 400);
+            let a = randv(rng, m * k);
+            let bt = randv(rng, n * k);
+            let threads = rng.range(1, 5);
+            (m, k, n, a, bt, threads)
+        },
+        |(m, k, n, a, bt, threads)| {
+            par::set_threads(*threads);
+            let want = naive::matmul_bt(a, *m, *k, bt, *n);
+            let got = kernels::matmul_bt(a, *m, *k, bt, *n);
+            par::set_threads(0);
+            match first_diff(&got, &want) {
+                None => Ok(()),
+                Some(i) => Err(format!(
+                    "bt [{m}x{k}]@[{n}x{k}]^T t={threads}: first bit diff at {i}: {} vs {}",
+                    got[i], want[i]
+                )),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_blocked_rms_norm_bitwise_matches_naive() {
+    let _serialize = par_lock();
+    forall(
+        PropConfig { cases: 100, seed: 63 },
+        |rng| {
+            let rows = rng.range(1, 40);
+            let d = rng.range(1, 80);
+            let x = randv(rng, rows * d);
+            let gain: Vec<f32> = (0..d).map(|_| rng.f32() * 2.0).collect();
+            let threads = rng.range(1, 5);
+            (rows, d, x, gain, threads)
+        },
+        |(rows, d, x, gain, threads)| {
+            par::set_threads(*threads);
+            let want = naive::rms_norm_rows(x, *rows, *d, gain, 1e-5);
+            let got = kernels::rms_norm_rows(x, *rows, *d, gain, 1e-5);
+            par::set_threads(0);
+            match first_diff(&got, &want) {
+                None => Ok(()),
+                Some(i) => Err(format!(
+                    "rms [{rows}x{d}] t={threads}: first bit diff at {i}: {} vs {}",
+                    got[i], want[i]
+                )),
+            }
+        },
+    );
+}
+
+/// Every stage of the reference backend agrees bit-for-bit between the
+/// naive and blocked kernel modes, at several thread counts. Sized above
+/// the fan-out work threshold so the parallel code paths really run.
+#[test]
+fn stages_bitwise_equal_across_modes_and_threads() {
+    let _serialize = par_lock();
+    let mut cfg = ModelConfig::synthetic_small();
+    cfg.d_model = 128;
+    cfg.n_heads = 4;
+    cfg.head_dim = 32;
+    cfg.d_ff = 256;
+    cfg.vocab_size = 512;
+    cfg.max_seq = 64;
+    cfg.token_buckets = vec![1, 2, 4, 8, 16, 32, 64];
+    cfg.batch_buckets = vec![1, 2, 4, 8];
+    let store = Arc::new(WeightStore::synthetic_families(&cfg, 31));
+    let naive_st = RefStages::with_mode(cfg.clone(), store.clone(), KernelMode::Naive);
+    let blocked = RefStages::with_mode(cfg.clone(), store.clone(), KernelMode::Blocked);
+    assert_eq!(naive_st.kernel_mode(), KernelMode::Naive);
+    assert_eq!(blocked.kernel_mode(), KernelMode::Blocked);
+    let d = cfg.d_model;
+    let mut rng = Rng::new(5);
+    let mut rv = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.f32() - 0.5).collect() };
+
+    for &threads in &[1usize, 2, 4] {
+        par::set_threads(threads);
+
+        // Prefill attention (causal + length mask).
+        let s = cfg.max_seq;
+        let x = Tensor::new(vec![s, d], rv(s * d)).unwrap();
+        let mut mask = vec![1.0f32; s];
+        for m in mask.iter_mut().skip(s - 5) {
+            *m = 0.0;
+        }
+        let mask = Tensor::new(vec![s], mask).unwrap();
+        let [ya, ka, va] = naive_st.attn_prefill(0, &x, &mask).unwrap();
+        let [yb, kb, vb] = blocked.attn_prefill(0, &x, &mask).unwrap();
+        assert_eq!(ya.data, yb.data, "prefill y, threads={threads}");
+        assert_eq!(ka.data, kb.data, "prefill k, threads={threads}");
+        assert_eq!(va.data, vb.data, "prefill v, threads={threads}");
+
+        // Decode attention (cached window + current token).
+        let bb = 4;
+        let xd = Tensor::new(vec![bb, d], rv(bb * d)).unwrap();
+        let kc = Tensor::new(vec![bb, s, d], rv(bb * s * d)).unwrap();
+        let vc = Tensor::new(vec![bb, s, d], rv(bb * s * d)).unwrap();
+        let pm = Tensor::new(
+            vec![bb, s],
+            (0..bb * s).map(|i| if i % 3 == 0 { 0.0 } else { 1.0 }).collect(),
+        )
+        .unwrap();
+        let [ya, ka, va] = naive_st.attn_decode(1, bb, &xd, &kc, &vc, &pm).unwrap();
+        let [yb, kb, vb] = blocked.attn_decode(1, bb, &xd, &kc, &vc, &pm).unwrap();
+        assert_eq!(ya.data, yb.data, "decode y, threads={threads}");
+        assert_eq!(ka.data, kb.data, "decode k_new, threads={threads}");
+        assert_eq!(va.data, vb.data, "decode v_new, threads={threads}");
+
+        // Router.
+        let t = 6;
+        let y = Tensor::new(vec![t, d], rv(t * d)).unwrap();
+        let (ha, pa) = naive_st.router(2, &y).unwrap();
+        let (hb, pb) = blocked.router(2, &y).unwrap();
+        assert_eq!(ha.data, hb.data, "router h, threads={threads}");
+        assert_eq!(pa.data, pb.data, "router probs, threads={threads}");
+
+        // Expert FFN.
+        let w = store.expert(ExpertKey::new(0, 1)).unwrap();
+        let h = Tensor::new(vec![t, d], rv(t * d)).unwrap();
+        let ea = naive_st.expert_transient(t, &w, &h).unwrap();
+        let eb = blocked.expert_transient(t, &w, &h).unwrap();
+        assert_eq!(ea.data, eb.data, "expert ffn, threads={threads}");
+
+        // LM head.
+        let xl = Tensor::new(vec![t, d], rv(t * d)).unwrap();
+        let la = naive_st.lm_head(t, &xl).unwrap();
+        let lb = blocked.lm_head(t, &xl).unwrap();
+        assert_eq!(la.data, lb.data, "lm head, threads={threads}");
+    }
+    par::set_threads(0);
+}
+
+/// The golden determinism contract extended to threading: a table sweep at
+/// 1 thread and at 4 threads must produce identical outcome rows and
+/// byte-identical markdown.
+#[test]
+fn golden_sweep_identical_across_thread_counts() {
+    let _serialize = par_lock();
+    let cfg = ModelConfig::synthetic_small();
+    let store = Arc::new(WeightStore::synthetic_families(&cfg, 99));
+    let settings = TableSettings {
+        cache_rate: 0.75,
+        n_easy: 2,
+        n_hard: 2,
+        max_new: 4,
+        seed: 42,
+        clock: ClockMode::Virtual,
+    };
+    let methods = vec![
+        MethodSpec::new("Original (on-demand)", "original"),
+        MethodSpec::new("BuddyMoE t=0.95 |B|=16 rho=3", "buddy-rho3"),
+    ];
+    par::set_threads(1);
+    let (rows_1, md_1) = run_table(&cfg, store.clone(), &settings, &methods).expect("1-thread");
+    par::set_threads(4);
+    let (rows_4, md_4) = run_table(&cfg, store, &settings, &methods).expect("4-thread");
+    par::set_threads(0);
+    assert_eq!(rows_1, rows_4, "PALLAS_THREADS must never change an outcome");
+    assert_eq!(md_1, md_4, "reports must be byte-identical across thread counts");
+}
+
+/// Zero-copy contract: admission shares the store's Arc allocation, and
+/// running a resident expert adds no refcount traffic (it borrows).
+#[test]
+fn expert_residency_is_zero_copy() {
+    let cfg = ModelConfig::test_tiny();
+    let store = Arc::new(WeightStore::synthetic(&cfg, 7));
+    let mut stages = RefStages::with_mode(cfg.clone(), store.clone(), KernelMode::Blocked);
+    let key = ExpertKey::new(0, 3);
+    let w = store.expert(key).unwrap();
+    stages.admit_expert(key, &w).unwrap();
+
+    let resident = stages.resident_weights(key).expect("admitted");
+    assert!(
+        Arc::ptr_eq(resident, &w),
+        "admit_expert must be a pointer bump, not a 3x(d x d_ff) copy"
+    );
+    assert!(
+        Arc::ptr_eq(resident, &store.expert(key).unwrap()),
+        "the resident entry must alias the store's own allocation"
+    );
+
+    // store + local `w` + resident map = 3 strong refs; running the
+    // expert must not add or copy anything.
+    assert_eq!(Arc::strong_count(&w), 3);
+    let h = Tensor::zeros(vec![2, cfg.d_model]);
+    let _ = stages.expert_resident(2, key, &h).unwrap();
+    assert_eq!(
+        Arc::strong_count(&w),
+        3,
+        "expert_resident must borrow the resident weights, not clone them"
+    );
+}
