@@ -1,9 +1,10 @@
 //! ROADMAP bandwidth sweep (the paper's Figure 8 axis): serve the same
 //! workload at PCIe bandwidths 4–64 GB/s under `ClockMode::Virtual` and
-//! print tok/s per miss policy. The whole sweep is a discrete-event
-//! simulation — milliseconds of wall time per point — and shows where
-//! buddy substitution stops mattering: once the link is fast enough,
-//! on-demand fetches are cheap and every policy converges.
+//! print tok/s plus p99 decode-step latency per miss policy. The whole
+//! sweep is a discrete-event simulation — milliseconds of wall time per
+//! point — and shows where buddy substitution stops mattering: once the
+//! link is fast enough, on-demand fetches are cheap and every policy
+//! converges (in throughput and in the tail).
 //!
 //! Run: `cargo run --release --example sweep_bandwidth [-- --fast]`
 //! Works with or without artifacts (synthetic-family fallback).
@@ -11,10 +12,11 @@
 use std::path::Path;
 
 use anyhow::Result;
-use buddymoe::buddy::BuddyProfile;
 use buddymoe::config::ServingConfig;
-use buddymoe::eval::{build_requests, profile_model, warm_rank_from_profile, TableSettings};
-use buddymoe::model::{Engine, EngineOptions};
+use buddymoe::eval::{
+    build_requests, engine_with_config, profile_model, warm_rank_from_profile, TableSettings,
+};
+use buddymoe::model::EngineOptions;
 use buddymoe::server::Server;
 use buddymoe::util::clock::ClockMode;
 
@@ -42,27 +44,20 @@ fn main() -> Result<()> {
         "# PCIe bandwidth sweep at c = {} (virtual clock, seed {})\n",
         settings.cache_rate, settings.seed
     );
-    println!("| GB/s | policy | tok/s | demand MB | substitutions | fetches |");
-    println!("|---|---|---|---|---|---|");
+    println!("| GB/s | policy | tok/s | p99 step ms | demand MB | substitutions | fetches |");
+    println!("|---|---|---|---|---|---|---|");
     for bw_gbps in [4.0f64, 8.0, 16.0, 32.0, 64.0] {
         for preset in ["original", "random", "buddy-tight", "buddy-rho3"] {
             let mut scfg = ServingConfig::default().preset(preset)?;
             scfg.cache_rate = settings.cache_rate;
             scfg.pcie_bandwidth = bw_gbps * 1e9;
             scfg.seed = settings.seed;
-            let buddies = BuddyProfile::build(
-                &pc,
-                &vec![scfg.cft_alpha; cfg.n_layers],
-                scfg.k_max,
-                1e-3,
-                true,
-            )?;
-            let engine = Engine::new(
-                cfg.clone(),
-                scfg,
+            let engine = engine_with_config(
+                &cfg,
                 store.clone(),
-                Some(buddies),
-                Some(warm.clone()),
+                &pc,
+                &warm,
+                scfg,
                 EngineOptions { clock: settings.clock, ..Default::default() },
             )?;
             let mut server = Server::new(engine);
@@ -76,8 +71,9 @@ fn main() -> Result<()> {
                 .with_state(|st| st.pcie.stats.demand_bytes) as f64
                 / (1024.0 * 1024.0);
             println!(
-                "| {bw_gbps:.0} | {preset} | {:.2} | {demand_mb:.2} | {} | {} |",
+                "| {bw_gbps:.0} | {preset} | {:.2} | {:.2} | {demand_mb:.2} | {} | {} |",
                 server.metrics.tokens_out as f64 / wall,
+                server.metrics.step_latency.p(99.0) * 1e3,
                 server.engine.counters.get("substitutions"),
                 server.engine.counters.get("fetches"),
             );

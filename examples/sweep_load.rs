@@ -1,0 +1,67 @@
+//! Tail latency under load: sweep (arrival process × offered load × miss
+//! policy) on the virtual clock and report TTFT / TBT / e2e percentiles
+//! plus queue depth per cell — the serving regime the offline table runs
+//! can't see. The whole grid is a discrete-event simulation (milliseconds
+//! of wall time) and byte-identical per seed.
+//!
+//! Run: `cargo run --release --example sweep_load [-- --fast]`
+//! Works with or without artifacts (synthetic-family fallback); emits
+//! machine-readable `BENCH_load.json` next to Cargo.toml (uploaded by CI
+//! as a perf-trajectory artifact alongside `BENCH_hotpath.json`).
+
+use std::path::Path;
+
+use anyhow::Result;
+use buddymoe::eval::{profile_model, warm_rank_from_profile, Domain};
+use buddymoe::traffic::{
+    cells_json, report_markdown, run_sweep, LoadSettings, ProcessKind, SweepSpec,
+};
+use buddymoe::util::json::{num, obj, s};
+
+fn main() -> Result<()> {
+    buddymoe::util::logging::init();
+    let fast = std::env::args().any(|a| a == "--fast");
+
+    // Artifacts when built; otherwise the synthetic-family model (the
+    // shared eval fallback), so the sweep runs anywhere.
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let (cfg, store) = buddymoe::eval::load_model_or_synthetic(&dir, 4242)?;
+    let pc = profile_model(&cfg, store.clone(), if fast { 16 } else { 48 }, 7777)?;
+    let warm = warm_rank_from_profile(&pc);
+
+    let spec = SweepSpec {
+        processes: vec![ProcessKind::Poisson, ProcessKind::Bursty, ProcessKind::Closed],
+        // Under-loaded -> saturated: decode steps on the simulated compute
+        // model cost single-digit milliseconds, so 64 rps of 8-token
+        // requests is past the knee.
+        loads_rps: vec![4.0, 16.0, 64.0],
+        presets: vec!["original".into(), "buddy-rho3".into()],
+        settings: LoadSettings {
+            n_requests: if fast { 12 } else { 32 },
+            max_new: 8,
+            cache_rate: 0.5,
+            domain: Domain::Mixed,
+            seed: 42,
+        },
+    };
+
+    println!(
+        "# Load sweep at c = {} (virtual clock, seed {}, {} requests/cell)\n",
+        spec.settings.cache_rate, spec.settings.seed, spec.settings.n_requests
+    );
+    let cells = run_sweep(&cfg, store, &pc, &warm, &spec)?;
+    println!("{}", report_markdown(&cells));
+
+    let json = obj(vec![
+        ("model", s(&cfg.name)),
+        ("cache_rate", num(spec.settings.cache_rate)),
+        ("seed", num(spec.settings.seed as f64)),
+        ("n_requests", num(spec.settings.n_requests as f64)),
+        ("max_new", num(spec.settings.max_new as f64)),
+        ("cells", cells_json(&cells)),
+    ]);
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_load.json");
+    std::fs::write(&path, json.to_string() + "\n")?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

@@ -196,6 +196,30 @@ fn by_domain(responses: &[InferenceResponse]) -> (Vec<&InferenceResponse>, Vec<&
     (easy, hard)
 }
 
+/// Build a serving engine from a fully-resolved `ServingConfig`: buddy
+/// lists are rebuilt from the profile with the config's α / K_max (they
+/// differ across method rows), warm-rank seeds the cache. Shared by the
+/// table runner, the bandwidth sweep, and the traffic load sweep.
+pub fn engine_with_config(
+    cfg: &ModelConfig,
+    store: Arc<WeightStore>,
+    collector: &ProfileCollector,
+    warm_rank: &[Vec<usize>],
+    scfg: ServingConfig,
+    opts: EngineOptions,
+) -> Result<Engine> {
+    let alphas = vec![scfg.cft_alpha; cfg.n_layers];
+    let profile = BuddyProfile::build(collector, &alphas, scfg.k_max, 1e-3, true)?;
+    Engine::new(
+        cfg.clone(),
+        scfg,
+        store,
+        Some(profile),
+        Some(warm_rank.to_vec()),
+        opts,
+    )
+}
+
 /// Serve one method configuration and score it against the oracle.
 #[allow(clippy::too_many_arguments)]
 pub fn run_method(
@@ -212,23 +236,12 @@ pub fn run_method(
     scfg.cache_rate = settings.cache_rate;
     scfg.seed = settings.seed;
 
-    // Buddy lists rebuilt per method: α / K_max differ across rows.
-    let alphas = vec![scfg.cft_alpha; cfg.n_layers];
-    let profile = BuddyProfile::build(collector, &alphas, scfg.k_max, 1e-3, true)?;
-
     let opts = EngineOptions {
         clock: settings.clock,
         record_logits: true,
         ..Default::default()
     };
-    let engine = Engine::new(
-        cfg.clone(),
-        scfg,
-        store,
-        Some(profile),
-        Some(warm_rank.to_vec()),
-        opts,
-    )?;
+    let engine = engine_with_config(cfg, store, collector, warm_rank, scfg, opts)?;
     let mut server = Server::new(engine);
     // Teacher-force every request to the oracle's token stream so each
     // position is scored independently (see accuracy.rs). The compute path

@@ -8,8 +8,9 @@ mod workload;
 
 pub use accuracy::{agreement, forced_agreement, mean_logit_kl, AccuracyReport, TIE_EPS};
 pub use harness::{
-    build_requests, load_model_or_synthetic, oracle_run, profile_model, run_method, run_table,
-    table_methods, warm_rank_from_profile, EvalOutcome, MethodSpec, TableSettings,
+    build_requests, engine_with_config, load_model_or_synthetic, oracle_run, profile_model,
+    run_method, run_table, table_methods, warm_rank_from_profile, EvalOutcome, MethodSpec,
+    TableSettings,
 };
 pub use report::{markdown_table, write_report};
 pub use workload::{Domain, WorkloadGen};

@@ -73,11 +73,16 @@ impl WorkloadGen {
             .collect()
     }
 
+    /// One request: a `domain` prompt with this generator's `max_new`.
+    /// This is the request-body source the traffic subsystem's
+    /// [`crate::traffic::PromptSource`] draws from.
+    pub fn request(&mut self, domain: Domain, id: u64) -> InferenceRequest {
+        InferenceRequest::new(id, self.prompt(domain), self.max_new)
+    }
+
     /// A request batch: `n` prompts from `domain`, ids starting at `id0`.
     pub fn requests(&mut self, domain: Domain, n: usize, id0: u64) -> Vec<InferenceRequest> {
-        (0..n)
-            .map(|i| InferenceRequest::new(id0 + i as u64, self.prompt(domain), self.max_new))
-            .collect()
+        (0..n).map(|i| self.request(domain, id0 + i as u64)).collect()
     }
 }
 

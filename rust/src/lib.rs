@@ -8,7 +8,9 @@
 //!   expert cache + PCIe offloading substrate, predictive prefetching, and
 //!   the paper's contribution: offline co-activation profiling, CFT buddy
 //!   lists, the TAE/distribution/Ψ gate pipeline, and Algorithm 1 buddy
-//!   substitution.
+//!   substitution. The [`traffic`] subsystem layers arrival-process
+//!   generators and discrete-event admission on top, so tail latency
+//!   under offered load is measurable on the virtual clock.
 //! * **L2** — a miniature DeepSeek-V2-class MoE transformer written in JAX
 //!   (`python/compile/model.py`), factored into per-stage functions and
 //!   AOT-lowered to HLO text at build time.
@@ -55,5 +57,6 @@ pub mod runtime;
 pub mod server;
 pub mod stats;
 pub mod testing;
+pub mod traffic;
 pub mod util;
 pub mod weights;

@@ -4,26 +4,63 @@
 //! * Real-time clock — thread-safe blocking queue: an intake thread feeds
 //!   a serving thread, and `next_admissions` waits on a condvar with the
 //!   configured batching-window timeout.
-//! * Virtual clock — the batching window is *modeled*: a partial batch
-//!   "waits" by advancing the virtual clock by the timeout, then admits
-//!   whatever is queued. No blocking, fully deterministic. Virtual mode is
-//!   single-driver: producers must enqueue (and `close`) before or between
-//!   `next_admissions` calls, as offline benchmark runs do — there is no
-//!   other thread whose arrival could end the window early. An empty,
-//!   still-open queue is therefore unservable (no future arrival can
-//!   exist) and is treated as drained, with a warning — never a busy-spin.
+//! * Virtual clock — the batching window is *modeled* as a discrete-event
+//!   simulation. Besides direct `submit` calls, the batcher owns an
+//!   [`EventQueue`] of *staged* future arrivals
+//!   (`stage_arrival`/`stage_process`): requests with known virtual
+//!   timestamps, fed by the traffic subsystem's arrival processes
+//!   ([`crate::traffic`]). The event-queue contract:
+//!
+//!   - Staged arrivals are **released** into the admission queue as the
+//!     shared clock reaches their timestamps (at every poll).
+//!   - An idle poll (empty admission queue) **jumps** the clock to the
+//!     next staged arrival instead of giving up.
+//!   - A partial batch holds the window open, releasing each staged
+//!     arrival that lands inside the window at its own timestamp; a
+//!     **full batch closes the window early** — virtual time advances
+//!     only to the arrival that filled it, exactly as the real-time path
+//!     returns early when a submitting thread completes the batch.
+//!   - With no staged arrivals the old single-driver behavior is the
+//!     degenerate case: a partial batch waits out the whole timeout, and
+//!     an empty, still-open queue is unservable (no future arrival can
+//!     exist) and treated as drained, with a warning — never a busy-spin.
+//!
+//!   `close()` only means "no more *direct* `submit` calls will be made":
+//!   already-staged arrivals still release and drain, and hook-driven
+//!   staging (closed-loop completions scheduling their follow-ups via
+//!   `stage_arrival`) may continue after close — the serve loop ends when
+//!   both queues are empty.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::request::InferenceRequest;
+use crate::traffic::{ArrivalProcess, EventQueue};
 use crate::util::clock::SimClock;
 
 #[derive(Default)]
 struct QueueState {
     queue: VecDeque<InferenceRequest>,
+    /// Staged future arrivals keyed on virtual time (traffic subsystem).
+    events: EventQueue,
     closed: bool,
+}
+
+impl QueueState {
+    /// Release every staged arrival due by `now` into the admission queue,
+    /// stamping `enqueued` (and `arrival_time`, when the generator did not)
+    /// with the arrival timestamp — the instant the request "really"
+    /// entered the queue on the virtual timeline.
+    fn release_due(&mut self, now: Duration) {
+        for (at, mut req) in self.events.pop_due(now) {
+            req.enqueued = at;
+            if req.arrival_time.is_none() {
+                req.arrival_time = Some(at);
+            }
+            self.queue.push_back(req);
+        }
+    }
 }
 
 pub struct DynamicBatcher {
@@ -46,31 +83,66 @@ impl DynamicBatcher {
         }
     }
 
-    /// Enqueue a request, stamping its arrival time off the shared clock.
+    /// Enqueue a request, stamping its arrival + enqueue time off the
+    /// shared clock (unless the caller already stamped an arrival time).
     pub fn submit(&self, mut req: InferenceRequest) {
-        req.enqueued = self.clock.now();
+        let now = self.clock.now();
+        req.enqueued = now;
+        if req.arrival_time.is_none() {
+            req.arrival_time = Some(now);
+        }
         let mut st = self.state.lock().unwrap();
         st.queue.push_back(req);
         self.cv.notify_all();
     }
 
-    /// No more submissions; pending requests still drain.
+    /// Stage a future arrival at virtual time `at`. The request is
+    /// released into the admission queue when the shared clock reaches
+    /// `at` (checked at every poll — under a real-time clock this is
+    /// poll-granularity, so prefer `submit` from a thread there).
+    pub fn stage_arrival(&self, at: Duration, req: InferenceRequest) {
+        let mut st = self.state.lock().unwrap();
+        st.events.push(at, req);
+        self.cv.notify_all();
+    }
+
+    /// Drain an arrival process's open-loop stream into the staged event
+    /// queue (closed-loop follow-ups arrive later via `stage_arrival`).
+    pub fn stage_process(&self, process: &mut dyn ArrivalProcess) {
+        let mut st = self.state.lock().unwrap();
+        st.events.extend_from(process);
+        self.cv.notify_all();
+    }
+
+    /// No more direct submissions; pending and staged requests still
+    /// drain, and staging remains open for completion-hook follow-ups
+    /// (closed-loop traffic schedules arrivals after close).
     pub fn close(&self) {
         self.state.lock().unwrap().closed = true;
         self.cv.notify_all();
     }
 
+    /// Requests in the admission queue (staged arrivals already due are
+    /// released first, so this is the instantaneous queue depth).
     pub fn pending(&self) -> usize {
-        self.state.lock().unwrap().queue.len()
+        let mut st = self.state.lock().unwrap();
+        st.release_due(self.clock.now());
+        st.queue.len()
+    }
+
+    /// Staged future arrivals not yet released.
+    pub fn staged(&self) -> usize {
+        self.state.lock().unwrap().events.len()
     }
 
     /// Pull up to `room` requests. Blocks (or advances virtual time) until
     /// at least one request is available, the batching window elapses, or
-    /// the batcher is closed. Returns `None` when closed and drained — and,
-    /// in virtual mode, when the queue is empty while still open: virtual
-    /// mode is single-driver, so no future arrival can exist and blocking
-    /// (or spinning) would hang forever. That case warns, since it usually
-    /// means a caller forgot `close()` before `run()`.
+    /// the batcher is closed. Returns `None` when closed and fully drained
+    /// — and, in virtual mode, when both the admission queue and the
+    /// staged event queue are empty while still open: no future arrival
+    /// can exist, so blocking (or spinning) would hang forever. That case
+    /// warns, since it usually means a caller forgot `close()` before
+    /// `run()`.
     pub fn next_admissions(&self, room: usize) -> Option<Vec<InferenceRequest>> {
         if room == 0 {
             return Some(Vec::new());
@@ -78,20 +150,51 @@ impl DynamicBatcher {
         let want = room.min(self.max_batch);
         if self.clock.is_virtual() {
             let mut st = self.state.lock().unwrap();
+            st.release_due(self.clock.now());
             if st.queue.is_empty() {
-                if !st.closed {
-                    log::warn!(
-                        "virtual-clock batcher polled while empty and open: \
-                         treating as drained (submit + close before run)"
-                    );
+                // Idle: jump the clock to the next staged arrival. With
+                // nothing staged the poll is unservable (the degenerate
+                // single-driver case).
+                match st.events.peek_time() {
+                    Some(t) => {
+                        self.clock.advance_to(t);
+                        st.release_due(self.clock.now());
+                    }
+                    None => {
+                        if !st.closed {
+                            log::warn!(
+                                "virtual-clock batcher polled while empty and open with no \
+                                 staged arrivals: treating as drained (submit/stage + close \
+                                 before run)"
+                            );
+                        }
+                        return None;
+                    }
                 }
-                return None;
             }
-            if st.queue.len() < want && !st.closed {
-                // Partial batch: model holding the window open for more
-                // arrivals (none can come — single-driver — so the full
-                // timeout elapses).
-                self.clock.advance(self.timeout);
+            if st.queue.len() < want && !(st.closed && st.events.is_empty()) {
+                // Partial batch: hold the window open, releasing every
+                // staged arrival that lands inside it. A full batch ends
+                // the window early — the clock stops at the arrival that
+                // filled it; otherwise the full timeout elapses. Closed
+                // only short-circuits the window once nothing is staged:
+                // "closed" means no *new* submissions, and with an empty
+                // event queue no future arrival can exist — whereas staged
+                // arrivals are exactly the future arrivals a real window
+                // would wait for.
+                let deadline = self.clock.now() + self.timeout;
+                while st.queue.len() < want {
+                    match st.events.peek_time().filter(|&t| t <= deadline) {
+                        Some(t) => {
+                            self.clock.advance_to(t);
+                            st.release_due(t);
+                        }
+                        None => {
+                            self.clock.advance_to(deadline);
+                            break;
+                        }
+                    }
+                }
             }
             let n = st.queue.len().min(want);
             return Some(st.queue.drain(..n).collect());
@@ -100,25 +203,31 @@ impl DynamicBatcher {
         let deadline = Instant::now() + self.timeout;
         let mut st = self.state.lock().unwrap();
         loop {
+            st.release_due(self.clock.now());
             if !st.queue.is_empty() {
                 // Wait briefly for more arrivals to batch together, unless
-                // we already have a full batch — or the batcher is closed,
-                // in which case no arrival can come (matching the virtual
-                // path's closed-drains-immediately behavior).
-                while st.queue.len() < want && !st.closed && Instant::now() < deadline {
+                // we already have a full batch — or the batcher is closed
+                // with nothing staged, in which case no arrival can come
+                // (matching the virtual path's closed-drains-immediately
+                // behavior).
+                while st.queue.len() < want
+                    && !(st.closed && st.events.is_empty())
+                    && Instant::now() < deadline
+                {
                     let (guard, timeout_res) = self
                         .cv
                         .wait_timeout(st, deadline.saturating_duration_since(Instant::now()))
                         .unwrap();
                     st = guard;
-                    if timeout_res.timed_out() || st.closed {
+                    st.release_due(self.clock.now());
+                    if timeout_res.timed_out() || (st.closed && st.events.is_empty()) {
                         break;
                     }
                 }
                 let n = st.queue.len().min(want);
                 return Some(st.queue.drain(..n).collect());
             }
-            if st.closed {
+            if st.closed && st.events.is_empty() {
                 return None;
             }
             let (guard, _) = self.cv.wait_timeout(st, self.timeout).unwrap();
@@ -127,11 +236,15 @@ impl DynamicBatcher {
     }
 
     /// Non-blocking pull (scheduler already busy with active sequences).
+    /// Staged arrivals that became due while the clock advanced — e.g.
+    /// during decode steps — are released first, so mid-decode arrivals
+    /// join the batch at the next step boundary.
     pub fn try_admissions(&self, room: usize) -> Vec<InferenceRequest> {
         if room == 0 {
             return Vec::new();
         }
         let mut st = self.state.lock().unwrap();
+        st.release_due(self.clock.now());
         let n = st.queue.len().min(room).min(self.max_batch);
         st.queue.drain(..n).collect()
     }
@@ -201,9 +314,9 @@ mod tests {
 
     #[test]
     fn empty_open_queue_is_drained_not_spun() {
-        // Single-driver virtual mode: nothing can ever arrive while we
-        // poll, so an empty open queue ends the serve loop (with a warning)
-        // instead of spinning the virtual clock forever.
+        // Single-driver virtual mode: nothing queued, nothing staged, so an
+        // empty open queue ends the serve loop (with a warning) instead of
+        // spinning the virtual clock forever.
         let (b, clock) = virt(4, 7);
         let t0 = clock.now();
         assert!(b.next_admissions(4).is_none());
@@ -246,6 +359,95 @@ mod tests {
         b.submit(req(1));
         let got = b.next_admissions(4).unwrap();
         assert_eq!(got[0].enqueued, Duration::from_millis(30));
+        assert_eq!(got[0].arrival_time, Some(Duration::from_millis(30)));
+    }
+
+    // --- staged-arrival (event queue) contract ---
+
+    #[test]
+    fn staged_arrival_fills_batch_and_closes_window_early() {
+        // The acceptance case: one request queued, the batch-filling
+        // arrival staged 10 ms out, window 50 ms. The window must close at
+        // the arrival that filled it — t = 10 ms, not 50 ms.
+        let (b, clock) = virt(2, 50);
+        b.submit(req(1));
+        b.stage_arrival(Duration::from_millis(10), req(2));
+        let got = b.next_admissions(2).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(
+            clock.now(),
+            Duration::from_millis(10),
+            "full batch must close the window at the filling arrival"
+        );
+        assert_eq!(got[1].enqueued, Duration::from_millis(10));
+    }
+
+    #[test]
+    fn staged_arrival_beyond_window_does_not_extend_it() {
+        let (b, clock) = virt(2, 50);
+        b.submit(req(1));
+        b.stage_arrival(Duration::from_millis(200), req(2));
+        let got = b.next_admissions(2).unwrap();
+        assert_eq!(got.len(), 1, "far-future arrival must not join this window");
+        assert_eq!(clock.now(), Duration::from_millis(50));
+        assert_eq!(b.staged(), 1);
+    }
+
+    #[test]
+    fn idle_batcher_jumps_to_next_staged_arrival() {
+        let (b, clock) = virt(4, 5);
+        b.stage_arrival(Duration::from_millis(30), req(1));
+        let got = b.next_admissions(4).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].enqueued, Duration::from_millis(30));
+        // Jumped to the arrival, then held the (empty) window open.
+        assert_eq!(clock.now(), Duration::from_millis(35));
+    }
+
+    #[test]
+    fn window_releases_multiple_staged_arrivals_in_order() {
+        let (b, clock) = virt(3, 50);
+        b.submit(req(1));
+        b.stage_arrival(Duration::from_millis(20), req(3));
+        b.stage_arrival(Duration::from_millis(10), req(2));
+        let got = b.next_admissions(3).unwrap();
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert_eq!(clock.now(), Duration::from_millis(20), "window closed on the filler");
+    }
+
+    #[test]
+    fn try_admissions_releases_due_staged_arrivals() {
+        let (b, clock) = virt(4, 10_000);
+        b.stage_arrival(Duration::from_millis(10), req(1));
+        assert!(b.try_admissions(4).is_empty(), "not due yet");
+        clock.advance(Duration::from_millis(15));
+        let got = b.try_admissions(4);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].enqueued, Duration::from_millis(10), "stamped at arrival, not release");
+    }
+
+    #[test]
+    fn close_still_drains_staged_arrivals() {
+        let (b, clock) = virt(4, 50);
+        b.stage_arrival(Duration::from_millis(10), req(1));
+        b.close();
+        let got = b.next_admissions(4).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(clock.now(), Duration::from_millis(10), "closed: no window wait");
+        assert!(b.next_admissions(4).is_none());
+    }
+
+    #[test]
+    fn generator_arrival_time_survives_release() {
+        let (b, clock) = virt(4, 1);
+        // A generator-stamped arrival keeps its own arrival_time.
+        b.stage_arrival(
+            Duration::from_millis(5),
+            req(1).arriving_at(Duration::from_millis(5)),
+        );
+        clock.advance(Duration::from_millis(20));
+        let got = b.try_admissions(4);
+        assert_eq!(got[0].arrival_time, Some(Duration::from_millis(5)));
     }
 
     #[test]
@@ -277,5 +479,15 @@ mod tests {
         let got = b.next_admissions(4).unwrap();
         assert_eq!(got[0].id, 42);
         t.join().unwrap();
+    }
+
+    #[test]
+    fn real_time_releases_due_staged_arrivals() {
+        let b = DynamicBatcher::new(4, Duration::from_millis(20), SimClock::real_time());
+        // Due immediately (t=0 is already in the past for a real clock).
+        b.stage_arrival(Duration::ZERO, req(7));
+        b.close();
+        let got = b.next_admissions(4).unwrap();
+        assert_eq!(got[0].id, 7);
     }
 }

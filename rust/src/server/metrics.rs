@@ -16,9 +16,17 @@ pub struct ServerMetrics {
     /// Clock timestamp at which this metrics window opened.
     pub started: Duration,
     pub ttft: Summary,
+    /// Arrival → admission wait (the load-dependent part of TTFT).
+    pub queue_delay: Summary,
+    /// Per-sequence time between consecutive tokens (decode-step
+    /// intervals as each request experienced them, admission pauses
+    /// included).
+    pub tbt: Summary,
     pub request_latency: Summary,
     pub step_latency: Summary,
     pub stall_seconds: Summary,
+    /// Admission-queue depth sampled at every decode-step boundary.
+    pub queue_depth: Summary,
     pub tokens_out: u64,
     pub requests_done: u64,
     pub counters: Counters,
@@ -31,9 +39,12 @@ impl ServerMetrics {
             clock,
             started,
             ttft: Summary::new(),
+            queue_delay: Summary::new(),
+            tbt: Summary::new(),
             request_latency: Summary::new(),
             step_latency: Summary::new(),
             stall_seconds: Summary::new(),
+            queue_depth: Summary::new(),
             tokens_out: 0,
             requests_done: 0,
             counters: Counters::new(),
@@ -59,16 +70,22 @@ impl ServerMetrics {
         format!(
             "throughput: {:.2} tok/s | requests: {} | tokens: {}\n\
              ttft:    {}\n\
+             qdelay:  {}\n\
+             tbt:     {}\n\
              latency: {}\n\
              step:    {}\n\
-             stalls:  {}",
+             stalls:  {}\n\
+             qdepth:  {}",
             self.tokens_per_second(),
             self.requests_done,
             self.tokens_out,
             self.ttft.report("s"),
+            self.queue_delay.report("s"),
+            self.tbt.report("s"),
             self.request_latency.report("s"),
             self.step_latency.report("s"),
             self.stall_seconds.report("s"),
+            self.queue_depth.report(""),
         )
     }
 }

@@ -10,4 +10,4 @@ mod scheduler;
 pub use batcher::DynamicBatcher;
 pub use metrics::ServerMetrics;
 pub use request::{InferenceRequest, InferenceResponse};
-pub use scheduler::Server;
+pub use scheduler::{CompletionHook, Server};

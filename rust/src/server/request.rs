@@ -8,7 +8,14 @@ pub struct InferenceRequest {
     pub prompt: Vec<i32>,
     pub max_new: usize,
     /// Clock timestamp ([`crate::util::clock::SimClock::now`]) at which the
-    /// request entered the batcher; stamped by `DynamicBatcher::submit`.
+    /// request *arrived* at the serving system: stamped by the traffic
+    /// generator for event-queue arrivals (`DynamicBatcher::stage_arrival`),
+    /// or set to the submit time for direct `DynamicBatcher::submit` calls.
+    /// Queue delay is measured from this point.
+    pub arrival_time: Option<Duration>,
+    /// Clock timestamp at which the request entered the batcher queue;
+    /// stamped by `DynamicBatcher::submit` (or, for staged arrivals, the
+    /// arrival timestamp at which the event queue released it).
     pub enqueued: Duration,
     /// Teacher-forced token stream for scored (accuracy) runs.
     pub force_tokens: Option<Vec<i32>>,
@@ -16,12 +23,31 @@ pub struct InferenceRequest {
 
 impl InferenceRequest {
     pub fn new(id: u64, prompt: Vec<i32>, max_new: usize) -> Self {
-        Self { id, prompt, max_new, enqueued: Duration::ZERO, force_tokens: None }
+        Self {
+            id,
+            prompt,
+            max_new,
+            arrival_time: None,
+            enqueued: Duration::ZERO,
+            force_tokens: None,
+        }
     }
 
     pub fn forced(mut self, tokens: Vec<i32>) -> Self {
         self.force_tokens = Some(tokens);
         self
+    }
+
+    /// Builder: stamp an explicit arrival timestamp (traffic generators).
+    pub fn arriving_at(mut self, at: Duration) -> Self {
+        self.arrival_time = Some(at);
+        self
+    }
+
+    /// The timestamp queue delay and end-to-end latency are measured from:
+    /// the explicit arrival time when stamped, else the enqueue time.
+    pub fn arrived(&self) -> Duration {
+        self.arrival_time.unwrap_or(self.enqueued)
     }
 }
 
@@ -35,9 +61,12 @@ pub struct InferenceResponse {
     /// Per-position logits aligned with `predictions` (prefill first),
     /// present when the engine records them.
     pub logits: Vec<Vec<f32>>,
-    /// Seconds (virtual or real) from enqueue to first token (prefill
+    /// Seconds (virtual or real) from arrival to first token (prefill
     /// complete).
     pub ttft: f64,
-    /// Seconds (virtual or real) from enqueue to completion.
+    /// Absolute clock timestamp (seconds since the clock's epoch, virtual
+    /// or real) at which the first token was produced.
+    pub first_token_time: f64,
+    /// Seconds (virtual or real) from arrival to completion.
     pub total: f64,
 }

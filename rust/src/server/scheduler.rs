@@ -7,6 +7,14 @@
 //! substitution machinery inside `Engine::decode_step`. All timing reads
 //! the engine's [`crate::util::clock::SimClock`], so the same loop serves
 //! both deterministic virtual-time sweeps and real-time measurement runs.
+//!
+//! Under load (arrivals staged on the batcher's event queue, see
+//! [`crate::traffic`]) the loop also records tail-latency ingredients:
+//! queue delay (arrival → admission), TTFT (arrival → first token),
+//! time-between-tokens per sequence, end-to-end latency, and the
+//! admission-queue depth sampled at every step. A completion hook lets
+//! closed-loop workloads schedule their next arrival off each finished
+//! request.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -18,17 +26,31 @@ use super::metrics::ServerMetrics;
 use super::request::{InferenceRequest, InferenceResponse};
 use crate::model::{Engine, Sequence};
 
+/// Called for each completed request: `(completion_time, response,
+/// batcher)`. Closed-loop traffic uses this to stage the population's next
+/// arrival (`DynamicBatcher::stage_arrival`).
+pub type CompletionHook = Box<dyn FnMut(Duration, &InferenceResponse, &DynamicBatcher)>;
+
 pub struct Server {
     pub engine: Engine,
     pub batcher: Arc<DynamicBatcher>,
     pub metrics: ServerMetrics,
+    /// Invoked as each request completes (before it is returned). Used by
+    /// the traffic subsystem's closed-loop generator; `None` for offline
+    /// runs.
+    pub on_complete: Option<CompletionHook>,
 }
 
 struct Active {
     seq: Sequence,
-    /// Clock timestamp the request entered the batcher.
-    enqueued: Duration,
+    /// Clock timestamp the request arrived (generator timestamp, or the
+    /// submit instant when none was stamped).
+    arrived: Duration,
     ttft: f64,
+    /// Absolute clock seconds at which the first token was produced.
+    first_token_s: f64,
+    /// Clock timestamp of this sequence's latest token (TBT accounting).
+    last_token: Duration,
 }
 
 impl Server {
@@ -40,6 +62,7 @@ impl Server {
             batcher: Arc::new(DynamicBatcher::new(max_batch, timeout, clock.clone())),
             metrics: ServerMetrics::new(clock),
             engine,
+            on_complete: None,
         }
     }
 
@@ -63,14 +86,15 @@ impl Server {
                 self.batcher.try_admissions(room)
             };
             for req in admissions {
-                let mut act = self.admit(req)?;
-                act.ttft = clock.since(act.enqueued);
-                self.metrics.ttft.add(act.ttft);
+                let act = self.admit(req)?;
                 active.push(act);
             }
             if active.is_empty() {
                 continue;
             }
+            // Queue depth as seen at this step boundary (requests that
+            // arrived but could not be admitted).
+            self.metrics.queue_depth.add(self.batcher.pending() as f64);
 
             // One decode step over all active sequences.
             let t0 = clock.now();
@@ -82,13 +106,18 @@ impl Server {
             self.metrics.counters.add("substitutions", tel.substitutions);
             self.metrics.counters.add("fetches", tel.fetches);
             self.metrics.tokens_out += active.len() as u64;
+            let now = clock.now();
+            for a in active.iter_mut() {
+                self.metrics.tbt.add(clock.since(a.last_token));
+                a.last_token = now;
+            }
 
             // Retire finished sequences.
             let mut i = 0;
             while i < active.len() {
                 if active[i].seq.done() {
                     let a = active.swap_remove(i);
-                    let total = clock.since(a.enqueued);
+                    let total = clock.since(a.arrived);
                     self.metrics.request_latency.add(total);
                     self.metrics.requests_done += 1;
                     let mut logits = Vec::new();
@@ -96,14 +125,19 @@ impl Server {
                         logits.push(p.clone());
                         logits.extend(a.seq.logits_log.iter().cloned());
                     }
-                    done.push(InferenceResponse {
+                    let resp = InferenceResponse {
                         id: a.seq.id,
                         tokens: a.seq.generated.clone(),
                         predictions: a.seq.predictions.clone(),
                         logits,
                         ttft: a.ttft,
+                        first_token_time: a.first_token_s,
                         total,
-                    });
+                    };
+                    if let Some(hook) = self.on_complete.as_mut() {
+                        hook(clock.now(), &resp, &self.batcher);
+                    }
+                    done.push(resp);
                 } else {
                     i += 1;
                 }
@@ -123,6 +157,11 @@ impl Server {
     }
 
     fn admit(&mut self, req: InferenceRequest) -> Result<Active> {
+        let clock = self.engine.clock();
+        let arrived = req.arrived();
+        // Admission instant: the queue-delay measurement point (prefill
+        // below advances the clock in virtual mode).
+        self.metrics.queue_delay.add(clock.since(arrived));
         let mut seq = self.engine.new_sequence(req.prompt, req.max_new);
         seq.id = req.id;
         seq.force_tokens = req.force_tokens;
@@ -130,6 +169,15 @@ impl Server {
         self.metrics.stall_seconds.add(tel.stall_seconds);
         self.metrics.counters.add("substitutions", tel.substitutions);
         self.metrics.counters.add("fetches", tel.fetches);
-        Ok(Active { seq, enqueued: req.enqueued, ttft: 0.0 })
+        // Prefill complete = first token out.
+        let ttft = clock.since(arrived);
+        self.metrics.ttft.add(ttft);
+        Ok(Active {
+            seq,
+            arrived,
+            ttft,
+            first_token_s: clock.now_s(),
+            last_token: clock.now(),
+        })
     }
 }

@@ -1,0 +1,515 @@
+//! Seeded arrival-process generators: request streams on the virtual
+//! timeline.
+//!
+//! Every generator implements [`ArrivalProcess`], producing
+//! `(virtual_timestamp, InferenceRequest)` pairs ([`Arrival`]) from a
+//! single seed — the same seed always produces the same stream, so load
+//! sweeps are exactly reproducible. Request bodies come from the eval
+//! workload generator ([`WorkloadGen`]) via a [`PromptSource`], so traffic
+//! runs route through the same easy/hard expert-pressure domains the
+//! paper's tables use.
+//!
+//! Processes:
+//! * [`PoissonProcess`] — open-loop, exponential inter-arrivals at a fixed
+//!   offered rate (requests/second).
+//! * [`BurstyProcess`] — MMPP-style two-state on/off modulation: a burst
+//!   state and an idle state, each with its own arrival rate and
+//!   exponentially distributed dwell time. Models flash crowds.
+//! * [`ClosedLoopProcess`] — a fixed population of users with think time:
+//!   at most `concurrency` requests are ever outstanding; each completion
+//!   (reported via [`ArrivalProcess::on_completion`]) schedules the next
+//!   request after an exponential think pause.
+//! * [`TraceReplay`] — replays a JSONL trace of timestamps (optionally
+//!   with explicit prompts), validated to be time-monotone at parse time.
+
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::eval::{Domain, WorkloadGen};
+use crate::server::InferenceRequest;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One generated arrival: a request and the virtual instant it lands.
+#[derive(Debug, Clone)]
+pub struct Arrival {
+    pub at: Duration,
+    pub req: InferenceRequest,
+}
+
+impl Arrival {
+    /// Build an arrival, stamping the request's `arrival_time` with `at`.
+    pub fn new(at: Duration, req: InferenceRequest) -> Self {
+        Self { at, req: req.arriving_at(at) }
+    }
+}
+
+/// A seeded stream of request arrivals on the virtual timeline.
+pub trait ArrivalProcess {
+    /// The next open-loop arrival, or `None` when the stream is exhausted.
+    fn next_arrival(&mut self) -> Option<Arrival>;
+
+    /// React to a request completing at virtual time `now`. Open-loop
+    /// processes ignore completions; closed-loop processes schedule the
+    /// population's next request (after think time) here.
+    fn on_completion(&mut self, _now: Duration) -> Option<Arrival> {
+        None
+    }
+
+    /// Human-readable label for reports (includes the offered-load knobs).
+    fn name(&self) -> String;
+}
+
+/// Request-body factory: eval-workload prompts with sequential ids.
+#[derive(Debug, Clone)]
+pub struct PromptSource {
+    gen: WorkloadGen,
+    domain: Domain,
+    next_id: u64,
+}
+
+impl PromptSource {
+    pub fn new(cfg: &ModelConfig, seed: u64, domain: Domain, max_new: usize) -> Self {
+        let mut gen = WorkloadGen::new(cfg, seed);
+        gen.max_new = max_new;
+        Self { gen, domain, next_id: 0 }
+    }
+
+    /// Next request body (sequential id, workload-domain prompt).
+    pub fn next_request(&mut self) -> InferenceRequest {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.gen.request(self.domain, id)
+    }
+
+    /// As `next_request`, with optional prompt / length overrides (trace
+    /// replay lines that carry explicit bodies).
+    pub fn next_request_with(
+        &mut self,
+        prompt: Option<Vec<i32>>,
+        max_new: Option<usize>,
+    ) -> InferenceRequest {
+        let mut req = self.next_request();
+        if let Some(p) = prompt {
+            req.prompt = p;
+        }
+        if let Some(m) = max_new {
+            req.max_new = m;
+        }
+        req
+    }
+}
+
+// ---------------------------------------------------------------------
+// Poisson (open loop)
+// ---------------------------------------------------------------------
+
+/// Open-loop Poisson arrivals at `rate_rps` requests/second.
+pub struct PoissonProcess {
+    src: PromptSource,
+    rng: Rng,
+    rate_rps: f64,
+    remaining: usize,
+    t_s: f64,
+}
+
+impl PoissonProcess {
+    pub fn new(src: PromptSource, rate_rps: f64, n_requests: usize, seed: u64) -> Self {
+        assert!(rate_rps > 0.0, "poisson rate must be positive");
+        Self { src, rng: Rng::new(seed), rate_rps, remaining: n_requests, t_s: 0.0 }
+    }
+}
+
+impl ArrivalProcess for PoissonProcess {
+    fn next_arrival(&mut self) -> Option<Arrival> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        self.t_s += self.rng.exponential(1.0 / self.rate_rps);
+        Some(Arrival::new(
+            Duration::from_secs_f64(self.t_s),
+            self.src.next_request(),
+        ))
+    }
+
+    fn name(&self) -> String {
+        format!("poisson({:.2} rps)", self.rate_rps)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bursty on/off (MMPP-style, two states)
+// ---------------------------------------------------------------------
+
+/// Two-state Markov-modulated Poisson process: `burst_rps` arrivals while
+/// in the burst state, `idle_rps` (often 0) while idle, with exponential
+/// state dwell times `mean_burst_s` / `mean_idle_s`.
+pub struct BurstyProcess {
+    src: PromptSource,
+    rng: Rng,
+    burst_rps: f64,
+    idle_rps: f64,
+    mean_burst_s: f64,
+    mean_idle_s: f64,
+    remaining: usize,
+    t_s: f64,
+    in_burst: bool,
+    state_end_s: f64,
+}
+
+impl BurstyProcess {
+    pub fn new(
+        src: PromptSource,
+        burst_rps: f64,
+        idle_rps: f64,
+        mean_burst_s: f64,
+        mean_idle_s: f64,
+        n_requests: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(burst_rps > 0.0, "burst rate must be positive");
+        assert!(idle_rps >= 0.0, "idle rate must be non-negative");
+        assert!(
+            mean_burst_s > 0.0 && mean_idle_s > 0.0,
+            "state dwell times must be positive"
+        );
+        let mut rng = Rng::new(seed);
+        let state_end_s = rng.exponential(mean_burst_s);
+        Self {
+            src,
+            rng,
+            burst_rps,
+            idle_rps,
+            mean_burst_s,
+            mean_idle_s,
+            remaining: n_requests,
+            t_s: 0.0,
+            in_burst: true,
+            state_end_s,
+        }
+    }
+
+    /// Long-run average offered rate (state-time-weighted).
+    pub fn mean_rate_rps(&self) -> f64 {
+        (self.burst_rps * self.mean_burst_s + self.idle_rps * self.mean_idle_s)
+            / (self.mean_burst_s + self.mean_idle_s)
+    }
+}
+
+impl ArrivalProcess for BurstyProcess {
+    fn next_arrival(&mut self) -> Option<Arrival> {
+        if self.remaining == 0 {
+            return None;
+        }
+        loop {
+            let rate = if self.in_burst { self.burst_rps } else { self.idle_rps };
+            if rate > 0.0 {
+                // Memorylessness lets us redraw the inter-arrival on every
+                // state boundary instead of carrying residuals across.
+                let dt = self.rng.exponential(1.0 / rate);
+                if self.t_s + dt <= self.state_end_s {
+                    self.t_s += dt;
+                    self.remaining -= 1;
+                    return Some(Arrival::new(
+                        Duration::from_secs_f64(self.t_s),
+                        self.src.next_request(),
+                    ));
+                }
+            }
+            // No arrival fits before the state flips: jump to the boundary.
+            self.t_s = self.state_end_s;
+            self.in_burst = !self.in_burst;
+            let mean = if self.in_burst { self.mean_burst_s } else { self.mean_idle_s };
+            self.state_end_s = self.t_s + self.rng.exponential(mean);
+        }
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "bursty({:.2}/{:.2} rps, {:.2}s/{:.2}s)",
+            self.burst_rps, self.idle_rps, self.mean_burst_s, self.mean_idle_s
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// Closed loop with think time
+// ---------------------------------------------------------------------
+
+/// Fixed user population: `concurrency` requests outstanding at most; each
+/// completion schedules the next request after exponential think time.
+pub struct ClosedLoopProcess {
+    src: PromptSource,
+    rng: Rng,
+    concurrency: usize,
+    think_s: f64,
+    /// Requests not yet emitted (initial wave + completion follow-ups).
+    remaining: usize,
+    /// How many of the initial at-t=0 wave are still to emit.
+    initial_left: usize,
+}
+
+impl ClosedLoopProcess {
+    pub fn new(
+        src: PromptSource,
+        concurrency: usize,
+        think_s: f64,
+        n_requests: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(concurrency >= 1, "closed loop needs at least one user");
+        assert!(think_s >= 0.0, "think time must be non-negative");
+        Self {
+            src,
+            rng: Rng::new(seed),
+            concurrency,
+            think_s,
+            remaining: n_requests,
+            initial_left: concurrency.min(n_requests),
+        }
+    }
+}
+
+impl ArrivalProcess for ClosedLoopProcess {
+    fn next_arrival(&mut self) -> Option<Arrival> {
+        if self.initial_left == 0 {
+            return None; // further arrivals only via on_completion
+        }
+        self.initial_left -= 1;
+        self.remaining -= 1;
+        Some(Arrival::new(Duration::ZERO, self.src.next_request()))
+    }
+
+    fn on_completion(&mut self, now: Duration) -> Option<Arrival> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let think = if self.think_s > 0.0 {
+            self.rng.exponential(self.think_s)
+        } else {
+            0.0
+        };
+        Some(Arrival::new(
+            now + Duration::from_secs_f64(think),
+            self.src.next_request(),
+        ))
+    }
+
+    fn name(&self) -> String {
+        format!("closed(n={}, think {:.2}s)", self.concurrency, self.think_s)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Trace replay (JSONL)
+// ---------------------------------------------------------------------
+
+/// Replays a JSONL arrival trace. Each non-empty line is an object:
+///
+/// ```json
+/// {"at_ms": 12.5}
+/// {"at_ms": 14.0, "prompt": [3, 9, 17], "max_new": 8}
+/// ```
+///
+/// `at_ms` (virtual milliseconds since t=0) is required and must be
+/// non-decreasing line to line; `prompt` / `max_new` override the workload
+/// generator's body when present. A synthetic example trace ships at
+/// `rust/tests/data/example_trace.jsonl`.
+pub struct TraceReplay {
+    src: PromptSource,
+    /// Remaining entries, soonest first (reversed so `pop` is the front).
+    entries: Vec<TraceEntry>,
+    label: String,
+}
+
+#[derive(Debug, Clone)]
+struct TraceEntry {
+    at: Duration,
+    prompt: Option<Vec<i32>>,
+    max_new: Option<usize>,
+}
+
+impl TraceReplay {
+    pub fn from_path(path: &std::path::Path, src: PromptSource) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace {}", path.display()))?;
+        let label = path
+            .file_name()
+            .map(|f| f.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "trace".into());
+        Self::parse(&text, src, label)
+    }
+
+    pub fn from_text(text: &str, src: PromptSource) -> Result<Self> {
+        Self::parse(text, src, "inline".into())
+    }
+
+    fn parse(text: &str, src: PromptSource, label: String) -> Result<Self> {
+        let mut entries = Vec::new();
+        let mut prev = Duration::ZERO;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let j = Json::parse(line)
+                .map_err(|e| anyhow::anyhow!("trace line {}: {e}", lineno + 1))?;
+            let at_ms = j
+                .get("at_ms")
+                .and_then(|v| v.as_f64())
+                .map_err(|e| anyhow::anyhow!("trace line {}: {e}", lineno + 1))?;
+            if !(at_ms.is_finite() && at_ms >= 0.0) {
+                bail!("trace line {}: at_ms must be finite and >= 0", lineno + 1);
+            }
+            let at = Duration::from_secs_f64(at_ms / 1e3);
+            if at < prev {
+                bail!(
+                    "trace line {}: timestamps must be non-decreasing ({:?} after {:?})",
+                    lineno + 1,
+                    at,
+                    prev
+                );
+            }
+            prev = at;
+            let prompt = match j.get("prompt") {
+                Ok(v) => Some(
+                    v.as_usize_vec()
+                        .map_err(|e| anyhow::anyhow!("trace line {}: {e}", lineno + 1))?
+                        .into_iter()
+                        .map(|x| x as i32)
+                        .collect(),
+                ),
+                Err(_) => None,
+            };
+            let max_new = match j.get("max_new") {
+                Ok(v) => Some(
+                    v.as_usize()
+                        .map_err(|e| anyhow::anyhow!("trace line {}: {e}", lineno + 1))?,
+                ),
+                Err(_) => None,
+            };
+            entries.push(TraceEntry { at, prompt, max_new });
+        }
+        entries.reverse(); // pop() from the back = chronological order
+        Ok(Self { src, entries, label })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+impl ArrivalProcess for TraceReplay {
+    fn next_arrival(&mut self) -> Option<Arrival> {
+        let e = self.entries.pop()?;
+        let req = self.src.next_request_with(e.prompt, e.max_new);
+        Some(Arrival::new(e.at, req))
+    }
+
+    fn name(&self) -> String {
+        format!("trace({})", self.label)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn src(seed: u64) -> PromptSource {
+        let cfg = ModelConfig::test_tiny();
+        PromptSource::new(&cfg, seed, Domain::Mixed, 4)
+    }
+
+    fn drain(p: &mut dyn ArrivalProcess) -> Vec<Arrival> {
+        let mut out = Vec::new();
+        while let Some(a) = p.next_arrival() {
+            out.push(a);
+        }
+        out
+    }
+
+    #[test]
+    fn poisson_is_seed_deterministic_and_monotone() {
+        let mut a = PoissonProcess::new(src(1), 100.0, 32, 9);
+        let mut b = PoissonProcess::new(src(1), 100.0, 32, 9);
+        let xs = drain(&mut a);
+        let ys = drain(&mut b);
+        assert_eq!(xs.len(), 32);
+        for (x, y) in xs.iter().zip(&ys) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.req.prompt, y.req.prompt);
+            assert_eq!(x.req.arrival_time, Some(x.at));
+        }
+        for w in xs.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        let ids: Vec<u64> = xs.iter().map(|a| a.req.id).collect();
+        assert_eq!(ids, (0..32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn bursty_is_monotone_and_finite() {
+        let mut p = BurstyProcess::new(src(2), 200.0, 0.0, 0.05, 0.05, 64, 3);
+        let xs = drain(&mut p);
+        assert_eq!(xs.len(), 64);
+        for w in xs.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+    }
+
+    #[test]
+    fn bursty_mean_rate_weighs_states() {
+        let p = BurstyProcess::new(src(2), 100.0, 0.0, 1.0, 1.0, 1, 3);
+        assert!((p.mean_rate_rps() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn closed_loop_initial_wave_is_bounded_by_concurrency() {
+        let mut p = ClosedLoopProcess::new(src(3), 4, 0.1, 100, 5);
+        let initial = drain(&mut p);
+        assert_eq!(initial.len(), 4);
+        assert!(initial.iter().all(|a| a.at == Duration::ZERO));
+        // A completion releases exactly one follow-up, after think time.
+        let now = Duration::from_millis(500);
+        let next = p.on_completion(now).unwrap();
+        assert!(next.at >= now);
+        assert!(p.on_completion(now).is_some());
+    }
+
+    #[test]
+    fn closed_loop_respects_total_budget() {
+        let mut p = ClosedLoopProcess::new(src(3), 8, 0.0, 3, 5);
+        assert_eq!(drain(&mut p).len(), 3, "initial wave capped by budget");
+        assert!(p.on_completion(Duration::ZERO).is_none());
+    }
+
+    #[test]
+    fn trace_replay_parses_and_overrides() {
+        let text = "\n{\"at_ms\": 1.5}\n{\"at_ms\": 4.0, \"prompt\": [3, 9], \"max_new\": 2}\n";
+        let mut t = TraceReplay::from_text(text, src(4)).unwrap();
+        assert_eq!(t.len(), 2);
+        let a = t.next_arrival().unwrap();
+        assert_eq!(a.at, Duration::from_micros(1500));
+        let b = t.next_arrival().unwrap();
+        assert_eq!(b.at, Duration::from_millis(4));
+        assert_eq!(b.req.prompt, vec![3, 9]);
+        assert_eq!(b.req.max_new, 2);
+        assert!(t.next_arrival().is_none());
+    }
+
+    #[test]
+    fn trace_replay_rejects_time_regressions() {
+        let text = "{\"at_ms\": 5.0}\n{\"at_ms\": 4.0}\n";
+        assert!(TraceReplay::from_text(text, src(4)).is_err());
+        assert!(TraceReplay::from_text("{\"at_ms\": -1}", src(4)).is_err());
+        assert!(TraceReplay::from_text("{\"nope\": 1}", src(4)).is_err());
+    }
+}

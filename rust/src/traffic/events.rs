@@ -1,0 +1,150 @@
+//! Discrete-event admission queue: future request arrivals keyed on
+//! virtual time.
+//!
+//! An [`EventQueue`] holds `(virtual_timestamp, InferenceRequest)` pairs in
+//! a min-heap ordered by arrival time (FIFO within equal timestamps). The
+//! [`DynamicBatcher`](crate::server::DynamicBatcher) owns one: staged
+//! arrivals are *released* into the live admission queue as the shared
+//! clock reaches their timestamps, which is what lets the virtual-clock
+//! batching window observe mid-window arrivals — and close early on a full
+//! batch — exactly as the real-time path does when another thread calls
+//! `submit`.
+//!
+//! The queue itself is clock-agnostic: it just answers "what is the next
+//! arrival time?" (`peek_time`) and "give me everything due by `now`"
+//! (`pop_due`). All clock movement stays in the batcher.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::time::Duration;
+
+use crate::server::InferenceRequest;
+
+use super::arrivals::ArrivalProcess;
+
+struct Entry {
+    at: Duration,
+    /// Monotone push sequence number: FIFO tie-break for equal timestamps,
+    /// which keeps replayed traces (and same-instant bursts) in submission
+    /// order deterministically.
+    seq: u64,
+    req: InferenceRequest,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+
+impl Eq for Entry {}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Entry {
+    /// Reversed (earliest first): `BinaryHeap` is a max-heap, so the
+    /// greatest entry must be the soonest arrival.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.at.cmp(&self.at).then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Min-heap of future arrivals on the virtual timeline.
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    next_seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Stage a request to arrive at virtual time `at`.
+    pub fn push(&mut self, at: Duration, req: InferenceRequest) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Entry { at, seq, req });
+    }
+
+    /// Drain an arrival process's open-loop stream into the queue.
+    pub fn extend_from(&mut self, process: &mut dyn ArrivalProcess) {
+        while let Some(a) = process.next_arrival() {
+            self.push(a.at, a.req);
+        }
+    }
+
+    /// Timestamp of the soonest staged arrival, if any.
+    pub fn peek_time(&self) -> Option<Duration> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    /// Remove and return every arrival with timestamp `<= now`, in
+    /// (time, push-order) order.
+    pub fn pop_due(&mut self, now: Duration) -> Vec<(Duration, InferenceRequest)> {
+        let mut due = Vec::new();
+        while self.heap.peek().is_some_and(|e| e.at <= now) {
+            let e = self.heap.pop().unwrap();
+            due.push((e.at, e.req));
+        }
+        due
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> InferenceRequest {
+        InferenceRequest::new(id, vec![1, 2], 4)
+    }
+
+    fn ms(x: u64) -> Duration {
+        Duration::from_millis(x)
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(ms(30), req(3));
+        q.push(ms(10), req(1));
+        q.push(ms(20), req(2));
+        let due = q.pop_due(ms(25));
+        assert_eq!(due.iter().map(|(_, r)| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(due[0].0, ms(10));
+        assert_eq!(q.peek_time(), Some(ms(30)));
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn equal_timestamps_stay_fifo() {
+        let mut q = EventQueue::new();
+        for id in 0..5 {
+            q.push(ms(7), req(id));
+        }
+        let ids: Vec<u64> = q.pop_due(ms(7)).into_iter().map(|(_, r)| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn nothing_due_before_first_arrival() {
+        let mut q = EventQueue::new();
+        q.push(ms(50), req(1));
+        assert!(q.pop_due(ms(49)).is_empty());
+        assert_eq!(q.len(), 1);
+    }
+}

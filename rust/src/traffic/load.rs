@@ -1,0 +1,327 @@
+//! Load-sweep runner: tail latency under offered load.
+//!
+//! Drives [`Server::run`] with arrivals staged on the batcher's event
+//! queue across a grid of (arrival process × offered load × miss policy)
+//! cells, all under [`ClockMode::Virtual`] — a full sweep is a
+//! discrete-event simulation that finishes in milliseconds of wall time
+//! and is byte-identical per seed. Each cell records the serving metrics
+//! the paper's "preserved throughput under load" claim actually needs:
+//! TTFT, queue delay, time-between-tokens, end-to-end latency, and
+//! admission-queue depth, as [`Summary`] percentile distributions.
+//!
+//! `examples/sweep_load.rs` renders the grid as a markdown table and
+//! writes the machine-readable `BENCH_load.json` artifact.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::{ModelConfig, ServingConfig};
+use crate::eval::{engine_with_config, Domain};
+use crate::model::EngineOptions;
+use crate::profilecollect::ProfileCollector;
+use crate::server::Server;
+use crate::stats::Summary;
+use crate::util::clock::ClockMode;
+use crate::util::json::{num, obj, s, Json};
+use crate::weights::WeightStore;
+
+use super::arrivals::{
+    ArrivalProcess, BurstyProcess, ClosedLoopProcess, PoissonProcess, PromptSource,
+};
+
+/// Workload shape shared by every cell of one sweep.
+#[derive(Debug, Clone)]
+pub struct LoadSettings {
+    /// Requests per cell.
+    pub n_requests: usize,
+    /// Decode tokens per request.
+    pub max_new: usize,
+    /// GPU-resident expert fraction (paper `c`): the memory pressure that
+    /// makes miss policy matter.
+    pub cache_rate: f64,
+    pub domain: Domain,
+    pub seed: u64,
+}
+
+impl Default for LoadSettings {
+    fn default() -> Self {
+        Self {
+            n_requests: 32,
+            max_new: 8,
+            cache_rate: 0.5,
+            domain: Domain::Mixed,
+            seed: 42,
+        }
+    }
+}
+
+/// Arrival-process family for a sweep cell; `build` instantiates it at a
+/// given offered load.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProcessKind {
+    /// Open-loop Poisson at the offered rate.
+    Poisson,
+    /// On/off bursts: 2x the offered rate while bursting, silent while
+    /// idle, equal mean dwell times — the same average load, much worse
+    /// tails.
+    Bursty,
+    /// Closed loop: `round(offered_rps)` users (>= 1) with 50 ms mean
+    /// think time.
+    Closed,
+}
+
+impl ProcessKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ProcessKind::Poisson => "poisson",
+            ProcessKind::Bursty => "bursty",
+            ProcessKind::Closed => "closed",
+        }
+    }
+
+    /// Instantiate the process at `offered_rps` for one cell. For the
+    /// closed-loop kind the knob is repurposed as the user-population
+    /// size (`round(offered_rps)` users), not a request rate — its
+    /// achieved rate is population / (think + service time); compare
+    /// closed cells by their `tok_s`, not `offered_rps`. Seeds are
+    /// derived from the settings seed only, so the *open-loop* kinds
+    /// replay the same arrival pattern per (kind, load) across miss
+    /// policies — common random numbers. (Closed-loop timelines depend on
+    /// completion times, which differ per policy, so CRN does not apply
+    /// there.)
+    pub fn build(
+        &self,
+        cfg: &ModelConfig,
+        st: &LoadSettings,
+        offered_rps: f64,
+    ) -> Box<dyn ArrivalProcess> {
+        let src = PromptSource::new(cfg, st.seed, st.domain, st.max_new);
+        let proc_seed = st.seed.wrapping_add(0x0007_2AFF_1C00); // "traffic" stream
+        match self {
+            ProcessKind::Poisson => {
+                Box::new(PoissonProcess::new(src, offered_rps, st.n_requests, proc_seed))
+            }
+            ProcessKind::Bursty => Box::new(BurstyProcess::new(
+                src,
+                2.0 * offered_rps,
+                0.0,
+                0.25,
+                0.25,
+                st.n_requests,
+                proc_seed,
+            )),
+            ProcessKind::Closed => Box::new(ClosedLoopProcess::new(
+                src,
+                (offered_rps.round() as usize).max(1),
+                0.05,
+                st.n_requests,
+                proc_seed,
+            )),
+        }
+    }
+}
+
+/// Everything measured for one (process, load, policy) cell.
+#[derive(Debug, Clone)]
+pub struct LoadCell {
+    /// Process label including its load knobs (`ArrivalProcess::name`).
+    pub process: String,
+    /// `ServingConfig::preset` name.
+    pub policy: String,
+    /// Nominal load knob for the cell: a request rate for open-loop
+    /// processes, the user-population size for closed-loop (see
+    /// [`ProcessKind::build`]).
+    pub offered_rps: f64,
+    pub requests_done: u64,
+    pub tokens_out: u64,
+    /// Virtual seconds from t=0 to the last completion.
+    pub wall_s: f64,
+    pub tok_s: f64,
+    pub ttft: Summary,
+    pub tbt: Summary,
+    pub e2e: Summary,
+    pub queue_delay: Summary,
+    pub queue_depth: Summary,
+}
+
+/// Serve one cell: stage the process's open-loop arrivals on the event
+/// queue, hook completions back into it (closed-loop think time), run to
+/// drain, and snapshot the metrics.
+#[allow(clippy::too_many_arguments)]
+pub fn run_load_cell(
+    cfg: &ModelConfig,
+    store: Arc<WeightStore>,
+    collector: &ProfileCollector,
+    warm_rank: &[Vec<usize>],
+    scfg: ServingConfig,
+    policy_label: &str,
+    offered_rps: f64,
+    mut process: Box<dyn ArrivalProcess>,
+) -> Result<LoadCell> {
+    let opts = EngineOptions { clock: ClockMode::Virtual, ..Default::default() };
+    let engine = engine_with_config(cfg, store, collector, warm_rank, scfg, opts)?;
+    let mut server = Server::new(engine);
+
+    let process_name = process.name();
+    server.batcher.stage_process(process.as_mut());
+    // Completions feed the process back (closed-loop next arrivals);
+    // open-loop processes return None here.
+    server.on_complete = Some(Box::new(move |now, _resp, batcher| {
+        if let Some(a) = process.on_completion(now) {
+            batcher.stage_arrival(a.at, a.req);
+        }
+    }));
+    server.batcher.close();
+
+    let clock = server.engine.clock();
+    let t0 = clock.now();
+    server.run()?;
+    let wall_s = clock.since(t0);
+
+    let m = &server.metrics;
+    let cell = LoadCell {
+        process: process_name,
+        policy: policy_label.to_string(),
+        offered_rps,
+        requests_done: m.requests_done,
+        tokens_out: m.tokens_out,
+        wall_s,
+        tok_s: if wall_s > 0.0 { m.tokens_out as f64 / wall_s } else { 0.0 },
+        ttft: m.ttft.clone(),
+        tbt: m.tbt.clone(),
+        e2e: m.request_latency.clone(),
+        queue_delay: m.queue_delay.clone(),
+        queue_depth: m.queue_depth.clone(),
+    };
+    server.engine.shutdown();
+    Ok(cell)
+}
+
+/// The full grid: every (process kind × offered load × policy preset).
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub processes: Vec<ProcessKind>,
+    pub loads_rps: Vec<f64>,
+    /// `ServingConfig::preset` names.
+    pub presets: Vec<String>,
+    pub settings: LoadSettings,
+}
+
+pub fn run_sweep(
+    cfg: &ModelConfig,
+    store: Arc<WeightStore>,
+    collector: &ProfileCollector,
+    warm_rank: &[Vec<usize>],
+    spec: &SweepSpec,
+) -> Result<Vec<LoadCell>> {
+    let mut cells = Vec::new();
+    for kind in &spec.processes {
+        for &rps in &spec.loads_rps {
+            for preset in &spec.presets {
+                let mut scfg = ServingConfig::default().preset(preset)?;
+                scfg.cache_rate = spec.settings.cache_rate;
+                scfg.seed = spec.settings.seed;
+                let process = kind.build(cfg, &spec.settings, rps);
+                cells.push(run_load_cell(
+                    cfg,
+                    store.clone(),
+                    collector,
+                    warm_rank,
+                    scfg,
+                    preset,
+                    rps,
+                    process,
+                )?);
+            }
+        }
+    }
+    Ok(cells)
+}
+
+/// Markdown table over the sweep cells (deterministic formatting: the
+/// golden determinism test asserts byte-identity per seed).
+pub fn report_markdown(cells: &[LoadCell]) -> String {
+    let mut out = String::from(
+        "| process | rps | policy | done | tok/s | ttft p50/p95/p99 (ms) | \
+         tbt p50/p95/p99 (ms) | e2e p99 (ms) | qdepth p95 |\n\
+         |---|---|---|---|---|---|---|---|---|\n",
+    );
+    for c in cells {
+        out.push_str(&format!(
+            "| {} | {:.2} | {} | {} | {:.2} | {:.2}/{:.2}/{:.2} | {:.2}/{:.2}/{:.2} | {:.2} | {:.1} |\n",
+            c.process,
+            c.offered_rps,
+            c.policy,
+            c.requests_done,
+            c.tok_s,
+            c.ttft.p(50.0) * 1e3,
+            c.ttft.p(95.0) * 1e3,
+            c.ttft.p(99.0) * 1e3,
+            c.tbt.p(50.0) * 1e3,
+            c.tbt.p(95.0) * 1e3,
+            c.tbt.p(99.0) * 1e3,
+            c.e2e.p(99.0) * 1e3,
+            c.queue_depth.p(95.0),
+        ));
+    }
+    out
+}
+
+fn summary_json(x: &Summary) -> Json {
+    obj(vec![
+        ("mean", num(x.mean())),
+        ("p50", num(x.p(50.0))),
+        ("p95", num(x.p(95.0))),
+        ("p99", num(x.p(99.0))),
+        ("n", num(x.count() as f64)),
+    ])
+}
+
+/// Machine-readable sweep (the `BENCH_load.json` payload).
+pub fn cells_json(cells: &[LoadCell]) -> Json {
+    Json::Arr(
+        cells
+            .iter()
+            .map(|c| {
+                obj(vec![
+                    ("process", s(&c.process)),
+                    ("policy", s(&c.policy)),
+                    ("offered_rps", num(c.offered_rps)),
+                    ("requests_done", num(c.requests_done as f64)),
+                    ("tokens_out", num(c.tokens_out as f64)),
+                    ("wall_s", num(c.wall_s)),
+                    ("tok_s", num(c.tok_s)),
+                    ("ttft_s", summary_json(&c.ttft)),
+                    ("tbt_s", summary_json(&c.tbt)),
+                    ("e2e_s", summary_json(&c.e2e)),
+                    ("queue_delay_s", summary_json(&c.queue_delay)),
+                    ("queue_depth", summary_json(&c.queue_depth)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn process_kinds_build_at_any_load() {
+        let cfg = ModelConfig::test_tiny();
+        let st = LoadSettings { n_requests: 4, ..Default::default() };
+        for kind in [ProcessKind::Poisson, ProcessKind::Bursty, ProcessKind::Closed] {
+            let mut p = kind.build(&cfg, &st, 3.0);
+            assert!(p.next_arrival().is_some(), "{} must emit", kind.label());
+            assert!(!p.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn report_header_is_stable() {
+        let md = report_markdown(&[]);
+        assert!(md.starts_with("| process | rps | policy |"));
+        assert_eq!(md.lines().count(), 2);
+    }
+}

@@ -1,0 +1,38 @@
+//! Traffic subsystem: request arrival processes, discrete-event
+//! admission, and tail-latency-under-load evaluation.
+//!
+//! The eval harness's offline mode (submit everything, close, drain)
+//! measures throughput but can't say anything about *tail latency under
+//! load* — the regime where prefetch misses stall PCIe and buddy
+//! substitution is supposed to pay off. This module supplies the missing
+//! pieces, all on the PR-1 virtual clock so a full load sweep is a
+//! deterministic discrete-event simulation:
+//!
+//! * [`arrivals`] — seeded arrival-process generators behind the
+//!   [`ArrivalProcess`] trait: open-loop Poisson, bursty on/off
+//!   (MMPP-style), closed-loop with think time, and JSONL trace replay.
+//!   Request bodies come from the eval workload generator, so traffic
+//!   exercises the same easy/hard expert-pressure domains as the tables.
+//! * [`events`] — the [`EventQueue`] of future arrivals (min-heap on
+//!   virtual time) that the [`crate::server::DynamicBatcher`] releases
+//!   requests from as the clock reaches their timestamps. This is what
+//!   lets the virtual batching window close early on a full batch instead
+//!   of assuming no request can land mid-window.
+//! * [`load`] — the sweep runner: (arrival process × offered load × miss
+//!   policy) grid, each cell recording TTFT / queue delay / TBT / e2e
+//!   latency / queue depth percentiles. Rendered by
+//!   `examples/sweep_load.rs` into `BENCH_load.json`.
+
+pub mod arrivals;
+pub mod events;
+pub mod load;
+
+pub use arrivals::{
+    Arrival, ArrivalProcess, BurstyProcess, ClosedLoopProcess, PoissonProcess, PromptSource,
+    TraceReplay,
+};
+pub use events::EventQueue;
+pub use load::{
+    cells_json, report_markdown, run_load_cell, run_sweep, LoadCell, LoadSettings, ProcessKind,
+    SweepSpec,
+};

@@ -1,0 +1,106 @@
+//! Backend parity (ROADMAP open item): when the AOT artifacts are present
+//! *and* the `pjrt` feature is compiled in, the pure-Rust reference
+//! interpreter must agree with the PJRT executor on the golden decode
+//! trace — same tokens, near-identical logits. This closes the loop on
+//! the reference interpreter's numerics: `tests/golden.rs` pins PJRT to
+//! the python reference, and this test pins the rust interpreter to PJRT.
+//!
+//! Skips cleanly (with a note) when artifacts are absent or the feature
+//! is off, so the default artifact-free build stays green.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use buddymoe::config::{MissPolicy, ModelConfig, PrefetchKind, ServingConfig};
+use buddymoe::model::{Engine, EngineOptions};
+use buddymoe::runtime::BackendKind;
+use buddymoe::util::clock::ClockMode;
+use buddymoe::util::json::Json;
+use buddymoe::weights::WeightStore;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn oracle_engine(cfg: &ModelConfig, store: Arc<WeightStore>, backend: BackendKind) -> Engine {
+    let scfg = ServingConfig {
+        cache_rate: 1.0,
+        miss_policy: MissPolicy::OnDemand,
+        prefetch: PrefetchKind::None,
+        ..Default::default()
+    };
+    let opts = EngineOptions {
+        clock: ClockMode::Virtual,
+        record_logits: true,
+        backend,
+        ..Default::default()
+    };
+    Engine::new(cfg.clone(), scfg, store, None, None, opts).expect("engine")
+}
+
+#[test]
+fn reference_and_pjrt_backends_agree_on_golden_decode() {
+    if !artifacts_dir().join("model_config.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    if !cfg!(feature = "pjrt") {
+        eprintln!("skipping: pjrt feature not compiled (cargo test --features pjrt)");
+        return;
+    }
+    let cfg = ModelConfig::load(&artifacts_dir()).expect("config");
+    let store = Arc::new(WeightStore::load(&cfg).expect("weights"));
+    let golden_text = std::fs::read_to_string(cfg.golden_path()).expect("golden file");
+    let golden = Json::parse(&golden_text).expect("golden json");
+    let n_steps = golden.get("n_steps").unwrap().as_usize().unwrap();
+    let cases = golden.get("cases").unwrap().as_arr().unwrap();
+
+    // Decode every golden prompt through one backend.
+    let run = |backend: BackendKind, name: &str| {
+        let mut eng = oracle_engine(&cfg, store.clone(), backend);
+        assert_eq!(eng.backend_name(), name, "requested backend must be in use");
+        let mut out = Vec::new();
+        for case in cases {
+            let prompt: Vec<i32> = case
+                .get("prompt")
+                .unwrap()
+                .as_usize_vec()
+                .unwrap()
+                .into_iter()
+                .map(|x| x as i32)
+                .collect();
+            let mut seq = eng.new_sequence(prompt, n_steps);
+            eng.prefill(&mut seq).expect("prefill");
+            for _ in 0..n_steps {
+                let mut batch = [&mut seq];
+                eng.decode_step(&mut batch).expect("decode");
+            }
+            out.push((seq.generated.clone(), seq.logits_log.clone()));
+        }
+        eng.shutdown();
+        out
+    };
+
+    let reference = run(BackendKind::Reference, "reference");
+    let pjrt = run(BackendKind::Pjrt, "pjrt");
+
+    assert_eq!(reference.len(), pjrt.len());
+    for (ci, ((r_tok, r_log), (p_tok, p_log))) in reference.iter().zip(&pjrt).enumerate() {
+        assert_eq!(
+            r_tok, p_tok,
+            "case {ci}: generated tokens diverge between reference and PJRT backends"
+        );
+        let mut max_diff = 0f32;
+        for (a, b) in r_log.iter().zip(p_log) {
+            assert_eq!(a.len(), b.len(), "case {ci}: logit widths differ");
+            for (x, y) in a.iter().zip(b) {
+                max_diff = max_diff.max((x - y).abs());
+            }
+        }
+        assert!(
+            max_diff < 1e-2,
+            "case {ci}: logits diverge between backends (max abs diff {max_diff})"
+        );
+        eprintln!("case {ci}: backends agree, max logit diff {max_diff:.2e}");
+    }
+}

@@ -85,6 +85,9 @@ fn continuous_batching_completes_all_requests() {
         assert_eq!(r.predictions.len(), 7); // prefill + 6 steps
         assert_eq!(r.logits.len(), 7);
         assert!(r.ttft <= r.total);
+        // first_token_time is absolute (arrival + ttft on a clock that
+        // starts at zero), so it can never undercut the relative ttft.
+        assert!(r.first_token_time >= r.ttft);
     }
     assert_eq!(server.metrics.requests_done as usize, n);
     server.engine.shutdown();

@@ -1,0 +1,270 @@
+//! Traffic subsystem integration tests: generator invariants (property
+//! tests), event-queue admission end-to-end, and the golden determinism
+//! contract for the load sweep (same seed + same arrival process →
+//! byte-identical report under `ClockMode::Virtual`).
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use buddymoe::config::{ModelConfig, ServingConfig};
+use buddymoe::eval::{profile_model, warm_rank_from_profile, Domain};
+use buddymoe::testing::{forall, PropConfig};
+use buddymoe::traffic::{
+    cells_json, report_markdown, run_load_cell, run_sweep, ArrivalProcess, ClosedLoopProcess,
+    LoadSettings, PoissonProcess, ProcessKind, PromptSource, SweepSpec, TraceReplay,
+};
+use buddymoe::weights::WeightStore;
+
+fn src(seed: u64, max_new: usize) -> PromptSource {
+    PromptSource::new(&ModelConfig::test_tiny(), seed, Domain::Mixed, max_new)
+}
+
+// ---------------------------------------------------------------------
+// Generator invariants (property tests)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_poisson_interarrival_mean_matches_rate() {
+    forall(
+        PropConfig { cases: 20, seed: 21 },
+        |rng| {
+            let rate = 5.0 + rng.f64() * 195.0; // 5..200 rps
+            let seed = rng.next_u64();
+            (rate, seed)
+        },
+        |&(rate, seed)| {
+            let n = 400usize;
+            let mut p = PoissonProcess::new(src(1, 4), rate, n, seed);
+            let mut last = 0.0f64;
+            let mut sum = 0.0f64;
+            let mut count = 0usize;
+            while let Some(a) = p.next_arrival() {
+                let t = a.at.as_secs_f64();
+                if t < last {
+                    return Err(format!("time regressed: {t} < {last}"));
+                }
+                sum += t - last;
+                last = t;
+                count += 1;
+            }
+            if count != n {
+                return Err(format!("emitted {count} of {n}"));
+            }
+            let mean = sum / n as f64;
+            let want = 1.0 / rate;
+            // 400 exponential samples: SE = want/20, so ±25% is ~5 sigma.
+            if (mean - want).abs() > 0.25 * want {
+                return Err(format!("mean inter-arrival {mean} vs expected {want}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_trace_replay_timestamps_monotone() {
+    forall(
+        PropConfig { cases: 60, seed: 22 },
+        |rng| {
+            // A random non-decreasing trace, expressed in milliseconds.
+            let n = rng.range(1, 40);
+            let mut t_ms = 0.0f64;
+            let mut lines = Vec::with_capacity(n);
+            for _ in 0..n {
+                t_ms += rng.f64() * 10.0;
+                lines.push(t_ms);
+            }
+            lines
+        },
+        |stamps| {
+            let mut text = String::new();
+            for t in stamps {
+                text.push_str(&format!("{{\"at_ms\": {t}}}\n"));
+            }
+            let mut trace = TraceReplay::from_text(&text, src(2, 4))
+                .map_err(|e| format!("valid trace rejected: {e}"))?;
+            if trace.len() != stamps.len() {
+                return Err(format!("parsed {} of {}", trace.len(), stamps.len()));
+            }
+            let mut prev = Duration::ZERO;
+            while let Some(a) = trace.next_arrival() {
+                if a.at < prev {
+                    return Err(format!("replay regressed: {:?} after {:?}", a.at, prev));
+                }
+                if a.req.arrival_time != Some(a.at) {
+                    return Err("arrival_time not stamped".into());
+                }
+                prev = a.at;
+            }
+            // Any strict regression must be rejected at parse time.
+            if stamps.len() >= 2 {
+                let bad = format!("{text}{{\"at_ms\": 0.0}}\n");
+                if stamps.last().copied().unwrap_or(0.0) > 0.0
+                    && TraceReplay::from_text(&bad, src(2, 4)).is_ok()
+                {
+                    return Err("time-regressing trace accepted".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_closed_loop_never_exceeds_concurrency() {
+    forall(
+        PropConfig { cases: 60, seed: 23 },
+        |rng| {
+            let concurrency = rng.range(1, 9);
+            let total = rng.range(1, 41);
+            let think_s = rng.f64() * 0.2;
+            let seed = rng.next_u64();
+            (concurrency, total, think_s, seed)
+        },
+        |&(concurrency, total, think_s, seed)| {
+            let mut p = ClosedLoopProcess::new(src(3, 4), concurrency, think_s, total, seed);
+            let mut emitted = 0usize;
+            let mut outstanding = 0usize;
+            while p.next_arrival().is_some() {
+                emitted += 1;
+                outstanding += 1;
+            }
+            if outstanding > concurrency {
+                return Err(format!("initial wave {outstanding} > concurrency {concurrency}"));
+            }
+            // Complete requests one at a time; each completion may release
+            // exactly one follow-up, so the bound must hold throughout.
+            let mut now = Duration::ZERO;
+            let mut check_rng = buddymoe::util::rng::Rng::new(seed ^ 0xc0ffee);
+            while outstanding > 0 {
+                now += Duration::from_secs_f64(check_rng.f64() * 0.05);
+                outstanding -= 1;
+                if let Some(a) = p.on_completion(now) {
+                    if a.at < now {
+                        return Err("follow-up scheduled in the past".into());
+                    }
+                    emitted += 1;
+                    outstanding += 1;
+                }
+                if outstanding > concurrency {
+                    return Err(format!("outstanding {outstanding} > concurrency {concurrency}"));
+                }
+            }
+            if emitted != total {
+                return Err(format!("emitted {emitted} of {total}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// End-to-end: event-queue admission through the server
+// ---------------------------------------------------------------------
+
+fn setup() -> (ModelConfig, Arc<WeightStore>) {
+    let cfg = ModelConfig::synthetic_small();
+    let store = Arc::new(WeightStore::synthetic_families(&cfg, 2024));
+    (cfg, store)
+}
+
+#[test]
+fn example_trace_serves_every_request() {
+    let (cfg, store) = setup();
+    let pc = profile_model(&cfg, store.clone(), 8, 555).unwrap();
+    let warm = warm_rank_from_profile(&pc);
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/data/example_trace.jsonl");
+    let trace =
+        TraceReplay::from_path(&path, PromptSource::new(&cfg, 7, Domain::Mixed, 4)).unwrap();
+    let n = trace.len();
+    assert!(n >= 10, "example trace should be non-trivial");
+
+    let mut scfg = ServingConfig::default().preset("buddy-rho3").unwrap();
+    scfg.cache_rate = 0.5;
+    let cell = run_load_cell(&cfg, store, &pc, &warm, scfg, "buddy-rho3", 0.0, Box::new(trace))
+        .unwrap();
+    assert_eq!(cell.requests_done as usize, n, "every trace request must complete");
+    assert_eq!(cell.ttft.count(), n);
+    assert_eq!(cell.tbt.count() as u64, cell.tokens_out);
+    assert!(cell.wall_s >= 0.4, "trace spans 400 ms of virtual time");
+    assert!(cell.queue_delay.min() >= 0.0);
+}
+
+#[test]
+fn closed_loop_cell_completes_budget() {
+    let (cfg, store) = setup();
+    let pc = profile_model(&cfg, store.clone(), 8, 555).unwrap();
+    let warm = warm_rank_from_profile(&pc);
+    let process = ClosedLoopProcess::new(
+        PromptSource::new(&cfg, 11, Domain::Mixed, 3),
+        2,
+        0.01,
+        6,
+        99,
+    );
+    let mut scfg = ServingConfig::default().preset("original").unwrap();
+    scfg.cache_rate = 0.5;
+    let cell =
+        run_load_cell(&cfg, store, &pc, &warm, scfg, "original", 2.0, Box::new(process)).unwrap();
+    assert_eq!(cell.requests_done, 6, "think-time follow-ups must all be served");
+    assert!(cell.tok_s > 0.0);
+}
+
+#[test]
+fn saturated_batch_builds_queue_depth_and_delay() {
+    // Four simultaneous arrivals against max_batch = 2: the overflow must
+    // show up as positive sampled queue depth and positive queue delay for
+    // the requests that waited out earlier decode steps.
+    let (cfg, store) = setup();
+    let pc = profile_model(&cfg, store.clone(), 8, 555).unwrap();
+    let warm = warm_rank_from_profile(&pc);
+    let text = "{\"at_ms\": 0.0}\n".repeat(4);
+    let trace =
+        TraceReplay::from_text(&text, PromptSource::new(&cfg, 13, Domain::Mixed, 3)).unwrap();
+    let mut scfg = ServingConfig::default().preset("original").unwrap();
+    scfg.cache_rate = 0.5;
+    scfg.max_batch = 2;
+    let cell =
+        run_load_cell(&cfg, store, &pc, &warm, scfg, "original", 0.0, Box::new(trace)).unwrap();
+    assert_eq!(cell.requests_done, 4);
+    assert!(cell.queue_depth.max() > 0.0, "overflow beyond max_batch must queue");
+    assert!(cell.queue_delay.max() > 0.0, "queued requests must see admission delay");
+    assert!(cell.ttft.max() >= cell.queue_delay.max(), "ttft includes the queue wait");
+}
+
+// ---------------------------------------------------------------------
+// Golden determinism: byte-identical load reports per seed
+// ---------------------------------------------------------------------
+
+#[test]
+fn load_sweep_report_is_byte_identical_per_seed() {
+    let (cfg, store) = setup();
+    let pc = profile_model(&cfg, store.clone(), 8, 7777).unwrap();
+    let warm = warm_rank_from_profile(&pc);
+    let spec = SweepSpec {
+        processes: vec![ProcessKind::Poisson, ProcessKind::Bursty],
+        loads_rps: vec![8.0, 64.0],
+        presets: vec!["original".into(), "buddy-rho3".into()],
+        settings: LoadSettings {
+            n_requests: 6,
+            max_new: 4,
+            cache_rate: 0.5,
+            domain: Domain::Mixed,
+            seed: 42,
+        },
+    };
+    let a = run_sweep(&cfg, store.clone(), &pc, &warm, &spec).unwrap();
+    let b = run_sweep(&cfg, store, &pc, &warm, &spec).unwrap();
+    assert_eq!(a.len(), 8, "2 processes x 2 loads x 2 policies");
+    for c in &a {
+        assert_eq!(c.requests_done, 6, "{}@{}: all requests served", c.process, c.policy);
+        assert!(c.ttft.p(99.0) >= c.ttft.p(50.0));
+    }
+    assert_eq!(
+        report_markdown(&a),
+        report_markdown(&b),
+        "same seed + same arrival process must reproduce the report byte-for-byte"
+    );
+    assert_eq!(cells_json(&a).to_string(), cells_json(&b).to_string());
+}
