@@ -68,7 +68,7 @@ fn main() -> Result<()> {
             let demand_mb = server
                 .engine
                 .transfer_handle()
-                .with_state(|st| st.pcie.stats.demand_bytes) as f64
+                .with_state(|st| st.pcie_stats().demand_bytes) as f64
                 / (1024.0 * 1024.0);
             println!(
                 "| {bw_gbps:.0} | {preset} | {:.2} | {:.2} | {demand_mb:.2} | {} | {} |",

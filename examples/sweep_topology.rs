@@ -1,0 +1,74 @@
+//! Tail latency vs. expert-parallel fleet size: sweep (device count ×
+//! miss policy) on the virtual clock at a fixed Poisson offered load and
+//! report per-device-count tail-latency rows. Multi-device cells run with
+//! ψ's κ hop penalty live, so buddy substitution is steered toward
+//! same-device buddies while demand misses fan out over per-device host
+//! links.
+//!
+//! Run: `cargo run --release --example sweep_topology [-- --fast]`
+//! Works with or without artifacts (synthetic-family fallback); emits
+//! machine-readable `BENCH_topology.json` next to Cargo.toml (uploaded by
+//! CI alongside `BENCH_hotpath.json` and `BENCH_load.json`).
+
+use std::path::Path;
+
+use anyhow::Result;
+use buddymoe::eval::{profile_model, warm_rank_from_profile, Domain};
+use buddymoe::traffic::{
+    run_topology_sweep, topology_cells_json, topology_report_markdown, LoadSettings, TopologySweep,
+};
+use buddymoe::util::json::{num, obj, s};
+
+fn main() -> Result<()> {
+    buddymoe::util::logging::init();
+    let fast = std::env::args().any(|a| a == "--fast");
+
+    // Artifacts when built; otherwise the synthetic-family model (the
+    // shared eval fallback), so the sweep runs anywhere.
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let (cfg, store) = buddymoe::eval::load_model_or_synthetic(&dir, 4242)?;
+    let pc = profile_model(&cfg, store.clone(), if fast { 16 } else { 48 }, 7777)?;
+    let warm = warm_rank_from_profile(&pc);
+
+    let spec = TopologySweep {
+        device_counts: vec![1, 2, 4],
+        presets: vec!["original".into(), "buddy-rho3".into()],
+        // Past the single-device knee, so per-device host links have
+        // something to parallelize.
+        load_rps: 16.0,
+        kappa: 0.25,
+        settings: LoadSettings {
+            n_requests: if fast { 12 } else { 32 },
+            max_new: 8,
+            cache_rate: 0.5,
+            domain: Domain::Mixed,
+            seed: 42,
+        },
+    };
+
+    println!(
+        "# Topology sweep at c = {} (virtual clock, seed {}, {} requests/cell, {} rps, kappa {})\n",
+        spec.settings.cache_rate,
+        spec.settings.seed,
+        spec.settings.n_requests,
+        spec.load_rps,
+        spec.kappa
+    );
+    let rows = run_topology_sweep(&cfg, store, &pc, &warm, &spec)?;
+    println!("{}", topology_report_markdown(&rows));
+
+    let json = obj(vec![
+        ("model", s(&cfg.name)),
+        ("cache_rate", num(spec.settings.cache_rate)),
+        ("seed", num(spec.settings.seed as f64)),
+        ("n_requests", num(spec.settings.n_requests as f64)),
+        ("max_new", num(spec.settings.max_new as f64)),
+        ("load_rps", num(spec.load_rps)),
+        ("kappa", num(spec.kappa)),
+        ("rows", topology_cells_json(&rows)),
+    ]);
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_topology.json");
+    std::fs::write(&path, json.to_string() + "\n")?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

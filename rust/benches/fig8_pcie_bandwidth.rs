@@ -58,7 +58,7 @@ fn main() {
         let stats = server
             .engine
             .transfer_handle()
-            .with_state(|st| st.pcie.stats.clone());
+            .with_state(|st| st.pcie_stats());
         let mb = |b: u64| b as f64 / (1024.0 * 1024.0);
         let scaled_bw = if wall > 0.0 {
             stats.total_bytes() as f64 * 1600.0 / wall / 1e9

@@ -74,7 +74,7 @@ fn main() {
             // when iters wraps past n_experts.
             h.with_state(|st| {
                 for e in 0..cfg.n_experts {
-                    st.cache.demote(ExpertKey::new(0, e));
+                    st.demote(ExpertKey::new(0, e));
                 }
             });
             h.drain_arrivals();
@@ -91,7 +91,7 @@ fn main() {
         h.request(key, TransferPriority::Prefetch);
         h.wait_gpu(key);
         let (mean, _) = bench_support::time_it(3, iters, || {
-            assert!(h.with_state(|st| st.cache.is_gpu(key)));
+            assert!(h.with_state(|st| st.is_gpu(key)));
         });
         println!("| Prefetch hit | {:.4} | lossless |", mean * 1e3);
         h.shutdown();
@@ -115,7 +115,7 @@ fn main() {
             lat.push(clock.since(t0) * 1e3);
             h.with_state(|st| {
                 for e in 0..cfg.n_experts {
-                    st.cache.demote(ExpertKey::new(1, e));
+                    st.demote(ExpertKey::new(1, e));
                 }
             });
             h.drain_arrivals();

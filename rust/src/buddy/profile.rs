@@ -81,11 +81,10 @@ impl BuddyProfile {
             for i in 0..co.n_experts {
                 let q = co.q_given(i, eps, use_weighted);
                 let mut order: Vec<usize> = (0..co.n_experts).filter(|&j| j != i).collect();
-                order.sort_by(|&a, &b| {
-                    q[b].partial_cmp(&q[a])
-                        .unwrap_or(std::cmp::Ordering::Equal)
-                        .then(a.cmp(&b))
-                });
+                // total_cmp: the old partial_cmp fallback treated NaN as
+                // equal to everything, which breaks sort transitivity; a
+                // NaN q now ranks deterministically.
+                order.sort_by(|&a, &b| q[b].total_cmp(&q[a]).then(a.cmp(&b)));
                 let mut ranked = Vec::new();
                 let mut cum = 0.0;
                 for &j in &order {

@@ -18,6 +18,7 @@ use crate::buddy::profile::BuddyProfile;
 use crate::buddy::score::{psi, PsiParams};
 use crate::config::MissPolicy;
 use crate::stats::Counters;
+use crate::topology::HopContext;
 use crate::util::rng::Rng;
 
 /// One token's routing decision (post top-k, pre substitution).
@@ -62,8 +63,10 @@ pub struct SubstitutionEngine<'a> {
     pub search_h: usize,
     /// Per-token replacement budget ρ (None = unlimited).
     pub rho: Option<usize>,
-    /// Cross-partition hop counts per expert (all zero on a single GPU).
-    pub hops: Option<&'a [usize]>,
+    /// Pivot-relative cross-device hop counts for ψ's κ penalty, derived
+    /// from the expert→device placement (see `crate::topology`). `None`
+    /// on a single GPU, where every hop count is zero.
+    pub topo: Option<HopContext<'a>>,
 }
 
 impl<'a> SubstitutionEngine<'a> {
@@ -74,7 +77,7 @@ impl<'a> SubstitutionEngine<'a> {
             psi_params: PsiParams::default(),
             search_h: 16,
             rho: Some(3),
-            hops: None,
+            topo: None,
         }
     }
 
@@ -148,6 +151,17 @@ impl<'a> SubstitutionEngine<'a> {
                             SlotDecision::Fetch
                         } else {
                             let to = avail[rng.below(avail.len())];
+                            // Random substitutions emit events too, so the
+                            // engine's cross-device dispatch accounting
+                            // covers the baseline policy as well.
+                            events.push(SubEvent {
+                                token: ti,
+                                slot,
+                                from: e,
+                                to,
+                                rank: 0,
+                                psi: 0.0,
+                            });
                             SlotDecision::Substitute { to, rank: 0 }
                         }
                     }
@@ -255,7 +269,7 @@ impl<'a> SubstitutionEngine<'a> {
                 continue;
             }
             let z_hat = probs.map(|p| p[cand] as f64).unwrap_or(0.0);
-            let hops = self.hops.map(|h| h[cand]).unwrap_or(0);
+            let hops = self.topo.as_ref().map(|t| t.hops(pivot, cand)).unwrap_or(0);
             let reuse = reuse_ids
                 .iter()
                 .position(|&x| x == cand)
@@ -504,6 +518,88 @@ mod tests {
             &mut rng,
         );
         assert!(matches!(dec[0][0], SlotDecision::Substitute { to: 3, .. }));
+    }
+
+    /// Pivot 0 with two *equally ranked* buddies (1 and 2): identical
+    /// co-activation counts, so q is tied and rank order falls back to
+    /// expert id (1 before 2).
+    fn equal_q_profile() -> BuddyProfile {
+        let mut p = ProfileCollector::new(1, 6);
+        for _ in 0..8 {
+            p.record(0, &[0, 1], &[0.6, 0.4]).unwrap();
+            p.record(0, &[0, 2], &[0.6, 0.4]).unwrap();
+        }
+        for _ in 0..3 {
+            p.record(0, &[4, 5], &[0.5, 0.5]).unwrap();
+        }
+        BuddyProfile::build(&p, &[1.0], 6, 1e-6, false).unwrap()
+    }
+
+    #[test]
+    fn kappa_steers_to_same_device_buddy() {
+        // The acceptance scenario: two devices, pivot 0 homed on device 0.
+        // Buddy 1 (cross-device) and buddy 2 (same-device) are otherwise
+        // equal (same q); with κ live, ψ must prefer the same-device buddy.
+        let p = equal_q_profile();
+        let mut eng = engine(&p);
+        eng.psi_params.kappa = 0.5;
+        let device_of = [0usize, 1, 0, 0, 0, 1]; // 2-way striping-ish
+        let hop_matrix = vec![vec![0usize, 1], vec![1, 0]];
+        eng.topo = Some(HopContext { device_of: &device_of, hop_matrix: &hop_matrix });
+        let residency = [false, true, true, true, true, true];
+        let mut toks = vec![diffuse_token(vec![0, 4])];
+        let mut c = Counters::new();
+        let mut rng = Rng::new(1);
+        let (dec, ev) = eng.apply(
+            0, &mut toks, &residency, MissPolicy::Buddy, None, &mut c, &mut rng,
+        );
+        assert_eq!(
+            dec[0][0],
+            SlotDecision::Substitute { to: 2, rank: 2 },
+            "κ must flip the tie toward the same-device buddy"
+        );
+        assert_eq!(ev[0].to, 2);
+    }
+
+    #[test]
+    fn without_kappa_cross_device_tie_keeps_rank_order() {
+        // Control for the test above: κ = 0 leaves ψ topology-blind, so
+        // the rank-1 (cross-device) buddy wins the q tie.
+        let p = equal_q_profile();
+        let mut eng = engine(&p);
+        eng.psi_params.kappa = 0.0;
+        let device_of = [0usize, 1, 0, 0, 0, 1];
+        let hop_matrix = vec![vec![0usize, 1], vec![1, 0]];
+        eng.topo = Some(HopContext { device_of: &device_of, hop_matrix: &hop_matrix });
+        let residency = [false, true, true, true, true, true];
+        let mut toks = vec![diffuse_token(vec![0, 4])];
+        let mut c = Counters::new();
+        let mut rng = Rng::new(1);
+        let (dec, _) = eng.apply(
+            0, &mut toks, &residency, MissPolicy::Buddy, None, &mut c, &mut rng,
+        );
+        assert_eq!(dec[0][0], SlotDecision::Substitute { to: 1, rank: 1 });
+    }
+
+    #[test]
+    fn random_substitution_emits_events() {
+        let p = profile();
+        let eng = engine(&p);
+        let residency = [false, true, true, true, true, true];
+        let mut toks = vec![diffuse_token(vec![0, 1])];
+        let mut c = Counters::new();
+        let mut rng = Rng::new(7);
+        let (dec, ev) = eng.apply(
+            0, &mut toks, &residency, MissPolicy::Random, None, &mut c, &mut rng,
+        );
+        match dec[0][0] {
+            SlotDecision::Substitute { to, .. } => {
+                assert_eq!(ev.len(), 1);
+                assert_eq!(ev[0].from, 0);
+                assert_eq!(ev[0].to, to);
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

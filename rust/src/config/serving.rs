@@ -3,6 +3,8 @@
 
 use anyhow::{bail, Result};
 
+use crate::topology::{PlacementKind, TopologyKind};
+
 /// What to do when a selected expert is CPU-resident (paper §5.1 baselines
 /// plus the BuddyMoE policy).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -87,6 +89,23 @@ pub struct ServingConfig {
     /// mini expert (384 KiB real) costs what one DeepSeek-V2-Lite expert
     /// (~thousands of KiB over 16 GB/s, i.e. ~10 ms) costs in the paper.
     pub transfer_bytes_scale: f64,
+
+    // --- expert-parallel topology (crate::topology) ---
+    /// Number of simulated expert-parallel GPUs. 1 (the default) is the
+    /// single-device configuration and is byte-identical to the
+    /// pre-topology system; each device gets its own expert cache and its
+    /// own serialized host link.
+    pub n_devices: usize,
+    /// Peer-interconnect shape: hop counts for ψ's κ penalty and for the
+    /// cross-device dispatch cost of substituted buddies.
+    pub topology: TopologyKind,
+    /// Expert→device placement strategy.
+    pub placement: PlacementKind,
+    /// Peer (GPU↔GPU) link bandwidth, bytes/second. NVLink-class: fast
+    /// next to the host link, so a peer hop beats a host round trip.
+    pub peer_bandwidth: f64,
+    /// Peer link per-hop base latency, seconds.
+    pub peer_base_latency: f64,
     pub miss_policy: MissPolicy,
     pub prefetch: PrefetchKind,
     /// Oracle prefetcher false-negative rate (Table 1 harness only).
@@ -144,6 +163,13 @@ impl Default for ServingConfig {
             pcie_bandwidth: 16e9,
             pcie_base_latency: 10e-6,
             transfer_bytes_scale: 1600.0,
+            n_devices: 1,
+            topology: TopologyKind::FullyConnected,
+            placement: PlacementKind::LayerStriped,
+            // NVLink-ish: 64 GB/s with single-digit-microsecond latency —
+            // a peer hop costs ~µs where a host fetch costs ~10 ms.
+            peer_bandwidth: 64e9,
+            peer_base_latency: 3e-6,
             miss_policy: MissPolicy::Buddy,
             prefetch: PrefetchKind::TopFreq,
             oracle_miss_rate: 0.0,
@@ -196,6 +222,18 @@ impl ServingConfig {
         }
         if self.pcie_bandwidth <= 0.0 {
             bail!("pcie_bandwidth must be positive");
+        }
+        if self.n_devices == 0 {
+            bail!("n_devices must be >= 1");
+        }
+        if self.peer_bandwidth <= 0.0 {
+            bail!("peer_bandwidth must be positive");
+        }
+        if !(self.peer_base_latency.is_finite() && self.peer_base_latency >= 0.0) {
+            bail!("peer_base_latency must be finite and non-negative");
+        }
+        if !(self.kappa.is_finite() && self.kappa >= 0.0) {
+            bail!("kappa must be finite and non-negative");
         }
         if !(self.sim_attn_s.is_finite() && self.sim_attn_s >= 0.0)
             || !(self.sim_expert_s.is_finite() && self.sim_expert_s >= 0.0)
@@ -314,6 +352,22 @@ mod tests {
         assert!(c.validate().is_err());
         let mut c = ServingConfig::default();
         c.cft_alpha = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn topology_knobs_validated() {
+        let mut c = ServingConfig::default();
+        assert_eq!(c.n_devices, 1, "single device is the default");
+        c.n_devices = 4;
+        c.validate().unwrap();
+        c.n_devices = 0;
+        assert!(c.validate().is_err());
+        let mut c = ServingConfig::default();
+        c.peer_bandwidth = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = ServingConfig::default();
+        c.kappa = f64::NAN;
         assert!(c.validate().is_err());
     }
 

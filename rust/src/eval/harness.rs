@@ -158,7 +158,9 @@ pub fn warm_rank_from_profile(pc: &ProfileCollector) -> Vec<Vec<usize>> {
         .map(|l| {
             let acts = &pc.layer(l).activations;
             let mut idx: Vec<usize> = (0..acts.len()).collect();
-            idx.sort_by(|&a, &b| acts[b].partial_cmp(&acts[a]).unwrap().then(a.cmp(&b)));
+            // total_cmp: a NaN activation (e.g. a poisoned profile) ranks
+            // deterministically instead of panicking the sort.
+            idx.sort_by(|&a, &b| acts[b].total_cmp(&acts[a]).then(a.cmp(&b)));
             idx
         })
         .collect()
@@ -268,7 +270,7 @@ pub fn run_method(
     let kl_easy = mean_logit_kl(&logs(&o_easy), &logs(&s_easy));
     let kl_hard = mean_logit_kl(&logs(&o_hard), &logs(&s_hard));
 
-    let pcie = server.engine.transfer_handle().with_state(|st| st.pcie.stats.clone());
+    let pcie = server.engine.transfer_handle().with_state(|st| st.pcie_stats());
     let outcome = EvalOutcome {
         label: spec.label.clone(),
         acc_easy,

@@ -57,6 +57,7 @@ pub mod runtime;
 pub mod server;
 pub mod stats;
 pub mod testing;
+pub mod topology;
 pub mod traffic;
 pub mod util;
 pub mod weights;

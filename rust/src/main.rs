@@ -162,7 +162,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     let pcie = server
         .engine
         .transfer_handle()
-        .with_state(|st| st.pcie.stats.clone());
+        .with_state(|st| st.pcie_stats());
     println!(
         "pcie: demand {} B ({} transfers), prefetch {} B ({} transfers)",
         pcie.demand_bytes, pcie.demand_transfers, pcie.prefetch_bytes, pcie.prefetch_transfers

@@ -102,6 +102,14 @@ impl ExpertCache {
         self.capacity_per_layer
     }
 
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.n_experts
+    }
+
     pub fn state(&self, k: ExpertKey) -> SlotState {
         self.slots[self.idx(k)].state
     }
@@ -143,6 +151,18 @@ impl ExpertCache {
         self.slots[i].pins -= 1;
     }
 
+    /// GPU-resident plus in-flight experts in one layer — the slots that
+    /// count against `capacity_per_layer` (a `Loading` slot owns real GPU
+    /// memory from the moment its transfer starts).
+    fn occupied(&self, layer: usize) -> usize {
+        (0..self.n_experts)
+            .filter(|&e| {
+                let s = self.state(ExpertKey::new(layer, e));
+                s == SlotState::Gpu || s == SlotState::Loading
+            })
+            .count()
+    }
+
     /// Ask to bring `k` onto the GPU. If the layer is full, a victim is
     /// selected by the eviction policy, demoted to Cpu, and reported so the
     /// engine can drop its device buffers.
@@ -152,13 +172,7 @@ impl ExpertCache {
             SlotState::Loading => return LoadDecision::AlreadyLoading,
             SlotState::Cpu => {}
         }
-        let in_flight_or_resident = (0..self.n_experts)
-            .filter(|&e| {
-                let s = self.state(ExpertKey::new(k.layer, e));
-                s == SlotState::Gpu || s == SlotState::Loading
-            })
-            .count();
-        let evicted = if in_flight_or_resident >= self.capacity_per_layer {
+        let evicted = if self.occupied(k.layer) >= self.capacity_per_layer {
             match self.select_victim(k.layer) {
                 Some(v) => {
                     let vi = self.idx(v);
@@ -204,9 +218,12 @@ impl ExpertCache {
         }
     }
 
-    /// Directly admit an expert (initial cache warm-up).
+    /// Directly admit an expert (initial cache warm-up). `Loading` slots
+    /// count against the layer budget exactly as in `request_load`: an
+    /// in-flight transfer owns real GPU memory the moment it starts, so
+    /// warm-up admits racing in-flight loads must not oversubscribe.
     pub fn admit(&mut self, k: ExpertKey) -> Result<()> {
-        if self.gpu_count(k.layer) >= self.capacity_per_layer {
+        if self.occupied(k.layer) >= self.capacity_per_layer {
             bail!("layer {} cache full", k.layer);
         }
         let i = self.idx(k);
@@ -331,6 +348,22 @@ mod tests {
         // Layer full with two in-flight loads; third must evict, but nothing
         // is Gpu yet -> NoRoom.
         assert_eq!(c.request_load(k(0, 2)), LoadDecision::NoRoom);
+    }
+
+    #[test]
+    fn admit_counts_loading_toward_capacity() {
+        // Regression: admit used to check only gpu_count, so a warm-up
+        // admit plus an in-flight load could exceed capacity_per_layer.
+        let mut c = cache(2);
+        assert!(matches!(c.request_load(k(0, 0)), LoadDecision::StartLoad { .. }));
+        c.admit(k(0, 1)).unwrap(); // 1 Loading + 1 Gpu == capacity
+        assert!(
+            c.admit(k(0, 2)).is_err(),
+            "in-flight load owns a slot; a third admit must be refused"
+        );
+        c.complete_load(k(0, 0));
+        assert!(c.admit(k(0, 2)).is_err(), "still full once the load lands");
+        assert_eq!(c.gpu_count(0), 2);
     }
 
     #[test]

@@ -1,6 +1,8 @@
-//! The offloading substrate: GPU residency accounting, the expert cache
-//! with eviction policies, the PCIe link simulator, and the background
-//! transfer engine that moves experts CPU -> GPU.
+//! The offloading substrate: GPU residency accounting, per-device expert
+//! caches with eviction policies, the PCIe link simulator, and the
+//! background transfer engine that moves experts CPU -> GPU over each
+//! device's own serialized host link (see `crate::topology` for the
+//! device graph and the expert→device placement).
 //!
 //! Everything here is xla-free: "GPU residency" is an accounting state; the
 //! engine layer (`model::engine`) owns the corresponding device buffers and
@@ -12,4 +14,6 @@ mod transfer;
 
 pub use cache::{EvictPolicy, ExpertCache, LoadDecision, SlotState};
 pub use pcie::{PcieSim, PcieStats};
-pub use transfer::{EngineState, SharedCache, TransferEngine, TransferHandle, TransferPriority};
+pub use transfer::{
+    DeviceState, EngineState, SharedCache, TransferEngine, TransferHandle, TransferPriority,
+};

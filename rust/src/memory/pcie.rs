@@ -37,6 +37,16 @@ impl PcieStats {
     pub fn total_transfers(&self) -> u64 {
         self.demand_transfers + self.prefetch_transfers
     }
+
+    /// Fold another link's counters into this one (aggregating per-device
+    /// host links into one fleet-wide view).
+    pub fn accumulate(&mut self, other: &PcieStats) {
+        self.demand_bytes += other.demand_bytes;
+        self.prefetch_bytes += other.prefetch_bytes;
+        self.demand_transfers += other.demand_transfers;
+        self.prefetch_transfers += other.prefetch_transfers;
+        self.busy_seconds += other.busy_seconds;
+    }
 }
 
 /// The link model. Cheap and `Send`; the transfer engine holds it behind a

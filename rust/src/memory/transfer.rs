@@ -1,15 +1,25 @@
-//! The transfer engine: serializes CPU->GPU expert movement over the
-//! simulated PCIe link, in either of the two [`SimClock`] modes.
+//! The transfer engine: serializes CPU->GPU expert movement over each
+//! device's simulated host link, in either of the two [`SimClock`] modes.
 //!
-//! Two priority classes share the link: **demand** loads (synchronous
+//! Since the multi-device topology PR the engine models an expert-parallel
+//! fleet: every simulated GPU owns its own [`ExpertCache`] and its own
+//! serialized host link ([`PcieSim`]), and a [`Placement`] routes each
+//! expert's transfers to its home device. Links are independent — two
+//! devices fetch concurrently — while transfers on one link serialize
+//! exactly as before. A shared peer-interconnect cost model
+//! (`EngineState::peer`) charges cross-device activation hops (the ψ/κ
+//! story, see [`crate::topology`]). With one device the behavior is
+//! byte-identical to the original single-cache engine.
+//!
+//! Two priority classes share each link: **demand** loads (synchronous
 //! misses — the pipeline is stalled on them) always preempt **prefetch**
 //! loads (speculative). Completed transfers flip the cache slot to `Gpu`
 //! and stage the host weights in an arrivals list the engine layer drains
 //! to create device buffers.
 //!
 //! * **Virtual clock** — transfers are discrete events. A request enqueues
-//!   with its (virtual) arrival time; the link starts the next transfer the
-//!   moment it frees (demand first among requests that have arrived by
+//!   with its (virtual) arrival time; each link starts its next transfer
+//!   the moment it frees (demand first among requests that have arrived by
 //!   then), and completion advances nothing by itself — completions become
 //!   visible when the clock reaches their ready time. A synchronous
 //!   `wait_gpu` *advances the clock* to the stalled transfer's completion.
@@ -17,17 +27,18 @@
 //!   milliseconds and is bit-for-bit deterministic, while the
 //!   link-serialization and preemption semantics match the threaded
 //!   engine's exactly.
-//! * **Real-time clock** — a background thread pops requests and sleeps for
-//!   each simulated duration, so downstream latency numbers are genuine
-//!   elapsed-time measurements.
+//! * **Real-time clock** — one background thread per device pops requests
+//!   and sleeps for each simulated duration, so downstream latency numbers
+//!   are genuine elapsed-time measurements.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::memory::cache::{ExpertCache, LoadDecision};
-use crate::memory::pcie::PcieSim;
+use crate::memory::cache::{ExpertCache, LoadDecision, SlotState};
+use crate::memory::pcie::{PcieSim, PcieStats};
+use crate::topology::Placement;
 use crate::util::clock::SimClock;
 use crate::weights::{ExpertKey, ExpertWeights, WeightStore};
 
@@ -46,30 +57,131 @@ struct Queued {
     enqueued_at: Duration,
 }
 
-/// A transfer occupying the link (virtual mode only). Its PCIe traffic is
-/// recorded at start; completion only flips cache state and stages the
-/// arrival.
+/// A transfer occupying a link. Its PCIe traffic is recorded at start;
+/// completion only flips cache state and stages the arrival. (Real-time
+/// mode uses this as an in-progress marker with `ready_at` unused.)
 #[derive(Debug, Clone, Copy)]
 struct InFlight {
     key: ExpertKey,
     ready_at: Duration,
 }
 
-/// Cache + link + arrival/eviction mailboxes, all behind one mutex.
+/// One simulated GPU: its expert cache plus its own serialized host link.
+pub struct DeviceState {
+    pub cache: ExpertCache,
+    pub pcie: PcieSim,
+    demand_q: VecDeque<Queued>,
+    prefetch_q: VecDeque<Queued>,
+    in_flight: Vec<InFlight>,
+    /// Virtual time at which this link finishes its current work.
+    link_free_at: Duration,
+}
+
+impl DeviceState {
+    fn new(cache: ExpertCache, pcie: PcieSim) -> Self {
+        Self {
+            cache,
+            pcie,
+            demand_q: VecDeque::new(),
+            prefetch_q: VecDeque::new(),
+            in_flight: Vec::new(),
+            link_free_at: Duration::ZERO,
+        }
+    }
+
+    fn has_transfer(&self, key: ExpertKey) -> bool {
+        self.demand_q.iter().any(|q| q.key == key)
+            || self.prefetch_q.iter().any(|q| q.key == key)
+            || self.in_flight.iter().any(|t| t.key == key)
+    }
+}
+
+/// Per-device caches + links, the expert→device map, the shared peer
+/// interconnect, and arrival/eviction mailboxes, all behind one mutex.
 /// Arrivals carry [`ExpertWeights`] by `Arc` — staging a completed
 /// transfer is a pointer move, not a weight copy (the simulated link
 /// already charged the PCIe time for the bytes).
 pub struct EngineState {
-    pub cache: ExpertCache,
-    pub pcie: PcieSim,
+    pub devices: Vec<DeviceState>,
+    pub placement: Placement,
+    /// Peer (GPU↔GPU) interconnect cost model + traffic stats. Only
+    /// touched by cross-device dispatches, so it stays all-zero in the
+    /// single-device configuration.
+    pub peer: PcieSim,
     pub arrivals: Vec<(ExpertKey, ExpertWeights)>,
     pub evictions: Vec<ExpertKey>,
-    demand_q: VecDeque<Queued>,
-    prefetch_q: VecDeque<Queued>,
-    in_flight: Vec<InFlight>,
-    /// Virtual time at which the link finishes its current work.
-    link_free_at: Duration,
     shutdown: bool,
+}
+
+impl EngineState {
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Home device of an expert (where it is cached and executed).
+    pub fn home(&self, key: ExpertKey) -> usize {
+        self.placement.device_of(key)
+    }
+
+    /// The cache responsible for `key`.
+    pub fn cache(&self, key: ExpertKey) -> &ExpertCache {
+        &self.devices[self.home(key)].cache
+    }
+
+    pub fn cache_mut(&mut self, key: ExpertKey) -> &mut ExpertCache {
+        let d = self.home(key);
+        &mut self.devices[d].cache
+    }
+
+    /// Resident on its home device (= resident on *some* device, since an
+    /// expert is only ever admitted at home).
+    pub fn is_gpu(&self, key: ExpertKey) -> bool {
+        self.cache(key).is_gpu(key)
+    }
+
+    pub fn mark_use(&mut self, key: ExpertKey) {
+        self.cache_mut(key).mark_use(key);
+    }
+
+    pub fn pin(&mut self, key: ExpertKey) {
+        self.cache_mut(key).pin(key);
+    }
+
+    pub fn unpin(&mut self, key: ExpertKey) {
+        self.cache_mut(key).unpin(key);
+    }
+
+    pub fn admit(&mut self, key: ExpertKey) -> anyhow::Result<()> {
+        self.cache_mut(key).admit(key)
+    }
+
+    pub fn demote(&mut self, key: ExpertKey) -> bool {
+        self.cache_mut(key).demote(key)
+    }
+
+    /// Residency mask for one layer across the whole fleet (Algorithm 1's
+    /// M): expert `e` is resident iff it is GPU-resident on its home
+    /// device.
+    pub fn residency_mask(&self, layer: usize) -> Vec<bool> {
+        (0..self.placement.n_experts())
+            .map(|e| self.is_gpu(ExpertKey::new(layer, e)))
+            .collect()
+    }
+
+    /// Host-link traffic summed over every device (the fleet-wide view the
+    /// reports consume; identical to the single link's stats when
+    /// `n_devices == 1`).
+    pub fn pcie_stats(&self) -> PcieStats {
+        let mut total = PcieStats::default();
+        for d in &self.devices {
+            total.accumulate(&d.pcie.stats);
+        }
+        total
+    }
+
+    fn has_transfer(&self, key: ExpertKey) -> bool {
+        self.devices[self.home(key)].has_transfer(key)
+    }
 }
 
 pub struct Inner {
@@ -87,116 +199,190 @@ pub struct TransferHandle {
     inner: SharedCache,
     clock: SimClock,
     store: Arc<WeightStore>,
-    thread: Arc<Mutex<Option<JoinHandle<()>>>>,
+    threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
 }
 
-/// When will the link start its next queued transfer, and is it a demand?
+/// When will this link start its next queued transfer, and is it a demand?
 ///
 /// The link frees at `link_free_at`; the next transfer starts at
 /// `max(link_free_at, earliest enqueue among queue fronts)`. At that
 /// instant a demand wins if it has arrived by then — exactly the threaded
 /// engine's "pop demand first" rule at the moment the thread frees.
-fn next_start(st: &EngineState) -> Option<(Duration, bool)> {
-    let d = st.demand_q.front().map(|q| q.enqueued_at);
-    let p = st.prefetch_q.front().map(|q| q.enqueued_at);
+fn next_start(dev: &DeviceState) -> Option<(Duration, bool)> {
+    let d = dev.demand_q.front().map(|q| q.enqueued_at);
+    let p = dev.prefetch_q.front().map(|q| q.enqueued_at);
     let earliest = match (d, p) {
         (None, None) => return None,
         (Some(a), None) => a,
         (None, Some(b)) => b,
         (Some(a), Some(b)) => a.min(b),
     };
-    let start = st.link_free_at.max(earliest);
+    let start = dev.link_free_at.max(earliest);
     let demand_first = d.map(|t| t <= start).unwrap_or(false);
     Some((start, demand_first))
 }
 
-/// Advance the virtual link state to `now`: start every transfer whose
-/// start time has been reached (recording its PCIe traffic — the link is
-/// committed the moment a transfer starts, and recording at start keeps
-/// virtual and real-time stats in agreement even for transfers still in
-/// flight when a run ends), and complete every transfer whose ready time
-/// has passed (flipping the cache slot and staging arrivals).
-fn settle(st: &mut EngineState, store: &WeightStore, now: Duration) {
+/// Advance one device's virtual link state to `now`: start every transfer
+/// whose start time has been reached (recording its PCIe traffic — the
+/// link is committed the moment a transfer starts, and recording at start
+/// keeps virtual and real-time stats in agreement even for transfers still
+/// in flight when a run ends), and complete every transfer whose ready
+/// time has passed (flipping the cache slot and staging arrivals).
+fn settle_device(
+    dev: &mut DeviceState,
+    store: &WeightStore,
+    now: Duration,
+    arrivals: &mut Vec<(ExpertKey, ExpertWeights)>,
+) {
     loop {
-        let Some((start, demand_first)) = next_start(st) else { break };
+        let Some((start, demand_first)) = next_start(dev) else { break };
         if start > now {
             break;
         }
         let key = if demand_first {
-            st.demand_q.pop_front().unwrap().key
+            dev.demand_q.pop_front().unwrap().key
         } else {
-            st.prefetch_q.pop_front().unwrap().key
+            dev.prefetch_q.pop_front().unwrap().key
         };
-        let dur = st.pcie.transfer_duration(store.expert_bytes);
+        let dur = dev.pcie.transfer_duration(store.expert_bytes);
         let ready = start + dur;
-        st.link_free_at = ready;
-        st.pcie.record(store.expert_bytes, !demand_first);
-        st.in_flight.push(InFlight { key, ready_at: ready });
+        dev.link_free_at = ready;
+        dev.pcie.record(store.expert_bytes, !demand_first);
+        dev.in_flight.push(InFlight { key, ready_at: ready });
     }
     let mut i = 0;
-    while i < st.in_flight.len() {
-        if st.in_flight[i].ready_at <= now {
-            let t = st.in_flight.remove(i);
-            st.cache.complete_load(t.key);
+    while i < dev.in_flight.len() {
+        if dev.in_flight[i].ready_at <= now {
+            let t = dev.in_flight.remove(i);
+            dev.cache.complete_load(t.key);
             let w = store.expert(t.key).expect("transfer for unknown expert");
-            st.arrivals.push((t.key, w));
+            arrivals.push((t.key, w));
         } else {
             i += 1;
         }
     }
 }
 
-/// The next virtual instant at which a transfer completes (in-flight
-/// first; otherwise the next queued transfer's start + duration).
-fn next_event(st: &EngineState, expert_bytes: usize) -> Option<Duration> {
-    if let Some(t) = st.in_flight.iter().map(|t| t.ready_at).min() {
+/// Settle every device's link to `now`. Links are independent: each one
+/// serializes its own transfers but never blocks another's.
+fn settle(st: &mut EngineState, store: &WeightStore, now: Duration) {
+    let EngineState { devices, arrivals, .. } = st;
+    for dev in devices.iter_mut() {
+        settle_device(dev, store, now, arrivals);
+    }
+}
+
+/// The next virtual instant at which a transfer completes on this link
+/// (in-flight first; otherwise the next queued transfer's start +
+/// duration).
+fn next_event(dev: &DeviceState, expert_bytes: usize) -> Option<Duration> {
+    if let Some(t) = dev.in_flight.iter().map(|t| t.ready_at).min() {
         return Some(t);
     }
-    next_start(st).map(|(start, _)| start + st.pcie.transfer_duration(expert_bytes))
+    next_start(dev).map(|(start, _)| start + dev.pcie.transfer_duration(expert_bytes))
+}
+
+/// The satellite fix for the request/wait race: the awaited expert's
+/// transfer can vanish between `request` and `wait_gpu` (e.g. the prefetch
+/// verification step cancelled it, which also aborted the `Loading` slot).
+/// Re-issue the load at demand priority instead of panicking.
+fn reissue_demand(st: &mut EngineState, key: ExpertKey, now: Duration) {
+    if st.cache(key).state(key) == SlotState::Loading {
+        // Orphaned Loading slot with no backing transfer: reset it so
+        // request_load can restart the state machine.
+        st.cache_mut(key).abort_load(key);
+    }
+    match st.cache_mut(key).request_load(key) {
+        LoadDecision::StartLoad { evicted } => {
+            if let Some(v) = evicted {
+                st.evictions.push(v);
+            }
+            let dev = st.home(key);
+            st.devices[dev].demand_q.push_back(Queued { key, enqueued_at: now });
+        }
+        LoadDecision::AlreadyGpu => {}
+        LoadDecision::AlreadyLoading => unreachable!("orphaned Loading slot was just reset"),
+        LoadDecision::NoRoom => panic!(
+            "wait_gpu({key:?}): transfer lost and every slot in the layer is pinned"
+        ),
+    }
 }
 
 impl TransferEngine {
-    /// Build the engine on `clock`. With a virtual clock this spawns no
-    /// thread — transfers are simulated events; with a real-time clock a
-    /// background thread sleeps for each simulated transfer duration.
+    /// Single-device convenience: the degenerate one-GPU fleet (all
+    /// experts homed on device 0). Byte-identical to the pre-topology
+    /// engine.
     pub fn spawn(
         cache: ExpertCache,
         pcie: PcieSim,
         store: Arc<WeightStore>,
         clock: SimClock,
     ) -> TransferHandle {
+        let placement = Placement::single(cache.n_layers(), cache.n_experts());
+        // The peer link of a one-GPU fleet carries no traffic; use the
+        // serving-config default cost model rather than duplicating its
+        // constants here.
+        let dflt = crate::config::ServingConfig::default();
+        let peer = PcieSim::new(dflt.peer_bandwidth, dflt.peer_base_latency, 1.0);
+        Self::spawn_multi(vec![(cache, pcie)], peer, placement, store, clock)
+    }
+
+    /// Build the engine for an expert-parallel fleet: one (cache, host
+    /// link) pair per device, a peer-interconnect cost model, and the
+    /// expert→device placement. With a virtual clock this spawns no
+    /// thread — transfers are simulated events; with a real-time clock one
+    /// background thread per device sleeps for each simulated transfer
+    /// duration.
+    pub fn spawn_multi(
+        devices: Vec<(ExpertCache, PcieSim)>,
+        peer: PcieSim,
+        placement: Placement,
+        store: Arc<WeightStore>,
+        clock: SimClock,
+    ) -> TransferHandle {
+        assert!(!devices.is_empty(), "need at least one device");
+        assert_eq!(
+            devices.len(),
+            placement.n_devices(),
+            "placement device count must match the fleet"
+        );
+        let n_devices = devices.len();
         let inner = Arc::new(Inner {
             state: Mutex::new(EngineState {
-                cache,
-                pcie,
+                devices: devices
+                    .into_iter()
+                    .map(|(cache, pcie)| DeviceState::new(cache, pcie))
+                    .collect(),
+                placement,
+                peer,
                 arrivals: Vec::new(),
                 evictions: Vec::new(),
-                demand_q: VecDeque::new(),
-                prefetch_q: VecDeque::new(),
-                in_flight: Vec::new(),
-                link_free_at: Duration::ZERO,
                 shutdown: false,
             }),
             cv: Condvar::new(),
         });
-        let thread = if clock.is_virtual() {
-            None
+        let threads = if clock.is_virtual() {
+            Vec::new()
         } else {
-            let inner2 = inner.clone();
-            let store2 = store.clone();
-            Some(
-                std::thread::Builder::new()
-                    .name("pcie-transfer".into())
-                    .spawn(move || Self::run(inner2, store2))
-                    .expect("spawn transfer engine"),
-            )
+            (0..n_devices)
+                .map(|dev| {
+                    let inner2 = inner.clone();
+                    let store2 = store.clone();
+                    std::thread::Builder::new()
+                        .name(format!("pcie-transfer-{dev}"))
+                        .spawn(move || Self::run(inner2, store2, dev))
+                        .expect("spawn transfer engine")
+                })
+                .collect()
         };
-        TransferHandle { inner, clock, store, thread: Arc::new(Mutex::new(thread)) }
+        TransferHandle { inner, clock, store, threads: Arc::new(Mutex::new(threads)) }
     }
 
-    /// Real-time worker loop: pop (demand first), sleep the simulated
-    /// duration, complete.
-    fn run(inner: SharedCache, store: Arc<WeightStore>) {
+    /// Real-time worker loop for one device: pop (demand first), sleep the
+    /// simulated duration, complete. The in-flight marker keeps
+    /// `wait_gpu`'s lost-transfer detection honest while the thread
+    /// sleeps outside the lock.
+    fn run(inner: SharedCache, store: Arc<WeightStore>, dev: usize) {
         loop {
             let (key, duration) = {
                 let mut st = inner.state.lock().unwrap();
@@ -204,16 +390,19 @@ impl TransferEngine {
                     if st.shutdown {
                         return;
                     }
-                    if let Some(q) = st.demand_q.pop_front() {
-                        let d = st.pcie.transfer_duration(store.expert_bytes);
+                    let d = &mut st.devices[dev];
+                    if let Some(q) = d.demand_q.pop_front() {
+                        let dur = d.pcie.transfer_duration(store.expert_bytes);
                         // Record at transfer start (matches virtual mode).
-                        st.pcie.record(store.expert_bytes, false);
-                        break (q.key, d);
+                        d.pcie.record(store.expert_bytes, false);
+                        d.in_flight.push(InFlight { key: q.key, ready_at: Duration::ZERO });
+                        break (q.key, dur);
                     }
-                    if let Some(q) = st.prefetch_q.pop_front() {
-                        let d = st.pcie.transfer_duration(store.expert_bytes);
-                        st.pcie.record(store.expert_bytes, true);
-                        break (q.key, d);
+                    if let Some(q) = d.prefetch_q.pop_front() {
+                        let dur = d.pcie.transfer_duration(store.expert_bytes);
+                        d.pcie.record(store.expert_bytes, true);
+                        d.in_flight.push(InFlight { key: q.key, ready_at: Duration::ZERO });
+                        break (q.key, dur);
                     }
                     st = inner.cv.wait(st).unwrap();
                 }
@@ -222,7 +411,11 @@ impl TransferEngine {
             std::thread::sleep(duration);
             let weights = store.expert(key).expect("transfer for unknown expert");
             let mut st = inner.state.lock().unwrap();
-            st.cache.complete_load(key);
+            let d = &mut st.devices[dev];
+            if let Some(pos) = d.in_flight.iter().position(|t| t.key == key) {
+                d.in_flight.remove(pos);
+            }
+            d.cache.complete_load(key);
             st.arrivals.push((key, weights));
             inner.cv.notify_all();
         }
@@ -230,8 +423,8 @@ impl TransferEngine {
 }
 
 impl TransferHandle {
-    /// Lock the shared state, first settling the virtual event queue up to
-    /// the current virtual time so callers always observe a consistent
+    /// Lock the shared state, first settling the virtual event queues up
+    /// to the current virtual time so callers always observe a consistent
     /// "present".
     fn lock_settled(&self) -> MutexGuard<'_, EngineState> {
         let mut st = self.inner.state.lock().unwrap();
@@ -246,25 +439,27 @@ impl TransferHandle {
         &self.clock
     }
 
-    /// Run a closure with exclusive access to cache + link state.
+    /// Run a closure with exclusive access to the fleet state.
     pub fn with_state<R>(&self, f: impl FnOnce(&mut EngineState) -> R) -> R {
         let mut st = self.lock_settled();
         f(&mut st)
     }
 
-    /// Request that `key` be brought to GPU. Returns the cache decision;
-    /// enqueues a transfer (and records any eviction) when a load starts.
+    /// Request that `key` be brought onto its home device. Returns the
+    /// cache decision; enqueues a transfer on the home link (and records
+    /// any eviction) when a load starts.
     pub fn request(&self, key: ExpertKey, prio: TransferPriority) -> LoadDecision {
         let mut st = self.lock_settled();
-        let decision = st.cache.request_load(key);
+        let decision = st.cache_mut(key).request_load(key);
         if let LoadDecision::StartLoad { evicted } = decision {
             if let Some(v) = evicted {
                 st.evictions.push(v);
             }
+            let dev = st.home(key);
             let q = Queued { key, enqueued_at: self.clock.now() };
             match prio {
-                TransferPriority::Demand => st.demand_q.push_back(q),
-                TransferPriority::Prefetch => st.prefetch_q.push_back(q),
+                TransferPriority::Demand => st.devices[dev].demand_q.push_back(q),
+                TransferPriority::Prefetch => st.devices[dev].prefetch_q.push_back(q),
             }
             if self.clock.is_virtual() {
                 // The link may be idle: the transfer starts this instant.
@@ -281,9 +476,10 @@ impl TransferHandle {
     /// already started keep their class.
     pub fn escalate(&self, key: ExpertKey) {
         let mut st = self.lock_settled();
-        if let Some(pos) = st.prefetch_q.iter().position(|q| q.key == key) {
-            let q = st.prefetch_q.remove(pos).unwrap();
-            st.demand_q.push_back(q);
+        let dev = st.home(key);
+        if let Some(pos) = st.devices[dev].prefetch_q.iter().position(|q| q.key == key) {
+            let q = st.devices[dev].prefetch_q.remove(pos).unwrap();
+            st.devices[dev].demand_q.push_back(q);
             if self.clock.is_virtual() {
                 settle(&mut st, &self.store, self.clock.now());
             } else {
@@ -297,50 +493,85 @@ impl TransferHandle {
     /// Saves PCIe occupancy that would otherwise serve speculative waste.
     pub fn cancel_prefetch(&self, key: ExpertKey) -> bool {
         let mut st = self.lock_settled();
-        if let Some(pos) = st.prefetch_q.iter().position(|q| q.key == key) {
-            st.prefetch_q.remove(pos);
-            st.cache.abort_load(key);
+        let dev = st.home(key);
+        if let Some(pos) = st.devices[dev].prefetch_q.iter().position(|q| q.key == key) {
+            st.devices[dev].prefetch_q.remove(pos);
+            st.cache_mut(key).abort_load(key);
             true
         } else {
             false
         }
     }
 
-    /// Block until `key` is GPU-resident (the synchronous miss stall).
-    /// Under a virtual clock this advances the clock to the transfer's
-    /// completion instant — the stall costs virtual, not real, time.
+    /// Block until `key` is resident on its home device (the synchronous
+    /// miss stall). Under a virtual clock this advances the clock to the
+    /// transfer's completion instant — the stall costs virtual, not real,
+    /// time. If the awaited transfer vanished (request/wait race with a
+    /// cancellation), the load is re-issued at demand priority.
     pub fn wait_gpu(&self, key: ExpertKey) {
         if self.clock.is_virtual() {
             let mut st = self.inner.state.lock().unwrap();
             loop {
                 settle(&mut st, &self.store, self.clock.now());
-                if st.cache.is_gpu(key) {
+                if st.is_gpu(key) {
                     return;
                 }
-                let Some(t) = next_event(&st, self.store.expert_bytes) else {
-                    panic!("wait_gpu({key:?}) with no queued or in-flight transfer");
-                };
+                if !st.has_transfer(key) {
+                    reissue_demand(&mut st, key, self.clock.now());
+                    continue;
+                }
+                let dev = st.home(key);
+                let t = next_event(&st.devices[dev], self.store.expert_bytes)
+                    .expect("pending transfer implies a next link event");
                 self.clock.advance_to(t);
             }
         } else {
             let mut st = self.inner.state.lock().unwrap();
-            while !st.cache.is_gpu(key) {
+            while !st.is_gpu(key) {
+                if !st.has_transfer(key) {
+                    reissue_demand(&mut st, key, self.clock.now());
+                    self.inner.cv.notify_all();
+                }
                 st = self.inner.cv.wait(st).unwrap();
             }
         }
     }
 
-    /// A transient (uncached) fetch: pays the PCIe time — virtual advance
-    /// or real sleep — and records demand traffic, without touching the
-    /// cache. Returns the simulated duration.
-    pub fn transient_fetch(&self, bytes: usize) -> Duration {
-        let dur = {
+    /// A transient (uncached) fetch on `key`'s home link: pays the PCIe
+    /// time — virtual advance or real sleep — and records demand traffic,
+    /// without touching the cache. Returns the simulated duration.
+    pub fn transient_fetch_for(&self, key: ExpertKey, bytes: usize) -> Duration {
+        let (dev, dur) = {
             let st = self.lock_settled();
-            st.pcie.transfer_duration(bytes)
+            let dev = st.home(key);
+            (dev, st.devices[dev].pcie.transfer_duration(bytes))
         };
         self.clock.sleep(dur);
         let mut st = self.lock_settled();
-        st.pcie.record(bytes, false);
+        st.devices[dev].pcie.record(bytes, false);
+        dur
+    }
+
+    /// Transient fetch on device 0 (single-device call sites).
+    pub fn transient_fetch(&self, bytes: usize) -> Duration {
+        self.transient_fetch_for(ExpertKey::new(0, 0), bytes)
+    }
+
+    /// Charge `hops` peer-link crossings of `bytes` each (the activation
+    /// round trip of dispatching a token to a cross-device substitute):
+    /// advances the clock by the peer time and records the traffic on the
+    /// shared peer interconnect. Returns the total simulated duration.
+    pub fn peer_dispatch(&self, bytes: usize, hops: usize) -> Duration {
+        if hops == 0 {
+            return Duration::ZERO;
+        }
+        let dur = {
+            let st = self.lock_settled();
+            st.peer.transfer_duration(bytes) * hops as u32
+        };
+        self.clock.sleep(dur);
+        let mut st = self.lock_settled();
+        st.peer.record(bytes.saturating_mul(hops), false);
         dur
     }
 
@@ -354,10 +585,12 @@ impl TransferHandle {
         std::mem::take(&mut self.lock_settled().evictions)
     }
 
-    /// Number of queued (not yet started) transfers.
+    /// Number of queued (not yet started) transfers across every link.
     pub fn queue_depth(&self) -> (usize, usize) {
         let st = self.lock_settled();
-        (st.demand_q.len(), st.prefetch_q.len())
+        st.devices
+            .iter()
+            .fold((0, 0), |(d, p), dev| (d + dev.demand_q.len(), p + dev.prefetch_q.len()))
     }
 
     pub fn shutdown(&self) {
@@ -366,7 +599,7 @@ impl TransferHandle {
             st.shutdown = true;
             self.inner.cv.notify_all();
         }
-        if let Some(t) = self.thread.lock().unwrap().take() {
+        for t in self.threads.lock().unwrap().drain(..) {
             let _ = t.join();
         }
     }
@@ -377,6 +610,7 @@ mod tests {
     use super::*;
     use crate::config::ModelConfig;
     use crate::memory::cache::EvictPolicy;
+    use crate::topology::PlacementKind;
 
     fn setup(cap: usize) -> (TransferHandle, SimClock) {
         let cfg = ModelConfig::test_tiny();
@@ -397,7 +631,7 @@ mod tests {
             LoadDecision::StartLoad { .. }
         ));
         h.wait_gpu(k);
-        assert!(h.with_state(|st| st.cache.is_gpu(k)));
+        assert!(h.with_state(|st| st.is_gpu(k)));
         let arr = h.drain_arrivals();
         assert_eq!(arr.len(), 1);
         assert_eq!(arr[0].0, k);
@@ -412,7 +646,8 @@ mod tests {
         h.wait_gpu(ExpertKey::new(0, 0));
         h.wait_gpu(ExpertKey::new(0, 1));
         let (d, p) = h.with_state(|st| {
-            (st.pcie.stats.demand_transfers, st.pcie.stats.prefetch_transfers)
+            let s = st.pcie_stats();
+            (s.demand_transfers, s.prefetch_transfers)
         });
         assert_eq!((d, p), (1, 1));
         h.shutdown();
@@ -564,7 +799,107 @@ mod tests {
         let dur = h.transient_fetch(1 << 20);
         assert!(dur > Duration::ZERO);
         assert_eq!(clock.now() - t0, dur);
-        assert_eq!(h.with_state(|st| st.pcie.stats.demand_transfers), 1);
+        assert_eq!(h.with_state(|st| st.pcie_stats().demand_transfers), 1);
+        h.shutdown();
+    }
+
+    #[test]
+    fn wait_gpu_reissues_lost_transfer() {
+        // Regression: wait_gpu used to panic when the awaited expert had
+        // no queued or in-flight transfer (request/wait racing a
+        // cancellation). It must re-issue at demand priority instead.
+        let (h, _) = setup(4);
+        let busy = ExpertKey::new(0, 0);
+        let k = ExpertKey::new(0, 2);
+        // Occupy the link so the prefetch for `k` stays queued...
+        h.request(busy, TransferPriority::Demand);
+        h.request(k, TransferPriority::Prefetch);
+        // ...then cancel it: the transfer vanishes, the slot returns to Cpu.
+        assert!(h.cancel_prefetch(k));
+        h.wait_gpu(k); // panicked before the fix
+        assert!(h.with_state(|st| st.is_gpu(k)));
+        h.shutdown();
+    }
+
+    fn multi_setup(n_devices: usize) -> (TransferHandle, SimClock, Duration) {
+        let cfg = ModelConfig::test_tiny();
+        let store = Arc::new(WeightStore::synthetic(&cfg, 1));
+        let pcie = PcieSim::new(1e9, 0.0, 1e6); // ~6.144 ms per transfer
+        let dur = pcie.transfer_duration(store.expert_bytes);
+        let devices: Vec<(ExpertCache, PcieSim)> = (0..n_devices)
+            .map(|_| {
+                (
+                    ExpertCache::new(cfg.n_layers, cfg.n_experts, 4, EvictPolicy::Lru),
+                    pcie.clone(),
+                )
+            })
+            .collect();
+        let placement = Placement::build(
+            PlacementKind::LayerStriped,
+            cfg.n_layers,
+            cfg.n_experts,
+            n_devices,
+            None,
+        );
+        let clock = SimClock::virtual_clock();
+        let h = TransferEngine::spawn_multi(
+            devices,
+            PcieSim::new(64e9, 3e-6, 1.0),
+            placement,
+            store,
+            clock.clone(),
+        );
+        (h, clock, dur)
+    }
+
+    #[test]
+    fn per_device_links_transfer_in_parallel() {
+        // Layer 0, experts 0 and 1 live on different striped devices: both
+        // demand loads run concurrently on their own host links, so both
+        // complete after ONE transfer duration (a single shared link would
+        // serialize them to 2x — see virtual_link_serializes_transfers).
+        let (h, clock, dur) = multi_setup(2);
+        let a = ExpertKey::new(0, 0); // device 0
+        let b = ExpertKey::new(0, 1); // device 1
+        assert_eq!(h.with_state(|st| (st.home(a), st.home(b))), (0, 1));
+        h.request(a, TransferPriority::Demand);
+        h.request(b, TransferPriority::Demand);
+        h.wait_gpu(a);
+        h.wait_gpu(b);
+        assert_eq!(clock.now(), dur, "independent links must not serialize");
+        assert!(h.with_state(|st| st.is_gpu(a) && st.is_gpu(b)));
+        // Fleet-wide stats aggregate both links.
+        assert_eq!(h.with_state(|st| st.pcie_stats().demand_transfers), 2);
+        h.shutdown();
+    }
+
+    #[test]
+    fn same_device_transfers_still_serialize() {
+        // Experts 0 and 2 both live on device 0 under 2-way striping.
+        let (h, clock, dur) = multi_setup(2);
+        let a = ExpertKey::new(0, 0);
+        let b = ExpertKey::new(0, 2);
+        assert_eq!(h.with_state(|st| (st.home(a), st.home(b))), (0, 0));
+        h.request(a, TransferPriority::Demand);
+        h.request(b, TransferPriority::Demand);
+        h.wait_gpu(b);
+        assert_eq!(clock.now(), dur * 2, "one link still serializes");
+        h.shutdown();
+    }
+
+    #[test]
+    fn peer_dispatch_costs_time_and_records_traffic() {
+        let (h, clock, _) = multi_setup(2);
+        let t0 = clock.now();
+        let d0 = h.peer_dispatch(4096, 0);
+        assert_eq!(d0, Duration::ZERO, "zero hops are free");
+        let d2 = h.peer_dispatch(4096, 2);
+        assert!(d2 > Duration::ZERO);
+        assert_eq!(clock.now() - t0, d2);
+        let (bytes, transfers) =
+            h.with_state(|st| (st.peer.stats.demand_bytes, st.peer.stats.demand_transfers));
+        assert_eq!(bytes, 8192, "two hops carry the bytes twice");
+        assert_eq!(transfers, 1);
         h.shutdown();
     }
 }

@@ -26,6 +26,7 @@ use crate::prefetch::{OracleNoisy, PreGate, PredictContext, Predictor, PrefetchE
 use crate::profilecollect::ProfileCollector;
 use crate::runtime::{BackendKind, RefStages, StageRunner};
 use crate::stats::Counters;
+use crate::topology::{HopContext, Placement, Topology};
 use crate::util::clock::{ClockMode, SimClock};
 use crate::util::math::argmax;
 use crate::util::par;
@@ -76,6 +77,9 @@ pub struct StepTelemetry {
     pub fetches: u64,
     /// Fetches served outside the cache (all slots pinned).
     pub transient_fetches: u64,
+    /// Peer-link hops paid for cross-device buddy dispatches this step
+    /// (always 0 with `n_devices == 1`).
+    pub peer_hops: u64,
 }
 
 pub struct Engine {
@@ -86,6 +90,11 @@ pub struct Engine {
     store: Arc<WeightStore>,
     transfer: TransferHandle,
     clock: SimClock,
+    /// Expert→device map for the simulated expert-parallel fleet (all
+    /// device 0 when `scfg.n_devices == 1`).
+    placement: Placement,
+    /// Device×device peer hop counts (`crate::topology::Topology`).
+    hop_matrix: Vec<Vec<usize>>,
     buddy_profile: Option<BuddyProfile>,
     /// Empty profile built once at construction for the no-buddy path
     /// (previously rebuilt inside every per-layer `run_moe` call).
@@ -119,15 +128,51 @@ impl Engine {
         log::info!("engine backend: {}, clock: {}", stages.name(), opts.clock.name());
 
         let capacity = scfg.gpu_experts_per_layer(cfg.n_experts).max(1);
-        let mut cache = ExpertCache::new(cfg.n_layers, cfg.n_experts, capacity, opts.evict_policy);
+        let n_dev = scfg.n_devices;
+        // The layer budget is split evenly across the fleet (remainder to
+        // the low device ids); with one device this is the full capacity.
+        // Every device needs >= 1 slot (ExpertCache invariant), so when
+        // capacity < n_devices the fleet's aggregate runtime budget is
+        // inflated to n_devices slots per layer — warn, because that
+        // breaks constant-budget comparisons across device counts.
+        if capacity < n_dev {
+            log::warn!(
+                "per-layer cache budget {capacity} < n_devices {n_dev}: \
+                 every device gets a minimum 1-slot cache, inflating the \
+                 fleet's aggregate budget to {n_dev} experts per layer"
+            );
+        }
+        let per_dev_cap =
+            |d: usize| (capacity / n_dev + usize::from(d < capacity % n_dev)).max(1);
+        let mut caches: Vec<ExpertCache> = (0..n_dev)
+            .map(|d| {
+                ExpertCache::new(cfg.n_layers, cfg.n_experts, per_dev_cap(d), opts.evict_policy)
+            })
+            .collect();
 
         let warm_rank = warm_rank.unwrap_or_else(|| Self::bias_rank(&cfg, &store));
+        let placement =
+            Placement::build(scfg.placement, cfg.n_layers, cfg.n_experts, n_dev, Some(&warm_rank));
+        let topology = Topology::new(n_dev, scfg.topology);
+        // Warm each device with its share of the most popular experts: walk
+        // the rank list, admitting every expert at its home device while
+        // that device has room. With one device this admits exactly the
+        // top-`capacity` experts in rank order, as before.
         for (l, ranked) in warm_rank.iter().enumerate() {
-            for &e in ranked.iter().take(capacity) {
+            let mut admitted = 0usize;
+            for &e in ranked.iter() {
+                if admitted >= capacity {
+                    break;
+                }
                 let key = ExpertKey::new(l, e);
-                cache.admit(key).context("cache warm-up")?;
+                let d = placement.device_of(key);
+                if caches[d].gpu_count(l) >= caches[d].capacity_per_layer() {
+                    continue;
+                }
+                caches[d].admit(key).context("cache warm-up")?;
                 let w = store.expert(key)?;
                 stages.admit_expert(key, &w)?;
+                admitted += 1;
             }
         }
         log::info!(
@@ -136,9 +181,29 @@ impl Engine {
             cfg.n_experts,
             (scfg.cache_rate * 100.0) as u32
         );
+        if n_dev > 1 {
+            log::info!(
+                "expert-parallel fleet: {} devices ({} topology, {} placement)",
+                n_dev,
+                scfg.topology.name(),
+                scfg.placement.name()
+            );
+        }
 
-        let pcie = PcieSim::new(scfg.pcie_bandwidth, scfg.pcie_base_latency, scfg.transfer_bytes_scale);
-        let transfer = TransferEngine::spawn(cache, pcie, store.clone(), clock.clone());
+        let links: Vec<PcieSim> = (0..n_dev)
+            .map(|_| {
+                PcieSim::new(scfg.pcie_bandwidth, scfg.pcie_base_latency, scfg.transfer_bytes_scale)
+            })
+            .collect();
+        let peer = PcieSim::new(scfg.peer_bandwidth, scfg.peer_base_latency, 1.0);
+        let hop_matrix = topology.hop_matrix();
+        let transfer = TransferEngine::spawn_multi(
+            caches.into_iter().zip(links).collect(),
+            peer,
+            placement.clone(),
+            store.clone(),
+            clock.clone(),
+        );
 
         let predictor: Option<Box<dyn Predictor>> = match scfg.prefetch {
             PrefetchKind::None => None,
@@ -183,6 +248,8 @@ impl Engine {
             store,
             transfer,
             clock,
+            placement,
+            hop_matrix,
             buddy_profile,
             fallback_profile,
             predictor,
@@ -242,7 +309,9 @@ impl Engine {
             .map(|l| {
                 let bias = &store.tensor(&format!("L{l}.rbias")).unwrap().data;
                 let mut idx: Vec<usize> = (0..cfg.n_experts).collect();
-                idx.sort_by(|&a, &b| bias[b].partial_cmp(&bias[a]).unwrap().then(a.cmp(&b)));
+                // total_cmp: NaN bias entries rank deterministically
+                // instead of panicking the sort.
+                idx.sort_by(|&a, &b| bias[b].total_cmp(&bias[a]).then(a.cmp(&b)));
                 idx
             })
             .collect()
@@ -465,15 +534,17 @@ impl Engine {
         }
         self.prefetcher.verify(l, &actual_unique);
 
-        // Residency mask + policy application.
+        // Residency mask + policy application. Residency is fleet-wide:
+        // an expert counts as resident when it sits on its home device.
         let residency = self.transfer.with_state(|st| {
             for &e in &actual_unique {
-                st.cache.mark_use(ExpertKey::new(l, e));
+                st.mark_use(ExpertKey::new(l, e));
             }
-            st.cache.residency_mask(l)
+            st.residency_mask(l)
         });
+        let multi_device = self.scfg.n_devices > 1;
         let sub_counters_before = self.counters.get("substitutions");
-        let decisions = if let Some(profile) = self.buddy_profile.as_ref() {
+        let (decisions, sub_events) = if let Some(profile) = self.buddy_profile.as_ref() {
             let mut eng = SubstitutionEngine::new(profile);
             eng.gates = GateParams {
                 tau: self.scfg.tae_tau,
@@ -488,7 +559,14 @@ impl Engine {
             };
             eng.search_h = self.scfg.search_h;
             eng.rho = self.scfg.rho;
-            let (dec, _) = eng.apply(
+            if multi_device {
+                // Real placement-derived hop counts: ψ's κ term goes live.
+                eng.topo = Some(HopContext {
+                    device_of: self.placement.layer_devices(l),
+                    hop_matrix: &self.hop_matrix,
+                });
+            }
+            eng.apply(
                 l,
                 routings,
                 &residency,
@@ -496,8 +574,7 @@ impl Engine {
                 None,
                 &mut self.counters,
                 &mut self.rng,
-            );
-            dec
+            )
         } else {
             // No buddy profile: degrade Buddy policy to OnDemand and use
             // the empty profile built once at engine construction.
@@ -510,7 +587,7 @@ impl Engine {
                 .as_ref()
                 .expect("fallback profile built when no buddy profile is given");
             let eng = SubstitutionEngine::new(dummy_profile);
-            let (dec, _) = eng.apply(
+            eng.apply(
                 l,
                 routings,
                 &residency,
@@ -518,10 +595,33 @@ impl Engine {
                 None,
                 &mut self.counters,
                 &mut self.rng,
-            );
-            dec
+            )
         };
         tel.substitutions += self.counters.get("substitutions") - sub_counters_before;
+
+        // Cross-device substitutions pay the peer interconnect: dispatching
+        // a token to a buddy homed on another device adds unplanned
+        // all-to-all hops (one activation row each way per hop crossed).
+        // Same-device buddies are free — exactly what κ steers toward.
+        if multi_device && !sub_events.is_empty() {
+            let devs = self.placement.layer_devices(l);
+            let mut hop_total = 0usize;
+            let mut crossed = 0u64;
+            for ev in &sub_events {
+                let hop = self.hop_matrix[devs[ev.from]][devs[ev.to]];
+                if hop > 0 {
+                    hop_total += hop;
+                    crossed += 1;
+                }
+            }
+            if hop_total > 0 {
+                let bytes = 2 * self.cfg.d_model * std::mem::size_of::<f32>();
+                self.transfer.peer_dispatch(bytes, hop_total);
+                self.counters.add("cross_device_subs", crossed);
+                self.counters.add("peer_hops", hop_total as u64);
+                tel.peer_hops += hop_total as u64;
+            }
+        }
 
         // Pin every expert we are about to use, then fetch the misses.
         // First-seen order again drives transfer-request order, so dedup
@@ -553,7 +653,7 @@ impl Engine {
         }
         self.transfer.with_state(|st| {
             for &e in &used {
-                st.cache.pin(ExpertKey::new(l, e));
+                st.pin(ExpertKey::new(l, e));
             }
         });
 
@@ -585,7 +685,7 @@ impl Engine {
         let mut transient_weights: BTreeMap<usize, ExpertWeights> = BTreeMap::new();
         for &e in &transient {
             let key = ExpertKey::new(l, e);
-            self.transfer.transient_fetch(self.store.expert_bytes);
+            self.transfer.transient_fetch_for(key, self.store.expert_bytes);
             transient_weights.insert(e, self.store.expert(key)?);
             tel.transient_fetches += 1;
         }
@@ -651,7 +751,7 @@ impl Engine {
 
         self.transfer.with_state(|st| {
             for &e in &used {
-                st.cache.unpin(ExpertKey::new(l, e));
+                st.unpin(ExpertKey::new(l, e));
             }
         });
         Ok(out)

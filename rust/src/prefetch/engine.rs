@@ -138,7 +138,7 @@ mod tests {
     #[test]
     fn resident_experts_not_reissued() {
         let h = handle();
-        h.with_state(|st| st.cache.admit(ExpertKey::new(0, 1)).unwrap());
+        h.with_state(|st| st.admit(ExpertKey::new(0, 1)).unwrap());
         let mut pf = PrefetchEngine::new(h.clone(), 1, 4);
         let mut o = OracleNoisy::new(0.0, 1);
         let actual = vec![vec![1usize]];

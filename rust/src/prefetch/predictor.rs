@@ -43,9 +43,9 @@ impl TopFreq {
             .map(|l| {
                 let acts = &collector.layer(l).activations;
                 let mut idx: Vec<usize> = (0..acts.len()).collect();
-                idx.sort_by(|&a, &b| {
-                    acts[b].partial_cmp(&acts[a]).unwrap().then(a.cmp(&b))
-                });
+                // total_cmp: NaN activations rank deterministically
+                // instead of panicking the sort.
+                idx.sort_by(|&a, &b| acts[b].total_cmp(&acts[a]).then(a.cmp(&b)));
                 idx
             })
             .collect();
@@ -149,7 +149,7 @@ impl Predictor for PreGate {
             }
         }
         let mut ranked: Vec<usize> = (0..e).filter(|&i| mass[i] > 0.0).collect();
-        ranked.sort_by(|&a, &b| mass[b].partial_cmp(&mass[a]).unwrap().then(a.cmp(&b)));
+        ranked.sort_by(|&a, &b| mass[b].total_cmp(&mass[a]).then(a.cmp(&b)));
         ranked.truncate(width);
         ranked
     }

@@ -105,6 +105,7 @@ impl Server {
             self.metrics.stall_seconds.add(tel.stall_seconds);
             self.metrics.counters.add("substitutions", tel.substitutions);
             self.metrics.counters.add("fetches", tel.fetches);
+            self.metrics.counters.add("peer_hops", tel.peer_hops);
             self.metrics.tokens_out += active.len() as u64;
             let now = clock.now();
             for a in active.iter_mut() {
@@ -169,6 +170,7 @@ impl Server {
         self.metrics.stall_seconds.add(tel.stall_seconds);
         self.metrics.counters.add("substitutions", tel.substitutions);
         self.metrics.counters.add("fetches", tel.fetches);
+        self.metrics.counters.add("peer_hops", tel.peer_hops);
         // Prefill complete = first token out.
         let ttft = clock.since(arrived);
         self.metrics.ttft.add(ttft);

@@ -1,0 +1,333 @@
+//! Multi-GPU expert-parallel topology: the simulated device graph and the
+//! expert→device placement map.
+//!
+//! The paper's buddy score ψ carries a topology term `(1 − κ·hop(j))⁺`
+//! (Eq. 3): substituting a missing expert with a buddy that lives on a
+//! *different* GPU adds unplanned all-to-all traffic, one peer-link hop per
+//! edge crossed. This module makes that term real:
+//!
+//! * [`Topology`] — N simulated GPUs plus the host. GPUs are connected by
+//!   a peer interconnect (NVLink-class: fast, low latency) whose shape is a
+//!   [`TopologyKind`] — fully connected (every pair one hop) or a ring
+//!   (hop count = ring distance). Every GPU also has its own host link
+//!   (PCIe-class: the slow path every demand miss pays). Both links live
+//!   on the PR-1 virtual clock via [`crate::memory::PcieSim`] cost models.
+//! * [`Placement`] — the expert→device map. An expert's *home* device is
+//!   where it is cached and where its FFN runs; misses are fetched from
+//!   host over the home device's own serialized link (see
+//!   [`crate::memory::TransferEngine`]).
+//!
+//! ## How hop counts are derived from placement
+//!
+//! For a layer `l`, `Placement` fixes `device_of[e]` for every expert.
+//! When the substitution engine weighs a candidate buddy `j` for a missing
+//! pivot `i`, the hop count fed into ψ is
+//!
+//! ```text
+//! hop(j | i) = Topology::hops(device_of[i], device_of[j])
+//! ```
+//!
+//! i.e. the peer-link distance between the device that *would have* run
+//! the pivot and the device that will run the buddy. A same-device buddy
+//! costs zero hops (the dispatch was already in the all-to-all schedule);
+//! a cross-device buddy pays one peer round trip per hop, which the engine
+//! charges on the virtual clock ([`crate::model::Engine`]'s peer-dispatch
+//! accounting) and which κ penalizes inside ψ so substitution is steered
+//! toward same-device buddies. [`HopContext`] packages exactly this
+//! lookup for `SubstitutionEngine`.
+//!
+//! With `n_devices = 1` every hop count is zero, the peer link is never
+//! touched, and the whole subsystem degenerates byte-identically to the
+//! single-GPU configuration (golden-tested).
+
+use anyhow::{bail, Result};
+
+use crate::weights::ExpertKey;
+
+/// Shape of the inter-GPU peer interconnect.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TopologyKind {
+    /// Every device pair is one hop apart (NVSwitch-style).
+    #[default]
+    FullyConnected,
+    /// Devices on a ring; hop count is the shorter ring distance.
+    Ring,
+}
+
+impl TopologyKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "full" | "fully-connected" => TopologyKind::FullyConnected,
+            "ring" => TopologyKind::Ring,
+            other => bail!("unknown topology '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopologyKind::FullyConnected => "full",
+            TopologyKind::Ring => "ring",
+        }
+    }
+}
+
+/// The device graph: N GPUs on a peer interconnect (plus the implicit
+/// host reachable from every GPU over its own host link).
+#[derive(Debug, Clone)]
+pub struct Topology {
+    n_devices: usize,
+    kind: TopologyKind,
+}
+
+impl Topology {
+    pub fn new(n_devices: usize, kind: TopologyKind) -> Self {
+        assert!(n_devices >= 1, "topology needs >= 1 device");
+        Self { n_devices, kind }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.n_devices
+    }
+
+    pub fn kind(&self) -> TopologyKind {
+        self.kind
+    }
+
+    /// Peer-link hops between two devices (0 on the same device).
+    pub fn hops(&self, a: usize, b: usize) -> usize {
+        debug_assert!(a < self.n_devices && b < self.n_devices);
+        if a == b {
+            return 0;
+        }
+        match self.kind {
+            TopologyKind::FullyConnected => 1,
+            TopologyKind::Ring => {
+                let d = a.abs_diff(b);
+                d.min(self.n_devices - d)
+            }
+        }
+    }
+
+    /// Dense device×device hop matrix (precomputed once per engine).
+    pub fn hop_matrix(&self) -> Vec<Vec<usize>> {
+        (0..self.n_devices)
+            .map(|a| (0..self.n_devices).map(|b| self.hops(a, b)).collect())
+            .collect()
+    }
+}
+
+/// Expert→device placement strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementKind {
+    /// Expert `e` of layer `l` lives on device `(e + l) % n`: experts are
+    /// striped across devices with a per-layer offset so each device holds
+    /// an even, layer-rotated share.
+    #[default]
+    LayerStriped,
+    /// Profile-aware: experts are ranked by profiled popularity per layer
+    /// and dealt round-robin in descending rank, so every device gets an
+    /// equal share of the hot experts (falls back to striping when no
+    /// popularity ranking is available).
+    Popularity,
+}
+
+impl PlacementKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "striped" | "layer-striped" => PlacementKind::LayerStriped,
+            "popularity" => PlacementKind::Popularity,
+            other => bail!("unknown placement '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementKind::LayerStriped => "striped",
+            PlacementKind::Popularity => "popularity",
+        }
+    }
+}
+
+/// The expert→device map: each expert has one *home* device where it is
+/// cached and executed.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    n_layers: usize,
+    n_experts: usize,
+    n_devices: usize,
+    /// [layer * n_experts + expert] -> device.
+    device_of: Vec<usize>,
+}
+
+impl Placement {
+    /// Everything on device 0 — the single-GPU degenerate case.
+    pub fn single(n_layers: usize, n_experts: usize) -> Self {
+        Self {
+            n_layers,
+            n_experts,
+            n_devices: 1,
+            device_of: vec![0; n_layers * n_experts],
+        }
+    }
+
+    /// Build a placement. `popularity_rank` is the per-layer expert list
+    /// in descending popularity (the engine's warm rank); it is required
+    /// for [`PlacementKind::Popularity`] to differ from striping.
+    pub fn build(
+        kind: PlacementKind,
+        n_layers: usize,
+        n_experts: usize,
+        n_devices: usize,
+        popularity_rank: Option<&[Vec<usize>]>,
+    ) -> Self {
+        assert!(n_devices >= 1, "placement needs >= 1 device");
+        let mut device_of = vec![0; n_layers * n_experts];
+        if n_devices > 1 {
+            match (kind, popularity_rank) {
+                (PlacementKind::Popularity, Some(ranked)) => {
+                    for l in 0..n_layers {
+                        for (r, &e) in ranked[l].iter().enumerate() {
+                            device_of[l * n_experts + e] = r % n_devices;
+                        }
+                    }
+                }
+                _ => {
+                    for l in 0..n_layers {
+                        for e in 0..n_experts {
+                            device_of[l * n_experts + e] = (e + l) % n_devices;
+                        }
+                    }
+                }
+            }
+        }
+        Self { n_layers, n_experts, n_devices, device_of }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.n_experts
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.n_devices
+    }
+
+    /// Home device of an expert.
+    pub fn device_of(&self, k: ExpertKey) -> usize {
+        debug_assert!(k.layer < self.n_layers && k.expert < self.n_experts);
+        self.device_of[k.layer * self.n_experts + k.expert]
+    }
+
+    /// One layer's expert→device slice (indexed by expert id) — the form
+    /// [`HopContext`] consumes.
+    pub fn layer_devices(&self, layer: usize) -> &[usize] {
+        &self.device_of[layer * self.n_experts..(layer + 1) * self.n_experts]
+    }
+
+    /// How many of a layer's experts live on `device`.
+    pub fn experts_on(&self, layer: usize, device: usize) -> usize {
+        self.layer_devices(layer).iter().filter(|&&d| d == device).count()
+    }
+}
+
+/// Pivot-relative hop lookup for one layer, fed into the substitution
+/// engine so ψ's κ term sees real placement-derived hop counts (see the
+/// module docs for the derivation).
+#[derive(Debug, Clone, Copy)]
+pub struct HopContext<'a> {
+    /// This layer's expert→device map ([`Placement::layer_devices`]).
+    pub device_of: &'a [usize],
+    /// Device×device hop matrix ([`Topology::hop_matrix`]).
+    pub hop_matrix: &'a [Vec<usize>],
+}
+
+impl HopContext<'_> {
+    /// Peer hops from the missing pivot's home device to the candidate's.
+    pub fn hops(&self, pivot: usize, cand: usize) -> usize {
+        self.hop_matrix[self.device_of[pivot]][self.device_of[cand]]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fully_connected_hops_are_binary() {
+        let t = Topology::new(4, TopologyKind::FullyConnected);
+        assert_eq!(t.hops(2, 2), 0);
+        assert_eq!(t.hops(0, 3), 1);
+        assert_eq!(t.hop_matrix()[1][2], 1);
+    }
+
+    #[test]
+    fn ring_hops_take_shorter_arc() {
+        let t = Topology::new(4, TopologyKind::Ring);
+        assert_eq!(t.hops(0, 1), 1);
+        assert_eq!(t.hops(0, 2), 2);
+        assert_eq!(t.hops(0, 3), 1, "wraps the short way");
+        let t2 = Topology::new(2, TopologyKind::Ring);
+        assert_eq!(t2.hops(0, 1), 1);
+    }
+
+    #[test]
+    fn single_placement_is_all_device_zero() {
+        let p = Placement::single(2, 8);
+        for l in 0..2 {
+            for e in 0..8 {
+                assert_eq!(p.device_of(ExpertKey::new(l, e)), 0);
+            }
+        }
+        assert_eq!(p.experts_on(0, 0), 8);
+    }
+
+    #[test]
+    fn striped_placement_is_even_and_layer_rotated() {
+        let p = Placement::build(PlacementKind::LayerStriped, 2, 8, 2, None);
+        assert_eq!(p.device_of(ExpertKey::new(0, 0)), 0);
+        assert_eq!(p.device_of(ExpertKey::new(0, 1)), 1);
+        // Layer offset rotates the stripe.
+        assert_eq!(p.device_of(ExpertKey::new(1, 0)), 1);
+        for l in 0..2 {
+            assert_eq!(p.experts_on(l, 0), 4);
+            assert_eq!(p.experts_on(l, 1), 4);
+        }
+    }
+
+    #[test]
+    fn popularity_placement_deals_hot_experts_round_robin() {
+        // Popularity rank for one layer: 5 hottest, then 2, 7, 0...
+        let ranked = vec![vec![5, 2, 7, 0, 1, 3, 4, 6]];
+        let p = Placement::build(PlacementKind::Popularity, 1, 8, 2, Some(&ranked));
+        assert_eq!(p.device_of(ExpertKey::new(0, 5)), 0, "hottest on device 0");
+        assert_eq!(p.device_of(ExpertKey::new(0, 2)), 1, "2nd hottest on device 1");
+        assert_eq!(p.device_of(ExpertKey::new(0, 7)), 0);
+        assert_eq!(p.experts_on(0, 0), 4);
+        assert_eq!(p.experts_on(0, 1), 4);
+    }
+
+    #[test]
+    fn hop_context_is_pivot_relative() {
+        let device_of = [0usize, 1, 0];
+        let m = Topology::new(2, TopologyKind::FullyConnected).hop_matrix();
+        let ctx = HopContext { device_of: &device_of, hop_matrix: &m };
+        assert_eq!(ctx.hops(0, 2), 0, "same device");
+        assert_eq!(ctx.hops(0, 1), 1, "cross device");
+        assert_eq!(ctx.hops(1, 0), 1);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for k in ["full", "ring"] {
+            assert_eq!(TopologyKind::parse(k).unwrap().name(), k);
+        }
+        for k in ["striped", "popularity"] {
+            assert_eq!(PlacementKind::parse(k).unwrap().name(), k);
+        }
+        assert!(TopologyKind::parse("torus").is_err());
+        assert!(PlacementKind::parse("bogus").is_err());
+    }
+}

@@ -303,6 +303,119 @@ pub fn cells_json(cells: &[LoadCell]) -> Json {
     )
 }
 
+// ---------------------------------------------------------------------
+// Topology sweep: tail latency vs. expert-parallel device count
+// ---------------------------------------------------------------------
+
+/// The (device count × miss policy) grid for the expert-parallel fleet:
+/// every cell serves the same Poisson workload at the same offered load,
+/// varying only `ServingConfig::n_devices` (and, for multi-device cells,
+/// turning κ on so ψ's topology term is live).
+#[derive(Debug, Clone)]
+pub struct TopologySweep {
+    /// Fleet sizes to compare (the acceptance grid is `[1, 2, 4]`).
+    pub device_counts: Vec<usize>,
+    /// `ServingConfig::preset` names.
+    pub presets: Vec<String>,
+    /// Open-loop Poisson offered load shared by every cell.
+    pub load_rps: f64,
+    /// ψ hop penalty κ applied when `n_devices > 1` (0 keeps ψ
+    /// topology-blind; single-device cells always keep the preset's κ so
+    /// they stay byte-identical to the non-topology sweeps).
+    pub kappa: f64,
+    pub settings: LoadSettings,
+}
+
+/// One topology-sweep row: a [`LoadCell`] measured at a fleet size.
+#[derive(Debug, Clone)]
+pub struct TopologyCell {
+    pub n_devices: usize,
+    pub cell: LoadCell,
+}
+
+pub fn run_topology_sweep(
+    cfg: &ModelConfig,
+    store: Arc<WeightStore>,
+    collector: &ProfileCollector,
+    warm_rank: &[Vec<usize>],
+    spec: &TopologySweep,
+) -> Result<Vec<TopologyCell>> {
+    let mut rows = Vec::new();
+    for &n in &spec.device_counts {
+        for preset in &spec.presets {
+            let mut scfg = ServingConfig::default().preset(preset)?;
+            scfg.cache_rate = spec.settings.cache_rate;
+            scfg.seed = spec.settings.seed;
+            scfg.n_devices = n;
+            if n > 1 {
+                scfg.kappa = spec.kappa;
+            }
+            let process = ProcessKind::Poisson.build(cfg, &spec.settings, spec.load_rps);
+            let cell = run_load_cell(
+                cfg,
+                store.clone(),
+                collector,
+                warm_rank,
+                scfg,
+                preset,
+                spec.load_rps,
+                process,
+            )?;
+            rows.push(TopologyCell { n_devices: n, cell });
+        }
+    }
+    Ok(rows)
+}
+
+/// Markdown table over the topology rows (deterministic formatting; the
+/// determinism test asserts byte-identity per seed).
+pub fn topology_report_markdown(rows: &[TopologyCell]) -> String {
+    let mut out = String::from(
+        "| devices | policy | done | tok/s | ttft p50/p95/p99 (ms) | \
+         tbt p99 (ms) | e2e p99 (ms) |\n\
+         |---|---|---|---|---|---|---|\n",
+    );
+    for r in rows {
+        let c = &r.cell;
+        out.push_str(&format!(
+            "| {} | {} | {} | {:.2} | {:.2}/{:.2}/{:.2} | {:.2} | {:.2} |\n",
+            r.n_devices,
+            c.policy,
+            c.requests_done,
+            c.tok_s,
+            c.ttft.p(50.0) * 1e3,
+            c.ttft.p(95.0) * 1e3,
+            c.ttft.p(99.0) * 1e3,
+            c.tbt.p(99.0) * 1e3,
+            c.e2e.p(99.0) * 1e3,
+        ));
+    }
+    out
+}
+
+/// Machine-readable topology sweep (the `BENCH_topology.json` payload):
+/// per-device-count tail-latency rows.
+pub fn topology_cells_json(rows: &[TopologyCell]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                obj(vec![
+                    ("n_devices", num(r.n_devices as f64)),
+                    ("policy", s(&r.cell.policy)),
+                    ("offered_rps", num(r.cell.offered_rps)),
+                    ("requests_done", num(r.cell.requests_done as f64)),
+                    ("tokens_out", num(r.cell.tokens_out as f64)),
+                    ("wall_s", num(r.cell.wall_s)),
+                    ("tok_s", num(r.cell.tok_s)),
+                    ("ttft_s", summary_json(&r.cell.ttft)),
+                    ("tbt_s", summary_json(&r.cell.tbt)),
+                    ("e2e_s", summary_json(&r.cell.e2e)),
+                ])
+            })
+            .collect(),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -323,5 +436,13 @@ mod tests {
         let md = report_markdown(&[]);
         assert!(md.starts_with("| process | rps | policy |"));
         assert_eq!(md.lines().count(), 2);
+    }
+
+    #[test]
+    fn topology_report_header_is_stable() {
+        let md = topology_report_markdown(&[]);
+        assert!(md.starts_with("| devices | policy |"));
+        assert_eq!(md.lines().count(), 2);
+        assert_eq!(topology_cells_json(&[]).to_string(), "[]");
     }
 }

@@ -18,10 +18,13 @@
 //!   requests from as the clock reaches their timestamps. This is what
 //!   lets the virtual batching window close early on a full batch instead
 //!   of assuming no request can land mid-window.
-//! * [`load`] — the sweep runner: (arrival process × offered load × miss
-//!   policy) grid, each cell recording TTFT / queue delay / TBT / e2e
-//!   latency / queue depth percentiles. Rendered by
-//!   `examples/sweep_load.rs` into `BENCH_load.json`.
+//! * [`load`] — the sweep runners: the (arrival process × offered load ×
+//!   miss policy) grid, each cell recording TTFT / queue delay / TBT / e2e
+//!   latency / queue depth percentiles (rendered by
+//!   `examples/sweep_load.rs` into `BENCH_load.json`), and the topology
+//!   sweep over (device count × miss policy) for the expert-parallel fleet
+//!   (rendered by `examples/sweep_topology.rs` into
+//!   `BENCH_topology.json`).
 
 pub mod arrivals;
 pub mod events;
@@ -33,6 +36,7 @@ pub use arrivals::{
 };
 pub use events::EventQueue;
 pub use load::{
-    cells_json, report_markdown, run_load_cell, run_sweep, LoadCell, LoadSettings, ProcessKind,
-    SweepSpec,
+    cells_json, report_markdown, run_load_cell, run_sweep, run_topology_sweep,
+    topology_cells_json, topology_report_markdown, LoadCell, LoadSettings, ProcessKind, SweepSpec,
+    TopologyCell, TopologySweep,
 };

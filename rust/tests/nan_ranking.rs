@@ -1,0 +1,59 @@
+//! Regression tests for NaN-poisoned statistics: every ranking sort used
+//! to call `partial_cmp(..).unwrap()` (or fall back to `Equal`, breaking
+//! sort transitivity) and would panic — or misbehave — on a NaN
+//! activation/bias entry. With `total_cmp` a NaN ranks deterministically
+//! (positive NaN above every number in the descending sorts) and non-NaN
+//! orderings are unchanged, so the golden sweeps stay byte-identical.
+
+use buddymoe::buddy::BuddyProfile;
+use buddymoe::eval::warm_rank_from_profile;
+use buddymoe::prefetch::{PredictContext, Predictor, TopFreq};
+use buddymoe::profilecollect::ProfileCollector;
+
+/// A collector whose first recorded token is weighted NaN (via the
+/// warm-up discount), poisoning the activation counts and co-activation
+/// matrices of experts 0 and 1. Experts 2 and 3 stay finite.
+fn nan_collector() -> ProfileCollector {
+    let mut pc = ProfileCollector::new(1, 4).with_warmup(1, f64::NAN);
+    pc.record(0, &[0, 1], &[0.5, 0.5]).unwrap(); // NaN-weighted token
+    pc.record(0, &[2, 3], &[0.6, 0.4]).unwrap();
+    pc.record(0, &[2, 3], &[0.6, 0.4]).unwrap();
+    pc
+}
+
+#[test]
+fn warm_rank_survives_nan_activations() {
+    // Panicked before the fix: `partial_cmp(NaN).unwrap()` in
+    // warm_rank_from_profile.
+    let rank = warm_rank_from_profile(&nan_collector());
+    assert_eq!(rank[0].len(), 4);
+    // Deterministic total order: +NaN sorts above every number in the
+    // descending total_cmp order, ties broken by expert index; the finite
+    // pair (2, 3) keeps its count-then-index order.
+    assert_eq!(rank[0], vec![0, 1, 2, 3]);
+}
+
+#[test]
+fn topfreq_survives_nan_activations() {
+    // Same sort inside the TopFreq predictor — also panicked before.
+    let mut tf = TopFreq::from_profile(&nan_collector());
+    let ctx = PredictContext { hidden: None, actual: None };
+    let pred = tf.predict(0, 3, &ctx);
+    assert_eq!(pred.len(), 3);
+    assert!(pred.iter().all(|&e| e < 4));
+}
+
+#[test]
+fn buddy_lists_survive_nan_co_activation() {
+    // The buddy-list sort used `partial_cmp(..).unwrap_or(Equal)`: no
+    // panic, but NaN-as-Equal is non-transitive and the resulting order
+    // was comparator-dependent. total_cmp gives a deterministic total
+    // order; the lists must still build and stay non-empty.
+    let pc = nan_collector();
+    let a = BuddyProfile::build(&pc, &[0.9], 4, 1e-3, true).unwrap();
+    let b = BuddyProfile::build(&pc, &[0.9], 4, 1e-3, true).unwrap();
+    for i in 0..4 {
+        assert!(!a.list(0, i).is_empty(), "pivot {i} list empty");
+        assert_eq!(a.list(0, i), b.list(0, i), "pivot {i} order not deterministic");
+    }
+}

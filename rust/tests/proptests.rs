@@ -266,6 +266,73 @@ fn prop_pinned_experts_never_evicted() {
 }
 
 #[test]
+fn prop_victim_selection_respects_pins() {
+    // Satellite contract: across every eviction policy, the victim chosen
+    // for a full layer is always an unpinned GPU-resident slot, and NoRoom
+    // is reported exactly when every resident slot is pinned.
+    forall(
+        PropConfig { cases: 150, seed: 26 },
+        |rng| {
+            let policy = match rng.below(3) {
+                0 => EvictPolicy::Lru,
+                1 => EvictPolicy::Lfu,
+                _ => EvictPolicy::FreqLayer,
+            };
+            let cap = rng.range(1, 5);
+            let layer = rng.below(2);
+            let uses: Vec<usize> = (0..30).map(|_| rng.below(8)).collect();
+            let pin_mask: Vec<bool> = (0..8).map(|_| rng.bool(0.4)).collect();
+            (policy, cap, layer, uses, pin_mask)
+        },
+        |(policy, cap, layer, uses, pin_mask)| {
+            let mut cache = ExpertCache::new(2, 8, *cap, *policy);
+            // Fill the layer to capacity with experts 0..cap.
+            for e in 0..*cap {
+                cache
+                    .admit(ExpertKey::new(*layer, e))
+                    .map_err(|err| format!("admit {e}: {err}"))?;
+            }
+            // Random recency/frequency history for the policy to rank.
+            for &u in uses {
+                if u < *cap {
+                    cache.mark_use(ExpertKey::new(*layer, u));
+                }
+            }
+            let pinned: Vec<usize> = (0..*cap).filter(|&e| pin_mask[e]).collect();
+            for &e in &pinned {
+                cache.pin(ExpertKey::new(*layer, e));
+            }
+            // Expert 7 is never resident (cap <= 4): the full layer must
+            // either evict a legal victim or report NoRoom.
+            match cache.request_load(ExpertKey::new(*layer, 7)) {
+                LoadDecision::StartLoad { evicted } => {
+                    let v = evicted.ok_or("full layer must evict to start a load")?;
+                    if v.layer != *layer {
+                        return Err(format!("victim from layer {}", v.layer));
+                    }
+                    if v.expert >= *cap {
+                        return Err(format!("victim {} was not GPU-resident", v.expert));
+                    }
+                    if pinned.contains(&v.expert) {
+                        return Err(format!("evicted pinned expert {}", v.expert));
+                    }
+                    if pinned.len() == *cap {
+                        return Err("expected NoRoom: every resident slot is pinned".into());
+                    }
+                }
+                LoadDecision::NoRoom => {
+                    if pinned.len() != *cap {
+                        return Err("NoRoom despite an unpinned resident victim".into());
+                    }
+                }
+                other => return Err(format!("unexpected decision {other:?}")),
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_load_state_machine_legality() {
     // Random op sequences against a shadow model: request_load /
     // complete_load / abort_load transitions must match the documented

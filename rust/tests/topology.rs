@@ -1,0 +1,129 @@
+//! Multi-device expert-parallel integration tests: the fleet serves
+//! end-to-end on the virtual clock, warm-up respects per-device budgets,
+//! fleet-wide residency is the union of per-device residency, and runs
+//! are deterministic per seed. (The ψ/κ same-device-preference contract
+//! is unit-tested next to the substitution engine; the single-device
+//! degenerate case is covered by the unchanged golden tests.)
+
+use std::sync::Arc;
+
+use buddymoe::config::{ModelConfig, ServingConfig};
+use buddymoe::eval::{
+    build_requests, engine_with_config, profile_model, warm_rank_from_profile, TableSettings,
+};
+use buddymoe::model::EngineOptions;
+use buddymoe::server::Server;
+use buddymoe::topology::PlacementKind;
+use buddymoe::util::clock::ClockMode;
+use buddymoe::weights::WeightStore;
+
+fn setup() -> (ModelConfig, Arc<WeightStore>) {
+    let cfg = ModelConfig::synthetic_small();
+    let store = Arc::new(WeightStore::synthetic_families(&cfg, 2024));
+    (cfg, store)
+}
+
+fn fleet_scfg(n_devices: usize, placement: PlacementKind) -> ServingConfig {
+    let mut scfg = ServingConfig::default().preset("buddy-rho3").unwrap();
+    scfg.cache_rate = 0.5;
+    scfg.n_devices = n_devices;
+    scfg.placement = placement;
+    scfg.kappa = 0.25; // κ live: ψ sees real hop counts
+    scfg
+}
+
+fn serve(
+    cfg: &ModelConfig,
+    store: Arc<WeightStore>,
+    scfg: ServingConfig,
+) -> (Server, usize) {
+    let pc = profile_model(cfg, store.clone(), 8, 555).unwrap();
+    let warm = warm_rank_from_profile(&pc);
+    let opts = EngineOptions { clock: ClockMode::Virtual, ..Default::default() };
+    let engine = engine_with_config(cfg, store, &pc, &warm, scfg, opts).unwrap();
+    let mut server = Server::new(engine);
+    let settings = TableSettings {
+        cache_rate: 0.5,
+        n_easy: 3,
+        n_hard: 3,
+        max_new: 4,
+        seed: 42,
+        clock: ClockMode::Virtual,
+    };
+    let reqs = build_requests(cfg, &settings);
+    let n = reqs.len();
+    let responses = server.run_offline(reqs).unwrap();
+    assert_eq!(responses.len(), n, "every request must complete");
+    (server, n)
+}
+
+#[test]
+fn two_device_fleet_serves_end_to_end() {
+    let (cfg, store) = setup();
+    let (server, _) = serve(&cfg, store, fleet_scfg(2, PlacementKind::LayerStriped));
+
+    server.engine.transfer_handle().with_state(|st| {
+        assert_eq!(st.n_devices(), 2);
+        for l in 0..cfg.n_layers {
+            // Warm-up and serving never oversubscribe a device's budget.
+            for (d, dev) in st.devices.iter().enumerate() {
+                assert!(
+                    dev.cache.gpu_count(l) <= dev.cache.capacity_per_layer(),
+                    "device {d} layer {l} over budget"
+                );
+            }
+            // Fleet-wide residency is the union of per-device residency.
+            let mask = st.residency_mask(l);
+            let resident = mask.iter().filter(|&&m| m).count();
+            let per_device: usize = st.devices.iter().map(|dev| dev.cache.gpu_count(l)).sum();
+            assert_eq!(resident, per_device, "layer {l} mask/union mismatch");
+        }
+        // Host traffic happened somewhere, and the fleet aggregate equals
+        // the per-device sum.
+        let total = st.pcie_stats();
+        let summed: u64 = st.devices.iter().map(|d| d.pcie.stats.total_transfers()).sum();
+        assert_eq!(total.total_transfers(), summed);
+        assert!(total.total_transfers() > 0, "cache_rate 0.5 must miss or prefetch");
+    });
+    server.engine.shutdown();
+}
+
+#[test]
+fn four_device_popularity_fleet_serves_end_to_end() {
+    let (cfg, store) = setup();
+    let (server, _) = serve(&cfg, store, fleet_scfg(4, PlacementKind::Popularity));
+    server.engine.transfer_handle().with_state(|st| {
+        assert_eq!(st.n_devices(), 4);
+        // Popularity placement deals every layer's experts evenly.
+        for l in 0..cfg.n_layers {
+            for d in 0..4 {
+                assert_eq!(
+                    st.placement.experts_on(l, d),
+                    cfg.n_experts / 4,
+                    "layer {l} device {d} share"
+                );
+            }
+        }
+    });
+    server.engine.shutdown();
+}
+
+#[test]
+fn fleet_runs_are_deterministic_per_seed() {
+    let (cfg, store) = setup();
+    let run = |store: Arc<WeightStore>| {
+        let (server, _) = serve(&cfg, store, fleet_scfg(2, PlacementKind::LayerStriped));
+        let out = (
+            server.engine.counters.get("substitutions"),
+            server.engine.counters.get("fetches"),
+            server.engine.counters.get("cross_device_subs"),
+            server.engine.counters.get("peer_hops"),
+            server.engine.clock().now(),
+        );
+        server.engine.shutdown();
+        out
+    };
+    let a = run(store.clone());
+    let b = run(store);
+    assert_eq!(a, b, "same seed must reproduce the fleet timeline exactly");
+}

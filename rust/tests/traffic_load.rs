@@ -11,8 +11,10 @@ use buddymoe::config::{ModelConfig, ServingConfig};
 use buddymoe::eval::{profile_model, warm_rank_from_profile, Domain};
 use buddymoe::testing::{forall, PropConfig};
 use buddymoe::traffic::{
-    cells_json, report_markdown, run_load_cell, run_sweep, ArrivalProcess, ClosedLoopProcess,
-    LoadSettings, PoissonProcess, ProcessKind, PromptSource, SweepSpec, TraceReplay,
+    cells_json, report_markdown, run_load_cell, run_sweep, run_topology_sweep,
+    topology_cells_json, topology_report_markdown, ArrivalProcess, ClosedLoopProcess,
+    LoadSettings, PoissonProcess, ProcessKind, PromptSource, SweepSpec, TopologySweep,
+    TraceReplay,
 };
 use buddymoe::weights::WeightStore;
 
@@ -267,4 +269,42 @@ fn load_sweep_report_is_byte_identical_per_seed() {
         "same seed + same arrival process must reproduce the report byte-for-byte"
     );
     assert_eq!(cells_json(&a).to_string(), cells_json(&b).to_string());
+}
+
+#[test]
+fn topology_sweep_rows_complete_and_byte_identical_per_seed() {
+    // The BENCH_topology.json contract: per-device-count tail-latency rows
+    // that serve every request and reproduce byte-for-byte per seed.
+    let (cfg, store) = setup();
+    let pc = profile_model(&cfg, store.clone(), 8, 7777).unwrap();
+    let warm = warm_rank_from_profile(&pc);
+    let spec = TopologySweep {
+        device_counts: vec![1, 2],
+        presets: vec!["original".into(), "buddy-rho3".into()],
+        load_rps: 8.0,
+        kappa: 0.25,
+        settings: LoadSettings {
+            n_requests: 6,
+            max_new: 4,
+            cache_rate: 0.5,
+            domain: Domain::Mixed,
+            seed: 42,
+        },
+    };
+    let a = run_topology_sweep(&cfg, store.clone(), &pc, &warm, &spec).unwrap();
+    let b = run_topology_sweep(&cfg, store, &pc, &warm, &spec).unwrap();
+    assert_eq!(a.len(), 4, "2 device counts x 2 policies");
+    for r in &a {
+        assert_eq!(
+            r.cell.requests_done, 6,
+            "{} devices / {}: all requests served",
+            r.n_devices, r.cell.policy
+        );
+        assert!(r.cell.tok_s > 0.0);
+    }
+    assert_eq!(topology_report_markdown(&a), topology_report_markdown(&b));
+    assert_eq!(
+        topology_cells_json(&a).to_string(),
+        topology_cells_json(&b).to_string()
+    );
 }
