@@ -140,6 +140,7 @@ fn main() {
     let mut json = BTreeMap::new();
     kernel_bench(iters, &mut json);
     decode_step_bench(&mut json);
+    long_context_bench(&mut json);
 
     let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_hotpath.json");
     std::fs::write(&path, Json::Obj(json).to_string() + "\n").expect("write BENCH_hotpath.json");
@@ -309,6 +310,105 @@ fn decode_step_bench(json: &mut BTreeMap<String, Json>) {
     }
 }
 
+/// Long-context decode steps (PR 5): sequences filled near `max_seq`, the
+/// regime where the killed per-layer `[bb, s, d]` KV assembly dominated
+/// the step. Emits view-path rows plus the measured copy-path cost — the
+/// view step time plus the per-layer materialization the seed engine
+/// performed every step (`runtime::materialize_kv` reproduces its exact
+/// copy volume) — into `BENCH_hotpath.json`. CI fails if the view rows
+/// are missing from the artifact.
+fn long_context_bench(json: &mut BTreeMap<String, Json>) {
+    use buddymoe::runtime::{materialize_kv, KvSlices};
+    use buddymoe::util::tensor::Tensor;
+
+    let mut cfg = ModelConfig::synthetic_small();
+    cfg.name = "bench-longctx".into();
+    cfg.vocab_size = 512;
+    cfg.d_model = 64;
+    cfg.n_heads = 4;
+    cfg.head_dim = 16;
+    cfg.n_layers = 2;
+    cfg.n_experts = 8;
+    cfg.top_k = 2;
+    cfg.d_ff = 128;
+    cfg.max_seq = 512;
+    cfg.token_buckets = vec![1, 2, 4, 8, 16, 32, 64, 128, 256, 512];
+    cfg.batch_buckets = vec![1, 2, 4, 8];
+    cfg.family_size = 4;
+    let store = Arc::new(WeightStore::synthetic_families(&cfg, 77));
+    let warmup = 2usize;
+    let iters = if bench_support::fast_mode() { 8 } else { 30 };
+
+    println!(
+        "\n# Long-context decode step (S={}, d={}, L={}): view vs copy path\n",
+        cfg.max_seq, cfg.d_model, cfg.n_layers
+    );
+    println!("| batch | ctx | view mean | kv assembly (seed copy) | copy-path mean | speedup |");
+    println!("|---|---|---|---|---|---|");
+
+    for &batch in &[1usize, 4] {
+        let scfg = ServingConfig {
+            cache_rate: 1.0,
+            miss_policy: MissPolicy::OnDemand,
+            prefetch: PrefetchKind::None,
+            ..Default::default()
+        };
+        let opts = EngineOptions {
+            clock: ClockMode::Virtual,
+            backend: BackendKind::Reference,
+            ..Default::default()
+        };
+        let mut engine = Engine::new(cfg.clone(), scfg, store.clone(), None, None, opts).unwrap();
+        // Fill the context near max_seq, leaving exactly enough headroom
+        // for the measured steps.
+        let budget = warmup + iters;
+        let plen = cfg.max_seq - budget - 1;
+        let mut seqs: Vec<_> = (0..batch)
+            .map(|i| {
+                let prompt: Vec<i32> =
+                    (0..plen).map(|t| ((t * 7 + i * 13) % cfg.vocab_size) as i32).collect();
+                engine.new_sequence(prompt, budget)
+            })
+            .collect();
+        for sq in seqs.iter_mut() {
+            engine.prefill(sq).unwrap();
+        }
+        let (view_mean, view_p95) = bench_support::time_it(warmup, iters, || {
+            let mut refs: Vec<&mut _> = seqs.iter_mut().collect();
+            engine.decode_step(&mut refs).unwrap();
+        });
+        // The copy the view killed: per layer, assemble contiguous
+        // [bb, s, d] K and V from the same sequences (the seed's exact
+        // per-step copy volume and layout).
+        let bb = cfg.batch_bucket_for(batch).unwrap();
+        let (assembly_mean, _) = bench_support::time_it(2, iters, || {
+            for l in 0..cfg.n_layers {
+                let kr: Vec<&Tensor> = seqs.iter().map(|sq| &sq.kv_k[l]).collect();
+                let vr: Vec<&Tensor> = seqs.iter().map(|sq| &sq.kv_v[l]).collect();
+                let kv = KvSlices { k: &kr, v: &vr };
+                let _ = materialize_kv(&kv, bb, cfg.max_seq, cfg.d_model).unwrap();
+            }
+        });
+        let copy_mean = view_mean + assembly_mean;
+        let speedup = copy_mean / view_mean.max(1e-12);
+        println!(
+            "| {batch} | {plen} | {:.3} ms | {:.3} ms | {:.3} ms | {speedup:.2}x |",
+            view_mean * 1e3,
+            assembly_mean * 1e3,
+            copy_mean * 1e3
+        );
+        json.insert(format!("decode_step_long_view_mean_s_b{batch}"), num(view_mean));
+        json.insert(format!("decode_step_long_view_p95_s_b{batch}"), num(view_p95));
+        json.insert(format!("decode_step_long_kv_assembly_mean_s_b{batch}"), num(assembly_mean));
+        json.insert(format!("decode_step_long_copy_mean_s_b{batch}"), num(copy_mean));
+        json.insert(format!("speedup_long_view_vs_copy_b{batch}"), num(speedup));
+        engine.shutdown();
+    }
+    json.insert("long_ctx_seq".into(), num(cfg.max_seq as f64));
+    json.insert("long_ctx_d_model".into(), num(cfg.d_model as f64));
+    json.insert("long_ctx_n_layers".into(), num(cfg.n_layers as f64));
+}
+
 #[cfg(feature = "pjrt")]
 fn expert_ffn_bench(
     cfg: &buddymoe::config::ModelConfig,
@@ -350,7 +450,7 @@ fn expert_ffn_bench(
     iters: usize,
 ) {
     use buddymoe::runtime::{RefStages, StageRunner};
-    use buddymoe::util::tensor::Tensor;
+    use buddymoe::util::tensor::{Tensor, TensorView};
     use buddymoe::weights::ExpertKey;
 
     let mut stages = RefStages::new(cfg.clone(), store.clone());
@@ -362,8 +462,9 @@ fn expert_ffn_bench(
         (0..8 * cfg.d_model).map(|i| ((i % 13) as f32) / 13.0 - 0.5).collect(),
     )
     .unwrap();
+    let hv = TensorView::from_tensor(&h);
     let (m, p) = bench_support::time_it(20, iters.min(500), || {
-        let _ = stages.expert_resident(8, key, &h).unwrap();
+        let _ = stages.expert_resident(8, key, &hv).unwrap();
     });
     println!(
         "| expert FFN via reference backend (T=8) | {:.2} us | {:.2} us |",

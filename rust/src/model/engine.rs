@@ -21,17 +21,18 @@ use crate::buddy::{BuddyProfile, GateParams, PsiParams, SlotDecision, Substituti
 use crate::config::{MissPolicy, ModelConfig, PrefetchKind, ServingConfig};
 use crate::memory::{EvictPolicy, ExpertCache, LoadDecision, PcieSim, TransferEngine, TransferHandle, TransferPriority};
 use crate::model::route::routings_from_probs;
-use crate::model::seq::Sequence;
+use crate::model::seq::{KvBatchView, Sequence};
 use crate::prefetch::{OracleNoisy, PreGate, PredictContext, Predictor, PrefetchEngine, TopFreq};
 use crate::profilecollect::ProfileCollector;
 use crate::runtime::{BackendKind, RefStages, StageRunner};
 use crate::stats::Counters;
 use crate::topology::{HopContext, Placement, Topology};
+use crate::util::arena::Arena;
 use crate::util::clock::{ClockMode, SimClock};
 use crate::util::math::argmax;
 use crate::util::par;
 use crate::util::rng::Rng;
-use crate::util::tensor::Tensor;
+use crate::util::tensor::{Tensor, TensorView};
 use crate::weights::{ExpertKey, ExpertWeights, WeightStore};
 
 /// Engine construction options orthogonal to the serving config.
@@ -82,6 +83,16 @@ pub struct StepTelemetry {
     pub peer_hops: u64,
 }
 
+/// Pooled decode-step staging buffers (see [`Engine::decode_step`]):
+/// reused across steps so a steady-state step allocates nothing for its
+/// token ids, position masks, or lm-head input.
+#[derive(Default)]
+struct StepScratch {
+    toks: Vec<i32>,
+    pos_mask: Tensor,
+    xb: Tensor,
+}
+
 pub struct Engine {
     pub cfg: ModelConfig,
     pub scfg: ServingConfig,
@@ -105,6 +116,10 @@ pub struct Engine {
     pub profile_out: Option<ProfileCollector>,
     rng: Rng,
     next_seq_id: u64,
+    /// Pooled per-step staging (decode hot path).
+    step_scratch: StepScratch,
+    /// Pooled per-expert-group gather+pad staging for `run_moe`.
+    arena: Arena,
 }
 
 impl Engine {
@@ -257,6 +272,8 @@ impl Engine {
             counters: Counters::new(),
             profile_out,
             next_seq_id: 0,
+            step_scratch: StepScratch::default(),
+            arena: Arena::new(),
         })
     }
 
@@ -410,70 +427,29 @@ impl Engine {
     // ------------------------------------------------------------------
 
     /// One decode step for a batch of prefilled sequences.
+    ///
+    /// Zero-copy KV contract (PR 5): each layer's attention reads every
+    /// sequence's `[max_seq, d]` cache **in place** through a
+    /// [`KvBatchView`] — the seed's per-layer `[bb, s, d]` assembly
+    /// (2 × bb × s × d f32 memcpy + two fresh tensors, per layer, per
+    /// token) is gone. Step staging (`toks`/`pos_mask`/`xb`) comes from
+    /// pooled scratch and the embed output is reshaped in place into the
+    /// batch-bucket activation, so a steady-state step performs zero KV
+    /// copies and no fresh staging allocations on the reference backend
+    /// (asserted in `tests/zero_copy_decode.rs`).
     pub fn decode_step(&mut self, seqs: &mut [&mut Sequence]) -> Result<StepTelemetry> {
         let b = seqs.len();
         anyhow::ensure!(b > 0, "empty batch");
-        let bb = self
-            .cfg
-            .batch_bucket_for(b)
-            .context("batch larger than any bucket")?;
-        let d = self.cfg.d_model;
-        let s = self.cfg.max_seq;
         let mut tel = StepTelemetry::default();
+        // Take the scratch out of self so its borrows can't conflict with
+        // the `&mut self` stage calls; restored on *every* exit of the
+        // stage pipeline, so a failed step doesn't drop the pooled
+        // buffers and silently re-allocate them forever after.
+        let mut scratch = std::mem::take(&mut self.step_scratch);
+        let logits = self.decode_step_stages(seqs, &mut scratch, &mut tel);
+        self.step_scratch = scratch;
+        let logits = logits?;
 
-        // Embed current tokens (token bucket >= b).
-        let tb = self.cfg.token_bucket_for(b).context("no token bucket")?;
-        let mut toks = vec![0i32; tb];
-        for (i, sq) in seqs.iter().enumerate() {
-            toks[i] = sq.next_token;
-        }
-        let emb = self.stages.embed(tb, &toks)?;
-        // x: [bb, d]
-        let mut x = Tensor::zeros(vec![bb, d]);
-        for i in 0..b {
-            x.row_mut(i).copy_from_slice(emb.row(i));
-        }
-
-        // Batched KV + position masks.
-        let mut pos_mask = Tensor::zeros(vec![bb, s]);
-        for (i, sq) in seqs.iter().enumerate() {
-            pos_mask.row_mut(i)[..sq.pos].fill(1.0);
-        }
-
-        for l in 0..self.cfg.n_layers {
-            // Assemble [bb, s, d] caches.
-            let mut kc = vec![0.0f32; bb * s * d];
-            let mut vc = vec![0.0f32; bb * s * d];
-            for (i, sq) in seqs.iter().enumerate() {
-                kc[i * s * d..(i + 1) * s * d].copy_from_slice(&sq.kv_k[l].data);
-                vc[i * s * d..(i + 1) * s * d].copy_from_slice(&sq.kv_v[l].data);
-            }
-            let kc = Tensor::new(vec![bb, s, d], kc)?;
-            let vc = Tensor::new(vec![bb, s, d], vc)?;
-            let [y, k_new, v_new] = self.stages.attn_decode(l, bb, &x, &kc, &vc, &pos_mask)?;
-            self.advance_layer_compute();
-            for (i, sq) in seqs.iter_mut().enumerate() {
-                sq.write_kv(l, k_new.row(i), v_new.row(i));
-            }
-
-            let (h, mut routings) = self.run_router(l, &y, b)?;
-            let moe = self.run_moe(l, &h, &mut routings, &mut tel)?;
-            x = y;
-            for t in 0..b {
-                let row = x.row_mut(t);
-                for (a, mo) in row.iter_mut().zip(moe.row(t)) {
-                    *a += mo;
-                }
-            }
-            self.prefetch_next(l, &x);
-        }
-
-        // LM head over the batch.
-        let mut xb = Tensor::zeros(vec![tb, d]);
-        for i in 0..b {
-            xb.row_mut(i).copy_from_slice(x.row(i));
-        }
-        let logits = self.stages.lm_head(tb, &xb)?;
         for (i, sq) in seqs.iter_mut().enumerate() {
             let row = logits.row(i);
             if self.opts.record_logits {
@@ -489,6 +465,82 @@ impl Engine {
         self.counters.inc("decode_steps");
         self.counters.add("decode_tokens", b as u64);
         Ok(tel)
+    }
+
+    /// The fallible stage pipeline of one decode step: embed → per-layer
+    /// (view-based attention → router → MoE) → lm head; returns the batch
+    /// logits. Split out of [`Engine::decode_step`] so the pooled scratch
+    /// is restored no matter where an error exits.
+    fn decode_step_stages(
+        &mut self,
+        seqs: &mut [&mut Sequence],
+        scratch: &mut StepScratch,
+        tel: &mut StepTelemetry,
+    ) -> Result<Tensor> {
+        let b = seqs.len();
+        let bb = self
+            .cfg
+            .batch_bucket_for(b)
+            .context("batch larger than any bucket")?;
+        let d = self.cfg.d_model;
+        let s = self.cfg.max_seq;
+
+        // Embed current tokens (token bucket >= b).
+        let tb = self.cfg.token_bucket_for(b).context("no token bucket")?;
+        scratch.toks.clear();
+        scratch.toks.resize(tb, 0);
+        for (i, sq) in seqs.iter().enumerate() {
+            scratch.toks[i] = sq.next_token;
+        }
+        // x [bb, d]: the embed output reshaped in place — pad (or trim)
+        // the leading dim to the batch bucket, then re-zero the padding
+        // lanes, which hold token-0 embeddings after a widening resize.
+        // Padding rows must stay exactly zero: PreGate reads every row of
+        // the hidden state, so nonzero padding would change prefetch
+        // decisions and break byte-identity with the seed path.
+        let mut x = self.stages.embed(tb, &scratch.toks)?;
+        x.data.resize(bb * d, 0.0);
+        x.dims[0] = bb;
+        for i in b..bb.min(tb) {
+            x.row_mut(i).fill(0.0);
+        }
+
+        // Position masks (pooled).
+        scratch.pos_mask.reset_zeros(&[bb, s]);
+        for (i, sq) in seqs.iter().enumerate() {
+            scratch.pos_mask.row_mut(i)[..sq.pos].fill(1.0);
+        }
+
+        for l in 0..self.cfg.n_layers {
+            // Attention borrows each sequence's KV cache in place; the
+            // view ends before `write_kv` appends this step's new row.
+            let [y, k_new, v_new] = {
+                let kv = KvBatchView::new(&*seqs, l);
+                self.stages.attn_decode(l, bb, &x, &kv, &scratch.pos_mask)?
+            };
+            self.advance_layer_compute();
+            for (i, sq) in seqs.iter_mut().enumerate() {
+                sq.write_kv(l, k_new.row(i), v_new.row(i));
+            }
+
+            let (h, mut routings) = self.run_router(l, &y, b)?;
+            let moe = self.run_moe(l, &h, &mut routings, tel)?;
+            x = y;
+            for t in 0..b {
+                let row = x.row_mut(t);
+                for (a, mo) in row.iter_mut().zip(moe.row(t)) {
+                    *a += mo;
+                }
+            }
+            self.prefetch_next(l, &x);
+        }
+
+        // LM head over the batch (pooled staging).
+        scratch.xb.reset_zeros(&[tb, d]);
+        for i in 0..b {
+            scratch.xb.row_mut(i).copy_from_slice(x.row(i));
+        }
+        self.stages.lm_head(tb, &scratch.xb)
     }
 
     // ------------------------------------------------------------------
@@ -707,19 +759,28 @@ impl Engine {
         // order — and therefore the golden outputs — never changes.
         let group_list: Vec<(usize, Vec<(usize, usize)>)> = groups.into_iter().collect();
         let cfg = &self.cfg;
+        let arena = &self.arena;
         let stages: &dyn StageRunner = self.stages.as_ref();
         let run_group = |gi: usize| -> Result<Tensor> {
             let (e, members) = &group_list[gi];
-            let rows: Vec<usize> = members.iter().map(|&(t, _)| t).collect();
             let tb = cfg
-                .token_bucket_for(rows.len())
+                .token_bucket_for(members.len())
                 .context("expert group exceeds largest bucket")?;
-            let grp = h.gather_rows(&rows).pad_rows(tb);
+            // Gather + bucket-pad in one pass through pooled scratch: the
+            // seed's gather_rows().pad_rows() pair allocated two tensors
+            // and copied the group twice, per group, per layer. The
+            // scratch is zero-filled, so the padding rows match pad_rows.
+            let mut grp = arena.take(tb * d);
+            for (ri, &(t, _)) in members.iter().enumerate() {
+                grp[ri * d..(ri + 1) * d].copy_from_slice(h.row(t));
+            }
+            let dims = [tb, d];
+            let hview = TensorView::new(&dims, &grp)?;
             let key = ExpertKey::new(l, *e);
             if let Some(w) = transient_weights.get(e) {
-                stages.expert_transient(tb, w, &grp)
+                stages.expert_transient(tb, w, &hview)
             } else {
-                stages.expert_resident(tb, key, &grp)
+                stages.expert_resident(tb, key, &hview)
             }
         };
         // Runtime dispatch, not a cargo feature: the PJRT backend's device

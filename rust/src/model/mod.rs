@@ -8,4 +8,4 @@ mod seq;
 
 pub use engine::{Engine, EngineOptions, StepTelemetry};
 pub use route::routings_from_probs;
-pub use seq::Sequence;
+pub use seq::{KvBatchView, Sequence};

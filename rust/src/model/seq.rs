@@ -1,6 +1,10 @@
-//! A serving sequence: prompt, generation state, and per-layer KV cache.
+//! A serving sequence: prompt, generation state, and per-layer KV cache —
+//! plus [`KvBatchView`], the borrowed per-layer view of a decode batch's
+//! caches that the engine lends to `StageRunner::attn_decode` (PR 5:
+//! zero-copy KV).
 
 use crate::config::ModelConfig;
+use crate::runtime::KvSource;
 use crate::util::tensor::Tensor;
 
 #[derive(Debug, Clone)]
@@ -97,6 +101,40 @@ impl Sequence {
     }
 }
 
+/// Borrowed view of one layer's KV caches across a decode batch: holds a
+/// shared ref to the batch's sequences and hands out each sequence's
+/// `[max_seq, d_model]` K / V cache tensor **in place** — constructing
+/// one allocates nothing and copies nothing.
+///
+/// Who may borrow: the engine builds a fresh view per layer, and the
+/// borrow ends before `write_kv` appends the step's new row (attention
+/// reads that row separately as `k_new`/`v_new`), so the caches are
+/// immutable for the lifetime of the view.
+pub struct KvBatchView<'a> {
+    seqs: &'a [&'a mut Sequence],
+    layer: usize,
+}
+
+impl<'a> KvBatchView<'a> {
+    pub fn new(seqs: &'a [&'a mut Sequence], layer: usize) -> Self {
+        Self { seqs, layer }
+    }
+}
+
+impl KvSource for KvBatchView<'_> {
+    fn batch(&self) -> usize {
+        self.seqs.len()
+    }
+
+    fn k(&self, i: usize) -> &Tensor {
+        &self.seqs[i].kv_k[self.layer]
+    }
+
+    fn v(&self, i: usize) -> &Tensor {
+        &self.seqs[i].kv_v[self.layer]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -121,6 +159,22 @@ mod tests {
     fn too_long_rejected() {
         let cfg = ModelConfig::test_tiny();
         Sequence::new(&cfg, 1, vec![0; 10], 10);
+    }
+
+    #[test]
+    fn kv_batch_view_borrows_in_place() {
+        let cfg = ModelConfig::test_tiny();
+        let mut a = Sequence::new(&cfg, 1, vec![1], 2);
+        let mut b = Sequence::new(&cfg, 2, vec![2], 2);
+        a.kv_k[1].row_mut(0)[0] = 5.0;
+        let a_ptr = a.kv_k[1].data.as_ptr();
+        let batch = [&mut a, &mut b];
+        let view = KvBatchView::new(&batch, 1);
+        assert_eq!(view.batch(), 2);
+        // The view aliases the sequence's own allocation — no copy.
+        assert_eq!(view.k(0).data.as_ptr(), a_ptr);
+        assert_eq!(view.k(0).row(0)[0], 5.0);
+        assert_eq!(view.v(1).dims, vec![cfg.max_seq, cfg.d_model]);
     }
 
     #[test]

@@ -16,6 +16,12 @@
 //!   **text** (not serialized protos): jax >= 0.5 emits 64-bit instruction
 //!   ids that xla_extension 0.5.1 rejects; the text parser reassigns ids
 //!   (see DESIGN.md).
+//!
+//! Decode attention reads KV caches through the borrowed [`KvSource`]
+//! view instead of owned `[bb, s, d]` tensors (PR 5): the reference
+//! backend indexes each sequence's cache in place, the PJRT backend
+//! materializes the view once at this boundary ([`materialize_kv`],
+//! audited by [`kv_copy_bytes`]).
 
 pub mod kernels;
 mod reference;
@@ -36,10 +42,96 @@ pub use exec::{lit_i32, lit_tensor, tensor_from_lit, ExecOutputs};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtStages;
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use anyhow::Result;
 
-use crate::util::tensor::Tensor;
+use crate::util::tensor::{Tensor, TensorView};
 use crate::weights::{ExpertKey, ExpertWeights};
+
+/// Bytes of KV cache copied across a backend boundary by
+/// [`materialize_kv`] since process start. The zero-copy contract: the
+/// reference backend reads KV through [`KvSource`] in place and must
+/// never bump this (asserted in `tests/zero_copy_decode.rs`); the PJRT
+/// backend pays it once per `attn_decode` call, the one place the device
+/// genuinely needs contiguous input.
+static KV_COPY_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Monotonic [`KV_COPY_BYTES`] reading; diff two readings to measure a
+/// region.
+pub fn kv_copy_bytes() -> u64 {
+    KV_COPY_BYTES.load(Ordering::Relaxed)
+}
+
+/// One layer's KV caches for a decode batch, borrowed in place.
+///
+/// `batch()` is the number of *real* sequences — it may be smaller than
+/// the batch bucket `bb` the attention kernel pads to; lanes `>= batch()`
+/// carry no cache and their `pos_mask` row must be all-invalid (the lane
+/// then attends only to its own current token). `k(i)` / `v(i)` return
+/// sequence `i`'s cache for the layer, shape `[max_seq, d_model]`,
+/// row-major. Implementations must be cheap, allocation-free accessors;
+/// `Sync` because the reference backend fans attention lanes out across
+/// scoped threads.
+pub trait KvSource: Sync {
+    fn batch(&self) -> usize;
+    fn k(&self, i: usize) -> &Tensor;
+    fn v(&self, i: usize) -> &Tensor;
+}
+
+/// [`KvSource`] over explicit per-sequence tensor refs — tests, benches,
+/// and anywhere the sequences themselves are out of reach.
+pub struct KvSlices<'a> {
+    pub k: &'a [&'a Tensor],
+    pub v: &'a [&'a Tensor],
+}
+
+impl KvSource for KvSlices<'_> {
+    fn batch(&self) -> usize {
+        // Hard assert (not debug): a k/v length mismatch in a release
+        // build would otherwise surface as a bare index panic deep in a
+        // kernel loop instead of pointing at the malformed view.
+        assert_eq!(self.k.len(), self.v.len(), "KvSlices k/v length mismatch");
+        self.k.len()
+    }
+
+    fn k(&self, i: usize) -> &Tensor {
+        self.k[i]
+    }
+
+    fn v(&self, i: usize) -> &Tensor {
+        self.v[i]
+    }
+}
+
+/// Copy a [`KvSource`] into contiguous `[bb, s, d]` K and V tensors,
+/// zero-padding lanes `>= kv.batch()` — byte-for-byte the layout the seed
+/// engine assembled every layer. This is the only sanctioned KV copy
+/// (PJRT trait boundary; counted in [`kv_copy_bytes`]).
+pub fn materialize_kv(
+    kv: &dyn KvSource,
+    bb: usize,
+    s: usize,
+    d: usize,
+) -> Result<(Tensor, Tensor)> {
+    let n = kv.batch();
+    anyhow::ensure!(n <= bb, "materialize_kv: batch {n} exceeds bucket {bb}");
+    let mut kc = vec![0.0f32; bb * s * d];
+    let mut vc = vec![0.0f32; bb * s * d];
+    for i in 0..n {
+        let (kt, vt) = (kv.k(i), kv.v(i));
+        anyhow::ensure!(
+            kt.dims == [s, d] && vt.dims == [s, d],
+            "materialize_kv: seq {i} cache shape {:?}/{:?}, want [{s}, {d}]",
+            kt.dims,
+            vt.dims
+        );
+        kc[i * s * d..(i + 1) * s * d].copy_from_slice(&kt.data);
+        vc[i * s * d..(i + 1) * s * d].copy_from_slice(&vt.data);
+    }
+    KV_COPY_BYTES.fetch_add((2 * bb * s * d * 4) as u64, Ordering::Relaxed);
+    Ok((Tensor::new(vec![bb, s, d], kc)?, Tensor::new(vec![bb, s, d], vc)?))
+}
 
 /// Which stage backend the engine should use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -70,27 +162,37 @@ pub trait StageRunner: Send + Sync {
     /// (x [S, D], len_mask [S]) -> [y [S, D], k [S, D], v [S, D]].
     fn attn_prefill(&self, layer: usize, x: &Tensor, len_mask: &Tensor) -> Result<[Tensor; 3]>;
 
-    /// Single-step attention for `bb` sequences against padded KV caches:
+    /// Single-step attention for a decode batch of up to `bb` lanes
+    /// against per-sequence KV caches read **in place** through `kv`:
     /// -> [y [bb, D], k_new [bb, D], v_new [bb, D]].
+    ///
+    /// View contract (PR 5): the caller lends each sequence's `[s, D]`
+    /// cache via [`KvSource`]; the reference backend must not copy it
+    /// (its attention lanes index the borrowed rows directly), while a
+    /// device backend that needs contiguous input materializes the view
+    /// once via [`materialize_kv`] — the only sanctioned copy, counted in
+    /// [`kv_copy_bytes`]. `pos_mask` is `[bb, s]`; lanes `>= kv.batch()`
+    /// must carry an all-invalid mask row.
     fn attn_decode(
         &self,
         layer: usize,
         bb: usize,
         x: &Tensor,
-        k_cache: &Tensor,
-        v_cache: &Tensor,
+        kv: &dyn KvSource,
         pos_mask: &Tensor,
     ) -> Result<[Tensor; 3]>;
 
     /// MoE pre-norm + router softmax: y [T, D] -> (h [T, D], probs [T, E]).
     fn router(&self, layer: usize, y: &Tensor) -> Result<(Tensor, Tensor)>;
 
-    /// Run one *admitted* expert over a routed token group h [tb, D].
-    fn expert_resident(&self, tb: usize, key: ExpertKey, h: &Tensor) -> Result<Tensor>;
+    /// Run one *admitted* expert over a routed token group h [tb, D]. The
+    /// input is a borrowed view so callers can stage token groups in
+    /// pooled scratch instead of allocating a tensor per group.
+    fn expert_resident(&self, tb: usize, key: ExpertKey, h: &TensorView) -> Result<Tensor>;
 
     /// Run an expert from explicitly-provided weights (the transient-fetch
     /// path: weights streamed through without cache admission).
-    fn expert_transient(&self, tb: usize, w: &ExpertWeights, h: &Tensor) -> Result<Tensor>;
+    fn expert_transient(&self, tb: usize, w: &ExpertWeights, h: &TensorView) -> Result<Tensor>;
 
     /// x [tb, D] -> logits [tb, V] (tied embedding).
     fn lm_head(&self, tb: usize, x: &Tensor) -> Result<Tensor>;

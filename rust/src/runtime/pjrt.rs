@@ -17,8 +17,8 @@ use anyhow::{Context, Result};
 use crate::config::ModelConfig;
 use crate::runtime::artifacts::{ArtifactRegistry, Runtime};
 use crate::runtime::exec::{lit_i32, lit_tensor};
-use crate::runtime::StageRunner;
-use crate::util::tensor::Tensor;
+use crate::runtime::{materialize_kv, KvSource, StageRunner};
+use crate::util::tensor::{Tensor, TensorView};
 use crate::weights::{ExpertKey, ExpertWeights, WeightStore};
 
 struct LayerLits {
@@ -182,11 +182,17 @@ impl StageRunner for PjrtStages {
         layer: usize,
         bb: usize,
         x: &Tensor,
-        k_cache: &Tensor,
-        v_cache: &Tensor,
+        kv: &dyn KvSource,
         pos_mask: &Tensor,
     ) -> Result<[Tensor; 3]> {
         let name = format!("attn_decode_B{bb}");
+        // The AOT artifact wants contiguous [bb, s, d] device inputs:
+        // materialize the borrowed view once at the trait boundary — the
+        // one sanctioned KV copy (counted in `runtime::kv_copy_bytes`),
+        // byte-identical to the seed's per-layer assembly.
+        let d = x.dims[1];
+        let s = pos_mask.dims[1];
+        let (k_cache, v_cache) = materialize_kv(kv, bb, s, d)?;
         let out = if !self.layer_bufs.is_empty() {
             let lb = &self.layer_bufs[layer];
             let bx = self.rt.to_device(&x.data, &x.dims)?;
@@ -202,8 +208,8 @@ impl StageRunner for PjrtStages {
         } else {
             let ll = &self.layer_lits[layer];
             let lx = lit_tensor(x)?;
-            let lk = lit_tensor(k_cache)?;
-            let lv = lit_tensor(v_cache)?;
+            let lk = lit_tensor(&k_cache)?;
+            let lv = lit_tensor(&v_cache)?;
             let lm = lit_tensor(pos_mask)?;
             self.reg
                 .run_lits(
@@ -233,16 +239,16 @@ impl StageRunner for PjrtStages {
         Ok((h, probs))
     }
 
-    fn expert_resident(&self, tb: usize, key: ExpertKey, h: &Tensor) -> Result<Tensor> {
-        let hbuf = self.rt.to_device(&h.data, &h.dims)?;
+    fn expert_resident(&self, tb: usize, key: ExpertKey, h: &TensorView) -> Result<Tensor> {
+        let hbuf = self.rt.to_device(h.data, h.dims)?;
         let bufs = self.reg.expert_buffers(key)?;
         self.reg
             .run_buffers(&format!("expert_T{tb}"), &[&hbuf, &bufs[0], &bufs[1], &bufs[2]])?
             .single()
     }
 
-    fn expert_transient(&self, tb: usize, w: &ExpertWeights, h: &Tensor) -> Result<Tensor> {
-        let hbuf = self.rt.to_device(&h.data, &h.dims)?;
+    fn expert_transient(&self, tb: usize, w: &ExpertWeights, h: &TensorView) -> Result<Tensor> {
+        let hbuf = self.rt.to_device(h.data, h.dims)?;
         let b1 = self.rt.to_device(&w.0.data, &w.0.dims)?;
         let b3 = self.rt.to_device(&w.1.data, &w.1.dims)?;
         let b2 = self.rt.to_device(&w.2.data, &w.2.dims)?;

@@ -22,6 +22,19 @@
 //!   admission stores a pointer bump and [`RefStages::expert_resident`]
 //!   borrows the resident entry directly; no tensor bytes are copied
 //!   anywhere on the admit/evict/lookup path (`Arc::ptr_eq`-tested).
+//! * **Zero-copy KV views** — decode attention reads each sequence's
+//!   `[max_seq, d_model]` cache **in place** through the borrowed
+//!   [`KvSource`] view; the seed's per-layer `[bb, s, d]` assembly copy
+//!   (2 × bb × s × d f32 per layer per token) is gone. Only this
+//!   backend may borrow KV like that — the engine guarantees the caches
+//!   are not mutated for the duration of the call (the step's new row is
+//!   returned as `k_new`/`v_new` and written back *after* attention) —
+//!   while the PJRT backend materializes the view once at the trait
+//!   boundary because its AOT artifacts want contiguous device input.
+//!   Either way the per-lane reduction order is untouched, so the
+//!   bitwise guarantee below is unaffected (golden-tested against an
+//!   independent copy-path reimplementation in
+//!   `tests/zero_copy_decode.rs`).
 //! * **Blocked kernels** — matmul / RMSNorm / the attention core /
 //!   lm_head run through [`super::kernels`]: i/j cache tiling, a
 //!   transposed-weight dot kernel for the tied-embedding lm head, and
@@ -45,16 +58,17 @@
 //! numeric contract and the `micro_hotpath` benchmark baseline.
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::config::ModelConfig;
 use crate::runtime::kernels::{self, naive};
-use crate::runtime::StageRunner;
+use crate::runtime::{KvSource, StageRunner};
+use crate::util::arena::Arena;
 use crate::util::math::softmax;
 use crate::util::par;
-use crate::util::tensor::Tensor;
+use crate::util::tensor::{Tensor, TensorView};
 use crate::weights::{ExpertKey, ExpertWeights, WeightStore};
 
 /// Which kernel implementations a [`RefStages`] instance executes.
@@ -77,52 +91,6 @@ impl KernelMode {
     }
 }
 
-/// A pool of reusable f32 scratch buffers. Mutex'd so `&self` stage calls
-/// (including ones running on engine worker threads) share it; the lock
-/// is held only for a pop/push, never across kernel work.
-struct Arena {
-    pool: Mutex<Vec<Vec<f32>>>,
-}
-
-impl Arena {
-    fn new() -> Self {
-        Self { pool: Mutex::new(Vec::new()) }
-    }
-
-    /// A zeroed scratch buffer of `len` elements, returned to the pool on
-    /// drop (capacity is retained across uses).
-    fn take(&self, len: usize) -> Scratch<'_> {
-        let mut buf = self.pool.lock().unwrap().pop().unwrap_or_default();
-        buf.clear();
-        buf.resize(len, 0.0);
-        Scratch { arena: self, buf }
-    }
-}
-
-struct Scratch<'a> {
-    arena: &'a Arena,
-    buf: Vec<f32>,
-}
-
-impl std::ops::Deref for Scratch<'_> {
-    type Target = [f32];
-    fn deref(&self) -> &[f32] {
-        &self.buf
-    }
-}
-
-impl std::ops::DerefMut for Scratch<'_> {
-    fn deref_mut(&mut self) -> &mut [f32] {
-        &mut self.buf
-    }
-}
-
-impl Drop for Scratch<'_> {
-    fn drop(&mut self) {
-        self.arena.pool.lock().unwrap().push(std::mem::take(&mut self.buf));
-    }
-}
-
 pub struct RefStages {
     cfg: ModelConfig,
     store: Arc<WeightStore>,
@@ -133,6 +101,18 @@ pub struct RefStages {
 
 fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
+}
+
+/// Lane `b`'s borrowed K/V cache rows. Lanes `>= n_real` (bucket padding)
+/// have no cache: their `pos_mask` rows are all-invalid, so the empty
+/// slice is never indexed and the lane attends only to its own current
+/// token — numerically identical to the seed's zero-padded assembly.
+fn lane_kv<'k>(kv: &'k dyn KvSource, n_real: usize, b: usize) -> (&'k [f32], &'k [f32]) {
+    if b < n_real {
+        (kv.k(b).data.as_slice(), kv.v(b).data.as_slice())
+    } else {
+        (&[], &[])
+    }
 }
 
 impl RefStages {
@@ -161,13 +141,13 @@ impl RefStages {
     }
 
     /// Shared FFN math: (silu(h @ w1) * (h @ w3)) @ w2 over h [t, D].
-    fn expert_ffn(&self, h: &Tensor, w: &ExpertWeights) -> Result<Tensor> {
+    fn expert_ffn(&self, h: &TensorView, w: &ExpertWeights) -> Result<Tensor> {
         let (t, d) = (h.dims[0], self.cfg.d_model);
         let f = self.cfg.d_ff;
         match self.mode {
             KernelMode::Naive => {
-                let a = naive::matmul(&h.data, t, d, &w.0.data, f);
-                let b = naive::matmul(&h.data, t, d, &w.1.data, f);
+                let a = naive::matmul(h.data, t, d, &w.0.data, f);
+                let b = naive::matmul(h.data, t, d, &w.1.data, f);
                 let mut g = vec![0.0f32; t * f];
                 for i in 0..t * f {
                     g[i] = silu(a[i]) * b[i];
@@ -178,8 +158,8 @@ impl RefStages {
             KernelMode::Blocked => {
                 let mut a = self.arena.take(t * f);
                 let mut b = self.arena.take(t * f);
-                kernels::matmul_into(&h.data, t, d, &w.0.data, f, &mut a);
-                kernels::matmul_into(&h.data, t, d, &w.1.data, f, &mut b);
+                kernels::matmul_into(h.data, t, d, &w.0.data, f, &mut a);
+                kernels::matmul_into(h.data, t, d, &w.1.data, f, &mut b);
                 // g = silu(a) * b, in place over a's buffer.
                 for (g, &bv) in a.iter_mut().zip(b.iter()) {
                     *g = silu(*g) * bv;
@@ -359,14 +339,29 @@ impl StageRunner for RefStages {
         layer: usize,
         bb: usize,
         x: &Tensor,
-        k_cache: &Tensor,
-        v_cache: &Tensor,
+        kv: &dyn KvSource,
         pos_mask: &Tensor,
     ) -> Result<[Tensor; 3]> {
         let d = self.cfg.d_model;
         let (heads, hd) = (self.cfg.n_heads, self.cfg.head_dim);
-        let s = k_cache.dims[1];
         anyhow::ensure!(x.dims == vec![bb, d], "attn_decode x shape {:?}", x.dims);
+        anyhow::ensure!(
+            pos_mask.rank() == 2 && pos_mask.dims[0] == bb,
+            "attn_decode pos_mask shape {:?}",
+            pos_mask.dims
+        );
+        let s = pos_mask.dims[1];
+        let n_real = kv.batch();
+        anyhow::ensure!(n_real <= bb, "attn_decode: {n_real} sequences for bucket {bb}");
+        for i in 0..n_real {
+            let (kt, vt) = (kv.k(i), kv.v(i));
+            anyhow::ensure!(
+                kt.dims == [s, d] && vt.dims == [s, d],
+                "attn_decode: seq {i} KV shape {:?}/{:?}, want [{s}, {d}]",
+                kt.dims,
+                vt.dims
+            );
+        }
         let ln1 = self.layer_tensor(layer, "ln1")?;
         let wq = self.layer_tensor(layer, "wq")?;
         let wk = self.layer_tensor(layer, "wk")?;
@@ -386,8 +381,7 @@ impl StageRunner for RefStages {
         match self.mode {
             KernelMode::Naive => {
                 for b in 0..bb {
-                    let kc = &k_cache.data[b * s * d..(b + 1) * s * d];
-                    let vc = &v_cache.data[b * s * d..(b + 1) * s * d];
+                    let (kc, vc) = lane_kv(kv, n_real, b);
                     let kn = &k_new[b * d..(b + 1) * d];
                     let vn = &v_new[b * d..(b + 1) * d];
                     let mask = &pos_mask.data[b * s..(b + 1) * s];
@@ -416,8 +410,7 @@ impl StageRunner for RefStages {
                     let mut scores = vec![0.0f32; s + 1];
                     for (bi, o_row) in chunk.chunks_mut(d).enumerate() {
                         let b = b0 + bi;
-                        let kc = &k_cache.data[b * s * d..(b + 1) * s * d];
-                        let vc = &v_cache.data[b * s * d..(b + 1) * s * d];
+                        let (kc, vc) = lane_kv(kv, n_real, b);
                         let kn = &k_new_r[b * d..(b + 1) * d];
                         let vn = &v_new_r[b * d..(b + 1) * d];
                         let mask = &pos_mask.data[b * s..(b + 1) * s];
@@ -502,7 +495,7 @@ impl StageRunner for RefStages {
         Ok((Tensor::new(vec![t, d], h)?, Tensor::new(vec![t, e], logits)?))
     }
 
-    fn expert_resident(&self, _tb: usize, key: ExpertKey, h: &Tensor) -> Result<Tensor> {
+    fn expert_resident(&self, _tb: usize, key: ExpertKey, h: &TensorView) -> Result<Tensor> {
         // Borrow the admitted Arc directly — no clone of any kind on the
         // per-invocation path.
         let w = self.resident.get(&key).with_context(|| {
@@ -511,7 +504,7 @@ impl StageRunner for RefStages {
         self.expert_ffn(h, w)
     }
 
-    fn expert_transient(&self, _tb: usize, w: &ExpertWeights, h: &Tensor) -> Result<Tensor> {
+    fn expert_transient(&self, _tb: usize, w: &ExpertWeights, h: &TensorView) -> Result<Tensor> {
         self.expert_ffn(h, w)
     }
 
@@ -567,6 +560,7 @@ impl StageRunner for RefStages {
 mod tests {
     use super::*;
     use crate::runtime::kernels::naive::rms_norm_rows;
+    use crate::runtime::KvSlices;
 
     fn stages() -> RefStages {
         let cfg = ModelConfig::test_tiny();
@@ -618,13 +612,14 @@ mod tests {
         let mut s = stages();
         let key = ExpertKey::new(0, 3);
         let h = Tensor::zeros(vec![2, 16]);
-        assert!(s.expert_resident(2, key, &h).is_err());
+        let hv = TensorView::from_tensor(&h);
+        assert!(s.expert_resident(2, key, &hv).is_err());
         let w = s.store.expert(key).unwrap();
         s.admit_expert(key, &w).unwrap();
-        let y = s.expert_resident(2, key, &h).unwrap();
+        let y = s.expert_resident(2, key, &hv).unwrap();
         assert_eq!(y.dims, vec![2, 16]);
         s.evict_expert(key);
-        assert!(s.expert_resident(2, key, &h).is_err());
+        assert!(s.expert_resident(2, key, &hv).is_err());
     }
 
     #[test]
@@ -645,7 +640,7 @@ mod tests {
         let s = stages();
         let w = s.store.expert(ExpertKey::new(1, 1)).unwrap();
         let h = Tensor::zeros(vec![1, 16]);
-        let y = s.expert_transient(1, &w, &h).unwrap();
+        let y = s.expert_transient(1, &w, &TensorView::from_tensor(&h)).unwrap();
         assert!(y.data.iter().all(|&v| v == 0.0));
     }
 
@@ -655,11 +650,35 @@ mod tests {
         let (bb, d, sq) = (2, 16, 16);
         let x = Tensor::new(vec![bb, d], (0..bb * d).map(|i| (i % 5) as f32 - 2.0).collect())
             .unwrap();
-        let kc = Tensor::zeros(vec![bb, sq, d]);
-        let vc = Tensor::zeros(vec![bb, sq, d]);
+        let kcs: Vec<Tensor> = (0..bb).map(|_| Tensor::zeros(vec![sq, d])).collect();
+        let vcs: Vec<Tensor> = (0..bb).map(|_| Tensor::zeros(vec![sq, d])).collect();
+        let kr: Vec<&Tensor> = kcs.iter().collect();
+        let vr: Vec<&Tensor> = vcs.iter().collect();
+        let kv = KvSlices { k: &kr, v: &vr };
         // No cached positions valid: attention sees only the current token.
         let pm = Tensor::zeros(vec![bb, sq]);
-        let [y, kn, vn] = s.attn_decode(0, bb, &x, &kc, &vc, &pm).unwrap();
+        let [y, kn, vn] = s.attn_decode(0, bb, &x, &kv, &pm).unwrap();
+        assert_eq!(y.dims, vec![bb, d]);
+        assert_eq!(kn.dims, vec![bb, d]);
+        assert_eq!(vn.dims, vec![bb, d]);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn attn_decode_padding_lanes_need_no_cache() {
+        // A view narrower than the batch bucket: lanes >= kv.batch() have
+        // no cache tensors at all and must still produce finite rows
+        // (they attend only to their own current token).
+        let s = stages();
+        let (bb, d, sq) = (4, 16, 16);
+        let x = Tensor::zeros(vec![bb, d]);
+        let kc = Tensor::zeros(vec![sq, d]);
+        let vc = Tensor::zeros(vec![sq, d]);
+        let kr = [&kc];
+        let vr = [&vc];
+        let kv = KvSlices { k: &kr, v: &vr };
+        let pm = Tensor::zeros(vec![bb, sq]);
+        let [y, kn, vn] = s.attn_decode(0, bb, &x, &kv, &pm).unwrap();
         assert_eq!(y.dims, vec![bb, d]);
         assert_eq!(kn.dims, vec![bb, d]);
         assert_eq!(vn.dims, vec![bb, d]);

@@ -1,0 +1,92 @@
+//! A mutex-pooled f32 scratch arena: reusable buffers for hot-path
+//! temporaries, shared by the reference stage backend (per-stage
+//! activations) and the engine (per-expert-group gather+pad staging).
+//!
+//! `take(len)` hands out a zeroed buffer that returns to the pool on drop
+//! with its capacity retained, so steady-state use performs no heap
+//! allocation. The lock is held only for a pop/push, never across kernel
+//! work, so `&self` users on scoped worker threads share one arena
+//! without serializing their compute.
+
+use std::sync::Mutex;
+
+/// A pool of reusable f32 scratch buffers.
+#[derive(Default)]
+pub struct Arena {
+    pool: Mutex<Vec<Vec<f32>>>,
+}
+
+impl Arena {
+    pub fn new() -> Self {
+        Self { pool: Mutex::new(Vec::new()) }
+    }
+
+    /// A zeroed scratch buffer of `len` elements, returned to the pool on
+    /// drop (capacity is retained across uses).
+    pub fn take(&self, len: usize) -> Scratch<'_> {
+        let mut buf = self.pool.lock().unwrap().pop().unwrap_or_default();
+        buf.clear();
+        buf.resize(len, 0.0);
+        Scratch { arena: self, buf }
+    }
+
+    /// Buffers currently parked in the pool (test instrumentation).
+    pub fn pooled(&self) -> usize {
+        self.pool.lock().unwrap().len()
+    }
+}
+
+/// A pooled buffer on loan from an [`Arena`]; derefs to `[f32]`.
+pub struct Scratch<'a> {
+    arena: &'a Arena,
+    buf: Vec<f32>,
+}
+
+impl std::ops::Deref for Scratch<'_> {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.buf
+    }
+}
+
+impl std::ops::DerefMut for Scratch<'_> {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.buf
+    }
+}
+
+impl Drop for Scratch<'_> {
+    fn drop(&mut self) {
+        self.arena.pool.lock().unwrap().push(std::mem::take(&mut self.buf));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_zeroes_and_recycles() {
+        let arena = Arena::new();
+        {
+            let mut a = arena.take(8);
+            a.iter_mut().for_each(|v| *v = 3.0);
+        }
+        assert_eq!(arena.pooled(), 1);
+        let b = arena.take(4);
+        assert!(b.iter().all(|&v| v == 0.0), "recycled buffers must be zeroed");
+        assert_eq!(b.len(), 4);
+        drop(b);
+        assert_eq!(arena.pooled(), 1);
+    }
+
+    #[test]
+    fn concurrent_takes_get_disjoint_buffers() {
+        let arena = Arena::new();
+        let a = arena.take(4);
+        let b = arena.take(4);
+        assert_eq!(a.len(), 4);
+        assert_eq!(b.len(), 4);
+        assert_ne!(a.as_ptr(), b.as_ptr());
+    }
+}

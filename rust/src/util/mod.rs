@@ -1,6 +1,7 @@
 //! Infrastructure substrates built in-tree (the environment is offline, so
 //! the usual crates — rand, serde, clap — are hand-rolled here).
 
+pub mod arena;
 pub mod argparse;
 pub mod clock;
 pub mod json;

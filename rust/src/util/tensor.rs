@@ -1,12 +1,58 @@
 //! Row-major f32 host tensor used throughout the coordinator for
-//! activations, KV caches, and weight staging.
+//! activations, KV caches, and weight staging — plus [`TensorView`], the
+//! borrowed counterpart the hot path uses to read tensor data in place
+//! (PR 5: zero-copy KV views).
+//!
+//! [`alloc_probe`] counts tensor-buffer constructions so tests can assert
+//! allocation budgets on the decode hot path (see
+//! `tests/zero_copy_decode.rs`).
 
 use anyhow::{bail, Result};
 
-#[derive(Debug, Clone, PartialEq)]
+/// Process-wide probe of tensor-buffer constructions (relaxed atomics;
+/// negligible cost). Every path that materializes a fresh tensor buffer —
+/// [`Tensor::new`], [`Tensor::zeros`], [`Tensor::gather_rows`],
+/// [`Tensor::pad_rows`], and `Tensor::clone` (implemented manually so a
+/// clone-based copy can't dodge the probe) — notes (1 tensor, n f32
+/// elements); pooled-scratch
+/// reuse ([`Tensor::reset_zeros`], the arena) does not. Tests diff
+/// [`alloc_probe::snapshot`] around a region to bound its allocations;
+/// counters are global, so such tests must serialize against other
+/// tensor-allocating tests in the same process.
+pub mod alloc_probe {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static TENSORS: AtomicU64 = AtomicU64::new(0);
+    static ELEMS: AtomicU64 = AtomicU64::new(0);
+
+    pub(super) fn note(n_elems: usize) {
+        TENSORS.fetch_add(1, Ordering::Relaxed);
+        ELEMS.fetch_add(n_elems as u64, Ordering::Relaxed);
+    }
+
+    /// (tensor buffers constructed, f32 elements allocated) since process
+    /// start. Monotonic; diff two snapshots to measure a region.
+    pub fn snapshot() -> (u64, u64) {
+        (TENSORS.load(Ordering::Relaxed), ELEMS.load(Ordering::Relaxed))
+    }
+}
+
+/// An owned row-major f32 tensor. `Default` is an empty placeholder for
+/// pooled-scratch slots; call [`Tensor::reset_zeros`] before use.
+#[derive(Debug, PartialEq, Default)]
 pub struct Tensor {
     pub dims: Vec<usize>,
     pub data: Vec<f32>,
+}
+
+impl Clone for Tensor {
+    /// Manual so the fresh buffer is visible to [`alloc_probe`] — a
+    /// clone-based reintroduction of a KV-sized copy must not dodge the
+    /// zero-copy regression tests.
+    fn clone(&self) -> Self {
+        alloc_probe::note(self.data.len());
+        Self { dims: self.dims.clone(), data: self.data.clone() }
+    }
 }
 
 impl Tensor {
@@ -15,12 +61,25 @@ impl Tensor {
         if n != data.len() {
             bail!("shape {:?} wants {} elements, got {}", dims, n, data.len());
         }
+        alloc_probe::note(data.len());
         Ok(Self { dims, data })
     }
 
     pub fn zeros(dims: Vec<usize>) -> Self {
         let n: usize = dims.iter().product();
+        alloc_probe::note(n);
         Self { dims, data: vec![0.0; n] }
+    }
+
+    /// Reset to `dims`, zero-filled, reusing the existing allocation — the
+    /// pooled-scratch path. Not counted by [`alloc_probe`]; capacity is
+    /// retained across uses, so steady-state reuse is allocation-free.
+    pub fn reset_zeros(&mut self, dims: &[usize]) {
+        let n: usize = dims.iter().product();
+        self.dims.clear();
+        self.dims.extend_from_slice(dims);
+        self.data.clear();
+        self.data.resize(n, 0.0);
     }
 
     pub fn len(&self) -> usize {
@@ -54,21 +113,26 @@ impl Tensor {
 
     /// Gather rows into a new [idx.len(), W] tensor.
     pub fn gather_rows(&self, idx: &[usize]) -> Tensor {
+        assert_eq!(self.rank(), 2, "gather_rows() needs rank-2");
         let w = self.dims[1];
         let mut data = Vec::with_capacity(idx.len() * w);
         for &i in idx {
             data.extend_from_slice(self.row(i));
         }
+        alloc_probe::note(data.len());
         Tensor { dims: vec![idx.len(), w], data }
     }
 
-    /// Pad the leading dimension up to `n` rows with zeros (bucket padding).
+    /// Pad the leading dimension up to `n` rows with zeros (bucket
+    /// padding). Single allocation at the final size.
     pub fn pad_rows(&self, n: usize) -> Tensor {
-        assert_eq!(self.rank(), 2);
+        assert_eq!(self.rank(), 2, "pad_rows() needs rank-2");
         assert!(n >= self.dims[0]);
         let w = self.dims[1];
-        let mut data = self.data.clone();
+        let mut data = Vec::with_capacity(n * w);
+        data.extend_from_slice(&self.data);
         data.resize(n * w, 0.0);
+        alloc_probe::note(data.len());
         Tensor { dims: vec![n, w], data }
     }
 
@@ -79,6 +143,51 @@ impl Tensor {
             .zip(&other.data)
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f32::max)
+    }
+}
+
+/// A borrowed, immutable view of a row-major f32 tensor: `dims` and
+/// `data` reference storage owned elsewhere — a [`Tensor`], an arena
+/// scratch buffer, a stack-held dims array. Constructing one never copies
+/// or allocates, which is the point: the decode hot path hands views
+/// across the stage boundary instead of assembling owned tensors.
+#[derive(Debug, Clone, Copy)]
+pub struct TensorView<'a> {
+    pub dims: &'a [usize],
+    pub data: &'a [f32],
+}
+
+impl<'a> TensorView<'a> {
+    pub fn new(dims: &'a [usize], data: &'a [f32]) -> Result<Self> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            bail!("view shape {:?} wants {} elements, got {}", dims, n, data.len());
+        }
+        Ok(Self { dims, data })
+    }
+
+    pub fn from_tensor(t: &'a Tensor) -> Self {
+        Self { dims: &t.dims, data: &t.data }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Row `i` of a rank-2 view. The returned slice borrows the backing
+    /// storage (`'a`), not the view, so it may outlive `self`.
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        assert_eq!(self.rank(), 2, "row() needs rank-2");
+        let w = self.dims[1];
+        &self.data[i * w..(i + 1) * w]
     }
 }
 
@@ -102,6 +211,15 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "gather_rows() needs rank-2")]
+    fn gather_rows_rejects_non_rank2() {
+        // Seed bug: rank-3 input silently used dims[1] as the row width,
+        // gathering garbage stripes instead of logical rows.
+        let t = Tensor::zeros(vec![2, 3, 4]);
+        let _ = t.gather_rows(&[0]);
+    }
+
+    #[test]
     fn pad_rows_zero_fills() {
         let t = Tensor::new(vec![1, 2], vec![7., 8.]).unwrap();
         let p = t.pad_rows(3);
@@ -110,9 +228,61 @@ mod tests {
     }
 
     #[test]
+    fn pad_rows_matches_clone_resize_reference() {
+        // The with_capacity+extend build must be behavior-identical to the
+        // seed's clone-then-resize (which copied the data twice).
+        for (rows, w, n) in [(1usize, 5usize, 4usize), (3, 2, 3), (2, 7, 6)] {
+            let t =
+                Tensor::new(vec![rows, w], (0..rows * w).map(|i| i as f32 * 0.5).collect())
+                    .unwrap();
+            let got = t.pad_rows(n);
+            let mut want = t.data.clone();
+            want.resize(n * w, 0.0);
+            assert_eq!(got.dims, vec![n, w]);
+            assert_eq!(got.data, want);
+        }
+    }
+
+    #[test]
+    fn reset_zeros_reuses_allocation() {
+        let mut t = Tensor::zeros(vec![4, 8]);
+        t.data.iter_mut().for_each(|v| *v = 1.0);
+        let cap = t.data.capacity();
+        t.reset_zeros(&[2, 8]);
+        assert_eq!(t.dims, vec![2, 8]);
+        assert!(t.data.iter().all(|&v| v == 0.0));
+        assert_eq!(t.data.capacity(), cap, "shrinking reset must keep capacity");
+    }
+
+    #[test]
+    fn view_rows_match_tensor() {
+        let t = Tensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let v = TensorView::from_tensor(&t);
+        assert_eq!(v.rank(), 2);
+        assert_eq!(v.len(), 6);
+        for i in 0..3 {
+            assert_eq!(v.row(i), t.row(i));
+        }
+        // A raw-slice view (the arena-scratch shape) agrees too.
+        let dims = [3usize, 2];
+        let v2 = TensorView::new(&dims, &t.data).unwrap();
+        assert_eq!(v2.row(2), &[5., 6.]);
+        assert!(TensorView::new(&dims, &t.data[..4]).is_err());
+    }
+
+    #[test]
     fn diff() {
         let a = Tensor::new(vec![2], vec![1.0, 2.0]).unwrap();
         let b = Tensor::new(vec![2], vec![1.5, 2.0]).unwrap();
         assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn alloc_probe_counts_constructions() {
+        let (t0, e0) = alloc_probe::snapshot();
+        let _a = Tensor::zeros(vec![2, 3]);
+        let (t1, e1) = alloc_probe::snapshot();
+        assert!(t1 >= t0 + 1);
+        assert!(e1 >= e0 + 6);
     }
 }

@@ -9,12 +9,12 @@ use std::sync::{Arc, Mutex};
 use buddymoe::config::ModelConfig;
 use buddymoe::eval::{run_table, MethodSpec, TableSettings};
 use buddymoe::runtime::kernels::{self, naive};
-use buddymoe::runtime::{KernelMode, RefStages, StageRunner};
+use buddymoe::runtime::{KernelMode, KvSlices, RefStages, StageRunner};
 use buddymoe::testing::{forall, PropConfig};
 use buddymoe::util::clock::ClockMode;
 use buddymoe::util::par;
 use buddymoe::util::rng::Rng;
-use buddymoe::util::tensor::Tensor;
+use buddymoe::util::tensor::{Tensor, TensorView};
 use buddymoe::weights::{ExpertKey, WeightStore};
 
 /// `par::set_threads` is a process-global override and the test harness
@@ -169,18 +169,24 @@ fn stages_bitwise_equal_across_modes_and_threads() {
         assert_eq!(ka.data, kb.data, "prefill k, threads={threads}");
         assert_eq!(va.data, vb.data, "prefill v, threads={threads}");
 
-        // Decode attention (cached window + current token).
+        // Decode attention (cached window + current token), reading the
+        // per-sequence caches through the borrowed view.
         let bb = 4;
         let xd = Tensor::new(vec![bb, d], rv(bb * d)).unwrap();
-        let kc = Tensor::new(vec![bb, s, d], rv(bb * s * d)).unwrap();
-        let vc = Tensor::new(vec![bb, s, d], rv(bb * s * d)).unwrap();
+        let kcs: Vec<Tensor> =
+            (0..bb).map(|_| Tensor::new(vec![s, d], rv(s * d)).unwrap()).collect();
+        let vcs: Vec<Tensor> =
+            (0..bb).map(|_| Tensor::new(vec![s, d], rv(s * d)).unwrap()).collect();
+        let kr: Vec<&Tensor> = kcs.iter().collect();
+        let vr: Vec<&Tensor> = vcs.iter().collect();
+        let kv = KvSlices { k: &kr, v: &vr };
         let pm = Tensor::new(
             vec![bb, s],
             (0..bb * s).map(|i| if i % 3 == 0 { 0.0 } else { 1.0 }).collect(),
         )
         .unwrap();
-        let [ya, ka, va] = naive_st.attn_decode(1, bb, &xd, &kc, &vc, &pm).unwrap();
-        let [yb, kb, vb] = blocked.attn_decode(1, bb, &xd, &kc, &vc, &pm).unwrap();
+        let [ya, ka, va] = naive_st.attn_decode(1, bb, &xd, &kv, &pm).unwrap();
+        let [yb, kb, vb] = blocked.attn_decode(1, bb, &xd, &kv, &pm).unwrap();
         assert_eq!(ya.data, yb.data, "decode y, threads={threads}");
         assert_eq!(ka.data, kb.data, "decode k_new, threads={threads}");
         assert_eq!(va.data, vb.data, "decode v_new, threads={threads}");
@@ -193,11 +199,12 @@ fn stages_bitwise_equal_across_modes_and_threads() {
         assert_eq!(ha.data, hb.data, "router h, threads={threads}");
         assert_eq!(pa.data, pb.data, "router probs, threads={threads}");
 
-        // Expert FFN.
+        // Expert FFN (borrowed-view input).
         let w = store.expert(ExpertKey::new(0, 1)).unwrap();
         let h = Tensor::new(vec![t, d], rv(t * d)).unwrap();
-        let ea = naive_st.expert_transient(t, &w, &h).unwrap();
-        let eb = blocked.expert_transient(t, &w, &h).unwrap();
+        let hv = TensorView::from_tensor(&h);
+        let ea = naive_st.expert_transient(t, &w, &hv).unwrap();
+        let eb = blocked.expert_transient(t, &w, &hv).unwrap();
         assert_eq!(ea.data, eb.data, "expert ffn, threads={threads}");
 
         // LM head.
@@ -263,7 +270,7 @@ fn expert_residency_is_zero_copy() {
     // expert must not add or copy anything.
     assert_eq!(Arc::strong_count(&w), 3);
     let h = Tensor::zeros(vec![2, cfg.d_model]);
-    let _ = stages.expert_resident(2, key, &h).unwrap();
+    let _ = stages.expert_resident(2, key, &TensorView::from_tensor(&h)).unwrap();
     assert_eq!(
         Arc::strong_count(&w),
         3,

@@ -624,3 +624,42 @@ fn prop_drop_policy_weights_renormalize() {
         },
     );
 }
+
+// ---------------------------------------------------------------------
+// tensor views (PR 5)
+// ---------------------------------------------------------------------
+
+/// `TensorView` row access agrees with the owned `Tensor::row` across
+/// shapes, both for tensor-backed views and raw-slice (arena-scratch
+/// style) views with stack-held dims.
+#[test]
+fn prop_tensor_view_rows_match_owned() {
+    use buddymoe::util::tensor::{Tensor, TensorView};
+    forall(
+        PropConfig { cases: 150, seed: 71 },
+        |rng| {
+            let rows = rng.range(1, 24);
+            let w = rng.range(1, 48);
+            let data: Vec<f32> = (0..rows * w).map(|_| (rng.f32() - 0.5) * 8.0).collect();
+            (rows, w, data)
+        },
+        |(rows, w, data)| {
+            let t = Tensor::new(vec![*rows, *w], data.clone()).map_err(|e| e.to_string())?;
+            let v = TensorView::from_tensor(&t);
+            if v.rank() != t.rank() || v.len() != t.len() {
+                return Err("view shape disagrees with tensor".into());
+            }
+            let dims = [*rows, *w];
+            let raw = TensorView::new(&dims, data).map_err(|e| e.to_string())?;
+            for i in 0..*rows {
+                if v.row(i) != t.row(i) {
+                    return Err(format!("tensor-backed view row {i} differs"));
+                }
+                if raw.row(i) != t.row(i) {
+                    return Err(format!("raw-slice view row {i} differs"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
