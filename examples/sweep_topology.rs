@@ -1,9 +1,13 @@
-//! Tail latency vs. expert-parallel fleet size: sweep (device count ×
-//! miss policy) on the virtual clock at a fixed Poisson offered load and
-//! report per-device-count tail-latency rows. Multi-device cells run with
-//! ψ's κ hop penalty live, so buddy substitution is steered toward
-//! same-device buddies while demand misses fan out over per-device host
-//! links.
+//! Tail latency vs. expert-parallel fleet shape: sweep (device count ×
+//! peer topology × replication factor × arrival process × miss policy) on
+//! the virtual clock at a fixed offered load and report per-fleet-shape
+//! tail-latency rows. Multi-device cells run with ψ's κ hop penalty live,
+//! so buddy substitution is steered toward same-device buddies while
+//! demand misses fan out over per-device host links and cross-device
+//! dispatches queue on the contended peer links. Replicated cells
+//! (replication_factor > 1) deal the popularity-ranked hot experts to
+//! multiple homes — the p99 win under the bursty (MMPP) process is the
+//! acceptance row.
 //!
 //! Run: `cargo run --release --example sweep_topology [-- --fast]`
 //! Works with or without artifacts (synthetic-family fallback); emits
@@ -14,8 +18,10 @@ use std::path::Path;
 
 use anyhow::Result;
 use buddymoe::eval::{profile_model, warm_rank_from_profile, Domain};
+use buddymoe::topology::TopologyKind;
 use buddymoe::traffic::{
-    run_topology_sweep, topology_cells_json, topology_report_markdown, LoadSettings, TopologySweep,
+    run_topology_sweep, topology_cells_json, topology_report_markdown, LoadSettings, ProcessKind,
+    TopologySweep,
 };
 use buddymoe::util::json::{num, obj, s};
 
@@ -32,6 +38,9 @@ fn main() -> Result<()> {
 
     let spec = TopologySweep {
         device_counts: vec![1, 2, 4],
+        topologies: vec![TopologyKind::FullyConnected, TopologyKind::Ring],
+        replication_factors: vec![1, 2],
+        processes: vec![ProcessKind::Poisson, ProcessKind::Bursty],
         presets: vec!["original".into(), "buddy-rho3".into()],
         // Past the single-device knee, so per-device host links have
         // something to parallelize.

@@ -8,16 +8,19 @@
 //! time the candidate has already been picked for this token.
 //!
 //! Since the multi-device topology PR, hop(j) is *live*: it is derived
-//! from the expert→device placement as the peer-link distance between the
-//! missing pivot's home device and the candidate's home device —
-//! `Topology::hops(device_of[pivot], device_of[j])` — packaged per layer
-//! as a [`crate::topology::HopContext`] and handed to the substitution
-//! engine by `model::engine` whenever `ServingConfig::n_devices > 1`. A
-//! same-device buddy costs zero hops; a cross-device buddy pays κ per hop
-//! here *and* a peer-link activation round trip on the virtual clock (the
-//! engine's peer-dispatch accounting), so κ steers substitution toward
-//! same-device buddies for exactly the reason it exists in the paper. On
-//! one device every hop count is zero and ψ reduces to the original form.
+//! from the expert→device-set placement as the *nearest-replica* peer-link
+//! distance — the minimum of `Topology::hops(hp, hc)` over every pair of
+//! pivot home `hp` and candidate home `hc` — packaged per layer as a
+//! [`crate::topology::HopContext`] and handed to the substitution engine
+//! by `model::engine` whenever `ServingConfig::n_devices > 1`. A buddy
+//! with *any* replica on the pivot's device costs zero hops, so
+//! replicating a hot expert (replication_factor > 1) neutralizes its κ
+//! penalty fleet-wide; a buddy whose nearest replica is remote pays κ per
+//! hop here *and* a contended peer-link activation round trip on the
+//! virtual clock (the engine's peer-dispatch accounting), so κ steers
+//! substitution toward locally-resident buddies for exactly the reason it
+//! exists in the paper. On one device every hop count is zero and ψ
+//! reduces to the original form.
 
 #[derive(Debug, Clone, Copy)]
 pub struct PsiParams {

@@ -64,7 +64,8 @@ pub struct SubstitutionEngine<'a> {
     /// Per-token replacement budget ρ (None = unlimited).
     pub rho: Option<usize>,
     /// Pivot-relative cross-device hop counts for ψ's κ penalty, derived
-    /// from the expert→device placement (see `crate::topology`). `None`
+    /// from the expert→device-set placement and scored against each
+    /// candidate's *nearest replica* (see `crate::topology`). `None`
     /// on a single GPU, where every hop count is zero.
     pub topo: Option<HopContext<'a>>,
 }
@@ -543,9 +544,11 @@ mod tests {
         let p = equal_q_profile();
         let mut eng = engine(&p);
         eng.psi_params.kappa = 0.5;
-        let device_of = [0usize, 1, 0, 0, 0, 1]; // 2-way striping-ish
+        // 2-way striping-ish: single-homed experts.
+        let homes: Vec<Vec<usize>> =
+            vec![vec![0], vec![1], vec![0], vec![0], vec![0], vec![1]];
         let hop_matrix = vec![vec![0usize, 1], vec![1, 0]];
-        eng.topo = Some(HopContext { device_of: &device_of, hop_matrix: &hop_matrix });
+        eng.topo = Some(HopContext { homes: &homes, hop_matrix: &hop_matrix });
         let residency = [false, true, true, true, true, true];
         let mut toks = vec![diffuse_token(vec![0, 4])];
         let mut c = Counters::new();
@@ -562,15 +565,42 @@ mod tests {
     }
 
     #[test]
+    fn kappa_sees_replicas_as_local() {
+        // Same scenario, but the cross-device rank-1 buddy now has a
+        // replica on the pivot's device: its nearest-replica hop count is
+        // 0, so κ no longer penalizes it and rank order decides again.
+        let p = equal_q_profile();
+        let mut eng = engine(&p);
+        eng.psi_params.kappa = 0.5;
+        let homes: Vec<Vec<usize>> =
+            vec![vec![0], vec![1, 0], vec![0], vec![0], vec![0], vec![1]];
+        let hop_matrix = vec![vec![0usize, 1], vec![1, 0]];
+        eng.topo = Some(HopContext { homes: &homes, hop_matrix: &hop_matrix });
+        let residency = [false, true, true, true, true, true];
+        let mut toks = vec![diffuse_token(vec![0, 4])];
+        let mut c = Counters::new();
+        let mut rng = Rng::new(1);
+        let (dec, _) = eng.apply(
+            0, &mut toks, &residency, MissPolicy::Buddy, None, &mut c, &mut rng,
+        );
+        assert_eq!(
+            dec[0][0],
+            SlotDecision::Substitute { to: 1, rank: 1 },
+            "a local replica must neutralize the κ penalty"
+        );
+    }
+
+    #[test]
     fn without_kappa_cross_device_tie_keeps_rank_order() {
         // Control for the test above: κ = 0 leaves ψ topology-blind, so
         // the rank-1 (cross-device) buddy wins the q tie.
         let p = equal_q_profile();
         let mut eng = engine(&p);
         eng.psi_params.kappa = 0.0;
-        let device_of = [0usize, 1, 0, 0, 0, 1];
+        let homes: Vec<Vec<usize>> =
+            vec![vec![0], vec![1], vec![0], vec![0], vec![0], vec![1]];
         let hop_matrix = vec![vec![0usize, 1], vec![1, 0]];
-        eng.topo = Some(HopContext { device_of: &device_of, hop_matrix: &hop_matrix });
+        eng.topo = Some(HopContext { homes: &homes, hop_matrix: &hop_matrix });
         let residency = [false, true, true, true, true, true];
         let mut toks = vec![diffuse_token(vec![0, 4])];
         let mut c = Counters::new();

@@ -106,6 +106,18 @@ pub struct ServingConfig {
     pub peer_bandwidth: f64,
     /// Peer link per-hop base latency, seconds.
     pub peer_base_latency: f64,
+    /// Home-set width intent for popularity-hot experts: the top-R ranked
+    /// experts per layer are dealt to `min(R, n_devices)` home devices
+    /// each, so hot dispatches stay local. 1 (the default) keeps every
+    /// expert single-homed and is byte-identical to the pre-replication
+    /// system. Replicas consume real cache slots out of the same budget.
+    pub replication_factor: usize,
+    /// Decode steps between online re-placement passes: the engine reads
+    /// live per-expert use counters and promotes/demotes replicas as the
+    /// traffic mix drifts, charging promotions as real peer transfers.
+    /// 0 disables online re-placement; only active when
+    /// `replication_factor > 1` on a multi-device fleet.
+    pub replan_interval_steps: usize,
     pub miss_policy: MissPolicy,
     pub prefetch: PrefetchKind,
     /// Oracle prefetcher false-negative rate (Table 1 harness only).
@@ -170,6 +182,8 @@ impl Default for ServingConfig {
             // a peer hop costs ~µs where a host fetch costs ~10 ms.
             peer_bandwidth: 64e9,
             peer_base_latency: 3e-6,
+            replication_factor: 1,
+            replan_interval_steps: 32,
             miss_policy: MissPolicy::Buddy,
             prefetch: PrefetchKind::TopFreq,
             oracle_miss_rate: 0.0,
@@ -231,6 +245,9 @@ impl ServingConfig {
         }
         if !(self.peer_base_latency.is_finite() && self.peer_base_latency >= 0.0) {
             bail!("peer_base_latency must be finite and non-negative");
+        }
+        if self.replication_factor == 0 {
+            bail!("replication_factor must be >= 1");
         }
         if !(self.kappa.is_finite() && self.kappa >= 0.0) {
             bail!("kappa must be finite and non-negative");
@@ -362,6 +379,10 @@ mod tests {
         c.n_devices = 4;
         c.validate().unwrap();
         c.n_devices = 0;
+        assert!(c.validate().is_err());
+        let mut c = ServingConfig::default();
+        assert_eq!(c.replication_factor, 1, "single-homed is the default");
+        c.replication_factor = 0;
         assert!(c.validate().is_err());
         let mut c = ServingConfig::default();
         c.peer_bandwidth = 0.0;

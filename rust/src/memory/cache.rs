@@ -131,6 +131,12 @@ impl ExpertCache {
             .count()
     }
 
+    /// Total routing hits recorded for one expert (live telemetry the
+    /// online re-placement task ranks hot experts by).
+    pub fn use_count(&self, k: ExpertKey) -> u64 {
+        self.slots[self.idx(k)].uses
+    }
+
     /// Record a use (routing hit) for recency/frequency bookkeeping.
     pub fn mark_use(&mut self, k: ExpertKey) {
         self.clock += 1;
@@ -167,13 +173,23 @@ impl ExpertCache {
     /// selected by the eviction policy, demoted to Cpu, and reported so the
     /// engine can drop its device buffers.
     pub fn request_load(&mut self, k: ExpertKey) -> LoadDecision {
+        self.request_load_protected(k, &[])
+    }
+
+    /// [`Self::request_load`] with an eviction shield: experts whose index
+    /// is `true` in `protected` are never selected as victims (the fleet
+    /// passes the replication-intent mask here, so a replica below its
+    /// placement's home-set width cannot be evicted out from under it;
+    /// only the sanctioned re-placement demotion path removes replicas).
+    /// An empty mask protects nothing.
+    pub fn request_load_protected(&mut self, k: ExpertKey, protected: &[bool]) -> LoadDecision {
         match self.state(k) {
             SlotState::Gpu => return LoadDecision::AlreadyGpu,
             SlotState::Loading => return LoadDecision::AlreadyLoading,
             SlotState::Cpu => {}
         }
         let evicted = if self.occupied(k.layer) >= self.capacity_per_layer {
-            match self.select_victim(k.layer) {
+            match self.select_victim(k.layer, protected) {
                 Some(v) => {
                     let vi = self.idx(v);
                     self.slots[vi].state = SlotState::Cpu;
@@ -231,12 +247,15 @@ impl ExpertCache {
         Ok(())
     }
 
-    fn select_victim(&self, layer: usize) -> Option<ExpertKey> {
+    fn select_victim(&self, layer: usize, protected: &[bool]) -> Option<ExpertKey> {
         let mut best: Option<(f64, ExpertKey)> = None;
         for e in 0..self.n_experts {
             let k = ExpertKey::new(layer, e);
             let s = &self.slots[self.idx(k)];
             if s.state != SlotState::Gpu || s.pins > 0 {
+                continue;
+            }
+            if protected.get(e).copied().unwrap_or(false) {
                 continue;
             }
             // Lower score = better victim.
@@ -364,6 +383,40 @@ mod tests {
         c.complete_load(k(0, 0));
         assert!(c.admit(k(0, 2)).is_err(), "still full once the load lands");
         assert_eq!(c.gpu_count(0), 2);
+    }
+
+    #[test]
+    fn protected_experts_never_selected_as_victims() {
+        let mut c = cache(2);
+        c.admit(k(0, 0)).unwrap();
+        c.admit(k(0, 1)).unwrap();
+        c.mark_use(k(0, 1));
+        c.mark_use(k(0, 0)); // 1 is LRU and would normally be the victim
+        let protected = vec![false, true, false, false];
+        match c.request_load_protected(k(0, 2), &protected) {
+            LoadDecision::StartLoad { evicted: Some(v) } => {
+                assert_eq!(v, k(0, 0), "shielded LRU slot must be skipped");
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(c.is_gpu(k(0, 1)));
+        // With every resident slot shielded there is no victim at all.
+        let mut c = cache(1);
+        c.admit(k(0, 0)).unwrap();
+        assert_eq!(
+            c.request_load_protected(k(0, 1), &[true, false, false, false]),
+            LoadDecision::NoRoom
+        );
+    }
+
+    #[test]
+    fn use_count_tracks_hits() {
+        let mut c = cache(2);
+        c.admit(k(0, 0)).unwrap();
+        assert_eq!(c.use_count(k(0, 0)), 0);
+        c.mark_use(k(0, 0));
+        c.mark_use(k(0, 0));
+        assert_eq!(c.use_count(k(0, 0)), 2);
     }
 
     #[test]

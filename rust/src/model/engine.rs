@@ -116,6 +116,8 @@ pub struct Engine {
     pub profile_out: Option<ProfileCollector>,
     rng: Rng,
     next_seq_id: u64,
+    /// Decode steps since the last online re-placement pass.
+    steps_since_replan: usize,
     /// Pooled per-step staging (decode hot path).
     step_scratch: StepScratch,
     /// Pooled per-expert-group gather+pad staging for `run_moe`.
@@ -166,13 +168,23 @@ impl Engine {
             .collect();
 
         let warm_rank = warm_rank.unwrap_or_else(|| Self::bias_rank(&cfg, &store));
-        let placement =
-            Placement::build(scfg.placement, cfg.n_layers, cfg.n_experts, n_dev, Some(&warm_rank));
+        let placement = Placement::build(
+            scfg.placement,
+            cfg.n_layers,
+            cfg.n_experts,
+            n_dev,
+            Some(&warm_rank),
+            scfg.replication_factor,
+        );
         let topology = Topology::new(n_dev, scfg.topology);
         // Warm each device with its share of the most popular experts: walk
-        // the rank list, admitting every expert at its home device while
-        // that device has room. With one device this admits exactly the
-        // top-`capacity` experts in rank order, as before.
+        // the rank list, admitting every expert at each of its home devices
+        // while those devices have room. Replica copies spend the same
+        // shared per-layer budget as everything else — replication trades
+        // unique residents for locality, it does not grow memory. With one
+        // device (or replication_factor 1, where every home set is a
+        // singleton) this admits exactly the top-`capacity` experts in
+        // rank order, as before.
         for (l, ranked) in warm_rank.iter().enumerate() {
             let mut admitted = 0usize;
             for &e in ranked.iter() {
@@ -180,14 +192,22 @@ impl Engine {
                     break;
                 }
                 let key = ExpertKey::new(l, e);
-                let d = placement.device_of(key);
-                if caches[d].gpu_count(l) >= caches[d].capacity_per_layer() {
-                    continue;
+                let mut copies = 0usize;
+                for &d in placement.homes(key) {
+                    if admitted + copies >= capacity {
+                        break;
+                    }
+                    if caches[d].gpu_count(l) >= caches[d].capacity_per_layer() {
+                        continue;
+                    }
+                    caches[d].admit(key).context("cache warm-up")?;
+                    copies += 1;
                 }
-                caches[d].admit(key).context("cache warm-up")?;
-                let w = store.expert(key)?;
-                stages.admit_expert(key, &w)?;
-                admitted += 1;
+                if copies > 0 {
+                    let w = store.expert(key)?;
+                    stages.admit_expert(key, &w)?;
+                }
+                admitted += copies;
             }
         }
         log::info!(
@@ -198,10 +218,12 @@ impl Engine {
         );
         if n_dev > 1 {
             log::info!(
-                "expert-parallel fleet: {} devices ({} topology, {} placement)",
+                "expert-parallel fleet: {} devices ({} topology, {} placement, \
+                 replication_factor {})",
                 n_dev,
                 scfg.topology.name(),
-                scfg.placement.name()
+                placement.label(),
+                scfg.replication_factor
             );
         }
 
@@ -215,6 +237,7 @@ impl Engine {
         let transfer = TransferEngine::spawn_multi(
             caches.into_iter().zip(links).collect(),
             peer,
+            topology,
             placement.clone(),
             store.clone(),
             clock.clone(),
@@ -272,6 +295,7 @@ impl Engine {
             counters: Counters::new(),
             profile_out,
             next_seq_id: 0,
+            steps_since_replan: 0,
             step_scratch: StepScratch::default(),
             arena: Arena::new(),
         })
@@ -341,6 +365,13 @@ impl Engine {
 
     pub fn transfer_handle(&self) -> &TransferHandle {
         &self.transfer
+    }
+
+    /// The live expert→device-set placement (reflects online re-placement,
+    /// including its fallback flag — sweep reports read it *after* the run
+    /// so they can't mislabel a silently-degraded placement).
+    pub fn placement(&self) -> &Placement {
+        &self.placement
     }
 
     /// The engine's time source (shared with the transfer engine, batcher,
@@ -464,7 +495,105 @@ impl Engine {
         }
         self.counters.inc("decode_steps");
         self.counters.add("decode_tokens", b as u64);
+        self.maybe_replan();
         Ok(tel)
+    }
+
+    /// Online re-placement cadence: every `replan_interval_steps` decode
+    /// steps (when replication is enabled on a multi-device fleet), re-rank
+    /// experts by live routing telemetry and promote/demote replicas.
+    fn maybe_replan(&mut self) {
+        if self.scfg.replication_factor <= 1
+            || self.scfg.n_devices <= 1
+            || self.scfg.replan_interval_steps == 0
+        {
+            return;
+        }
+        self.steps_since_replan += 1;
+        if self.steps_since_replan < self.scfg.replan_interval_steps {
+            return;
+        }
+        self.steps_since_replan = 0;
+        self.replan_replicas();
+    }
+
+    /// One re-placement pass. Per layer: rank experts by their live use
+    /// counters (the primary-home cache sees every routing hit), take the
+    /// top `replication_factor` as the hot set, then promote newly-hot
+    /// experts to `min(replication_factor, n_devices)` homes and demote
+    /// replicas that fell out of the hot set. Promotions copy weights
+    /// device→device over the contended peer links as real asynchronous
+    /// transfers; a promotion that finds no evictable slot is skipped and
+    /// counted (`replica_promote_noroom`), never silently retried.
+    fn replan_replicas(&mut self) {
+        let n_exp = self.cfg.n_experts;
+        let n_dev = self.scfg.n_devices;
+        let r = self.scfg.replication_factor.min(n_exp);
+        let width = self.scfg.replication_factor.min(n_dev);
+        for l in 0..self.cfg.n_layers {
+            let uses: Vec<u64> = self.transfer.with_state(|st| {
+                (0..n_exp)
+                    .map(|e| {
+                        let k = ExpertKey::new(l, e);
+                        st.devices[st.home(k)].cache.use_count(k)
+                    })
+                    .collect()
+            });
+            let mut rank: Vec<usize> = (0..n_exp).collect();
+            rank.sort_by(|&a, &b| uses[b].cmp(&uses[a]).then(a.cmp(&b)));
+            let hot: BTreeSet<usize> = rank[..r].iter().copied().collect();
+            for e in 0..n_exp {
+                let key = ExpertKey::new(l, e);
+                let cur = self.placement.homes(key).to_vec();
+                if hot.contains(&e) && cur.len() < width {
+                    // Promote: copy the primary's replica to the next
+                    // devices round the id space, skipping existing homes.
+                    let primary = cur[0];
+                    let mut homes = cur.clone();
+                    for j in 1..n_dev {
+                        if homes.len() >= width {
+                            break;
+                        }
+                        let d = (primary + j) % n_dev;
+                        if homes.contains(&d) {
+                            continue;
+                        }
+                        if self.transfer.replica_promote(key, primary, d) {
+                            homes.push(d);
+                            self.counters.inc("replica_promotions");
+                        } else {
+                            self.counters.inc("replica_promote_noroom");
+                        }
+                    }
+                    if homes.len() > cur.len() {
+                        self.set_homes(key, homes);
+                    }
+                } else if !hot.contains(&e) && cur.len() > 1 {
+                    // Demote: shrink back to the primary home. A copy that
+                    // cannot be dropped yet (pinned / host-loading) keeps
+                    // its home and is retried next pass.
+                    let mut homes = vec![cur[0]];
+                    for &d in &cur[1..] {
+                        if self.transfer.replica_demote(key, d) {
+                            self.counters.inc("replica_demotions");
+                        } else {
+                            homes.push(d);
+                        }
+                    }
+                    if homes.len() < cur.len() {
+                        self.set_homes(key, homes);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Update an expert's home set in both placement copies (the engine's
+    /// and the transfer fleet's — they must agree, since routing decisions
+    /// happen on both sides of the lock).
+    fn set_homes(&mut self, key: ExpertKey, homes: Vec<usize>) {
+        self.placement.set_homes(key, homes.clone());
+        self.transfer.with_state(|st| st.placement.set_homes(key, homes));
     }
 
     /// The fallible stage pipeline of one decode step: embed → per-layer
@@ -612,9 +741,10 @@ impl Engine {
             eng.search_h = self.scfg.search_h;
             eng.rho = self.scfg.rho;
             if multi_device {
-                // Real placement-derived hop counts: ψ's κ term goes live.
+                // Real placement-derived hop counts: ψ's κ term goes live,
+                // scoring each candidate against its *nearest* replica.
                 eng.topo = Some(HopContext {
-                    device_of: self.placement.layer_devices(l),
+                    homes: self.placement.layer_homes(l),
                     hop_matrix: &self.hop_matrix,
                 });
             }
@@ -653,22 +783,29 @@ impl Engine {
 
         // Cross-device substitutions pay the peer interconnect: dispatching
         // a token to a buddy homed on another device adds unplanned
-        // all-to-all hops (one activation row each way per hop crossed).
-        // Same-device buddies are free — exactly what κ steers toward.
+        // all-to-all hops (one activation row each way per hop crossed),
+        // routed between the *nearest* replica pair and queued on the
+        // serialized peer links. Same-device buddies (including same-device
+        // replicas) are free — exactly what κ steers toward.
         if multi_device && !sub_events.is_empty() {
-            let devs = self.placement.layer_devices(l);
+            let ctx = HopContext {
+                homes: self.placement.layer_homes(l),
+                hop_matrix: &self.hop_matrix,
+            };
+            let mut routes: Vec<(usize, usize)> = Vec::new();
             let mut hop_total = 0usize;
             let mut crossed = 0u64;
             for ev in &sub_events {
-                let hop = self.hop_matrix[devs[ev.from]][devs[ev.to]];
+                let (from, to, hop) = ctx.route(ev.from, ev.to);
                 if hop > 0 {
                     hop_total += hop;
                     crossed += 1;
+                    routes.push((from, to));
                 }
             }
             if hop_total > 0 {
                 let bytes = 2 * self.cfg.d_model * std::mem::size_of::<f32>();
-                self.transfer.peer_dispatch(bytes, hop_total);
+                self.transfer.peer_dispatch_routes(bytes, &routes);
                 self.counters.add("cross_device_subs", crossed);
                 self.counters.add("peer_hops", hop_total as u64);
                 tel.peer_hops += hop_total as u64;
@@ -818,11 +955,21 @@ impl Engine {
         Ok(out)
     }
 
-    /// Mirror cache arrivals/evictions into device buffers.
+    /// Mirror cache arrivals/evictions into device buffers. With
+    /// replication an eviction on one device can leave another replica
+    /// resident; the stage buffer must survive then (the simulated devices
+    /// share one stage-buffer namespace).
     fn sync_device_buffers(&mut self) -> Result<()> {
         let evictions = self.transfer.drain_evictions();
-        for key in evictions {
-            self.stages.evict_expert(key);
+        if !evictions.is_empty() {
+            let keep: Vec<bool> = self
+                .transfer
+                .with_state(|st| evictions.iter().map(|&k| st.is_gpu(k)).collect());
+            for (key, keep) in evictions.into_iter().zip(keep) {
+                if !keep {
+                    self.stages.evict_expert(key);
+                }
+            }
         }
         let arrivals = self.transfer.drain_arrivals();
         for (key, w) in arrivals {

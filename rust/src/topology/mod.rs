@@ -1,5 +1,5 @@
 //! Multi-GPU expert-parallel topology: the simulated device graph and the
-//! expert→device placement map.
+//! expert→device-set placement map.
 //!
 //! The paper's buddy score ψ carries a topology term `(1 − κ·hop(j))⁺`
 //! (Eq. 3): substituting a missing expert with a buddy that lives on a
@@ -12,33 +12,45 @@
 //!   (hop count = ring distance). Every GPU also has its own host link
 //!   (PCIe-class: the slow path every demand miss pays). Both links live
 //!   on the PR-1 virtual clock via [`crate::memory::PcieSim`] cost models.
-//! * [`Placement`] — the expert→device map. An expert's *home* device is
-//!   where it is cached and where its FFN runs; misses are fetched from
-//!   host over the home device's own serialized link (see
-//!   [`crate::memory::TransferEngine`]).
+//!   The peer interconnect is a *contended* resource: the fully connected
+//!   fabric is one serialized link, a ring is one serialized link per
+//!   edge, and [`Topology::peer_path`] maps a device pair to the links a
+//!   dispatch crosses in order (FIFO busy-until queuing lives in
+//!   [`crate::memory::TransferEngine`]'s `PeerLink` state).
+//! * [`Placement`] — the expert→device-set map. Each expert has one or
+//!   more *home* devices where it may be cached and executed; the first
+//!   home is the *primary* (demand fetches and prefetches land there).
+//!   With a `replication_factor` r > 1, the top-r popularity-ranked
+//!   experts per layer are dealt to `min(r, n_devices)` homes each, so
+//!   hot dispatches stay local. Misses are fetched from host over the
+//!   primary home's own serialized link.
 //!
 //! ## How hop counts are derived from placement
 //!
-//! For a layer `l`, `Placement` fixes `device_of[e]` for every expert.
-//! When the substitution engine weighs a candidate buddy `j` for a missing
-//! pivot `i`, the hop count fed into ψ is
+//! For a layer `l`, `Placement` fixes a home set `homes[e]` for every
+//! expert. When the substitution engine weighs a candidate buddy `j` for
+//! a missing pivot `i`, the hop count fed into ψ is the distance between
+//! the *nearest replica pair*:
 //!
 //! ```text
-//! hop(j | i) = Topology::hops(device_of[i], device_of[j])
+//! hop(j | i) = min over (a in homes[i], b in homes[j]) of Topology::hops(a, b)
 //! ```
 //!
-//! i.e. the peer-link distance between the device that *would have* run
-//! the pivot and the device that will run the buddy. A same-device buddy
+//! i.e. the shortest peer-link distance from any device that *would have*
+//! run the pivot to any device holding the buddy. A same-device replica
 //! costs zero hops (the dispatch was already in the all-to-all schedule);
 //! a cross-device buddy pays one peer round trip per hop, which the engine
-//! charges on the virtual clock ([`crate::model::Engine`]'s peer-dispatch
-//! accounting) and which κ penalizes inside ψ so substitution is steered
-//! toward same-device buddies. [`HopContext`] packages exactly this
-//! lookup for `SubstitutionEngine`.
+//! charges on the contended peer links of the virtual clock
+//! ([`crate::model::Engine`]'s peer-dispatch accounting) and which κ
+//! penalizes inside ψ so substitution is steered toward the nearest
+//! replica. [`HopContext`] packages exactly this lookup (and the
+//! arg-min device pair, for routing the charged dispatch) for
+//! `SubstitutionEngine`.
 //!
-//! With `n_devices = 1` every hop count is zero, the peer link is never
-//! touched, and the whole subsystem degenerates byte-identically to the
-//! single-GPU configuration (golden-tested).
+//! With `n_devices = 1` or `replication_factor = 1` every home set is a
+//! singleton, every hop lookup degenerates to the single-home distance,
+//! the peer links are never touched, and the whole subsystem degenerates
+//! byte-identically to the single-GPU configuration (golden-tested).
 
 use anyhow::{bail, Result};
 
@@ -114,6 +126,59 @@ impl Topology {
             .map(|a| (0..self.n_devices).map(|b| self.hops(a, b)).collect())
             .collect()
     }
+
+    /// Number of serialized peer links: the fully connected fabric is one
+    /// shared link (NVSwitch-style); a ring has one link per edge (edge
+    /// `i` connects device `i` and `i+1 mod n`; a 2-ring has one edge).
+    pub fn n_peer_links(&self) -> usize {
+        match self.kind {
+            TopologyKind::FullyConnected => 1,
+            TopologyKind::Ring => {
+                if self.n_devices >= 3 {
+                    self.n_devices
+                } else {
+                    1
+                }
+            }
+        }
+    }
+
+    /// The serialized peer links a dispatch from `a` to `b` crosses, in
+    /// traversal order (empty when `a == b`). Fully connected: one
+    /// traversal of the shared fabric per hop. Ring: the edges of the
+    /// shorter arc, ties broken toward ascending device ids so the path
+    /// is deterministic.
+    pub fn peer_path(&self, a: usize, b: usize) -> Vec<usize> {
+        debug_assert!(a < self.n_devices && b < self.n_devices);
+        if a == b {
+            return Vec::new();
+        }
+        match self.kind {
+            TopologyKind::FullyConnected => vec![0; self.hops(a, b)],
+            TopologyKind::Ring => {
+                let n = self.n_devices;
+                if n == 2 {
+                    return vec![0];
+                }
+                let fwd = (b + n - a) % n;
+                let bwd = (a + n - b) % n;
+                let mut path = Vec::new();
+                let mut cur = a;
+                if fwd <= bwd {
+                    for _ in 0..fwd {
+                        path.push(cur); // edge cur -> cur+1 has id cur
+                        cur = (cur + 1) % n;
+                    }
+                } else {
+                    for _ in 0..bwd {
+                        cur = (cur + n - 1) % n;
+                        path.push(cur); // edge cur <- cur+1 has id cur
+                    }
+                }
+                path
+            }
+        }
+    }
 }
 
 /// Expert→device placement strategy.
@@ -127,7 +192,9 @@ pub enum PlacementKind {
     /// Profile-aware: experts are ranked by profiled popularity per layer
     /// and dealt round-robin in descending rank, so every device gets an
     /// equal share of the hot experts (falls back to striping when no
-    /// popularity ranking is available).
+    /// popularity ranking is available — the fallback is logged and
+    /// carried on [`Placement::fallback`] so reports cannot mislabel the
+    /// placement actually used).
     Popularity,
 }
 
@@ -148,15 +215,25 @@ impl PlacementKind {
     }
 }
 
-/// The expert→device map: each expert has one *home* device where it is
-/// cached and executed.
+/// The expert→device-set map: each expert has one or more *home* devices
+/// where it may be cached and executed. The first home is the primary
+/// (demand fetches and prefetches target it); extra homes are replicas of
+/// popularity-hot experts.
 #[derive(Debug, Clone)]
 pub struct Placement {
     n_layers: usize,
     n_experts: usize,
     n_devices: usize,
-    /// [layer * n_experts + expert] -> device.
-    device_of: Vec<usize>,
+    /// [layer * n_experts + expert] -> home device set, primary first.
+    homes: Vec<Vec<usize>>,
+    kind: PlacementKind,
+    /// Popularity placement was requested but no profiled rank was
+    /// available, so the striped fallback was used.
+    fallback: bool,
+    /// Any expert currently has more than one home (sticky: stays true
+    /// once replication has ever been active, which only costs a cheap
+    /// mask computation on the eviction path).
+    replicated: bool,
 }
 
 impl Placement {
@@ -166,41 +243,84 @@ impl Placement {
             n_layers,
             n_experts,
             n_devices: 1,
-            device_of: vec![0; n_layers * n_experts],
+            homes: vec![vec![0]; n_layers * n_experts],
+            kind: PlacementKind::LayerStriped,
+            fallback: false,
+            replicated: false,
         }
     }
 
     /// Build a placement. `popularity_rank` is the per-layer expert list
     /// in descending popularity (the engine's warm rank); it is required
-    /// for [`PlacementKind::Popularity`] to differ from striping.
+    /// for [`PlacementKind::Popularity`] to differ from striping and for
+    /// `replication_factor > 1` to pick the hot set. With
+    /// `replication_factor = r > 1` the top-r ranked experts per layer
+    /// are dealt to `min(r, n_devices)` homes each (primary first, then
+    /// the next devices round the id space).
     pub fn build(
         kind: PlacementKind,
         n_layers: usize,
         n_experts: usize,
         n_devices: usize,
         popularity_rank: Option<&[Vec<usize>]>,
+        replication_factor: usize,
     ) -> Self {
         assert!(n_devices >= 1, "placement needs >= 1 device");
-        let mut device_of = vec![0; n_layers * n_experts];
+        assert!(replication_factor >= 1, "replication_factor must be >= 1");
+        let mut homes = vec![vec![0usize]; n_layers * n_experts];
+        let mut fallback = false;
         if n_devices > 1 {
             match (kind, popularity_rank) {
                 (PlacementKind::Popularity, Some(ranked)) => {
                     for l in 0..n_layers {
                         for (r, &e) in ranked[l].iter().enumerate() {
-                            device_of[l * n_experts + e] = r % n_devices;
+                            homes[l * n_experts + e][0] = r % n_devices;
                         }
                     }
                 }
-                _ => {
-                    for l in 0..n_layers {
-                        for e in 0..n_experts {
-                            device_of[l * n_experts + e] = (e + l) % n_devices;
-                        }
-                    }
+                (PlacementKind::Popularity, None) => {
+                    log::warn!(
+                        "popularity placement requested but no profiled rank is \
+                         available; falling back to layer striping"
+                    );
+                    fallback = true;
+                    Self::stripe(&mut homes, n_layers, n_experts, n_devices);
                 }
+                _ => Self::stripe(&mut homes, n_layers, n_experts, n_devices),
             }
         }
-        Self { n_layers, n_experts, n_devices, device_of }
+        let width = replication_factor.min(n_devices);
+        let mut replicated = false;
+        if width > 1 {
+            match popularity_rank {
+                Some(ranked) => {
+                    let hot_n = replication_factor.min(n_experts);
+                    for l in 0..n_layers {
+                        for &e in ranked[l].iter().take(hot_n) {
+                            let h = &mut homes[l * n_experts + e];
+                            let primary = h[0];
+                            for j in 1..width {
+                                h.push((primary + j) % n_devices);
+                            }
+                            replicated = true;
+                        }
+                    }
+                }
+                None => log::warn!(
+                    "replication_factor {replication_factor} requested but no \
+                     popularity rank is available; experts stay single-homed"
+                ),
+            }
+        }
+        Self { n_layers, n_experts, n_devices, homes, kind, fallback, replicated }
+    }
+
+    fn stripe(homes: &mut [Vec<usize>], n_layers: usize, n_experts: usize, n_devices: usize) {
+        for l in 0..n_layers {
+            for e in 0..n_experts {
+                homes[l * n_experts + e][0] = (e + l) % n_devices;
+            }
+        }
     }
 
     pub fn n_layers(&self) -> usize {
@@ -215,39 +335,105 @@ impl Placement {
         self.n_devices
     }
 
-    /// Home device of an expert.
-    pub fn device_of(&self, k: ExpertKey) -> usize {
+    fn idx(&self, k: ExpertKey) -> usize {
         debug_assert!(k.layer < self.n_layers && k.expert < self.n_experts);
-        self.device_of[k.layer * self.n_experts + k.expert]
+        k.layer * self.n_experts + k.expert
     }
 
-    /// One layer's expert→device slice (indexed by expert id) — the form
+    /// Primary home device of an expert (demand fetches land here).
+    pub fn device_of(&self, k: ExpertKey) -> usize {
+        self.homes[self.idx(k)][0]
+    }
+
+    /// Full home set of an expert, primary first.
+    pub fn homes(&self, k: ExpertKey) -> &[usize] {
+        &self.homes[self.idx(k)]
+    }
+
+    /// Number of home devices of an expert (its replication intent).
+    pub fn replication_of(&self, k: ExpertKey) -> usize {
+        self.homes[self.idx(k)].len()
+    }
+
+    /// One layer's per-expert home sets (indexed by expert id) — the form
     /// [`HopContext`] consumes.
-    pub fn layer_devices(&self, layer: usize) -> &[usize] {
-        &self.device_of[layer * self.n_experts..(layer + 1) * self.n_experts]
+    pub fn layer_homes(&self, layer: usize) -> &[Vec<usize>] {
+        &self.homes[layer * self.n_experts..(layer + 1) * self.n_experts]
     }
 
-    /// How many of a layer's experts live on `device`.
+    /// Replace an expert's home set (online re-placement). The primary
+    /// home must be preserved as the first entry; the set must be
+    /// non-empty and within the fleet.
+    pub fn set_homes(&mut self, k: ExpertKey, homes: Vec<usize>) {
+        assert!(!homes.is_empty(), "an expert needs at least one home");
+        debug_assert!(homes.iter().all(|&d| d < self.n_devices));
+        if homes.len() > 1 {
+            self.replicated = true;
+        }
+        let i = self.idx(k);
+        self.homes[i] = homes;
+    }
+
+    /// How many of a layer's experts have `device` among their homes.
     pub fn experts_on(&self, layer: usize, device: usize) -> usize {
-        self.layer_devices(layer).iter().filter(|&&d| d == device).count()
+        self.layer_homes(layer).iter().filter(|h| h.contains(&device)).count()
+    }
+
+    /// Whether any expert has (ever had) more than one home.
+    pub fn is_replicated(&self) -> bool {
+        self.replicated
+    }
+
+    /// Whether popularity placement silently degraded to striping.
+    pub fn fallback(&self) -> bool {
+        self.fallback
+    }
+
+    /// Human-readable placement label for reports: the kind actually in
+    /// effect, with the fallback made visible.
+    pub fn label(&self) -> String {
+        if self.fallback {
+            format!("{}:striped-fallback", self.kind.name())
+        } else {
+            self.kind.name().to_string()
+        }
     }
 }
 
 /// Pivot-relative hop lookup for one layer, fed into the substitution
-/// engine so ψ's κ term sees real placement-derived hop counts (see the
-/// module docs for the derivation).
+/// engine so ψ's κ term sees real placement-derived hop counts scored
+/// against the *nearest replica* (see the module docs for the
+/// derivation).
 #[derive(Debug, Clone, Copy)]
 pub struct HopContext<'a> {
-    /// This layer's expert→device map ([`Placement::layer_devices`]).
-    pub device_of: &'a [usize],
+    /// This layer's per-expert home device sets ([`Placement::layer_homes`]).
+    pub homes: &'a [Vec<usize>],
     /// Device×device hop matrix ([`Topology::hop_matrix`]).
     pub hop_matrix: &'a [Vec<usize>],
 }
 
 impl HopContext<'_> {
-    /// Peer hops from the missing pivot's home device to the candidate's.
+    /// Peer hops between the nearest (pivot replica, candidate replica)
+    /// device pair.
     pub fn hops(&self, pivot: usize, cand: usize) -> usize {
-        self.hop_matrix[self.device_of[pivot]][self.device_of[cand]]
+        self.route(pivot, cand).2
+    }
+
+    /// The `(from_device, to_device, hops)` pair minimizing the hop count
+    /// over both experts' home sets — the route the engine charges on the
+    /// peer links. Ties break toward the first-listed homes (primary
+    /// first), so the choice is deterministic.
+    pub fn route(&self, pivot: usize, cand: usize) -> (usize, usize, usize) {
+        let mut best: Option<(usize, usize, usize)> = None;
+        for &a in &self.homes[pivot] {
+            for &b in &self.homes[cand] {
+                let h = self.hop_matrix[a][b];
+                if best.map(|(_, _, bh)| h < bh).unwrap_or(true) {
+                    best = Some((a, b, h));
+                }
+            }
+        }
+        best.expect("every expert has at least one home")
     }
 }
 
@@ -274,19 +460,40 @@ mod tests {
     }
 
     #[test]
+    fn peer_paths_follow_topology() {
+        let full = Topology::new(4, TopologyKind::FullyConnected);
+        assert_eq!(full.n_peer_links(), 1, "one shared fabric");
+        assert!(full.peer_path(2, 2).is_empty());
+        assert_eq!(full.peer_path(0, 3), vec![0]);
+
+        let ring = Topology::new(4, TopologyKind::Ring);
+        assert_eq!(ring.n_peer_links(), 4);
+        assert_eq!(ring.peer_path(0, 1), vec![0], "edge 0 connects 0 and 1");
+        assert_eq!(ring.peer_path(0, 2), vec![0, 1], "two edges forward");
+        assert_eq!(ring.peer_path(0, 3), vec![3], "wraps backward over edge 3");
+        assert_eq!(ring.peer_path(3, 1), vec![3, 0], "forward across the wrap");
+
+        let pair = Topology::new(2, TopologyKind::Ring);
+        assert_eq!(pair.n_peer_links(), 1, "a 2-ring has a single edge");
+        assert_eq!(pair.peer_path(1, 0), vec![0]);
+    }
+
+    #[test]
     fn single_placement_is_all_device_zero() {
         let p = Placement::single(2, 8);
         for l in 0..2 {
             for e in 0..8 {
                 assert_eq!(p.device_of(ExpertKey::new(l, e)), 0);
+                assert_eq!(p.homes(ExpertKey::new(l, e)), &[0]);
             }
         }
         assert_eq!(p.experts_on(0, 0), 8);
+        assert!(!p.is_replicated());
     }
 
     #[test]
     fn striped_placement_is_even_and_layer_rotated() {
-        let p = Placement::build(PlacementKind::LayerStriped, 2, 8, 2, None);
+        let p = Placement::build(PlacementKind::LayerStriped, 2, 8, 2, None, 1);
         assert_eq!(p.device_of(ExpertKey::new(0, 0)), 0);
         assert_eq!(p.device_of(ExpertKey::new(0, 1)), 1);
         // Layer offset rotates the stripe.
@@ -301,22 +508,89 @@ mod tests {
     fn popularity_placement_deals_hot_experts_round_robin() {
         // Popularity rank for one layer: 5 hottest, then 2, 7, 0...
         let ranked = vec![vec![5, 2, 7, 0, 1, 3, 4, 6]];
-        let p = Placement::build(PlacementKind::Popularity, 1, 8, 2, Some(&ranked));
+        let p = Placement::build(PlacementKind::Popularity, 1, 8, 2, Some(&ranked), 1);
         assert_eq!(p.device_of(ExpertKey::new(0, 5)), 0, "hottest on device 0");
         assert_eq!(p.device_of(ExpertKey::new(0, 2)), 1, "2nd hottest on device 1");
         assert_eq!(p.device_of(ExpertKey::new(0, 7)), 0);
         assert_eq!(p.experts_on(0, 0), 4);
         assert_eq!(p.experts_on(0, 1), 4);
+        assert!(!p.fallback());
+        assert_eq!(p.label(), "popularity");
+    }
+
+    #[test]
+    fn popularity_without_rank_flags_the_fallback() {
+        let p = Placement::build(PlacementKind::Popularity, 1, 8, 2, None, 1);
+        assert!(p.fallback(), "silent striping must be flagged");
+        assert_eq!(p.label(), "popularity:striped-fallback");
+        // The fallback *is* the stripe.
+        let striped = Placement::build(PlacementKind::LayerStriped, 1, 8, 2, None, 1);
+        for e in 0..8 {
+            let k = ExpertKey::new(0, e);
+            assert_eq!(p.device_of(k), striped.device_of(k));
+        }
+    }
+
+    #[test]
+    fn replication_deals_top_r_to_multiple_homes() {
+        let ranked = vec![vec![5, 2, 7, 0, 1, 3, 4, 6]];
+        let p = Placement::build(PlacementKind::Popularity, 1, 8, 4, Some(&ranked), 2);
+        // Top-2 experts get 2 homes each: primary plus the next device.
+        assert_eq!(p.homes(ExpertKey::new(0, 5)), &[0, 1]);
+        assert_eq!(p.homes(ExpertKey::new(0, 2)), &[1, 2]);
+        // Everyone else stays single-homed.
+        assert_eq!(p.replication_of(ExpertKey::new(0, 7)), 1);
+        assert!(p.is_replicated());
+        // experts_on counts replicas: device 1 hosts its dealt share plus
+        // expert 5's replica.
+        assert_eq!(p.experts_on(0, 1), 3);
+    }
+
+    #[test]
+    fn replication_width_caps_at_fleet_size() {
+        let ranked = vec![vec![3, 1, 0, 2]];
+        let p = Placement::build(PlacementKind::Popularity, 1, 4, 2, Some(&ranked), 4);
+        // width = min(4, 2) = 2 homes; hot set = top-4 = every expert.
+        for e in 0..4 {
+            assert_eq!(p.replication_of(ExpertKey::new(0, e)), 2);
+        }
+    }
+
+    #[test]
+    fn set_homes_updates_replication() {
+        let mut p = Placement::build(PlacementKind::LayerStriped, 1, 4, 2, None, 1);
+        assert!(!p.is_replicated());
+        let k = ExpertKey::new(0, 0);
+        p.set_homes(k, vec![0, 1]);
+        assert_eq!(p.homes(k), &[0, 1]);
+        assert!(p.is_replicated());
+        assert_eq!(p.experts_on(0, 1), 3);
     }
 
     #[test]
     fn hop_context_is_pivot_relative() {
-        let device_of = [0usize, 1, 0];
+        let homes = [vec![0usize], vec![1], vec![0]];
         let m = Topology::new(2, TopologyKind::FullyConnected).hop_matrix();
-        let ctx = HopContext { device_of: &device_of, hop_matrix: &m };
+        let ctx = HopContext { homes: &homes, hop_matrix: &m };
         assert_eq!(ctx.hops(0, 2), 0, "same device");
         assert_eq!(ctx.hops(0, 1), 1, "cross device");
         assert_eq!(ctx.hops(1, 0), 1);
+    }
+
+    #[test]
+    fn hop_context_scores_nearest_replica() {
+        // Ring of 4: expert 1 lives on device 2 with a replica on device 1;
+        // a pivot homed on device 0 must score the 1-hop replica, not the
+        // 2-hop primary, and route to it.
+        let homes = [vec![0usize], vec![2, 1]];
+        let m = Topology::new(4, TopologyKind::Ring).hop_matrix();
+        let ctx = HopContext { homes: &homes, hop_matrix: &m };
+        assert_eq!(ctx.hops(0, 1), 1, "nearest replica wins");
+        assert_eq!(ctx.route(0, 1), (0, 1, 1));
+        // Ties break toward the first-listed (primary) home.
+        let tied = [vec![0usize], vec![1, 3]];
+        let ctx = HopContext { homes: &tied, hop_matrix: &m };
+        assert_eq!(ctx.route(0, 1), (0, 1, 1));
     }
 
     #[test]

@@ -22,6 +22,7 @@ use crate::model::EngineOptions;
 use crate::profilecollect::ProfileCollector;
 use crate::server::Server;
 use crate::stats::Summary;
+use crate::topology::{PlacementKind, TopologyKind};
 use crate::util::clock::ClockMode;
 use crate::util::json::{num, obj, s, Json};
 use crate::weights::WeightStore;
@@ -145,6 +146,26 @@ pub struct LoadCell {
     pub queue_depth: Summary,
 }
 
+/// Post-run engine state probed for the sweep reports: placement identity
+/// is read back from the *live* engine (not echoed from the request), so
+/// a popularity placement that silently fell back to striping is reported
+/// as the fallback it actually ran as, and peer-link occupancy/replica
+/// churn come from the same accounting the virtual clock charged.
+#[derive(Debug, Clone)]
+pub struct CellProbe {
+    /// `Placement::label()` after the run (e.g. `popularity` or
+    /// `popularity:striped-fallback`).
+    pub placement: String,
+    /// True when popularity placement degraded to striping for lack of a
+    /// profiled rank.
+    pub placement_fallback: bool,
+    /// Seconds the peer links spent busy (sum over links).
+    pub peer_busy_s: f64,
+    /// Online re-placement churn: replicas promoted / demoted.
+    pub replica_promotions: u64,
+    pub replica_demotions: u64,
+}
+
 /// Serve one cell: stage the process's open-loop arrivals on the event
 /// queue, hook completions back into it (closed-loop think time), run to
 /// drain, and snapshot the metrics.
@@ -157,8 +178,33 @@ pub fn run_load_cell(
     scfg: ServingConfig,
     policy_label: &str,
     offered_rps: f64,
-    mut process: Box<dyn ArrivalProcess>,
+    process: Box<dyn ArrivalProcess>,
 ) -> Result<LoadCell> {
+    let (cell, _probe) = run_load_cell_probed(
+        cfg,
+        store,
+        collector,
+        warm_rank,
+        scfg,
+        policy_label,
+        offered_rps,
+        process,
+    )?;
+    Ok(cell)
+}
+
+/// [`run_load_cell`] plus the post-run [`CellProbe`].
+#[allow(clippy::too_many_arguments)]
+pub fn run_load_cell_probed(
+    cfg: &ModelConfig,
+    store: Arc<WeightStore>,
+    collector: &ProfileCollector,
+    warm_rank: &[Vec<usize>],
+    scfg: ServingConfig,
+    policy_label: &str,
+    offered_rps: f64,
+    mut process: Box<dyn ArrivalProcess>,
+) -> Result<(LoadCell, CellProbe)> {
     let opts = EngineOptions { clock: ClockMode::Virtual, ..Default::default() };
     let engine = engine_with_config(cfg, store, collector, warm_rank, scfg, opts)?;
     let mut server = Server::new(engine);
@@ -194,8 +240,20 @@ pub fn run_load_cell(
         queue_delay: m.queue_delay.clone(),
         queue_depth: m.queue_depth.clone(),
     };
+    let placement = server.engine.placement();
+    let probe = CellProbe {
+        placement: placement.label(),
+        placement_fallback: placement.fallback(),
+        peer_busy_s: server
+            .engine
+            .transfer_handle()
+            .with_state(|st| st.peer_stats())
+            .busy_seconds,
+        replica_promotions: server.engine.counters.get("replica_promotions"),
+        replica_demotions: server.engine.counters.get("replica_demotions"),
+    };
     server.engine.shutdown();
-    Ok(cell)
+    Ok((cell, probe))
 }
 
 /// The full grid: every (process kind × offered load × policy preset).
@@ -307,17 +365,31 @@ pub fn cells_json(cells: &[LoadCell]) -> Json {
 // Topology sweep: tail latency vs. expert-parallel device count
 // ---------------------------------------------------------------------
 
-/// The (device count × miss policy) grid for the expert-parallel fleet:
-/// every cell serves the same Poisson workload at the same offered load,
-/// varying only `ServingConfig::n_devices` (and, for multi-device cells,
-/// turning κ on so ψ's topology term is live).
+/// The (device count × topology × replication factor × arrival process ×
+/// miss policy) grid for the expert-parallel fleet: every cell serves the
+/// same workload at the same offered load, varying the fleet shape (and,
+/// for multi-device cells, turning κ on so ψ's topology term is live).
+///
+/// Degenerate-row dedup: on a one-device fleet every topology is the same
+/// fleet and replication is meaningless, so `n_devices == 1` cells run
+/// only for the first listed topology and `replication_factor == 1` —
+/// those rows stay byte-identical to the pre-replication sweep.
 #[derive(Debug, Clone)]
 pub struct TopologySweep {
     /// Fleet sizes to compare (the acceptance grid is `[1, 2, 4]`).
     pub device_counts: Vec<usize>,
+    /// Peer-interconnect shapes to compare.
+    pub topologies: Vec<TopologyKind>,
+    /// Home-set widths to compare; cells with a factor > 1 switch to
+    /// popularity placement (replication deals the top-R *ranked* experts,
+    /// so it needs the profiled rank popularity placement uses).
+    pub replication_factors: Vec<usize>,
+    /// Arrival-process families (the replication win shows under
+    /// [`ProcessKind::Bursty`] tails).
+    pub processes: Vec<ProcessKind>,
     /// `ServingConfig::preset` names.
     pub presets: Vec<String>,
-    /// Open-loop Poisson offered load shared by every cell.
+    /// Open-loop offered load shared by every cell.
     pub load_rps: f64,
     /// ψ hop penalty κ applied when `n_devices > 1` (0 keeps ψ
     /// topology-blind; single-device cells always keep the preset's κ so
@@ -326,10 +398,18 @@ pub struct TopologySweep {
     pub settings: LoadSettings,
 }
 
-/// One topology-sweep row: a [`LoadCell`] measured at a fleet size.
+/// One topology-sweep row: a [`LoadCell`] measured at a fleet shape, plus
+/// the post-run [`CellProbe`] (placement as-run, peer-link occupancy,
+/// replica churn).
 #[derive(Debug, Clone)]
 pub struct TopologyCell {
     pub n_devices: usize,
+    /// `TopologyKind::name()` of the peer interconnect.
+    pub topology: &'static str,
+    pub replication_factor: usize,
+    /// `ProcessKind::label()` of the arrival process.
+    pub process: &'static str,
+    pub probe: CellProbe,
     pub cell: LoadCell,
 }
 
@@ -342,44 +422,75 @@ pub fn run_topology_sweep(
 ) -> Result<Vec<TopologyCell>> {
     let mut rows = Vec::new();
     for &n in &spec.device_counts {
-        for preset in &spec.presets {
-            let mut scfg = ServingConfig::default().preset(preset)?;
-            scfg.cache_rate = spec.settings.cache_rate;
-            scfg.seed = spec.settings.seed;
-            scfg.n_devices = n;
-            if n > 1 {
-                scfg.kappa = spec.kappa;
+        for (ti, &topo) in spec.topologies.iter().enumerate() {
+            if n == 1 && ti > 0 {
+                continue; // one device: every topology is the same fleet
             }
-            let process = ProcessKind::Poisson.build(cfg, &spec.settings, spec.load_rps);
-            let cell = run_load_cell(
-                cfg,
-                store.clone(),
-                collector,
-                warm_rank,
-                scfg,
-                preset,
-                spec.load_rps,
-                process,
-            )?;
-            rows.push(TopologyCell { n_devices: n, cell });
+            for &rf in &spec.replication_factors {
+                if n == 1 && rf != 1 {
+                    continue; // one device: replication is meaningless
+                }
+                for &kind in &spec.processes {
+                    for preset in &spec.presets {
+                        let mut scfg = ServingConfig::default().preset(preset)?;
+                        scfg.cache_rate = spec.settings.cache_rate;
+                        scfg.seed = spec.settings.seed;
+                        scfg.n_devices = n;
+                        scfg.topology = topo;
+                        if n > 1 {
+                            scfg.kappa = spec.kappa;
+                        }
+                        if rf > 1 {
+                            scfg.replication_factor = rf;
+                            scfg.placement = PlacementKind::Popularity;
+                        }
+                        let process = kind.build(cfg, &spec.settings, spec.load_rps);
+                        let (cell, probe) = run_load_cell_probed(
+                            cfg,
+                            store.clone(),
+                            collector,
+                            warm_rank,
+                            scfg,
+                            preset,
+                            spec.load_rps,
+                            process,
+                        )?;
+                        rows.push(TopologyCell {
+                            n_devices: n,
+                            topology: topo.name(),
+                            replication_factor: rf,
+                            process: kind.label(),
+                            probe,
+                            cell,
+                        });
+                    }
+                }
+            }
         }
     }
     Ok(rows)
 }
 
 /// Markdown table over the topology rows (deterministic formatting; the
-/// determinism test asserts byte-identity per seed).
+/// determinism test asserts byte-identity per seed). The `placement`
+/// column is the probed post-run label, so a popularity fallback shows up
+/// as `popularity:striped-fallback` instead of masquerading as the
+/// requested placement.
 pub fn topology_report_markdown(rows: &[TopologyCell]) -> String {
     let mut out = String::from(
-        "| devices | policy | done | tok/s | ttft p50/p95/p99 (ms) | \
-         tbt p99 (ms) | e2e p99 (ms) |\n\
-         |---|---|---|---|---|---|---|\n",
+        "| devices | topo | repl | process | placement | policy | done | tok/s | \
+         ttft p50/p95/p99 (ms) | tbt p99 (ms) | e2e p99 (ms) | peer busy (ms) |\n\
+         |---|---|---|---|---|---|---|---|---|---|---|---|\n",
     );
     for r in rows {
         let c = &r.cell;
         out.push_str(&format!(
-            "| {} | {} | {} | {:.2} | {:.2}/{:.2}/{:.2} | {:.2} | {:.2} |\n",
+            "| {} | {} | {} | {} | {} | {} | {} | {:.2} | {:.2}/{:.2}/{:.2} | {:.2} | {:.2} | {:.3} |\n",
             r.n_devices,
+            r.topology,
+            r.replication_factor,
+            r.process,
+            r.probe.placement,
             c.policy,
             c.requests_done,
             c.tok_s,
@@ -388,25 +499,34 @@ pub fn topology_report_markdown(rows: &[TopologyCell]) -> String {
             c.ttft.p(99.0) * 1e3,
             c.tbt.p(99.0) * 1e3,
             c.e2e.p(99.0) * 1e3,
+            r.probe.peer_busy_s * 1e3,
         ));
     }
     out
 }
 
 /// Machine-readable topology sweep (the `BENCH_topology.json` payload):
-/// per-device-count tail-latency rows.
+/// per-fleet-shape tail-latency rows.
 pub fn topology_cells_json(rows: &[TopologyCell]) -> Json {
     Json::Arr(
         rows.iter()
             .map(|r| {
                 obj(vec![
                     ("n_devices", num(r.n_devices as f64)),
+                    ("topology", s(r.topology)),
+                    ("replication_factor", num(r.replication_factor as f64)),
+                    ("process", s(r.process)),
+                    ("placement", s(&r.probe.placement)),
+                    ("placement_fallback", Json::Bool(r.probe.placement_fallback)),
                     ("policy", s(&r.cell.policy)),
                     ("offered_rps", num(r.cell.offered_rps)),
                     ("requests_done", num(r.cell.requests_done as f64)),
                     ("tokens_out", num(r.cell.tokens_out as f64)),
                     ("wall_s", num(r.cell.wall_s)),
                     ("tok_s", num(r.cell.tok_s)),
+                    ("peer_busy_s", num(r.probe.peer_busy_s)),
+                    ("replica_promotions", num(r.probe.replica_promotions as f64)),
+                    ("replica_demotions", num(r.probe.replica_demotions as f64)),
                     ("ttft_s", summary_json(&r.cell.ttft)),
                     ("tbt_s", summary_json(&r.cell.tbt)),
                     ("e2e_s", summary_json(&r.cell.e2e)),
@@ -441,7 +561,7 @@ mod tests {
     #[test]
     fn topology_report_header_is_stable() {
         let md = topology_report_markdown(&[]);
-        assert!(md.starts_with("| devices | policy |"));
+        assert!(md.starts_with("| devices | topo | repl | process | placement | policy |"));
         assert_eq!(md.lines().count(), 2);
         assert_eq!(topology_cells_json(&[]).to_string(), "[]");
     }

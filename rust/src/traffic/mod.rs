@@ -36,7 +36,7 @@ pub use arrivals::{
 };
 pub use events::EventQueue;
 pub use load::{
-    cells_json, report_markdown, run_load_cell, run_sweep, run_topology_sweep,
-    topology_cells_json, topology_report_markdown, LoadCell, LoadSettings, ProcessKind, SweepSpec,
-    TopologyCell, TopologySweep,
+    cells_json, report_markdown, run_load_cell, run_load_cell_probed, run_sweep,
+    run_topology_sweep, topology_cells_json, topology_report_markdown, CellProbe, LoadCell,
+    LoadSettings, ProcessKind, SweepSpec, TopologyCell, TopologySweep,
 };

@@ -100,7 +100,10 @@ pub fn percentile(xs: &[f32], p: f64) -> f32 {
         return percentile_sorted(xs, p);
     }
     let mut s: Vec<f32> = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    // total_cmp: NaN samples sort deterministically (positive NaN above
+    // +inf) instead of feeding sort_by a non-transitive comparator, which
+    // may panic and silently misorders NaN latency samples.
+    s.sort_by(|a, b| a.total_cmp(b));
     percentile_sorted(&s, p)
 }
 

@@ -9,6 +9,7 @@ use buddymoe::buddy::BuddyProfile;
 use buddymoe::eval::warm_rank_from_profile;
 use buddymoe::prefetch::{PredictContext, Predictor, TopFreq};
 use buddymoe::profilecollect::ProfileCollector;
+use buddymoe::util::math::percentile;
 
 /// A collector whose first recorded token is weighted NaN (via the
 /// warm-up discount), poisoning the activation counts and co-activation
@@ -41,6 +42,29 @@ fn topfreq_survives_nan_activations() {
     let pred = tf.predict(0, 3, &ctx);
     assert_eq!(pred.len(), 3);
     assert!(pred.iter().all(|&e| e < 4));
+}
+
+#[test]
+fn percentile_survives_nan_samples() {
+    // The stats path's last partial_cmp(..).unwrap_or(Equal) sort: a NaN
+    // latency sample defeats the sorted fast-path check (NaN comparisons
+    // are false), so the sort always ran with a non-transitive comparator
+    // — order (and thus every reported percentile) was
+    // implementation-defined. total_cmp sorts NaN deterministically above
+    // +inf, so the finite percentiles and the NaN tail are stable.
+    let xs = [3.0f32, f32::NAN, 1.0, 2.0, f32::NAN, 0.5];
+    let a = percentile(&xs, 50.0);
+    let b = percentile(&xs, 50.0);
+    assert_eq!(a.to_bits(), b.to_bits(), "NaN input must sort deterministically");
+    // The finite prefix is properly ordered: low percentiles are real.
+    assert_eq!(percentile(&xs, 0.0), 0.5);
+    assert_eq!(percentile(&xs, 40.0), 2.0);
+    // NaN ranks above every number, so the max lands on the NaN tail.
+    assert!(percentile(&xs, 100.0).is_nan());
+    // Finite inputs are untouched by the comparator change.
+    let ys = [4.0f32, 1.0, 3.0, 2.0];
+    assert_eq!(percentile(&ys, 100.0), 4.0);
+    assert_eq!(percentile(&ys, 50.0), 2.5);
 }
 
 #[test]

@@ -1,9 +1,13 @@
 //! Multi-device expert-parallel integration tests: the fleet serves
 //! end-to-end on the virtual clock, warm-up respects per-device budgets,
-//! fleet-wide residency is the union of per-device residency, and runs
-//! are deterministic per seed. (The ψ/κ same-device-preference contract
-//! is unit-tested next to the substitution engine; the single-device
-//! degenerate case is covered by the unchanged golden tests.)
+//! fleet-wide residency is the union of per-device residency, runs are
+//! deterministic per seed, and replication invariants hold — replicated
+//! experts land on exactly their home set at warm-up, eviction never
+//! strips a hot expert below its replication intent, and replicated
+//! fleets (contended peer links included) replay byte-identically per
+//! seed. (The ψ/κ same-device-preference contract is unit-tested next to
+//! the substitution engine; the single-device degenerate case is covered
+//! by the unchanged golden tests.)
 
 use std::sync::Arc;
 
@@ -13,9 +17,9 @@ use buddymoe::eval::{
 };
 use buddymoe::model::EngineOptions;
 use buddymoe::server::Server;
-use buddymoe::topology::PlacementKind;
+use buddymoe::topology::{PlacementKind, TopologyKind};
 use buddymoe::util::clock::ClockMode;
-use buddymoe::weights::WeightStore;
+use buddymoe::weights::{ExpertKey, WeightStore};
 
 fn setup() -> (ModelConfig, Arc<WeightStore>) {
     let cfg = ModelConfig::synthetic_small();
@@ -126,4 +130,117 @@ fn fleet_runs_are_deterministic_per_seed() {
     let a = run(store.clone());
     let b = run(store);
     assert_eq!(a, b, "same seed must reproduce the fleet timeline exactly");
+}
+
+// ---------------------------------------------------------------------
+// Replication invariants
+// ---------------------------------------------------------------------
+
+fn replicated_scfg(n_devices: usize, rf: usize, topology: TopologyKind) -> ServingConfig {
+    let mut scfg = fleet_scfg(n_devices, PlacementKind::Popularity);
+    scfg.topology = topology;
+    scfg.replication_factor = rf;
+    scfg
+}
+
+#[test]
+fn replicated_experts_resident_on_exactly_their_home_set_after_warmup() {
+    // Warm-up must place every replicated expert on each of its homes and
+    // nowhere else — before any traffic runs.
+    let (cfg, store) = setup();
+    let pc = profile_model(&cfg, store.clone(), 8, 555).unwrap();
+    let warm = warm_rank_from_profile(&pc);
+    let mut scfg = replicated_scfg(2, 2, TopologyKind::FullyConnected);
+    scfg.replan_interval_steps = 0;
+    let opts = EngineOptions { clock: ClockMode::Virtual, ..Default::default() };
+    let engine = engine_with_config(&cfg, store, &pc, &warm, scfg, opts).unwrap();
+
+    assert!(engine.placement().is_replicated(), "rf = 2 must replicate");
+    let mut replicated = 0usize;
+    for l in 0..cfg.n_layers {
+        for e in 0..cfg.n_experts {
+            let key = ExpertKey::new(l, e);
+            let homes = engine.placement().homes(key).to_vec();
+            if homes.len() < 2 {
+                continue;
+            }
+            replicated += 1;
+            engine.transfer_handle().with_state(|st| {
+                for d in 0..st.n_devices() {
+                    let resident = st.devices[d].cache.is_gpu(key);
+                    assert_eq!(
+                        resident,
+                        homes.contains(&d),
+                        "layer {l} expert {e}: residency on device {d} must match its home set"
+                    );
+                }
+            });
+        }
+    }
+    // rf = 2 deals the top-2 ranked experts per layer to two homes each.
+    assert_eq!(replicated, 2 * cfg.n_layers, "two replicated experts per layer");
+    engine.shutdown();
+}
+
+#[test]
+fn eviction_never_strips_replicas_below_intent() {
+    // Serve real traffic with online re-placement disabled: demand loads
+    // churn the caches, but victim selection must never touch a
+    // replicated expert — its home set is exactly intact afterwards.
+    let (cfg, store) = setup();
+    let mut scfg = replicated_scfg(2, 2, TopologyKind::FullyConnected);
+    scfg.replan_interval_steps = 0;
+    let (server, _) = serve(&cfg, store, scfg);
+    let placement = server.engine.placement().clone();
+    server.engine.transfer_handle().with_state(|st| {
+        let mut checked = 0usize;
+        for l in 0..cfg.n_layers {
+            for e in 0..cfg.n_experts {
+                let key = ExpertKey::new(l, e);
+                let homes = placement.homes(key);
+                if homes.len() < 2 {
+                    continue;
+                }
+                checked += 1;
+                for &d in homes {
+                    assert!(
+                        st.devices[d].cache.is_gpu(key),
+                        "layer {l} expert {e}: replica on device {d} was evicted"
+                    );
+                }
+            }
+        }
+        assert!(checked > 0, "the fleet must have replicated experts to shield");
+    });
+    server.engine.shutdown();
+}
+
+#[test]
+fn replicated_ring_fleet_is_deterministic_per_seed() {
+    // The contended peer links (per-edge FIFO queues on the ring) and the
+    // online replanner are both on the virtual timeline: same seed must
+    // replay the same promotions, demotions, and clock to the nanosecond.
+    let (cfg, store) = setup();
+    let run = |store: Arc<WeightStore>| {
+        let (server, _) = serve(&cfg, store, replicated_scfg(4, 2, TopologyKind::Ring));
+        let peer_busy = server
+            .engine
+            .transfer_handle()
+            .with_state(|st| st.peer_stats())
+            .busy_seconds;
+        let out = (
+            server.engine.counters.get("substitutions"),
+            server.engine.counters.get("cross_device_subs"),
+            server.engine.counters.get("peer_hops"),
+            server.engine.counters.get("replica_promotions"),
+            server.engine.counters.get("replica_demotions"),
+            peer_busy.to_bits(),
+            server.engine.clock().now(),
+        );
+        server.engine.shutdown();
+        out
+    };
+    let a = run(store.clone());
+    let b = run(store);
+    assert_eq!(a, b, "replicated ring fleet must replay byte-identically");
 }

@@ -10,6 +10,7 @@ use std::time::Duration;
 use buddymoe::config::{ModelConfig, ServingConfig};
 use buddymoe::eval::{profile_model, warm_rank_from_profile, Domain};
 use buddymoe::testing::{forall, PropConfig};
+use buddymoe::topology::TopologyKind;
 use buddymoe::traffic::{
     cells_json, report_markdown, run_load_cell, run_sweep, run_topology_sweep,
     topology_cells_json, topology_report_markdown, ArrivalProcess, ClosedLoopProcess,
@@ -271,25 +272,32 @@ fn load_sweep_report_is_byte_identical_per_seed() {
     assert_eq!(cells_json(&a).to_string(), cells_json(&b).to_string());
 }
 
+fn topology_settings() -> LoadSettings {
+    LoadSettings {
+        n_requests: 6,
+        max_new: 4,
+        cache_rate: 0.5,
+        domain: Domain::Mixed,
+        seed: 42,
+    }
+}
+
 #[test]
 fn topology_sweep_rows_complete_and_byte_identical_per_seed() {
-    // The BENCH_topology.json contract: per-device-count tail-latency rows
+    // The BENCH_topology.json contract: per-fleet-shape tail-latency rows
     // that serve every request and reproduce byte-for-byte per seed.
     let (cfg, store) = setup();
     let pc = profile_model(&cfg, store.clone(), 8, 7777).unwrap();
     let warm = warm_rank_from_profile(&pc);
     let spec = TopologySweep {
         device_counts: vec![1, 2],
+        topologies: vec![TopologyKind::FullyConnected],
+        replication_factors: vec![1],
+        processes: vec![ProcessKind::Poisson],
         presets: vec!["original".into(), "buddy-rho3".into()],
         load_rps: 8.0,
         kappa: 0.25,
-        settings: LoadSettings {
-            n_requests: 6,
-            max_new: 4,
-            cache_rate: 0.5,
-            domain: Domain::Mixed,
-            seed: 42,
-        },
+        settings: topology_settings(),
     };
     let a = run_topology_sweep(&cfg, store.clone(), &pc, &warm, &spec).unwrap();
     let b = run_topology_sweep(&cfg, store, &pc, &warm, &spec).unwrap();
@@ -301,10 +309,60 @@ fn topology_sweep_rows_complete_and_byte_identical_per_seed() {
             r.n_devices, r.cell.policy
         );
         assert!(r.cell.tok_s > 0.0);
+        assert_eq!(r.replication_factor, 1);
+        assert!(!r.probe.placement_fallback, "striped placement never falls back");
     }
     assert_eq!(topology_report_markdown(&a), topology_report_markdown(&b));
     assert_eq!(
         topology_cells_json(&a).to_string(),
         topology_cells_json(&b).to_string()
+    );
+}
+
+#[test]
+fn topology_sweep_replication_grid_is_deterministic_and_degenerates() {
+    // Replicated cells: the grid dedups n_devices == 1 down to the first
+    // topology at replication_factor 1, replicated rows run popularity
+    // placement with a real rank (no fallback), and the rf = 1 rows are
+    // byte-identical to a spec that never mentions replication — the
+    // degenerate-case contract.
+    let (cfg, store) = setup();
+    let pc = profile_model(&cfg, store.clone(), 8, 7777).unwrap();
+    let warm = warm_rank_from_profile(&pc);
+    let base = TopologySweep {
+        device_counts: vec![1, 2],
+        topologies: vec![TopologyKind::FullyConnected, TopologyKind::Ring],
+        replication_factors: vec![1, 2],
+        processes: vec![ProcessKind::Bursty],
+        presets: vec!["buddy-rho3".into()],
+        load_rps: 8.0,
+        kappa: 0.25,
+        settings: topology_settings(),
+    };
+    let rows = run_topology_sweep(&cfg, store.clone(), &pc, &warm, &base).unwrap();
+    // n=1: 1 topo x 1 rf; n=2: 2 topo x 2 rf.
+    assert_eq!(rows.len(), 5, "degenerate one-device rows must dedup");
+    assert_eq!(rows.iter().filter(|r| r.n_devices == 1).count(), 1);
+    for r in &rows {
+        assert_eq!(r.cell.requests_done, 6);
+        if r.replication_factor > 1 {
+            assert_eq!(r.probe.placement, "popularity", "rank provided: no fallback");
+            assert!(!r.probe.placement_fallback);
+        }
+    }
+    // Determinism across reruns of the replicated grid.
+    let again = run_topology_sweep(&cfg, store.clone(), &pc, &warm, &base).unwrap();
+    assert_eq!(
+        topology_cells_json(&rows).to_string(),
+        topology_cells_json(&again).to_string()
+    );
+    // rf = 1 rows reproduce a replication-free spec byte-for-byte.
+    let plain = TopologySweep { replication_factors: vec![1], ..base };
+    let plain_rows = run_topology_sweep(&cfg, store, &pc, &warm, &plain).unwrap();
+    let rf1: Vec<_> = rows.iter().filter(|r| r.replication_factor == 1).cloned().collect();
+    assert_eq!(
+        topology_cells_json(&rf1).to_string(),
+        topology_cells_json(&plain_rows).to_string(),
+        "replication_factor = 1 must be the byte-identical degenerate case"
     );
 }
