@@ -1,0 +1,101 @@
+//! Availability under injected chaos: sweep (fault scenario × replication
+//! factor × miss policy) on a 4-device ring at a fixed offered load, with
+//! every fault landing as a deterministic discrete event on the virtual
+//! clock. Scenarios come from `FaultPlan::scenario` — a fault-free
+//! baseline, a device-down window, a host-link degradation, and a
+//! peer-link flap burst — so every cell replays the identical seeded
+//! workload and only the injected chaos differs.
+//!
+//! The acceptance row: with `replication_factor = 2` the fleet rides out
+//! the device-down window with zero dropped experts (replica homes keep
+//! serving, emergency promotions re-widen coverage) and near-baseline
+//! availability, while the single-homed `replication_factor = 1` fleet
+//! degrades into in-window substitution storms and tail blowup.
+//!
+//! Run: `cargo run --release --example sweep_faults [-- --fast]`
+//! Works with or without artifacts (synthetic-family fallback); emits
+//! machine-readable `BENCH_faults.json` next to Cargo.toml (uploaded by
+//! CI alongside the other BENCH artifacts).
+
+use std::path::Path;
+
+use anyhow::Result;
+use buddymoe::eval::{profile_model, warm_rank_from_profile, Domain};
+use buddymoe::topology::TopologyKind;
+use buddymoe::traffic::{
+    fault_cells_json, fault_report_markdown, run_fault_sweep, FaultSweep, LoadSettings,
+    ProcessKind,
+};
+use buddymoe::util::json::{num, obj, s};
+
+fn main() -> Result<()> {
+    buddymoe::util::logging::init();
+    let fast = std::env::args().any(|a| a == "--fast");
+
+    // Artifacts when built; otherwise the synthetic-family model (the
+    // shared eval fallback), so the sweep runs anywhere.
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let (cfg, store) = buddymoe::eval::load_model_or_synthetic(&dir, 4242)?;
+    let pc = profile_model(&cfg, store.clone(), if fast { 16 } else { 48 }, 7777)?;
+    let warm = warm_rank_from_profile(&pc);
+
+    let spec = FaultSweep {
+        scenarios: vec![
+            "baseline".into(),
+            "device-down".into(),
+            "link-degrade".into(),
+            "flap".into(),
+            "lose-inflight".into(),
+        ],
+        // The acceptance fleet: 4 devices on a ring, so a down device
+        // takes out a quarter of the home sets and peer reroutes matter.
+        n_devices: 4,
+        topology: TopologyKind::Ring,
+        replication_factors: vec![1, 2],
+        presets: vec!["buddy-rho3".into()],
+        process: ProcessKind::Poisson,
+        // Low enough that the run spans well past the 1–3 s fault
+        // windows instead of draining before the chaos lands.
+        load_rps: 4.0,
+        // Deadline disabled: timed-out fetches fall back to lossless
+        // transient rescues, so `dropped_slots` is structurally zero and
+        // availability isolates the substitution cost of each scenario.
+        transfer_deadline_s: 0.0,
+        settings: LoadSettings {
+            n_requests: if fast { 16 } else { 32 },
+            max_new: 8,
+            cache_rate: 0.5,
+            domain: Domain::Mixed,
+            seed: 42,
+        },
+    };
+
+    println!(
+        "# Fault sweep on {} devices ({:?}) at c = {} (virtual clock, seed {}, {} requests/cell, {} rps)\n",
+        spec.n_devices,
+        spec.topology,
+        spec.settings.cache_rate,
+        spec.settings.seed,
+        spec.settings.n_requests,
+        spec.load_rps,
+    );
+    let rows = run_fault_sweep(&cfg, store, &pc, &warm, &spec)?;
+    println!("{}", fault_report_markdown(&rows));
+
+    let json = obj(vec![
+        ("model", s(&cfg.name)),
+        ("n_devices", num(spec.n_devices as f64)),
+        ("topology", s("ring")),
+        ("cache_rate", num(spec.settings.cache_rate)),
+        ("seed", num(spec.settings.seed as f64)),
+        ("n_requests", num(spec.settings.n_requests as f64)),
+        ("max_new", num(spec.settings.max_new as f64)),
+        ("load_rps", num(spec.load_rps)),
+        ("transfer_deadline_s", num(spec.transfer_deadline_s)),
+        ("rows", fault_cells_json(&rows)),
+    ]);
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_faults.json");
+    std::fs::write(&path, json.to_string() + "\n")?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

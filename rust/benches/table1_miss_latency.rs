@@ -68,7 +68,7 @@ fn main() {
             let key = ExpertKey::new(0, i % cfg.n_experts);
             let t0 = clock.now();
             h.request(key, TransferPriority::Demand);
-            h.wait_gpu(key);
+            let _ = h.wait_gpu(key);
             lat.push(clock.since(t0) * 1e3);
             // Demote everything again so the next iteration misses even
             // when iters wraps past n_experts.
@@ -77,7 +77,7 @@ fn main() {
                     st.demote(ExpertKey::new(0, e));
                 }
             });
-            h.drain_arrivals();
+            let _ = h.drain_arrivals();
         }
         let mean = lat.iter().sum::<f64>() / lat.len() as f64;
         println!("| Baseline (on demand) | {mean:.2} | lossless |");
@@ -89,7 +89,7 @@ fn main() {
         let (h, _clock) = spawn(cfg.n_experts);
         let key = ExpertKey::new(0, 3);
         h.request(key, TransferPriority::Prefetch);
-        h.wait_gpu(key);
+        let _ = h.wait_gpu(key);
         let (mean, _) = bench_support::time_it(3, iters, || {
             assert!(h.with_state(|st| st.is_gpu(key)));
         });
@@ -108,17 +108,17 @@ fn main() {
             let wrong = ExpertKey::new(1, (2 * i) % cfg.n_experts);
             let needed = ExpertKey::new(1, (2 * i + 1) % cfg.n_experts);
             h.request(wrong, TransferPriority::Prefetch);
-            h.wait_gpu(wrong);
+            let _ = h.wait_gpu(wrong);
             let t0 = clock.now();
             h.request(needed, TransferPriority::Demand);
-            h.wait_gpu(needed);
+            let _ = h.wait_gpu(needed);
             lat.push(clock.since(t0) * 1e3);
             h.with_state(|st| {
                 for e in 0..cfg.n_experts {
                     st.demote(ExpertKey::new(1, e));
                 }
             });
-            h.drain_arrivals();
+            let _ = h.drain_arrivals();
         }
         let mean = lat.iter().sum::<f64>() / lat.len() as f64;
         println!("| Prefetch miss | {mean:.2} | lossless |");

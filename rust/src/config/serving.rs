@@ -3,7 +3,8 @@
 
 use anyhow::{bail, Result};
 
-use crate::topology::{PlacementKind, TopologyKind};
+use crate::fault::FaultPlan;
+use crate::topology::{PlacementKind, Topology, TopologyKind};
 
 /// What to do when a selected expert is CPU-resident (paper §5.1 baselines
 /// plus the BuddyMoE policy).
@@ -149,6 +150,24 @@ pub struct ServingConfig {
     /// same buddy for one token.
     pub diversity_discount: f64,
 
+    // --- fault injection & recovery ---
+    /// Scheduled device/link faults applied as discrete events on the
+    /// virtual clock. Empty (the default) injects nothing and keeps the
+    /// system byte-identical to the fault-free build.
+    pub fault_plan: FaultPlan,
+    /// Per-awaited-transfer deadline, simulated seconds: a waiter that
+    /// exceeds it abandons the fetch and the engine's degradation
+    /// waterfall decides what happens next. 0 disables deadlines (a
+    /// waiter retries until its bounded re-issues are exhausted).
+    pub transfer_deadline_s: f64,
+    /// Bounded re-issues per awaited transfer after its in-flight copy
+    /// vanishes (fault, or a completion lost to a device failure). The
+    /// first re-issue is immediate — matching the pre-fault engine —
+    /// and later ones back off exponentially with seeded jitter.
+    pub transfer_max_retries: u32,
+    /// Base of the exponential retry backoff, simulated seconds.
+    pub transfer_backoff_base_s: f64,
+
     // --- serving shape ---
     pub max_batch: usize,
     pub batch_timeout_us: u64,
@@ -198,6 +217,10 @@ impl Default for ServingConfig {
             eta: 0.0,
             kappa: 0.0,
             diversity_discount: 0.5,
+            fault_plan: FaultPlan::empty(),
+            transfer_deadline_s: 0.0,
+            transfer_max_retries: 4,
+            transfer_backoff_base_s: 2e-3,
             max_batch: 8,
             batch_timeout_us: 2_000,
             seed: 0x00ddf00d,
@@ -256,6 +279,18 @@ impl ServingConfig {
             || !(self.sim_expert_s.is_finite() && self.sim_expert_s >= 0.0)
         {
             bail!("sim_attn_s / sim_expert_s must be finite and non-negative");
+        }
+        if !(self.transfer_deadline_s.is_finite() && self.transfer_deadline_s >= 0.0) {
+            bail!("transfer_deadline_s must be finite and non-negative (0 disables)");
+        }
+        if !(self.transfer_backoff_base_s.is_finite() && self.transfer_backoff_base_s >= 0.0) {
+            bail!("transfer_backoff_base_s must be finite and non-negative");
+        }
+        if !self.fault_plan.is_empty() {
+            let links = Topology::new(self.n_devices, self.topology).n_peer_links();
+            if let Err(e) = self.fault_plan.validate(self.n_devices, links) {
+                bail!("fault_plan invalid: {e}");
+            }
         }
         Ok(())
     }
@@ -370,6 +405,23 @@ mod tests {
         let mut c = ServingConfig::default();
         c.cft_alpha = 0.0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn fault_knobs_validated() {
+        let c = ServingConfig::default();
+        assert!(c.fault_plan.is_empty(), "fault-free is the default");
+        assert_eq!(c.transfer_deadline_s, 0.0, "no deadline by default");
+        let mut c = ServingConfig::default();
+        c.transfer_deadline_s = -1.0;
+        assert!(c.validate().is_err());
+        // A plan that names a device outside the fleet is rejected.
+        let mut c = ServingConfig::default();
+        c.n_devices = 2;
+        c.fault_plan = crate::fault::FaultPlan::scenario("device-down").unwrap();
+        c.validate().unwrap();
+        c.n_devices = 1;
+        assert!(c.validate().is_err(), "device 1 does not exist on a 1-device fleet");
     }
 
     #[test]

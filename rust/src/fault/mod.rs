@@ -1,0 +1,495 @@
+//! Deterministic fault injection for the discrete-event fleet sim.
+//!
+//! A [`FaultPlan`] is a sorted list of [`FaultEvent`]s pinned to *virtual*
+//! timestamps. The transfer engine expands the plan into a primitive
+//! [`FaultTimeline`] at spawn and replays it inside `settle()`: whenever the
+//! clock is about to advance past a fault's timestamp, the fleet is first
+//! settled up to exactly that instant, then the fault mutates engine state as
+//! one discrete event, then settling resumes. Faults are therefore totally
+//! ordered against transfer starts/completions, exactly like every other
+//! event in the sim.
+//!
+//! # Determinism rules
+//!
+//! - **No wall clock.** Fault timestamps come from the plan (virtual
+//!   seconds); application points come from `SimClock`. Nothing in this
+//!   module may read host time. Fault injection is only supported under
+//!   `ClockMode::Virtual`.
+//! - **Seeded jitter only.** The retry/backoff machinery in
+//!   `memory/transfer.rs` draws jitter from a `util::rng::Rng` seeded from
+//!   `ServingConfig.seed`; two runs with the same seed and the same plan are
+//!   byte-identical.
+//! - **Empty plan ⇒ byte-identical degenerate case.** With no events the
+//!   timeline is never consulted, no RNG is advanced, and every code path
+//!   reduces to the pre-fault behavior, so all existing golden sweeps are
+//!   unchanged byte for byte.
+//! - **A fault may only mutate engine-owned state**: device up/down flags,
+//!   queued/in-flight transfer lists (aborting their `Loading` slots),
+//!   cache residency (via `ExpertCache::invalidate_unpinned`), host-link
+//!   bandwidth/busy horizons, and peer-link busy horizons. Faults never
+//!   touch weights, routing state, or request state — recovery happens
+//!   above, in the engine's degradation waterfall.
+
+use std::time::Duration;
+
+use crate::util::json::{Json, JsonError};
+
+/// What a single fault does. User-level kinds carry their own duration where
+/// the effect is a window (the timeline expands those into apply/restore
+/// pairs).
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultKind {
+    /// Take a device out of service for `down_s` seconds (forever if `None`).
+    /// Its queued and in-flight transfers are lost, its unpinned cache
+    /// contents are invalidated, and it accepts no new transfers until it
+    /// comes back up (empty, to be re-admitted lazily).
+    DeviceDown { device: usize, down_s: Option<f64> },
+    /// Scale a device's host-link bandwidth by `multiplier` (relative to the
+    /// nominal bandwidth captured at spawn, so overlapping degrades do not
+    /// compound) for `duration_s` seconds.
+    HostDegrade { device: usize, multiplier: f64, duration_s: f64 },
+    /// Stall a device's host link: no transfer may start on it until
+    /// `duration_s` seconds after the event.
+    HostStall { device: usize, duration_s: f64 },
+    /// Flap a peer link: it is busy (down) for `duration_s` seconds.
+    PeerFlap { link: usize, duration_s: f64 },
+    /// Drop every in-flight host transfer on a device (the transfers' slots
+    /// revert to CPU; waiters retry with backoff).
+    LoseInFlight { device: usize },
+}
+
+/// One scheduled fault: `kind` fires at virtual time `at_s`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    pub at_s: f64,
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of faults, sorted by timestamp.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Build from events (sorts by timestamp; ties keep insertion order).
+    pub fn from_events(mut events: Vec<FaultEvent>) -> Self {
+        events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+        Self { events }
+    }
+
+    /// Parse a JSONL plan: one event object per non-empty line, e.g.
+    ///
+    /// ```text
+    /// {"at_s": 1.0, "kind": "device-down", "device": 1, "duration_s": 2.0}
+    /// {"at_s": 1.5, "kind": "host-degrade", "device": 0, "multiplier": 0.25, "duration_s": 1.0}
+    /// {"at_s": 2.0, "kind": "host-stall", "device": 0, "duration_s": 0.05}
+    /// {"at_s": 2.5, "kind": "peer-flap", "link": 0, "duration_s": 0.2}
+    /// {"at_s": 3.0, "kind": "lose-inflight", "device": 2}
+    /// ```
+    ///
+    /// `device-down` without `duration_s` downs the device permanently.
+    pub fn parse_jsonl(text: &str) -> Result<Self, JsonError> {
+        let mut events = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let j = Json::parse(line)?;
+            let at_s = j.get("at_s")?.as_f64()?;
+            let kind = match j.get("kind")?.as_str()? {
+                "device-down" => FaultKind::DeviceDown {
+                    device: j.get("device")?.as_usize()?,
+                    down_s: match j.get("duration_s") {
+                        Ok(v) => Some(v.as_f64()?),
+                        Err(JsonError::MissingKey(_)) => None,
+                        Err(e) => return Err(e),
+                    },
+                },
+                "host-degrade" => FaultKind::HostDegrade {
+                    device: j.get("device")?.as_usize()?,
+                    multiplier: j.get("multiplier")?.as_f64()?,
+                    duration_s: j.get("duration_s")?.as_f64()?,
+                },
+                "host-stall" => FaultKind::HostStall {
+                    device: j.get("device")?.as_usize()?,
+                    duration_s: j.get("duration_s")?.as_f64()?,
+                },
+                "peer-flap" => FaultKind::PeerFlap {
+                    link: j.get("link")?.as_usize()?,
+                    duration_s: j.get("duration_s")?.as_f64()?,
+                },
+                "lose-inflight" => FaultKind::LoseInFlight {
+                    device: j.get("device")?.as_usize()?,
+                },
+                other => {
+                    return Err(JsonError::Type { wanted: "known fault kind", got: kind_leak(other) })
+                }
+            };
+            events.push(FaultEvent { at_s, kind });
+        }
+        Ok(Self::from_events(events))
+    }
+
+    /// Check the plan against a fleet shape. Returns a human-readable error
+    /// for out-of-range devices/links or non-finite/negative numbers.
+    pub fn validate(&self, n_devices: usize, n_peer_links: usize) -> Result<(), String> {
+        for (i, ev) in self.events.iter().enumerate() {
+            let ctx = |msg: String| format!("fault event {i}: {msg}");
+            if !ev.at_s.is_finite() || ev.at_s < 0.0 {
+                return Err(ctx(format!("at_s must be finite and >= 0, got {}", ev.at_s)));
+            }
+            let check_dur = |d: f64| {
+                if !d.is_finite() || d < 0.0 {
+                    Err(ctx(format!("duration_s must be finite and >= 0, got {d}")))
+                } else {
+                    Ok(())
+                }
+            };
+            let check_dev = |d: usize| {
+                if d >= n_devices {
+                    Err(ctx(format!("device {d} out of range (n_devices {n_devices})")))
+                } else {
+                    Ok(())
+                }
+            };
+            match &ev.kind {
+                FaultKind::DeviceDown { device, down_s } => {
+                    check_dev(*device)?;
+                    if let Some(d) = down_s {
+                        check_dur(*d)?;
+                    }
+                }
+                FaultKind::HostDegrade { device, multiplier, duration_s } => {
+                    check_dev(*device)?;
+                    check_dur(*duration_s)?;
+                    if !multiplier.is_finite() || *multiplier <= 0.0 {
+                        return Err(ctx(format!(
+                            "multiplier must be finite and > 0, got {multiplier}"
+                        )));
+                    }
+                }
+                FaultKind::HostStall { device, duration_s } => {
+                    check_dev(*device)?;
+                    check_dur(*duration_s)?;
+                }
+                FaultKind::PeerFlap { link, duration_s } => {
+                    check_dur(*duration_s)?;
+                    if *link >= n_peer_links {
+                        return Err(ctx(format!(
+                            "peer link {link} out of range (n_peer_links {n_peer_links})"
+                        )));
+                    }
+                }
+                FaultKind::LoseInFlight { device } => check_dev(*device)?,
+            }
+        }
+        Ok(())
+    }
+
+    /// Fault windows `[start, end]` in virtual seconds: a device-down spans
+    /// its down window, degrades/stalls/flaps span their durations, and an
+    /// in-flight loss is a point window. Used to split counters into
+    /// during-fault vs outside-fault buckets.
+    pub fn windows(&self) -> Vec<(f64, f64)> {
+        self.events
+            .iter()
+            .map(|ev| {
+                let end = match &ev.kind {
+                    FaultKind::DeviceDown { down_s, .. } => {
+                        ev.at_s + down_s.unwrap_or(f64::INFINITY)
+                    }
+                    FaultKind::HostDegrade { duration_s, .. }
+                    | FaultKind::HostStall { duration_s, .. }
+                    | FaultKind::PeerFlap { duration_s, .. } => ev.at_s + duration_s,
+                    FaultKind::LoseInFlight { .. } => ev.at_s,
+                };
+                (ev.at_s, end)
+            })
+            .collect()
+    }
+
+    /// Is virtual time `t` inside any fault window?
+    pub fn in_window(&self, t: Duration) -> bool {
+        let t = t.as_secs_f64();
+        self.windows().iter().any(|&(a, b)| t >= a && t <= b)
+    }
+
+    /// Named scenario builders used by the fault sweep and CI. All assume a
+    /// fleet of at least 2 devices; timestamps are virtual seconds chosen to
+    /// land mid-sweep for the default load cells.
+    pub fn scenario(name: &str) -> Option<Self> {
+        let plan = match name {
+            "baseline" => Self::empty(),
+            "device-down" => Self::from_events(vec![FaultEvent {
+                at_s: 1.0,
+                kind: FaultKind::DeviceDown { device: 1, down_s: Some(2.0) },
+            }]),
+            "link-degrade" => Self::from_events(vec![FaultEvent {
+                at_s: 1.0,
+                kind: FaultKind::HostDegrade { device: 0, multiplier: 0.25, duration_s: 2.0 },
+            }]),
+            "flap" => Self::from_events(vec![
+                FaultEvent {
+                    at_s: 1.0,
+                    kind: FaultKind::PeerFlap { link: 0, duration_s: 0.2 },
+                },
+                FaultEvent {
+                    at_s: 1.6,
+                    kind: FaultKind::PeerFlap { link: 0, duration_s: 0.2 },
+                },
+                FaultEvent {
+                    at_s: 2.2,
+                    kind: FaultKind::PeerFlap { link: 0, duration_s: 0.2 },
+                },
+            ]),
+            "lose-inflight" => Self::from_events(vec![
+                FaultEvent { at_s: 1.0, kind: FaultKind::LoseInFlight { device: 0 } },
+                FaultEvent { at_s: 1.5, kind: FaultKind::LoseInFlight { device: 0 } },
+            ]),
+            _ => return None,
+        };
+        Some(plan)
+    }
+
+    /// Expand the user-level plan into the primitive apply/restore timeline
+    /// the transfer engine replays.
+    pub fn timeline(&self) -> FaultTimeline {
+        let mut ticks = Vec::new();
+        for ev in &self.events {
+            let at = Duration::from_secs_f64(ev.at_s);
+            match &ev.kind {
+                FaultKind::DeviceDown { device, down_s } => {
+                    ticks.push(FaultTick { at, action: FaultAction::DeviceDown { device: *device } });
+                    if let Some(d) = down_s {
+                        ticks.push(FaultTick {
+                            at: Duration::from_secs_f64(ev.at_s + d),
+                            action: FaultAction::DeviceUp { device: *device },
+                        });
+                    }
+                }
+                FaultKind::HostDegrade { device, multiplier, duration_s } => {
+                    ticks.push(FaultTick {
+                        at,
+                        action: FaultAction::HostBandwidth { device: *device, multiplier: *multiplier },
+                    });
+                    ticks.push(FaultTick {
+                        at: Duration::from_secs_f64(ev.at_s + duration_s),
+                        action: FaultAction::HostBandwidth { device: *device, multiplier: 1.0 },
+                    });
+                }
+                FaultKind::HostStall { device, duration_s } => {
+                    ticks.push(FaultTick {
+                        at,
+                        action: FaultAction::HostStall {
+                            device: *device,
+                            until: Duration::from_secs_f64(ev.at_s + duration_s),
+                        },
+                    });
+                }
+                FaultKind::PeerFlap { link, duration_s } => {
+                    ticks.push(FaultTick {
+                        at,
+                        action: FaultAction::PeerStall {
+                            link: *link,
+                            until: Duration::from_secs_f64(ev.at_s + duration_s),
+                        },
+                    });
+                }
+                FaultKind::LoseInFlight { device } => {
+                    ticks.push(FaultTick { at, action: FaultAction::LoseInFlight { device: *device } });
+                }
+            }
+        }
+        ticks.sort_by_key(|t| t.at);
+        FaultTimeline { ticks, next: 0 }
+    }
+}
+
+// JsonError::Type wants a &'static str; unknown kinds come from user input,
+// so leak the handful of bytes once rather than widen the error enum.
+fn kind_leak(s: &str) -> &'static str {
+    Box::leak(s.to_string().into_boxed_str())
+}
+
+/// Primitive, directly-applicable state mutation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultAction {
+    DeviceDown { device: usize },
+    DeviceUp { device: usize },
+    /// Set host-link bandwidth to `nominal * multiplier` (1.0 restores).
+    HostBandwidth { device: usize, multiplier: f64 },
+    /// Host link may not start a transfer before `until`.
+    HostStall { device: usize, until: Duration },
+    /// Peer link is busy until `until`.
+    PeerStall { link: usize, until: Duration },
+    LoseInFlight { device: usize },
+}
+
+/// One primitive mutation pinned to a virtual instant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultTick {
+    pub at: Duration,
+    pub action: FaultAction,
+}
+
+/// The expanded, replayable schedule with a cursor. Owned by the transfer
+/// engine's state; `settle()` drains ticks in timestamp order as the virtual
+/// clock advances past them.
+#[derive(Debug, Clone, Default)]
+pub struct FaultTimeline {
+    ticks: Vec<FaultTick>,
+    next: usize,
+}
+
+impl FaultTimeline {
+    /// Any ticks left to apply?
+    pub fn is_active(&self) -> bool {
+        self.next < self.ticks.len()
+    }
+
+    /// The next tick at or before `now`, if any (does not advance).
+    pub fn peek_due(&self, now: Duration) -> Option<FaultTick> {
+        self.ticks.get(self.next).filter(|t| t.at <= now).copied()
+    }
+
+    /// Advance past the tick returned by `peek_due`.
+    pub fn pop(&mut self) {
+        self.next += 1;
+    }
+
+    /// Timestamp of the next unapplied tick (for event-horizon computation).
+    pub fn next_at(&self) -> Option<Duration> {
+        self.ticks.get(self.next).map(|t| t.at)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_inert() {
+        let p = FaultPlan::empty();
+        assert!(p.is_empty());
+        assert!(p.windows().is_empty());
+        assert!(!p.in_window(Duration::from_secs(1)));
+        let tl = p.timeline();
+        assert!(!tl.is_active());
+        assert!(tl.next_at().is_none());
+    }
+
+    #[test]
+    fn parse_jsonl_roundtrip() {
+        let text = r#"
+            {"at_s": 1.0, "kind": "device-down", "device": 1, "duration_s": 2.0}
+            # comment line
+            {"at_s": 0.5, "kind": "host-degrade", "device": 0, "multiplier": 0.25, "duration_s": 1.0}
+            {"at_s": 2.0, "kind": "peer-flap", "link": 0, "duration_s": 0.2}
+            {"at_s": 3.0, "kind": "lose-inflight", "device": 2}
+            {"at_s": 4.0, "kind": "host-stall", "device": 1, "duration_s": 0.05}
+            {"at_s": 5.0, "kind": "device-down", "device": 0}
+        "#;
+        let p = FaultPlan::parse_jsonl(text).unwrap();
+        assert_eq!(p.events().len(), 6);
+        // Sorted by timestamp.
+        assert_eq!(p.events()[0].at_s, 0.5);
+        assert!(matches!(p.events()[1].kind, FaultKind::DeviceDown { device: 1, down_s: Some(d) } if d == 2.0));
+        // Missing duration means permanent.
+        assert!(matches!(p.events()[5].kind, FaultKind::DeviceDown { device: 0, down_s: None }));
+    }
+
+    #[test]
+    fn parse_rejects_unknown_kind() {
+        assert!(FaultPlan::parse_jsonl(r#"{"at_s": 0, "kind": "meteor-strike"}"#).is_err());
+    }
+
+    #[test]
+    fn validate_bounds() {
+        let p = FaultPlan::from_events(vec![FaultEvent {
+            at_s: 1.0,
+            kind: FaultKind::DeviceDown { device: 4, down_s: None },
+        }]);
+        assert!(p.validate(4, 1).is_err());
+        assert!(p.validate(5, 1).is_ok());
+
+        let p = FaultPlan::from_events(vec![FaultEvent {
+            at_s: 1.0,
+            kind: FaultKind::PeerFlap { link: 3, duration_s: 0.1 },
+        }]);
+        assert!(p.validate(4, 3).is_err());
+        assert!(p.validate(4, 4).is_ok());
+
+        let p = FaultPlan::from_events(vec![FaultEvent {
+            at_s: 1.0,
+            kind: FaultKind::HostDegrade { device: 0, multiplier: 0.0, duration_s: 1.0 },
+        }]);
+        assert!(p.validate(1, 1).is_err());
+
+        let p = FaultPlan::from_events(vec![FaultEvent {
+            at_s: -1.0,
+            kind: FaultKind::LoseInFlight { device: 0 },
+        }]);
+        assert!(p.validate(1, 1).is_err());
+    }
+
+    #[test]
+    fn windows_and_membership() {
+        let p = FaultPlan::from_events(vec![
+            FaultEvent { at_s: 1.0, kind: FaultKind::DeviceDown { device: 0, down_s: Some(2.0) } },
+            FaultEvent { at_s: 5.0, kind: FaultKind::HostStall { device: 0, duration_s: 0.5 } },
+        ]);
+        assert_eq!(p.windows(), vec![(1.0, 3.0), (5.0, 5.5)]);
+        assert!(!p.in_window(Duration::from_secs_f64(0.9)));
+        assert!(p.in_window(Duration::from_secs_f64(2.0)));
+        assert!(!p.in_window(Duration::from_secs_f64(4.0)));
+        assert!(p.in_window(Duration::from_secs_f64(5.25)));
+    }
+
+    #[test]
+    fn timeline_expands_windows_into_pairs() {
+        let p = FaultPlan::from_events(vec![FaultEvent {
+            at_s: 1.0,
+            kind: FaultKind::HostDegrade { device: 0, multiplier: 0.5, duration_s: 2.0 },
+        }]);
+        let mut tl = p.timeline();
+        assert!(tl.is_active());
+        assert_eq!(tl.next_at(), Some(Duration::from_secs_f64(1.0)));
+        assert!(tl.peek_due(Duration::from_secs_f64(0.5)).is_none());
+        let t0 = tl.peek_due(Duration::from_secs_f64(1.5)).unwrap();
+        assert!(
+            matches!(t0.action, FaultAction::HostBandwidth { device: 0, multiplier } if multiplier == 0.5)
+        );
+        tl.pop();
+        let t1 = tl.peek_due(Duration::from_secs_f64(10.0)).unwrap();
+        assert_eq!(t1.at, Duration::from_secs_f64(3.0));
+        assert!(
+            matches!(t1.action, FaultAction::HostBandwidth { device: 0, multiplier } if multiplier == 1.0)
+        );
+        tl.pop();
+        assert!(!tl.is_active());
+    }
+
+    #[test]
+    fn scenarios_exist() {
+        for name in ["baseline", "device-down", "link-degrade", "flap", "lose-inflight"] {
+            let p = FaultPlan::scenario(name).unwrap();
+            assert!(p.validate(4, 4).is_ok(), "scenario {name} invalid");
+        }
+        assert!(FaultPlan::scenario("nope").is_none());
+        assert!(FaultPlan::scenario("baseline").unwrap().is_empty());
+    }
+}

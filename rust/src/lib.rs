@@ -49,6 +49,7 @@
 pub mod buddy;
 pub mod config;
 pub mod eval;
+pub mod fault;
 pub mod memory;
 pub mod model;
 pub mod prefetch;

@@ -247,6 +247,31 @@ impl ExpertCache {
         Ok(())
     }
 
+    /// Device-failure invalidation: every unpinned `Gpu` slot and every
+    /// `Loading` slot (pinned or not — its transfer is gone with the link)
+    /// reverts to `Cpu`. Pinned `Gpu` slots survive: the in-flight decode
+    /// step's activations already hold those weights, so faults act at step
+    /// granularity for in-use experts. Returns the previously-`Gpu` keys so
+    /// the engine can drop the matching device buffers.
+    pub fn invalidate_unpinned(&mut self) -> Vec<ExpertKey> {
+        let mut dropped = Vec::new();
+        for l in 0..self.n_layers {
+            for e in 0..self.n_experts {
+                let k = ExpertKey::new(l, e);
+                let i = self.idx(k);
+                match self.slots[i].state {
+                    SlotState::Gpu if self.slots[i].pins == 0 => {
+                        self.slots[i].state = SlotState::Cpu;
+                        dropped.push(k);
+                    }
+                    SlotState::Loading => self.slots[i].state = SlotState::Cpu,
+                    _ => {}
+                }
+            }
+        }
+        dropped
+    }
+
     fn select_victim(&self, layer: usize, protected: &[bool]) -> Option<ExpertKey> {
         let mut best: Option<(f64, ExpertKey)> = None;
         for e in 0..self.n_experts {
@@ -440,6 +465,41 @@ mod tests {
         assert!(!c.demote(k(0, 2)), "Cpu slot demote is a no-op");
         c.request_load(k(0, 2));
         assert!(!c.demote(k(0, 2)), "Loading slot demote is a no-op");
+    }
+
+    #[test]
+    fn invalidate_unpinned_spares_pinned_gpu_slots() {
+        let mut c = cache(3);
+        c.admit(k(0, 0)).unwrap();
+        c.admit(k(0, 1)).unwrap();
+        c.pin(k(0, 1));
+        c.request_load(k(0, 2)); // Loading
+        let dropped = c.invalidate_unpinned();
+        assert_eq!(dropped, vec![k(0, 0)], "only unpinned Gpu slots are reported dropped");
+        assert_eq!(c.state(k(0, 0)), SlotState::Cpu);
+        assert!(c.is_gpu(k(0, 1)), "pinned in-use slot survives the fault");
+        assert_eq!(c.state(k(0, 2)), SlotState::Cpu, "Loading slot loses its transfer");
+        // The pin is preserved: unpin after the step still balances.
+        c.unpin(k(0, 1));
+    }
+
+    #[test]
+    fn admit_after_invalidation_does_not_double_count_loading_slots() {
+        // Regression (device-down invalidation): a previously-Loading slot
+        // flipped back to Cpu must stop counting toward layer occupancy, so
+        // re-admission after the fault sees the true free space.
+        let mut c = cache(2);
+        assert!(matches!(c.request_load(k(0, 0)), LoadDecision::StartLoad { .. }));
+        c.admit(k(0, 1)).unwrap();
+        c.pin(k(0, 1));
+        // Layer is full: 1 Loading + 1 Gpu.
+        assert!(c.admit(k(0, 2)).is_err());
+        c.invalidate_unpinned(); // k(0,0) Loading -> Cpu; k(0,1) pinned, survives
+        assert_eq!(c.state(k(0, 0)), SlotState::Cpu);
+        c.admit(k(0, 2))
+            .expect("invalidated Loading slot must have released its capacity");
+        assert!(c.admit(k(0, 3)).is_err(), "layer is genuinely full again");
+        c.unpin(k(0, 1));
     }
 
     #[test]

@@ -15,5 +15,6 @@ mod transfer;
 pub use cache::{EvictPolicy, ExpertCache, LoadDecision, SlotState};
 pub use pcie::{PcieSim, PcieStats};
 pub use transfer::{
-    DeviceState, EngineState, SharedCache, TransferEngine, TransferHandle, TransferPriority,
+    DeviceState, EngineState, SharedCache, TransferEngine, TransferHandle, TransferOutcome,
+    TransferPriority, TransferTuning,
 };

@@ -51,22 +51,95 @@
 //! * **Real-time clock** — one background thread per device pops requests
 //!   and sleeps for each simulated duration, so downstream latency numbers
 //!   are genuine elapsed-time measurements.
+//!
+//! ## Fault injection & recovery
+//!
+//! The engine replays a [`FaultTimeline`] (see `crate::fault`) inside
+//! `settle()`: before the fleet settles past a fault's virtual timestamp,
+//! every link is first settled to exactly that instant, then the fault
+//! mutates state as one discrete event — so faults are totally ordered
+//! against transfer starts/completions and runs stay per-seed
+//! byte-identical. A downed device loses its queued and in-flight
+//! transfers, its unpinned cache contents, and accepts no new work until it
+//! comes back up (empty — recovery re-admits lazily on demand). `wait_gpu`
+//! is correspondingly bounded: a lost transfer is re-issued up to
+//! [`TransferTuning::max_retries`] times (the first re-issue immediately —
+//! the pre-fault behavior — later ones after seeded-jitter exponential
+//! backoff), an optional per-transfer deadline caps the stall, and the
+//! caller gets a [`TransferOutcome`] instead of an unbounded block.
+//!
+//! ## Panic policy (unwrap audit)
+//!
+//! Fallible lock/state paths on the engine API surface return contextful
+//! `anyhow` errors where a caller can recover (`drain_arrivals`,
+//! `drain_evictions`). The remaining panics are named invariant
+//! violations: a poisoned state mutex (a holder panicked mid-update, so
+//! fleet state is unrecoverable by construction) and a `WeightStore`
+//! missing an expert the cache accepted.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use anyhow::Context as _;
+
+use crate::fault::{FaultAction, FaultTick, FaultTimeline};
 use crate::memory::cache::{ExpertCache, LoadDecision, SlotState};
 use crate::memory::pcie::{PcieSim, PcieStats};
 use crate::topology::{Placement, Topology};
 use crate::util::clock::SimClock;
+use crate::util::rng::Rng;
 use crate::weights::{ExpertKey, ExpertWeights, WeightStore};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TransferPriority {
     Demand,
     Prefetch,
+}
+
+/// How a synchronous `wait_gpu` stall resolved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransferOutcome {
+    /// Resident without incident.
+    Ok,
+    /// Resident, but the transfer was lost and re-issued `n` times along
+    /// the way (cancellation race, in-flight loss, device flap).
+    Retried(u32),
+    /// Gave up: deadline exceeded, retry budget exhausted, home device
+    /// down, or no evictable slot for a re-issue. The expert is *not*
+    /// resident; the caller runs its degradation waterfall.
+    TimedOut,
+}
+
+/// Retry/deadline knobs for synchronous transfers. The defaults (no
+/// deadline; first re-issue immediate) make healthy runs byte-identical to
+/// the pre-fault engine: the backoff RNG is only consulted from the second
+/// re-issue of the same wait on, which a fault-free run never reaches.
+#[derive(Debug, Clone, Copy)]
+pub struct TransferTuning {
+    /// Per-`wait_gpu` stall budget (virtual time). `None` disables the
+    /// deadline. Ignored in real-time mode.
+    pub deadline: Option<Duration>,
+    /// Re-issues of a lost transfer before giving up.
+    pub max_retries: u32,
+    /// Base of the exponential backoff applied from the second re-issue of
+    /// one wait on (`base * 2^(n-1) * (1 + jitter)`, jitter uniform in
+    /// `[0, 1)` from the seeded stream).
+    pub backoff_base: Duration,
+    /// Seed for the backoff-jitter RNG (deterministic per seed).
+    pub seed: u64,
+}
+
+impl Default for TransferTuning {
+    fn default() -> Self {
+        Self {
+            deadline: None,
+            max_retries: 4,
+            backoff_base: Duration::from_micros(2000),
+            seed: 0x00dd_f00d,
+        }
+    }
 }
 
 /// A queued (not yet started) transfer request.
@@ -91,6 +164,12 @@ struct InFlight {
 pub struct DeviceState {
     pub cache: ExpertCache,
     pub pcie: PcieSim,
+    /// Out of service (fault injection). A down device starts no transfers,
+    /// counts no residency, and accepts no new requests.
+    pub down: bool,
+    /// Host-link bandwidth at spawn; degrade faults scale relative to this
+    /// so overlapping degrades do not compound.
+    nominal_bw: f64,
     demand_q: VecDeque<Queued>,
     prefetch_q: VecDeque<Queued>,
     in_flight: Vec<InFlight>,
@@ -100,9 +179,12 @@ pub struct DeviceState {
 
 impl DeviceState {
     fn new(cache: ExpertCache, pcie: PcieSim) -> Self {
+        let nominal_bw = pcie.bandwidth_bytes_per_s;
         Self {
             cache,
             pcie,
+            down: false,
+            nominal_bw,
             demand_q: VecDeque::new(),
             prefetch_q: VecDeque::new(),
             in_flight: Vec::new(),
@@ -152,12 +234,34 @@ pub struct EngineState {
     peer_in_flight: Vec<PeerInFlight>,
     pub arrivals: Vec<(ExpertKey, ExpertWeights)>,
     pub evictions: Vec<ExpertKey>,
+    /// Expanded fault schedule replayed by `settle` (inert when empty).
+    faults: FaultTimeline,
+    /// Bumped once per applied fault tick; the engine layer polls it to
+    /// detect device up/down transitions without re-scanning the fleet.
+    fault_epoch: u64,
+    /// Seeded jitter stream for retry backoff (only drawn from on the
+    /// second re-issue of a wait — never in fault-free runs).
+    retry_rng: Rng,
     shutdown: bool,
 }
 
 impl EngineState {
     pub fn n_devices(&self) -> usize {
         self.devices.len()
+    }
+
+    /// Applied-fault counter (one increment per primitive fault tick).
+    pub fn fault_epoch(&self) -> u64 {
+        self.fault_epoch
+    }
+
+    /// Which devices are currently out of service.
+    pub fn down_mask(&self) -> Vec<bool> {
+        self.devices.iter().map(|d| d.down).collect()
+    }
+
+    pub fn is_down(&self, dev: usize) -> bool {
+        self.devices[dev].down
     }
 
     /// Primary home device of an expert (demand fetches land here).
@@ -175,12 +279,14 @@ impl EngineState {
         &mut self.devices[d].cache
     }
 
-    /// Resident on any of its home devices (an expert is only ever
-    /// admitted at a home, so this is fleet-wide residency).
+    /// Resident on any of its *live* home devices (an expert is only ever
+    /// admitted at a home, so this is fleet-wide residency). A copy on a
+    /// downed device does not count — its weights are unreachable until
+    /// the device recovers.
     pub fn is_gpu(&self, key: ExpertKey) -> bool {
         for i in 0..self.placement.replication_of(key) {
             let d = self.placement.homes(key)[i];
-            if self.devices[d].cache.is_gpu(key) {
+            if !self.devices[d].down && self.devices[d].cache.is_gpu(key) {
                 return true;
             }
         }
@@ -305,6 +411,29 @@ pub struct Inner {
     cv: Condvar,
 }
 
+impl Inner {
+    /// Invariant: the state mutex is never poisoned — a holder that
+    /// panicked mid-update leaves the fleet bookkeeping unrecoverable, so
+    /// infallible API paths stop here with the invariant named.
+    fn lock(&self) -> MutexGuard<'_, EngineState> {
+        self.state.lock().unwrap_or_else(|_| {
+            panic!(
+                "invariant violated: transfer-engine state mutex poisoned \
+                 (a state holder panicked mid-update; fleet bookkeeping is unrecoverable)"
+            )
+        })
+    }
+
+    /// Fallible flavor for API surfaces where the caller can recover.
+    fn try_lock(&self) -> anyhow::Result<MutexGuard<'_, EngineState>> {
+        self.state.lock().map_err(|_| {
+            anyhow::anyhow!(
+                "transfer-engine state mutex poisoned: a state holder panicked mid-update"
+            )
+        })
+    }
+}
+
 pub type SharedCache = Arc<Inner>;
 
 pub struct TransferEngine;
@@ -315,6 +444,7 @@ pub struct TransferHandle {
     inner: SharedCache,
     clock: SimClock,
     store: Arc<WeightStore>,
+    tuning: TransferTuning,
     threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
 }
 
@@ -350,15 +480,23 @@ fn settle_device(
     now: Duration,
     arrivals: &mut Vec<(ExpertKey, ExpertWeights)>,
 ) {
-    loop {
+    // A down device starts no transfers (its queues were drained when it
+    // went down, but new enqueues are also refused at the request layer).
+    while !dev.down {
         let Some((start, demand_first)) = next_start(dev) else { break };
         if start > now {
             break;
         }
         let key = if demand_first {
-            dev.demand_q.pop_front().unwrap().key
+            dev.demand_q
+                .pop_front()
+                .expect("invariant violated: next_start reported a queued demand")
+                .key
         } else {
-            dev.prefetch_q.pop_front().unwrap().key
+            dev.prefetch_q
+                .pop_front()
+                .expect("invariant violated: next_start reported a queued prefetch")
+                .key
         };
         let dur = dev.pcie.transfer_duration(store.expert_bytes);
         let ready = start + dur;
@@ -371,7 +509,9 @@ fn settle_device(
         if dev.in_flight[i].ready_at <= now {
             let t = dev.in_flight.remove(i);
             dev.cache.complete_load(t.key);
-            let w = store.expert(t.key).expect("transfer for unknown expert");
+            let w = store.expert(t.key).expect(
+                "invariant violated: WeightStore must hold every expert the cache accepted",
+            );
             arrivals.push((t.key, w));
         } else {
             i += 1;
@@ -379,11 +519,24 @@ fn settle_device(
     }
 }
 
-/// Settle every device's link to `now`. Links are independent: each one
-/// serializes its own transfers but never blocks another's. Replica
-/// copies that finished crossing the peer links land on their target
-/// device's cache and stage their weights like any host arrival.
+/// Settle every device's link to `now`, replaying due fault ticks in
+/// timestamp order: the fleet is settled up to each tick's instant before
+/// the tick mutates state, so faults interleave with transfer events
+/// deterministically. Links are independent: each one serializes its own
+/// transfers but never blocks another's. Replica copies that finished
+/// crossing the peer links land on their target device's cache and stage
+/// their weights like any host arrival.
 fn settle(st: &mut EngineState, store: &WeightStore, now: Duration) {
+    while let Some(tick) = st.faults.peek_due(now) {
+        settle_links(st, store, tick.at);
+        apply_fault(st, tick);
+        st.faults.pop();
+        st.fault_epoch += 1;
+    }
+    settle_links(st, store, now);
+}
+
+fn settle_links(st: &mut EngineState, store: &WeightStore, now: Duration) {
     let EngineState { devices, arrivals, peer_in_flight, .. } = st;
     for dev in devices.iter_mut() {
         settle_device(dev, store, now, arrivals);
@@ -393,7 +546,9 @@ fn settle(st: &mut EngineState, store: &WeightStore, now: Duration) {
         if peer_in_flight[i].ready_at <= now {
             let t = peer_in_flight.remove(i);
             devices[t.device].cache.complete_load(t.key);
-            let w = store.expert(t.key).expect("replica copy for unknown expert");
+            let w = store.expert(t.key).expect(
+                "invariant violated: WeightStore must hold every expert the cache accepted",
+            );
             arrivals.push((t.key, w));
         } else {
             i += 1;
@@ -401,21 +556,98 @@ fn settle(st: &mut EngineState, store: &WeightStore, now: Duration) {
     }
 }
 
+/// Apply one primitive fault tick to the fleet. Only engine-owned state is
+/// touched (see `crate::fault` module docs for the full mutation contract).
+fn apply_fault(st: &mut EngineState, tick: FaultTick) {
+    match tick.action {
+        FaultAction::DeviceDown { device } => {
+            let live = st.devices.iter().filter(|d| !d.down).count();
+            if st.devices[device].down || live <= 1 {
+                // Never down the last live device (the fleet would deadlock
+                // with no recovery target); repeated downs are no-ops.
+                log::warn!("fault: ignoring device-down({device}) — last live device or already down");
+                return;
+            }
+            // Cancel replica copies heading to the device first (their
+            // Loading slots live in its cache).
+            let mut i = 0;
+            while i < st.peer_in_flight.len() {
+                if st.peer_in_flight[i].device == device {
+                    let t = st.peer_in_flight.remove(i);
+                    st.devices[device].cache.abort_load(t.key);
+                } else {
+                    i += 1;
+                }
+            }
+            let dev = &mut st.devices[device];
+            dev.down = true;
+            // Queued and in-flight host transfers are lost with the link.
+            for q in dev.demand_q.drain(..) {
+                dev.cache.abort_load(q.key);
+            }
+            for q in dev.prefetch_q.drain(..) {
+                dev.cache.abort_load(q.key);
+            }
+            for t in dev.in_flight.drain(..) {
+                dev.cache.abort_load(t.key);
+            }
+            dev.link_free_at = tick.at;
+            // Unpinned residency is invalidated; the engine layer drops the
+            // matching device buffers via the eviction mailbox.
+            let dropped = dev.cache.invalidate_unpinned();
+            st.evictions.extend(dropped);
+        }
+        FaultAction::DeviceUp { device } => {
+            let dev = &mut st.devices[device];
+            if dev.down {
+                dev.down = false;
+                dev.link_free_at = dev.link_free_at.max(tick.at);
+            }
+        }
+        FaultAction::HostBandwidth { device, multiplier } => {
+            let dev = &mut st.devices[device];
+            dev.pcie.bandwidth_bytes_per_s = dev.nominal_bw * multiplier;
+        }
+        FaultAction::HostStall { device, until } => {
+            let dev = &mut st.devices[device];
+            dev.link_free_at = dev.link_free_at.max(until);
+        }
+        FaultAction::PeerStall { link, until } => {
+            if let Some(l) = st.peer_links.get_mut(link) {
+                l.busy_until = l.busy_until.max(until);
+            }
+        }
+        FaultAction::LoseInFlight { device } => {
+            let dev = &mut st.devices[device];
+            for t in dev.in_flight.drain(..) {
+                dev.cache.abort_load(t.key);
+            }
+            // The discarded work frees the link at the loss instant.
+            dev.link_free_at = dev.link_free_at.min(tick.at);
+        }
+    }
+}
+
 /// The next virtual instant at which a transfer completes on this link
 /// (in-flight first; otherwise the next queued transfer's start +
-/// duration).
+/// duration). A down device produces no events.
 fn next_event(dev: &DeviceState, expert_bytes: usize) -> Option<Duration> {
+    if dev.down {
+        return None;
+    }
     if let Some(t) = dev.in_flight.iter().map(|t| t.ready_at).min() {
         return Some(t);
     }
     next_start(dev).map(|(start, _)| start + dev.pcie.transfer_duration(expert_bytes))
 }
 
-/// The satellite fix for the request/wait race: the awaited expert's
-/// transfer can vanish between `request` and `wait_gpu` (e.g. the prefetch
-/// verification step cancelled it, which also aborted the `Loading` slot).
-/// Re-issue the load at demand priority instead of panicking.
-fn reissue_demand(st: &mut EngineState, key: ExpertKey, now: Duration) {
+/// The fix for the request/wait race: the awaited expert's transfer can
+/// vanish between `request` and `wait_gpu` (the prefetch verification step
+/// cancelled it, or a fault dropped it). Re-issue the load at demand
+/// priority. Returns false when the load cannot be re-issued (every slot
+/// in the layer is pinned) — the caller surfaces `TimedOut` instead of the
+/// old panic.
+fn reissue_demand(st: &mut EngineState, key: ExpertKey, now: Duration) -> bool {
     if st.cache(key).state(key) == SlotState::Loading {
         // Orphaned Loading slot with no backing transfer: reset it so
         // request_load can restart the state machine.
@@ -428,12 +660,35 @@ fn reissue_demand(st: &mut EngineState, key: ExpertKey, now: Duration) {
             }
             let dev = st.home(key);
             st.devices[dev].demand_q.push_back(Queued { key, enqueued_at: now });
+            true
         }
-        LoadDecision::AlreadyGpu => {}
-        LoadDecision::AlreadyLoading => unreachable!("orphaned Loading slot was just reset"),
-        LoadDecision::NoRoom => panic!(
-            "wait_gpu({key:?}): transfer lost and every slot in the layer is pinned"
-        ),
+        LoadDecision::AlreadyGpu => true,
+        LoadDecision::AlreadyLoading => {
+            unreachable!("invariant violated: orphaned Loading slot was just reset")
+        }
+        LoadDecision::NoRoom => false,
+    }
+}
+
+/// Give up on a wait: dequeue the expert's still-queued transfer (freeing
+/// its `Loading` slot) so the abandoned request stops holding cache
+/// capacity. A transfer already *in flight* is left to land — the link
+/// time is committed and the late arrival is harmless (the expert simply
+/// becomes resident after the caller has moved on).
+fn abandon_wait(st: &mut EngineState, key: ExpertKey) {
+    let dev = st.home(key);
+    let d = &mut st.devices[dev];
+    let mut dequeued = false;
+    if let Some(pos) = d.demand_q.iter().position(|q| q.key == key) {
+        d.demand_q.remove(pos);
+        dequeued = true;
+    }
+    if let Some(pos) = d.prefetch_q.iter().position(|q| q.key == key) {
+        d.prefetch_q.remove(pos);
+        dequeued = true;
+    }
+    if dequeued {
+        d.cache.abort_load(key);
     }
 }
 
@@ -471,7 +726,38 @@ impl TransferEngine {
         store: Arc<WeightStore>,
         clock: SimClock,
     ) -> TransferHandle {
+        Self::spawn_multi_with(
+            devices,
+            peer,
+            topology,
+            placement,
+            store,
+            clock,
+            FaultTimeline::default(),
+            TransferTuning::default(),
+        )
+    }
+
+    /// [`Self::spawn_multi`] with a fault schedule and transfer tuning.
+    /// Fault injection requires a virtual clock (the timeline is replayed
+    /// against virtual timestamps); a non-empty timeline under a real-time
+    /// clock is refused.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn_multi_with(
+        devices: Vec<(ExpertCache, PcieSim)>,
+        peer: PcieSim,
+        topology: Topology,
+        placement: Placement,
+        store: Arc<WeightStore>,
+        clock: SimClock,
+        faults: FaultTimeline,
+        tuning: TransferTuning,
+    ) -> TransferHandle {
         assert!(!devices.is_empty(), "need at least one device");
+        assert!(
+            clock.is_virtual() || !faults.is_active(),
+            "fault injection is only supported under a virtual clock"
+        );
         assert_eq!(
             devices.len(),
             placement.n_devices(),
@@ -498,6 +784,9 @@ impl TransferEngine {
                 peer_in_flight: Vec::new(),
                 arrivals: Vec::new(),
                 evictions: Vec::new(),
+                faults,
+                fault_epoch: 0,
+                retry_rng: Rng::new(tuning.seed ^ 0xfa17_0b0f),
                 shutdown: false,
             }),
             cv: Condvar::new(),
@@ -516,7 +805,7 @@ impl TransferEngine {
                 })
                 .collect()
         };
-        TransferHandle { inner, clock, store, threads: Arc::new(Mutex::new(threads)) }
+        TransferHandle { inner, clock, store, tuning, threads: Arc::new(Mutex::new(threads)) }
     }
 
     /// Real-time worker loop for one device: pop (demand first), sleep the
@@ -526,7 +815,10 @@ impl TransferEngine {
     fn run(inner: SharedCache, store: Arc<WeightStore>, dev: usize) {
         loop {
             let (key, duration) = {
-                let mut st = inner.state.lock().unwrap();
+                // A poisoned mutex means another holder panicked; this
+                // worker can recover by exiting cleanly instead of
+                // double-panicking during unwind.
+                let Ok(mut st) = inner.state.lock() else { return };
                 loop {
                     if st.shutdown {
                         return;
@@ -545,13 +837,18 @@ impl TransferEngine {
                         d.in_flight.push(InFlight { key: q.key, ready_at: Duration::ZERO });
                         break (q.key, dur);
                     }
-                    st = inner.cv.wait(st).unwrap();
+                    st = match inner.cv.wait(st) {
+                        Ok(g) => g,
+                        Err(_) => return,
+                    };
                 }
             };
             // Occupy the link in real time (lock released).
             std::thread::sleep(duration);
-            let weights = store.expert(key).expect("transfer for unknown expert");
-            let mut st = inner.state.lock().unwrap();
+            let weights = store.expert(key).expect(
+                "invariant violated: WeightStore must hold every expert the cache accepted",
+            );
+            let Ok(mut st) = inner.state.lock() else { return };
             let d = &mut st.devices[dev];
             if let Some(pos) = d.in_flight.iter().position(|t| t.key == key) {
                 d.in_flight.remove(pos);
@@ -568,11 +865,26 @@ impl TransferHandle {
     /// to the current virtual time so callers always observe a consistent
     /// "present".
     fn lock_settled(&self) -> MutexGuard<'_, EngineState> {
-        let mut st = self.inner.state.lock().unwrap();
+        let mut st = self.inner.lock();
         if self.clock.is_virtual() {
             settle(&mut st, &self.store, self.clock.now());
         }
         st
+    }
+
+    /// Fallible flavor of [`Self::lock_settled`] for API surfaces where
+    /// the caller can recover from a poisoned state mutex.
+    fn try_lock_settled(&self) -> anyhow::Result<MutexGuard<'_, EngineState>> {
+        let mut st = self.inner.try_lock()?;
+        if self.clock.is_virtual() {
+            settle(&mut st, &self.store, self.clock.now());
+        }
+        Ok(st)
+    }
+
+    /// The retry/deadline knobs this engine was spawned with.
+    pub fn tuning(&self) -> TransferTuning {
+        self.tuning
     }
 
     /// The clock this engine runs on.
@@ -594,6 +906,12 @@ impl TransferHandle {
         let mut st = self.lock_settled();
         if st.is_gpu(key) {
             return LoadDecision::AlreadyGpu;
+        }
+        if st.devices[st.home(key)].down {
+            // A down home cannot accept a transfer; NoRoom tells the
+            // caller to degrade (transient fetch / waterfall) without
+            // queueing work that could never start.
+            return LoadDecision::NoRoom;
         }
         let decision = st.request_load_routed(key);
         if let LoadDecision::StartLoad { evicted } = decision {
@@ -623,7 +941,10 @@ impl TransferHandle {
         let mut st = self.lock_settled();
         let dev = st.home(key);
         if let Some(pos) = st.devices[dev].prefetch_q.iter().position(|q| q.key == key) {
-            let q = st.devices[dev].prefetch_q.remove(pos).unwrap();
+            let q = st.devices[dev]
+                .prefetch_q
+                .remove(pos)
+                .expect("invariant violated: position() just located this queue index");
             st.devices[dev].demand_q.push_back(q);
             if self.clock.is_virtual() {
                 settle(&mut st, &self.store, self.clock.now());
@@ -648,21 +969,80 @@ impl TransferHandle {
         }
     }
 
-    /// Block until `key` is resident on its home device (the synchronous
-    /// miss stall). Under a virtual clock this advances the clock to the
-    /// transfer's completion instant — the stall costs virtual, not real,
-    /// time. If the awaited transfer vanished (request/wait race with a
-    /// cancellation), the load is re-issued at demand priority.
-    pub fn wait_gpu(&self, key: ExpertKey) {
+    /// Block until `key` is resident on a live home device (the
+    /// synchronous miss stall). Under a virtual clock this advances the
+    /// clock to the transfer's completion instant — the stall costs
+    /// virtual, not real, time. A lost transfer (cancellation race,
+    /// fault-injected loss) is re-issued at demand priority up to
+    /// `tuning.max_retries` times: the first re-issue is immediate (the
+    /// pre-fault behavior, so fault-free runs are byte-identical), later
+    /// ones wait out a seeded-jitter exponential backoff first. The wait
+    /// resolves `TimedOut` — leaving the expert non-resident — when the
+    /// optional deadline expires, the retry budget runs out, the home
+    /// device is down, or a re-issue finds every slot pinned.
+    #[must_use = "a TimedOut expert is not resident; run the degradation waterfall"]
+    pub fn wait_gpu(&self, key: ExpertKey) -> TransferOutcome {
+        let deadline = self.tuning.deadline.map(|d| self.clock.now() + d);
+        let mut retries: u32 = 0;
+        let done = |retries: u32| {
+            if retries == 0 {
+                TransferOutcome::Ok
+            } else {
+                TransferOutcome::Retried(retries)
+            }
+        };
         if self.clock.is_virtual() {
-            let mut st = self.inner.state.lock().unwrap();
+            let mut st = self.inner.lock();
             loop {
                 settle(&mut st, &self.store, self.clock.now());
                 if st.is_gpu(key) {
-                    return;
+                    return done(retries);
+                }
+                if let Some(dl) = deadline {
+                    if self.clock.now() >= dl {
+                        abandon_wait(&mut st, key);
+                        return TransferOutcome::TimedOut;
+                    }
                 }
                 if !st.has_transfer(key) {
-                    reissue_demand(&mut st, key, self.clock.now());
+                    if st.devices[st.home(key)].down {
+                        // Nothing to clean up: the device-down fault
+                        // already drained its queues. The caller reroutes.
+                        return TransferOutcome::TimedOut;
+                    }
+                    if retries >= self.tuning.max_retries {
+                        abandon_wait(&mut st, key);
+                        return TransferOutcome::TimedOut;
+                    }
+                    if retries >= 1 {
+                        // Exponential backoff with seeded jitter from the
+                        // second re-issue on; burns virtual time, so fault
+                        // windows can pass while we back off.
+                        let base = self.tuning.backoff_base.as_secs_f64();
+                        let jitter = st.retry_rng.f64();
+                        let factor = (1u64 << (retries - 1).min(20)) as f64;
+                        let mut until = self.clock.now()
+                            + Duration::from_secs_f64(base * factor * (1.0 + jitter));
+                        if let Some(dl) = deadline {
+                            until = until.min(dl);
+                        }
+                        self.clock.advance_to(until);
+                        settle(&mut st, &self.store, self.clock.now());
+                        if st.is_gpu(key) {
+                            return done(retries);
+                        }
+                        if st.devices[st.home(key)].down {
+                            return TransferOutcome::TimedOut;
+                        }
+                        if deadline.is_some_and(|dl| self.clock.now() >= dl) {
+                            abandon_wait(&mut st, key);
+                            return TransferOutcome::TimedOut;
+                        }
+                    }
+                    retries += 1;
+                    if !reissue_demand(&mut st, key, self.clock.now()) {
+                        return TransferOutcome::TimedOut;
+                    }
                     continue;
                 }
                 let dev = st.home(key);
@@ -673,22 +1053,49 @@ impl TransferHandle {
                     .filter(|t| t.key == key)
                     .map(|t| t.ready_at)
                     .min();
-                let t = match (host, peer) {
+                let mut t = match (host, peer) {
                     (Some(a), Some(b)) => a.min(b),
                     (Some(a), None) => a,
                     (None, Some(b)) => b,
-                    (None, None) => unreachable!("pending transfer implies a next link event"),
+                    (None, None) => unreachable!(
+                        "invariant violated: pending transfer implies a next link event"
+                    ),
                 };
+                // Never advance past the next scheduled fault (it may kill
+                // the very transfer we are waiting on) or the deadline.
+                if let Some(f) = st.faults.next_at() {
+                    t = t.min(f);
+                }
+                if let Some(dl) = deadline {
+                    t = t.min(dl);
+                }
                 self.clock.advance_to(t);
             }
         } else {
-            let mut st = self.inner.state.lock().unwrap();
-            while !st.is_gpu(key) {
+            // Real-time mode: no fault timeline and no virtual deadline —
+            // the bounded retry budget still applies.
+            let mut st = self.inner.lock();
+            loop {
+                if st.is_gpu(key) {
+                    return done(retries);
+                }
                 if !st.has_transfer(key) {
-                    reissue_demand(&mut st, key, self.clock.now());
+                    if retries >= self.tuning.max_retries {
+                        return TransferOutcome::TimedOut;
+                    }
+                    retries += 1;
+                    if !reissue_demand(&mut st, key, self.clock.now()) {
+                        return TransferOutcome::TimedOut;
+                    }
                     self.inner.cv.notify_all();
                 }
-                st = self.inner.cv.wait(st).unwrap();
+                st = match self.inner.cv.wait(st) {
+                    Ok(g) => g,
+                    Err(_) => panic!(
+                        "invariant violated: transfer-engine state mutex poisoned \
+                         while waiting on a transfer"
+                    ),
+                };
             }
         }
     }
@@ -699,7 +1106,12 @@ impl TransferHandle {
     pub fn transient_fetch_for(&self, key: ExpertKey, bytes: usize) -> Duration {
         let (dev, dur) = {
             let st = self.lock_settled();
-            let dev = st.home(key);
+            let mut dev = st.home(key);
+            if st.devices[dev].down {
+                // The home link is gone; stream through the first live
+                // device's link instead (deterministic fallback).
+                dev = (0..st.devices.len()).find(|&i| !st.devices[i].down).unwrap_or(dev);
+            }
             (dev, st.devices[dev].pcie.transfer_duration(bytes))
         };
         self.clock.sleep(dur);
@@ -768,6 +1180,9 @@ impl TransferHandle {
     pub fn replica_promote(&self, key: ExpertKey, from: usize, to: usize) -> bool {
         let now = self.clock.now();
         let mut st = self.lock_settled();
+        if st.devices[from].down || st.devices[to].down {
+            return false;
+        }
         if !st.devices[from].cache.is_gpu(key) {
             return false;
         }
@@ -820,13 +1235,22 @@ impl TransferHandle {
     }
 
     /// Drain completed transfers (engine layer creates device buffers).
-    pub fn drain_arrivals(&self) -> Vec<(ExpertKey, ExpertWeights)> {
-        std::mem::take(&mut self.lock_settled().arrivals)
+    /// Errs with context when the state mutex is poisoned — the caller can
+    /// surface the failure instead of cascading the panic.
+    pub fn drain_arrivals(&self) -> anyhow::Result<Vec<(ExpertKey, ExpertWeights)>> {
+        let mut st = self
+            .try_lock_settled()
+            .context("drain_arrivals: cannot stage completed transfers")?;
+        Ok(std::mem::take(&mut st.arrivals))
     }
 
-    /// Drain evicted experts (engine layer drops device buffers).
-    pub fn drain_evictions(&self) -> Vec<ExpertKey> {
-        std::mem::take(&mut self.lock_settled().evictions)
+    /// Drain evicted experts (engine layer drops device buffers). Errs
+    /// with context when the state mutex is poisoned.
+    pub fn drain_evictions(&self) -> anyhow::Result<Vec<ExpertKey>> {
+        let mut st = self
+            .try_lock_settled()
+            .context("drain_evictions: cannot collect evicted experts")?;
+        Ok(std::mem::take(&mut st.evictions))
     }
 
     /// Number of queued (not yet started) transfers across every link.
@@ -839,12 +1263,17 @@ impl TransferHandle {
 
     pub fn shutdown(&self) {
         {
-            let mut st = self.inner.state.lock().unwrap();
-            st.shutdown = true;
+            // Best-effort during teardown: a poisoned mutex means the
+            // workers are already unwinding, so there is nothing to flag.
+            if let Ok(mut st) = self.inner.state.lock() {
+                st.shutdown = true;
+            }
             self.inner.cv.notify_all();
         }
-        for t in self.threads.lock().unwrap().drain(..) {
-            let _ = t.join();
+        if let Ok(mut threads) = self.threads.lock() {
+            for t in threads.drain(..) {
+                let _ = t.join();
+            }
         }
     }
 }
@@ -874,9 +1303,9 @@ mod tests {
             h.request(k, TransferPriority::Demand),
             LoadDecision::StartLoad { .. }
         ));
-        h.wait_gpu(k);
+        let _ = h.wait_gpu(k);
         assert!(h.with_state(|st| st.is_gpu(k)));
-        let arr = h.drain_arrivals();
+        let arr = h.drain_arrivals().unwrap();
         assert_eq!(arr.len(), 1);
         assert_eq!(arr[0].0, k);
         h.shutdown();
@@ -887,8 +1316,8 @@ mod tests {
         let (h, _) = setup(4);
         h.request(ExpertKey::new(0, 0), TransferPriority::Demand);
         h.request(ExpertKey::new(0, 1), TransferPriority::Prefetch);
-        h.wait_gpu(ExpertKey::new(0, 0));
-        h.wait_gpu(ExpertKey::new(0, 1));
+        let _ = h.wait_gpu(ExpertKey::new(0, 0));
+        let _ = h.wait_gpu(ExpertKey::new(0, 1));
         let (d, p) = h.with_state(|st| {
             let s = st.pcie_stats();
             (s.demand_transfers, s.prefetch_transfers)
@@ -903,10 +1332,10 @@ mod tests {
         let a = ExpertKey::new(0, 0);
         let b = ExpertKey::new(0, 1);
         h.request(a, TransferPriority::Demand);
-        h.wait_gpu(a);
+        let _ = h.wait_gpu(a);
         h.request(b, TransferPriority::Demand);
-        h.wait_gpu(b);
-        let ev = h.drain_evictions();
+        let _ = h.wait_gpu(b);
+        let ev = h.drain_evictions().unwrap();
         assert_eq!(ev, vec![a]);
         h.shutdown();
     }
@@ -925,8 +1354,8 @@ mod tests {
             d2,
             LoadDecision::AlreadyLoading | LoadDecision::AlreadyGpu
         ));
-        h.wait_gpu(k);
-        assert_eq!(h.drain_arrivals().len(), 1);
+        let _ = h.wait_gpu(k);
+        assert_eq!(h.drain_arrivals().unwrap().len(), 1);
         h.shutdown();
     }
 
@@ -938,7 +1367,7 @@ mod tests {
             h.request(ExpertKey::new(2, e), TransferPriority::Prefetch);
         }
         h.escalate(ExpertKey::new(2, 3));
-        h.wait_gpu(ExpertKey::new(2, 3));
+        let _ = h.wait_gpu(ExpertKey::new(2, 3));
         h.shutdown();
     }
 
@@ -961,7 +1390,7 @@ mod tests {
         let k = ExpertKey::new(0, 0);
         let t0 = std::time::Instant::now();
         h.request(k, TransferPriority::Demand);
-        h.wait_gpu(k);
+        let _ = h.wait_gpu(k);
         assert!(
             clock.now().as_secs_f64() > 0.006,
             "virtual clock must advance by the transfer duration"
@@ -986,9 +1415,9 @@ mod tests {
         let b = ExpertKey::new(0, 1);
         h.request(a, TransferPriority::Demand);
         h.request(b, TransferPriority::Demand);
-        h.wait_gpu(a);
+        let _ = h.wait_gpu(a);
         assert_eq!(clock.now(), dur, "first transfer completes after one duration");
-        h.wait_gpu(b);
+        let _ = h.wait_gpu(b);
         assert_eq!(clock.now(), dur * 2, "second transfer waits for the link");
         h.shutdown();
     }
@@ -1008,7 +1437,7 @@ mod tests {
         }
         let d = ExpertKey::new(0, 7);
         h.request(d, TransferPriority::Demand);
-        h.wait_gpu(d);
+        let _ = h.wait_gpu(d);
         // The demand ran right after the in-flight prefetch, jumping the
         // two still-queued prefetches: 2 transfers total. By the demand's
         // completion instant the link has picked up the next prefetch, so
@@ -1031,7 +1460,7 @@ mod tests {
         let k = ExpertKey::new(0, 0);
         let t0 = std::time::Instant::now();
         h.request(k, TransferPriority::Demand);
-        h.wait_gpu(k);
+        let _ = h.wait_gpu(k);
         assert!(t0.elapsed().as_secs_f64() > 0.0015, "stall must be real");
         h.shutdown();
     }
@@ -1060,7 +1489,8 @@ mod tests {
         h.request(k, TransferPriority::Prefetch);
         // ...then cancel it: the transfer vanishes, the slot returns to Cpu.
         assert!(h.cancel_prefetch(k));
-        h.wait_gpu(k); // panicked before the fix
+        // Panicked before the fix; now surfaces exactly one re-issue.
+        assert_eq!(h.wait_gpu(k), TransferOutcome::Retried(1));
         assert!(h.with_state(|st| st.is_gpu(k)));
         h.shutdown();
     }
@@ -1110,8 +1540,8 @@ mod tests {
         assert_eq!(h.with_state(|st| (st.home(a), st.home(b))), (0, 1));
         h.request(a, TransferPriority::Demand);
         h.request(b, TransferPriority::Demand);
-        h.wait_gpu(a);
-        h.wait_gpu(b);
+        let _ = h.wait_gpu(a);
+        let _ = h.wait_gpu(b);
         assert_eq!(clock.now(), dur, "independent links must not serialize");
         assert!(h.with_state(|st| st.is_gpu(a) && st.is_gpu(b)));
         // Fleet-wide stats aggregate both links.
@@ -1128,7 +1558,7 @@ mod tests {
         assert_eq!(h.with_state(|st| (st.home(a), st.home(b))), (0, 0));
         h.request(a, TransferPriority::Demand);
         h.request(b, TransferPriority::Demand);
-        h.wait_gpu(b);
+        let _ = h.wait_gpu(b);
         assert_eq!(clock.now(), dur * 2, "one link still serializes");
         h.shutdown();
     }
@@ -1199,7 +1629,7 @@ mod tests {
         let (h, clock, _) = multi_setup(2);
         let k = ExpertKey::new(0, 0); // primary home: device 0
         h.request(k, TransferPriority::Demand);
-        h.wait_gpu(k);
+        let _ = h.wait_gpu(k);
         assert!(h.replica_promote(k, 0, 1), "copy must start");
         assert!(
             !h.replica_promote(k, 0, 1),
@@ -1217,7 +1647,7 @@ mod tests {
             assert!(st.peer_stats().demand_transfers >= 1, "charged as real transfer");
         });
         // The staged weights arrive like any host transfer.
-        assert!(h.drain_arrivals().iter().any(|(key, _)| *key == k));
+        assert!(h.drain_arrivals().unwrap().iter().any(|(key, _)| *key == k));
         h.shutdown();
     }
 
@@ -1226,7 +1656,7 @@ mod tests {
         let (h, clock, _) = multi_setup(2);
         let k = ExpertKey::new(0, 0);
         h.request(k, TransferPriority::Demand);
-        h.wait_gpu(k);
+        let _ = h.wait_gpu(k);
         // Cancel an in-flight copy before it lands.
         assert!(h.replica_promote(k, 0, 1));
         assert!(h.replica_demote(k, 1), "in-flight copy must cancel");
@@ -1237,12 +1667,258 @@ mod tests {
         assert!(h.replica_promote(k, 0, 1));
         let busy = h.with_state(|st| st.peer_links[0].busy_until);
         clock.advance_to(busy);
-        h.drain_arrivals();
+        h.drain_arrivals().unwrap();
         assert!(h.replica_demote(k, 1), "resident copy must demote");
         h.with_state(|st| assert!(!st.devices[1].cache.is_gpu(k)));
-        assert!(h.drain_evictions().contains(&k), "engine must drop buffers");
+        assert!(h.drain_evictions().unwrap().contains(&k), "engine must drop buffers");
         // Demoting where no copy exists is a no-op success.
         assert!(h.replica_demote(k, 1));
+        h.shutdown();
+    }
+
+    // ---- fault injection & bounded retry ----
+
+    use crate::fault::{FaultEvent, FaultKind, FaultPlan};
+
+    fn multi_setup_faulty(
+        n_devices: usize,
+        plan: &FaultPlan,
+        tuning: TransferTuning,
+    ) -> (TransferHandle, SimClock, Duration) {
+        let cfg = ModelConfig::test_tiny();
+        let store = Arc::new(WeightStore::synthetic(&cfg, 1));
+        let pcie = PcieSim::new(1e9, 0.0, 1e6); // ~6.144 ms per transfer
+        let dur = pcie.transfer_duration(store.expert_bytes);
+        let devices: Vec<(ExpertCache, PcieSim)> = (0..n_devices)
+            .map(|_| {
+                (
+                    ExpertCache::new(cfg.n_layers, cfg.n_experts, 4, EvictPolicy::Lru),
+                    pcie.clone(),
+                )
+            })
+            .collect();
+        let placement = Placement::build(
+            PlacementKind::LayerStriped,
+            cfg.n_layers,
+            cfg.n_experts,
+            n_devices,
+            None,
+            1,
+        );
+        let clock = SimClock::virtual_clock();
+        let h = TransferEngine::spawn_multi_with(
+            devices,
+            PcieSim::new(64e9, 3e-6, 1.0),
+            Topology::new(n_devices, crate::topology::TopologyKind::FullyConnected),
+            placement,
+            store,
+            clock.clone(),
+            plan.timeline(),
+            tuning,
+        );
+        (h, clock, dur)
+    }
+
+    fn at(at_s: f64, kind: FaultKind) -> FaultEvent {
+        FaultEvent { at_s, kind }
+    }
+
+    #[test]
+    fn cancel_prefetch_cannot_cancel_escalated_transfer() {
+        // Regression: escalation moves the queue entry to the demand class;
+        // a later cancel_prefetch for the same key must find nothing (it
+        // only scans the prefetch queue), so an escalated transfer can
+        // never be cancelled out from under a waiter.
+        let (h, _) = setup(8);
+        let busy = ExpertKey::new(0, 0);
+        let k = ExpertKey::new(0, 2);
+        h.request(busy, TransferPriority::Demand); // occupy the link
+        h.request(k, TransferPriority::Prefetch); // stays queued
+        h.escalate(k);
+        assert!(!h.cancel_prefetch(k), "escalated transfer must be uncancellable");
+        assert_eq!(h.wait_gpu(k), TransferOutcome::Ok, "the escalated demand still lands");
+        assert!(h.with_state(|st| st.is_gpu(k)));
+        h.shutdown();
+    }
+
+    #[test]
+    fn lost_in_flight_transfer_is_retried() {
+        // Kill the in-flight transfer mid-flight; the waiter re-issues it
+        // (first retry immediate) and the load completes late.
+        let plan = FaultPlan::from_events(vec![at(
+            0.003,
+            FaultKind::LoseInFlight { device: 0 },
+        )]);
+        let (h, clock, dur) = multi_setup_faulty(1, &plan, TransferTuning::default());
+        let k = ExpertKey::new(0, 0);
+        h.request(k, TransferPriority::Demand);
+        assert_eq!(h.wait_gpu(k), TransferOutcome::Retried(1));
+        assert!(h.with_state(|st| st.is_gpu(k)));
+        // Lost at 3 ms, re-issued there, full transfer again on top.
+        assert_eq!(clock.now(), Duration::from_secs_f64(0.003) + dur);
+        h.shutdown();
+    }
+
+    #[test]
+    fn repeated_losses_back_off_with_seeded_jitter() {
+        let plan = FaultPlan::from_events(vec![
+            at(0.001, FaultKind::LoseInFlight { device: 0 }),
+            at(0.002, FaultKind::LoseInFlight { device: 0 }),
+        ]);
+        let run = || {
+            let (h, clock, dur) = multi_setup_faulty(1, &plan, TransferTuning::default());
+            let k = ExpertKey::new(0, 0);
+            h.request(k, TransferPriority::Demand);
+            let out = h.wait_gpu(k);
+            let t = clock.now();
+            h.shutdown();
+            (out, t, dur)
+        };
+        let (out1, t1, dur) = run();
+        let (out2, t2, _) = run();
+        assert_eq!(out1, TransferOutcome::Retried(2));
+        assert_eq!((out1, t1), (out2, t2), "seeded backoff must be deterministic");
+        // The second re-issue waits out a jittered backoff >= backoff_base
+        // before a full transfer lands on top.
+        let floor = Duration::from_secs_f64(0.002) + TransferTuning::default().backoff_base + dur;
+        assert!(t1 >= floor, "backoff must burn virtual time ({t1:?} < {floor:?})");
+    }
+
+    #[test]
+    fn deadline_expires_into_timeout_and_releases_the_slot() {
+        // A 1-second host stall pins the link; a 10 ms deadline gives up
+        // long before the transfer could start.
+        let plan =
+            FaultPlan::from_events(vec![at(0.0, FaultKind::HostStall { device: 0, duration_s: 1.0 })]);
+        let tuning = TransferTuning {
+            deadline: Some(Duration::from_millis(10)),
+            ..TransferTuning::default()
+        };
+        let (h, clock, _) = multi_setup_faulty(1, &plan, tuning);
+        let k = ExpertKey::new(0, 0);
+        assert!(matches!(h.request(k, TransferPriority::Demand), LoadDecision::StartLoad { .. }));
+        assert_eq!(h.wait_gpu(k), TransferOutcome::TimedOut);
+        assert_eq!(clock.now(), Duration::from_millis(10), "gave up exactly at the deadline");
+        h.with_state(|st| {
+            assert_eq!(
+                st.devices[0].cache.state(k),
+                SlotState::Cpu,
+                "the abandoned queued transfer must release its Loading slot"
+            );
+        });
+        h.shutdown();
+    }
+
+    #[test]
+    fn device_down_invalidates_and_refuses_work_until_up() {
+        let plan = FaultPlan::from_events(vec![at(
+            0.010,
+            FaultKind::DeviceDown { device: 0, down_s: Some(0.020) },
+        )]);
+        let (h, clock, _) = multi_setup_faulty(2, &plan, TransferTuning::default());
+        let a = ExpertKey::new(0, 0); // homed on device 0
+        h.request(a, TransferPriority::Demand);
+        assert_eq!(h.wait_gpu(a), TransferOutcome::Ok);
+        assert!(h.with_state(|st| st.is_gpu(a)));
+        h.drain_arrivals().unwrap();
+        // Cross the fault instant: residency is invalidated and the engine
+        // is told to drop buffers.
+        clock.advance_to(Duration::from_millis(15));
+        assert!(!h.with_state(|st| st.is_gpu(a)), "down device counts no residency");
+        assert!(h.drain_evictions().unwrap().contains(&a));
+        // New work on the downed home is refused...
+        assert_eq!(h.request(a, TransferPriority::Demand), LoadDecision::NoRoom);
+        // ...a waiter on a vanished transfer times out instead of hanging...
+        assert_eq!(h.wait_gpu(a), TransferOutcome::TimedOut);
+        // ...and after recovery the expert is lazily re-admittable.
+        clock.advance_to(Duration::from_millis(31));
+        assert!(matches!(h.request(a, TransferPriority::Demand), LoadDecision::StartLoad { .. }));
+        assert_eq!(h.wait_gpu(a), TransferOutcome::Ok);
+        assert!(h.with_state(|st| st.is_gpu(a)));
+        h.shutdown();
+    }
+
+    #[test]
+    fn device_down_kills_queued_and_inflight_transfers() {
+        let plan = FaultPlan::from_events(vec![at(
+            0.002,
+            FaultKind::DeviceDown { device: 0, down_s: None },
+        )]);
+        let (h, clock, _) = multi_setup_faulty(2, &plan, TransferTuning::default());
+        let a = ExpertKey::new(0, 0); // device 0: goes in flight
+        let b = ExpertKey::new(0, 2); // device 0: stays queued
+        h.request(a, TransferPriority::Demand);
+        h.request(b, TransferPriority::Prefetch);
+        clock.advance_to(Duration::from_millis(30));
+        h.with_state(|st| {
+            assert_eq!(st.devices[0].cache.state(a), SlotState::Cpu, "in-flight load aborted");
+            assert_eq!(st.devices[0].cache.state(b), SlotState::Cpu, "queued load aborted");
+            assert!(st.is_down(0));
+            assert_eq!(st.fault_epoch(), 1);
+        });
+        // Device 1 is unaffected.
+        let c = ExpertKey::new(0, 1);
+        h.request(c, TransferPriority::Demand);
+        assert_eq!(h.wait_gpu(c), TransferOutcome::Ok);
+        h.shutdown();
+    }
+
+    #[test]
+    fn last_live_device_cannot_go_down() {
+        let plan = FaultPlan::from_events(vec![at(
+            0.001,
+            FaultKind::DeviceDown { device: 0, down_s: None },
+        )]);
+        let (h, clock, _) = multi_setup_faulty(1, &plan, TransferTuning::default());
+        clock.advance_to(Duration::from_millis(10));
+        h.with_state(|st| {
+            assert!(!st.is_down(0), "the last live device must refuse to go down");
+        });
+        // The fleet still serves.
+        let k = ExpertKey::new(0, 0);
+        h.request(k, TransferPriority::Demand);
+        assert_eq!(h.wait_gpu(k), TransferOutcome::Ok);
+        h.shutdown();
+    }
+
+    #[test]
+    fn host_degrade_scales_bandwidth_and_restores_nominal() {
+        let plan = FaultPlan::from_events(vec![at(
+            0.0,
+            FaultKind::HostDegrade { device: 0, multiplier: 0.5, duration_s: 0.050 },
+        )]);
+        let (h, clock, dur) = multi_setup_faulty(1, &plan, TransferTuning::default());
+        let k = ExpertKey::new(0, 0);
+        h.request(k, TransferPriority::Demand);
+        assert_eq!(h.wait_gpu(k), TransferOutcome::Ok);
+        assert_eq!(clock.now(), dur * 2, "half bandwidth doubles the transfer time");
+        clock.advance_to(Duration::from_millis(60));
+        let k2 = ExpertKey::new(0, 1);
+        let t0 = clock.now();
+        h.request(k2, TransferPriority::Demand);
+        assert_eq!(h.wait_gpu(k2), TransferOutcome::Ok);
+        assert_eq!(clock.now() - t0, dur, "bandwidth restored to nominal after the window");
+        h.shutdown();
+    }
+
+    #[test]
+    fn peer_flap_delays_replica_copies() {
+        let plan = FaultPlan::from_events(vec![at(
+            0.0,
+            FaultKind::PeerFlap { link: 0, duration_s: 0.100 },
+        )]);
+        let (h, clock, _) = multi_setup_faulty(2, &plan, TransferTuning::default());
+        let k = ExpertKey::new(0, 0);
+        h.request(k, TransferPriority::Demand);
+        assert_eq!(h.wait_gpu(k), TransferOutcome::Ok);
+        assert!(h.replica_promote(k, 0, 1));
+        let busy = h.with_state(|st| st.peer_links[0].busy_until);
+        assert!(
+            busy >= Duration::from_millis(100),
+            "the copy must queue behind the flapped link ({busy:?})"
+        );
+        clock.advance_to(busy);
+        assert!(h.with_state(|st| st.devices[1].cache.is_gpu(k)));
         h.shutdown();
     }
 }

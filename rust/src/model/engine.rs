@@ -19,7 +19,7 @@ use anyhow::{Context, Result};
 
 use crate::buddy::{BuddyProfile, GateParams, PsiParams, SlotDecision, SubstitutionEngine, TokenRouting};
 use crate::config::{MissPolicy, ModelConfig, PrefetchKind, ServingConfig};
-use crate::memory::{EvictPolicy, ExpertCache, LoadDecision, PcieSim, TransferEngine, TransferHandle, TransferPriority};
+use crate::memory::{EvictPolicy, ExpertCache, LoadDecision, PcieSim, TransferEngine, TransferHandle, TransferOutcome, TransferPriority, TransferTuning};
 use crate::model::route::routings_from_probs;
 use crate::model::seq::{KvBatchView, Sequence};
 use crate::prefetch::{OracleNoisy, PreGate, PredictContext, Predictor, PrefetchEngine, TopFreq};
@@ -81,6 +81,20 @@ pub struct StepTelemetry {
     /// Peer-link hops paid for cross-device buddy dispatches this step
     /// (always 0 with `n_devices == 1`).
     pub peer_hops: u64,
+    /// Misses absorbed by a surviving replica of a fault-displaced expert
+    /// (degradation waterfall arm 1; always 0 without an active fault
+    /// plan).
+    pub replica_hits: u64,
+    /// Demand fetches that needed at least one re-issue (lost in-flight
+    /// transfer) or a fresh post-timeout attempt this step (arm 3).
+    pub retried_fetches: u64,
+    /// Experts dropped from the computation after the waterfall exhausted
+    /// every recovery arm (arm 4; only possible under a transfer
+    /// deadline).
+    pub waterfall_drops: u64,
+    /// True when any waterfall arm fired this step — requests that include
+    /// such a step are annotated as degraded in the serving telemetry.
+    pub degraded: bool,
 }
 
 /// Pooled decode-step staging buffers (see [`Engine::decode_step`]):
@@ -118,6 +132,13 @@ pub struct Engine {
     next_seq_id: u64,
     /// Decode steps since the last online re-placement pass.
     steps_since_replan: usize,
+    /// Transfer-fleet fault epoch observed at the last failover scan.
+    last_fault_epoch: u64,
+    /// Device-down mask as of the last failover scan.
+    down_seen: Vec<bool>,
+    /// Original home sets of experts rerouted off downed devices,
+    /// restored (lazily re-admitted) when their devices recover.
+    displaced: BTreeMap<ExpertKey, Vec<usize>>,
     /// Pooled per-step staging (decode hot path).
     step_scratch: StepScratch,
     /// Pooled per-expert-group gather+pad staging for `run_moe`.
@@ -140,6 +161,9 @@ impl Engine {
         opts: EngineOptions,
     ) -> Result<Self> {
         scfg.validate()?;
+        if !scfg.fault_plan.is_empty() && matches!(opts.clock, ClockMode::RealTime) {
+            anyhow::bail!("fault injection is virtual-clock only (deterministic discrete events)");
+        }
         let clock = SimClock::new(opts.clock);
         let mut stages = Self::build_stages(&cfg, &store, &opts)?;
         log::info!("engine backend: {}, clock: {}", stages.name(), opts.clock.name());
@@ -234,13 +258,22 @@ impl Engine {
             .collect();
         let peer = PcieSim::new(scfg.peer_bandwidth, scfg.peer_base_latency, 1.0);
         let hop_matrix = topology.hop_matrix();
-        let transfer = TransferEngine::spawn_multi(
+        let tuning = TransferTuning {
+            deadline: (scfg.transfer_deadline_s > 0.0)
+                .then(|| Duration::from_secs_f64(scfg.transfer_deadline_s)),
+            max_retries: scfg.transfer_max_retries,
+            backoff_base: Duration::from_secs_f64(scfg.transfer_backoff_base_s),
+            seed: scfg.seed,
+        };
+        let transfer = TransferEngine::spawn_multi_with(
             caches.into_iter().zip(links).collect(),
             peer,
             topology,
             placement.clone(),
             store.clone(),
             clock.clone(),
+            scfg.fault_plan.timeline(),
+            tuning,
         );
 
         let predictor: Option<Box<dyn Predictor>> = match scfg.prefetch {
@@ -296,6 +329,9 @@ impl Engine {
             profile_out,
             next_seq_id: 0,
             steps_since_replan: 0,
+            last_fault_epoch: 0,
+            down_seen: vec![false; n_dev],
+            displaced: BTreeMap::new(),
             step_scratch: StepScratch::default(),
             arena: Arena::new(),
         })
@@ -596,6 +632,112 @@ impl Engine {
         self.transfer.with_state(|st| st.placement.set_homes(key, homes));
     }
 
+    // ------------------------------------------------------------------
+    // Failure recovery (see the "Failure model" section in ROADMAP.md)
+    // ------------------------------------------------------------------
+
+    /// Poll the fleet's fault epoch and run failover when it moved:
+    /// reroute experts off newly-downed devices and restore original
+    /// homes when devices recover. Called at the top of every `run_moe`,
+    /// i.e. strictly between pin windows, so a placement change never
+    /// splits a pin/unpin pair across different home sets. A no-op (not
+    /// even a lock) when no fault plan is active.
+    fn poll_faults(&mut self) {
+        if self.scfg.fault_plan.is_empty() {
+            return;
+        }
+        let (epoch, down) = self
+            .transfer
+            .with_state(|st| (st.fault_epoch(), st.down_mask()));
+        if epoch == self.last_fault_epoch {
+            return;
+        }
+        self.last_fault_epoch = epoch;
+        let newly_down: Vec<usize> = (0..down.len())
+            .filter(|&d| down[d] && !self.down_seen[d])
+            .collect();
+        let newly_up = (0..down.len()).any(|d| !down[d] && self.down_seen[d]);
+        self.down_seen.clone_from(&down);
+        for d in newly_down {
+            self.failover_device(d, &down);
+        }
+        if newly_up {
+            self.restore_homes(&down);
+        }
+    }
+
+    /// Reroute every expert homed on the failed device `dev`. Experts
+    /// with surviving replicas keep serving from them (one emergency
+    /// promotion per expert tries to restore the lost replica width,
+    /// charged as a real peer transfer); single-homed experts are
+    /// deterministically rehomed to the next live device and acquire
+    /// their weights lazily on the first demand fetch. Original home
+    /// sets are remembered in `displaced` for restoration on recovery.
+    fn failover_device(&mut self, dev: usize, down: &[bool]) {
+        let n_dev = self.scfg.n_devices;
+        self.counters.inc("device_failovers");
+        for l in 0..self.cfg.n_layers {
+            for e in 0..self.cfg.n_experts {
+                let key = ExpertKey::new(l, e);
+                let cur = self.placement.homes(key).to_vec();
+                if !cur.contains(&dev) {
+                    continue;
+                }
+                self.displaced.entry(key).or_insert_with(|| cur.clone());
+                let survivors: Vec<usize> =
+                    cur.iter().copied().filter(|&h| !down[h]).collect();
+                if survivors.is_empty() {
+                    // The injector refuses to down the last live device,
+                    // so a live rehoming target always exists.
+                    let Some(next) =
+                        (1..n_dev).map(|j| (dev + j) % n_dev).find(|&x| !down[x])
+                    else {
+                        continue;
+                    };
+                    self.set_homes(key, vec![next]);
+                    self.counters.inc("failover_rehomed");
+                } else {
+                    let mut homes = survivors;
+                    if homes.len() < cur.len() {
+                        let src = homes[0];
+                        if let Some(tgt) = (1..n_dev)
+                            .map(|j| (src + j) % n_dev)
+                            .find(|&x| !down[x] && !homes.contains(&x))
+                        {
+                            if self.transfer.replica_promote(key, src, tgt) {
+                                homes.push(tgt);
+                                self.counters.inc("emergency_promotions");
+                            } else {
+                                self.counters.inc("emergency_promote_noroom");
+                            }
+                        }
+                    }
+                    self.set_homes(key, homes);
+                    self.counters.inc("failover_rerouted");
+                }
+            }
+        }
+    }
+
+    /// Restore the original home set of every displaced expert whose
+    /// homes are all live again. Re-admission is lazy: the restored
+    /// primary refetches weights on its next demand load, and an
+    /// emergency replica left outside the restored home set becomes an
+    /// ordinary eviction candidate.
+    fn restore_homes(&mut self, down: &[bool]) {
+        let restorable: Vec<(ExpertKey, Vec<usize>)> = self
+            .displaced
+            .iter()
+            .filter(|(_, orig)| orig.iter().all(|&h| !down[h]))
+            .map(|(k, o)| (*k, o.clone()))
+            .collect();
+        for (key, orig) in restorable {
+            self.displaced.remove(&key);
+            self.set_homes(key, orig);
+            self.counters.inc("failover_restored");
+        }
+    }
+
     /// The fallible stage pipeline of one decode step: embed → per-layer
     /// (view-based attention → router → MoE) → lm head; returns the batch
     /// logits. Split out of [`Engine::decode_step`] so the pooled scratch
@@ -700,6 +842,9 @@ impl Engine {
     ) -> Result<Tensor> {
         let n_real = routings.len();
         let d = self.cfg.d_model;
+        // Fault failover runs strictly between pin windows (none are held
+        // here), so placement changes can't split a pin/unpin pair.
+        self.poll_faults();
 
         // Verification step of the prefetch pipeline (Fig 3). First-seen
         // order is load-bearing (mark_use ticks, prefetch verification), so
@@ -714,6 +859,12 @@ impl Engine {
             }
         }
         self.prefetcher.verify(l, &actual_unique);
+        // Routed expert-slot denominator for availability metrics
+        // (1 - dropped_slots / routed_slots in the fault sweep).
+        self.counters.add(
+            "routed_slots",
+            routings.iter().map(|r| r.selected.len() as u64).sum::<u64>(),
+        );
 
         // Residency mask + policy application. Residency is fleet-wide:
         // an expert counts as resident when it sits on its home device.
@@ -723,9 +874,20 @@ impl Engine {
             }
             st.residency_mask(l)
         });
+        // Waterfall arm 1: a displaced expert still resident on a
+        // surviving (or emergency-promoted) replica is a replica hit —
+        // the fault cost its home but not its service.
+        if !self.displaced.is_empty() {
+            for &e in &actual_unique {
+                if residency[e] && self.displaced.contains_key(&ExpertKey::new(l, e)) {
+                    self.counters.inc("waterfall_replica_hits");
+                    tel.replica_hits += 1;
+                }
+            }
+        }
         let multi_device = self.scfg.n_devices > 1;
         let sub_counters_before = self.counters.get("substitutions");
-        let (decisions, sub_events) = if let Some(profile) = self.buddy_profile.as_ref() {
+        let (mut decisions, sub_events) = if let Some(profile) = self.buddy_profile.as_ref() {
             let mut eng = SubstitutionEngine::new(profile);
             eng.gates = GateParams {
                 tau: self.scfg.tae_tau,
@@ -779,7 +941,21 @@ impl Engine {
                 &mut self.rng,
             )
         };
-        tel.substitutions += self.counters.get("substitutions") - sub_counters_before;
+        let call_subs = self.counters.get("substitutions") - sub_counters_before;
+        tel.substitutions += call_subs;
+
+        // Waterfall arm 2: buddy substitutions standing in for experts a
+        // fault displaced (Ψ already steered these to resident buddies).
+        let mut victim_subs = 0u64;
+        if !self.displaced.is_empty() && !sub_events.is_empty() {
+            victim_subs = sub_events
+                .iter()
+                .filter(|ev| self.displaced.contains_key(&ExpertKey::new(l, ev.from)))
+                .count() as u64;
+            if victim_subs > 0 {
+                self.counters.add("waterfall_buddy_subs", victim_subs);
+            }
+        }
 
         // Cross-device substitutions pay the peer interconnect: dispatching
         // a token to a buddy homed on another device adds unplanned
@@ -860,14 +1036,76 @@ impl Engine {
             }
         }
         tel.fetches += fetches.len() as u64;
+        let mut dropped: Vec<usize> = Vec::new();
+        let mut transient_rescues = 0u64;
         if !pending.is_empty() {
             let t0 = self.clock.now();
             for key in &pending {
-                self.transfer.wait_gpu(*key);
+                match self.transfer.wait_gpu(*key) {
+                    TransferOutcome::Ok => {}
+                    TransferOutcome::Retried(n) => {
+                        tel.retried_fetches += 1;
+                        self.counters.inc("waterfall_retried_fetches");
+                        self.counters.add("transfer_retries", n as u64);
+                    }
+                    TransferOutcome::TimedOut => {
+                        // Waterfall arm 3 fallback: one fresh attempt (the
+                        // home may have failed mid-wait and recovery or
+                        // rerouting can land the next try), then either a
+                        // lossless transient stream-through (no deadline
+                        // configured — completeness beats latency) or a
+                        // drop (arm 4: deadline pressure says give up).
+                        let recovered =
+                            match self.transfer.request(*key, TransferPriority::Demand) {
+                                LoadDecision::StartLoad { .. }
+                                | LoadDecision::AlreadyLoading => {
+                                    match self.transfer.wait_gpu(*key) {
+                                        TransferOutcome::Ok | TransferOutcome::Retried(_) => {
+                                            tel.retried_fetches += 1;
+                                            self.counters.inc("waterfall_retried_fetches");
+                                            true
+                                        }
+                                        TransferOutcome::TimedOut => false,
+                                    }
+                                }
+                                LoadDecision::AlreadyGpu => true,
+                                LoadDecision::NoRoom => false,
+                            };
+                        if !recovered {
+                            if self.transfer.tuning().deadline.is_none() {
+                                transient.push(key.expert);
+                                transient_rescues += 1;
+                                self.counters.inc("waterfall_transient_rescues");
+                            } else {
+                                dropped.push(key.expert);
+                                tel.waterfall_drops += 1;
+                                self.counters.inc("waterfall_drops");
+                            }
+                        }
+                    }
+                }
             }
             tel.stall_seconds += self.clock.since(t0);
         }
         self.sync_device_buffers()?;
+
+        // Waterfall arm 4: scrub dropped experts out of the execution
+        // plan. Their tokens run on their remaining slots (weights are
+        // left as-is, matching the Drop-baseline combine semantics).
+        let mut dropped_slots = 0u64;
+        if !dropped.is_empty() {
+            for (r, dec) in routings.iter().zip(decisions.iter_mut()) {
+                for (slot, sd) in dec.iter_mut().enumerate() {
+                    if !matches!(sd, SlotDecision::Dropped)
+                        && dropped.contains(&r.selected[slot])
+                    {
+                        *sd = SlotDecision::Dropped;
+                        dropped_slots += 1;
+                    }
+                }
+            }
+            self.counters.add("dropped_slots", dropped_slots);
+        }
 
         // Transient fetches: cache had no unpinned slot; stream the weights
         // through without admission (still pays the PCIe time).
@@ -952,6 +1190,34 @@ impl Engine {
                 st.unpin(ExpertKey::new(l, e));
             }
         });
+
+        // Degradation accounting: split substitutions/drops by whether
+        // this instant falls inside a scheduled fault window, and flag
+        // the step as degraded when any waterfall arm fired. Skipped
+        // entirely (no clock read, no counters) without a fault plan.
+        if !self.scfg.fault_plan.is_empty() {
+            let in_w = self.scfg.fault_plan.in_window(self.clock.now());
+            if call_subs > 0 {
+                self.counters.add(
+                    if in_w { "subs_in_fault_window" } else { "subs_outside_fault_window" },
+                    call_subs,
+                );
+            }
+            if dropped_slots > 0 {
+                self.counters.add(
+                    if in_w { "drops_in_fault_window" } else { "drops_outside_fault_window" },
+                    dropped_slots,
+                );
+            }
+            if tel.replica_hits > 0
+                || tel.retried_fetches > 0
+                || tel.waterfall_drops > 0
+                || transient_rescues > 0
+                || victim_subs > 0
+            {
+                tel.degraded = true;
+            }
+        }
         Ok(out)
     }
 
@@ -960,7 +1226,7 @@ impl Engine {
     /// resident; the stage buffer must survive then (the simulated devices
     /// share one stage-buffer namespace).
     fn sync_device_buffers(&mut self) -> Result<()> {
-        let evictions = self.transfer.drain_evictions();
+        let evictions = self.transfer.drain_evictions()?;
         if !evictions.is_empty() {
             let keep: Vec<bool> = self
                 .transfer
@@ -971,7 +1237,7 @@ impl Engine {
                 }
             }
         }
-        let arrivals = self.transfer.drain_arrivals();
+        let arrivals = self.transfer.drain_arrivals()?;
         for (key, w) in arrivals {
             self.stages.admit_expert(key, &w)?;
         }

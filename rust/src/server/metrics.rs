@@ -29,6 +29,10 @@ pub struct ServerMetrics {
     pub queue_depth: Summary,
     pub tokens_out: u64,
     pub requests_done: u64,
+    /// Requests annotated as degraded (at least one of their steps ran a
+    /// degradation-waterfall arm during a fault). Always 0 without an
+    /// active fault plan.
+    pub degraded_requests: u64,
     pub counters: Counters,
 }
 
@@ -47,6 +51,7 @@ impl ServerMetrics {
             queue_depth: Summary::new(),
             tokens_out: 0,
             requests_done: 0,
+            degraded_requests: 0,
             counters: Counters::new(),
         }
     }
@@ -68,7 +73,7 @@ impl ServerMetrics {
 
     pub fn report(&self) -> String {
         format!(
-            "throughput: {:.2} tok/s | requests: {} | tokens: {}\n\
+            "throughput: {:.2} tok/s | requests: {} ({} degraded) | tokens: {}\n\
              ttft:    {}\n\
              qdelay:  {}\n\
              tbt:     {}\n\
@@ -78,6 +83,7 @@ impl ServerMetrics {
              qdepth:  {}",
             self.tokens_per_second(),
             self.requests_done,
+            self.degraded_requests,
             self.tokens_out,
             self.ttft.report("s"),
             self.queue_delay.report("s"),

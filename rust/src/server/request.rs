@@ -69,4 +69,10 @@ pub struct InferenceResponse {
     pub first_token_time: f64,
     /// Seconds (virtual or real) from arrival to completion.
     pub total: f64,
+    /// True when any step this request took part in was served degraded:
+    /// a fault-displaced expert was covered by a replica or buddy, a
+    /// demand fetch needed retries, or an expert was dropped after the
+    /// degradation waterfall exhausted (always false without a fault
+    /// plan).
+    pub degraded: bool,
 }

@@ -51,6 +51,9 @@ struct Active {
     first_token_s: f64,
     /// Clock timestamp of this sequence's latest token (TBT accounting).
     last_token: Duration,
+    /// Any step this request took part in ran a degradation-waterfall arm
+    /// (fault recovery); propagated into the response annotation.
+    degraded: bool,
 }
 
 impl Server {
@@ -106,11 +109,17 @@ impl Server {
             self.metrics.counters.add("substitutions", tel.substitutions);
             self.metrics.counters.add("fetches", tel.fetches);
             self.metrics.counters.add("peer_hops", tel.peer_hops);
+            self.metrics.counters.add("replica_hits", tel.replica_hits);
+            self.metrics.counters.add("retried_fetches", tel.retried_fetches);
+            self.metrics.counters.add("waterfall_drops", tel.waterfall_drops);
             self.metrics.tokens_out += active.len() as u64;
             let now = clock.now();
             for a in active.iter_mut() {
                 self.metrics.tbt.add(clock.since(a.last_token));
                 a.last_token = now;
+                // Step-level annotation: every request in a degraded step
+                // shared the recovery (the batch computes together).
+                a.degraded |= tel.degraded;
             }
 
             // Retire finished sequences.
@@ -126,6 +135,9 @@ impl Server {
                         logits.push(p.clone());
                         logits.extend(a.seq.logits_log.iter().cloned());
                     }
+                    if a.degraded {
+                        self.metrics.degraded_requests += 1;
+                    }
                     let resp = InferenceResponse {
                         id: a.seq.id,
                         tokens: a.seq.generated.clone(),
@@ -134,6 +146,7 @@ impl Server {
                         ttft: a.ttft,
                         first_token_time: a.first_token_s,
                         total,
+                        degraded: a.degraded,
                     };
                     if let Some(hook) = self.on_complete.as_mut() {
                         hook(clock.now(), &resp, &self.batcher);
@@ -171,6 +184,9 @@ impl Server {
         self.metrics.counters.add("substitutions", tel.substitutions);
         self.metrics.counters.add("fetches", tel.fetches);
         self.metrics.counters.add("peer_hops", tel.peer_hops);
+        self.metrics.counters.add("replica_hits", tel.replica_hits);
+        self.metrics.counters.add("retried_fetches", tel.retried_fetches);
+        self.metrics.counters.add("waterfall_drops", tel.waterfall_drops);
         // Prefill complete = first token out.
         let ttft = clock.since(arrived);
         self.metrics.ttft.add(ttft);
@@ -180,6 +196,7 @@ impl Server {
             ttft,
             first_token_s: clock.now_s(),
             last_token: clock.now(),
+            degraded: tel.degraded,
         })
     }
 }

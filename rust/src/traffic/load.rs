@@ -18,6 +18,7 @@ use anyhow::Result;
 
 use crate::config::{ModelConfig, ServingConfig};
 use crate::eval::{engine_with_config, Domain};
+use crate::fault::FaultPlan;
 use crate::model::EngineOptions;
 use crate::profilecollect::ProfileCollector;
 use crate::server::Server;
@@ -203,8 +204,76 @@ pub fn run_load_cell_probed(
     scfg: ServingConfig,
     policy_label: &str,
     offered_rps: f64,
-    mut process: Box<dyn ArrivalProcess>,
+    process: Box<dyn ArrivalProcess>,
 ) -> Result<(LoadCell, CellProbe)> {
+    let (cell, probe, _fault) = run_fault_cell(
+        cfg,
+        store,
+        collector,
+        warm_rank,
+        scfg,
+        policy_label,
+        offered_rps,
+        process,
+    )?;
+    Ok((cell, probe))
+}
+
+/// Fault-recovery accounting for one cell, read from the engine's
+/// counters and the serving metrics after the run drained.
+#[derive(Debug, Clone, Default)]
+pub struct FaultProbe {
+    /// Requests whose responses carry the degraded annotation.
+    pub degraded_requests: u64,
+    /// Routed expert-slot total (the availability denominator).
+    pub routed_slots: u64,
+    /// Slots dropped by the degradation waterfall's last arm.
+    pub dropped_slots: u64,
+    /// Fraction of routed slots served by their *true* expert — neither
+    /// substituted nor dropped. The fault sweep's headline column: a
+    /// replicated fleet holds availability through a device-down window
+    /// that forces a single-homed fleet into substitution storms.
+    pub availability: f64,
+    pub substitutions: u64,
+    /// Substitutions split by whether they landed inside a scheduled
+    /// fault window.
+    pub subs_in_window: u64,
+    pub subs_outside_window: u64,
+    pub drops_in_window: u64,
+    pub drops_outside_window: u64,
+    /// Waterfall arm 1: displaced experts served by surviving replicas.
+    pub replica_hits: u64,
+    /// Waterfall arm 2: buddy substitutions covering displaced experts.
+    pub buddy_subs: u64,
+    /// Waterfall arm 3: demand fetches that needed re-issues.
+    pub retried_fetches: u64,
+    /// Total transfer re-issues across all retried fetches.
+    pub transfer_retries: u64,
+    /// Timed-out fetches rescued losslessly via transient stream-through
+    /// (only possible with the deadline disabled).
+    pub transient_rescues: u64,
+    /// Failover bookkeeping: experts rerouted to surviving replicas,
+    /// single-homed experts rehomed, and home sets restored on recovery.
+    pub failover_rerouted: u64,
+    pub failover_rehomed: u64,
+    pub failover_restored: u64,
+    /// Replica copies promoted during failover, charged as peer transfers.
+    pub emergency_promotions: u64,
+}
+
+/// [`run_load_cell_probed`] plus the post-run [`FaultProbe`] (zeros on a
+/// fault-free cell).
+#[allow(clippy::too_many_arguments)]
+pub fn run_fault_cell(
+    cfg: &ModelConfig,
+    store: Arc<WeightStore>,
+    collector: &ProfileCollector,
+    warm_rank: &[Vec<usize>],
+    scfg: ServingConfig,
+    policy_label: &str,
+    offered_rps: f64,
+    mut process: Box<dyn ArrivalProcess>,
+) -> Result<(LoadCell, CellProbe, FaultProbe)> {
     let opts = EngineOptions { clock: ClockMode::Virtual, ..Default::default() };
     let engine = engine_with_config(cfg, store, collector, warm_rank, scfg, opts)?;
     let mut server = Server::new(engine);
@@ -252,8 +321,36 @@ pub fn run_load_cell_probed(
         replica_promotions: server.engine.counters.get("replica_promotions"),
         replica_demotions: server.engine.counters.get("replica_demotions"),
     };
+    let ec = &server.engine.counters;
+    let routed = ec.get("routed_slots");
+    let dropped = ec.get("dropped_slots");
+    let subs = ec.get("substitutions");
+    let fault = FaultProbe {
+        degraded_requests: server.metrics.degraded_requests,
+        routed_slots: routed,
+        dropped_slots: dropped,
+        availability: if routed > 0 {
+            1.0 - (dropped + subs) as f64 / routed as f64
+        } else {
+            1.0
+        },
+        substitutions: subs,
+        subs_in_window: ec.get("subs_in_fault_window"),
+        subs_outside_window: ec.get("subs_outside_fault_window"),
+        drops_in_window: ec.get("drops_in_fault_window"),
+        drops_outside_window: ec.get("drops_outside_fault_window"),
+        replica_hits: ec.get("waterfall_replica_hits"),
+        buddy_subs: ec.get("waterfall_buddy_subs"),
+        retried_fetches: ec.get("waterfall_retried_fetches"),
+        transfer_retries: ec.get("transfer_retries"),
+        transient_rescues: ec.get("waterfall_transient_rescues"),
+        failover_rerouted: ec.get("failover_rerouted"),
+        failover_rehomed: ec.get("failover_rehomed"),
+        failover_restored: ec.get("failover_restored"),
+        emergency_promotions: ec.get("emergency_promotions"),
+    };
     server.engine.shutdown();
-    Ok((cell, probe))
+    Ok((cell, probe, fault))
 }
 
 /// The full grid: every (process kind × offered load × policy preset).
@@ -536,6 +633,173 @@ pub fn topology_cells_json(rows: &[TopologyCell]) -> Json {
     )
 }
 
+// ---------------------------------------------------------------------
+// Fault sweep: availability and degradation under injected chaos
+// ---------------------------------------------------------------------
+
+/// The (fault scenario × replication factor × miss policy) grid on a
+/// fixed fleet shape: every cell serves the same seeded workload while a
+/// [`FaultPlan::scenario`] injects device/link chaos on the virtual
+/// clock. The acceptance story: a replicated fleet rides out a
+/// device-down window with zero dropped experts and near-baseline
+/// availability, while the single-homed fleet degrades into substitution
+/// storms and tail blowup.
+#[derive(Debug, Clone)]
+pub struct FaultSweep {
+    /// `FaultPlan::scenario` names; include `"baseline"` for the
+    /// fault-free reference rows.
+    pub scenarios: Vec<String>,
+    /// Fleet shape shared by every cell (the acceptance grid is a
+    /// 4-device ring).
+    pub n_devices: usize,
+    pub topology: TopologyKind,
+    /// Home-set widths to compare; factors > 1 switch to popularity
+    /// placement (as in [`TopologySweep`]).
+    pub replication_factors: Vec<usize>,
+    /// `ServingConfig::preset` names.
+    pub presets: Vec<String>,
+    pub process: ProcessKind,
+    pub load_rps: f64,
+    /// Per-transfer deadline applied to every cell (`0` disables: timed
+    /// out fetches then fall back to lossless transient rescues instead
+    /// of drops).
+    pub transfer_deadline_s: f64,
+    pub settings: LoadSettings,
+}
+
+/// One fault-sweep row.
+#[derive(Debug, Clone)]
+pub struct FaultCell {
+    /// `FaultPlan::scenario` name.
+    pub scenario: String,
+    pub replication_factor: usize,
+    pub probe: CellProbe,
+    pub fault: FaultProbe,
+    pub cell: LoadCell,
+}
+
+pub fn run_fault_sweep(
+    cfg: &ModelConfig,
+    store: Arc<WeightStore>,
+    collector: &ProfileCollector,
+    warm_rank: &[Vec<usize>],
+    spec: &FaultSweep,
+) -> Result<Vec<FaultCell>> {
+    let mut rows = Vec::new();
+    for scenario in &spec.scenarios {
+        let plan = FaultPlan::scenario(scenario)
+            .ok_or_else(|| anyhow::anyhow!("unknown fault scenario '{scenario}'"))?;
+        for &rf in &spec.replication_factors {
+            for preset in &spec.presets {
+                let mut scfg = ServingConfig::default().preset(preset)?;
+                scfg.cache_rate = spec.settings.cache_rate;
+                scfg.seed = spec.settings.seed;
+                scfg.n_devices = spec.n_devices;
+                scfg.topology = spec.topology;
+                scfg.fault_plan = plan.clone();
+                scfg.transfer_deadline_s = spec.transfer_deadline_s;
+                if rf > 1 {
+                    scfg.replication_factor = rf;
+                    scfg.placement = PlacementKind::Popularity;
+                }
+                let process = spec.process.build(cfg, &spec.settings, spec.load_rps);
+                let (cell, probe, fault) = run_fault_cell(
+                    cfg,
+                    store.clone(),
+                    collector,
+                    warm_rank,
+                    scfg,
+                    preset,
+                    spec.load_rps,
+                    process,
+                )?;
+                rows.push(FaultCell {
+                    scenario: scenario.clone(),
+                    replication_factor: rf,
+                    probe,
+                    fault,
+                    cell,
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// Markdown table over the fault rows (deterministic formatting; the
+/// determinism test asserts byte-identity per seed).
+pub fn fault_report_markdown(rows: &[FaultCell]) -> String {
+    let mut out = String::from(
+        "| scenario | repl | policy | done | degraded | avail | dropped | \
+         subs in/out | replica hits | buddy subs | retries | rescues | \
+         ttft p99 (ms) | tbt p99 (ms) |\n\
+         |---|---|---|---|---|---|---|---|---|---|---|---|---|---|\n",
+    );
+    for r in rows {
+        let c = &r.cell;
+        let f = &r.fault;
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {:.4} | {} | {}/{} | {} | {} | {} | {} | {:.2} | {:.2} |\n",
+            r.scenario,
+            r.replication_factor,
+            c.policy,
+            c.requests_done,
+            f.degraded_requests,
+            f.availability,
+            f.dropped_slots,
+            f.subs_in_window,
+            f.subs_outside_window,
+            f.replica_hits,
+            f.buddy_subs,
+            f.retried_fetches,
+            f.transient_rescues,
+            c.ttft.p(99.0) * 1e3,
+            c.tbt.p(99.0) * 1e3,
+        ));
+    }
+    out
+}
+
+/// Machine-readable fault sweep (the `BENCH_faults.json` payload).
+pub fn fault_cells_json(rows: &[FaultCell]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                let f = &r.fault;
+                obj(vec![
+                    ("scenario", s(&r.scenario)),
+                    ("replication_factor", num(r.replication_factor as f64)),
+                    ("policy", s(&r.cell.policy)),
+                    ("requests_done", num(r.cell.requests_done as f64)),
+                    ("tokens_out", num(r.cell.tokens_out as f64)),
+                    ("tok_s", num(r.cell.tok_s)),
+                    ("degraded_requests", num(f.degraded_requests as f64)),
+                    ("availability", num(f.availability)),
+                    ("routed_slots", num(f.routed_slots as f64)),
+                    ("dropped_slots", num(f.dropped_slots as f64)),
+                    ("substitutions", num(f.substitutions as f64)),
+                    ("subs_in_window", num(f.subs_in_window as f64)),
+                    ("subs_outside_window", num(f.subs_outside_window as f64)),
+                    ("drops_in_window", num(f.drops_in_window as f64)),
+                    ("drops_outside_window", num(f.drops_outside_window as f64)),
+                    ("replica_hits", num(f.replica_hits as f64)),
+                    ("buddy_subs", num(f.buddy_subs as f64)),
+                    ("retried_fetches", num(f.retried_fetches as f64)),
+                    ("transfer_retries", num(f.transfer_retries as f64)),
+                    ("transient_rescues", num(f.transient_rescues as f64)),
+                    ("failover_rerouted", num(f.failover_rerouted as f64)),
+                    ("failover_rehomed", num(f.failover_rehomed as f64)),
+                    ("failover_restored", num(f.failover_restored as f64)),
+                    ("emergency_promotions", num(f.emergency_promotions as f64)),
+                    ("ttft_s", summary_json(&r.cell.ttft)),
+                    ("tbt_s", summary_json(&r.cell.tbt)),
+                    ("e2e_s", summary_json(&r.cell.e2e)),
+                ])
+            })
+            .collect(),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -564,5 +828,13 @@ mod tests {
         assert!(md.starts_with("| devices | topo | repl | process | placement | policy |"));
         assert_eq!(md.lines().count(), 2);
         assert_eq!(topology_cells_json(&[]).to_string(), "[]");
+    }
+
+    #[test]
+    fn fault_report_header_is_stable() {
+        let md = fault_report_markdown(&[]);
+        assert!(md.starts_with("| scenario | repl | policy | done | degraded | avail |"));
+        assert_eq!(md.lines().count(), 2);
+        assert_eq!(fault_cells_json(&[]).to_string(), "[]");
     }
 }

@@ -24,7 +24,10 @@
 //!   `examples/sweep_load.rs` into `BENCH_load.json`), and the topology
 //!   sweep over (device count × miss policy) for the expert-parallel fleet
 //!   (rendered by `examples/sweep_topology.rs` into
-//!   `BENCH_topology.json`).
+//!   `BENCH_topology.json`), and the fault sweep over (fault scenario ×
+//!   replication factor × miss policy) measuring availability and
+//!   degradation under injected device/link chaos (rendered by
+//!   `examples/sweep_faults.rs` into `BENCH_faults.json`).
 
 pub mod arrivals;
 pub mod events;
@@ -36,7 +39,8 @@ pub use arrivals::{
 };
 pub use events::EventQueue;
 pub use load::{
-    cells_json, report_markdown, run_load_cell, run_load_cell_probed, run_sweep,
-    run_topology_sweep, topology_cells_json, topology_report_markdown, CellProbe, LoadCell,
-    LoadSettings, ProcessKind, SweepSpec, TopologyCell, TopologySweep,
+    cells_json, fault_cells_json, fault_report_markdown, report_markdown, run_fault_cell,
+    run_fault_sweep, run_load_cell, run_load_cell_probed, run_sweep, run_topology_sweep,
+    topology_cells_json, topology_report_markdown, CellProbe, FaultCell, FaultProbe, FaultSweep,
+    LoadCell, LoadSettings, ProcessKind, SweepSpec, TopologyCell, TopologySweep,
 };

@@ -1,0 +1,321 @@
+//! Fault-injection integration tests: deterministic device/link chaos on
+//! the virtual clock, and the recovery machinery that keeps the fleet
+//! serving through it — replica failover between pin windows, the
+//! miss/fault degradation waterfall, retry/backoff on lost transfers,
+//! and deadline-bounded drops. The acceptance contract: a replicated
+//! 4-device ring rides out a mid-sweep device failure with every request
+//! completed and zero dropped experts, byte-identically across thread
+//! counts; fault-free runs are byte-identical to runs that never heard
+//! of the fault subsystem.
+
+use std::sync::{Arc, Mutex};
+
+use buddymoe::config::{ModelConfig, PrefetchKind, ServingConfig};
+use buddymoe::eval::{
+    build_requests, engine_with_config, profile_model, warm_rank_from_profile, TableSettings,
+};
+use buddymoe::fault::{FaultEvent, FaultKind, FaultPlan};
+use buddymoe::model::EngineOptions;
+use buddymoe::server::Server;
+use buddymoe::topology::{PlacementKind, TopologyKind};
+use buddymoe::util::clock::ClockMode;
+use buddymoe::util::par;
+use buddymoe::weights::{ExpertKey, WeightStore};
+
+/// `par::set_threads` is a process-global override and the test harness
+/// runs tests concurrently; serialize every test that drives it.
+static PAR_LOCK: Mutex<()> = Mutex::new(());
+
+fn par_lock() -> std::sync::MutexGuard<'static, ()> {
+    PAR_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn setup() -> (ModelConfig, Arc<WeightStore>) {
+    let cfg = ModelConfig::synthetic_small();
+    let store = Arc::new(WeightStore::synthetic_families(&cfg, 2024));
+    (cfg, store)
+}
+
+fn fleet_scfg(n_devices: usize, placement: PlacementKind) -> ServingConfig {
+    let mut scfg = ServingConfig::default().preset("buddy-rho3").unwrap();
+    scfg.cache_rate = 0.5;
+    scfg.n_devices = n_devices;
+    scfg.topology = TopologyKind::Ring;
+    scfg.placement = placement;
+    scfg.kappa = 0.25;
+    scfg
+}
+
+fn ev(at_s: f64, kind: FaultKind) -> FaultEvent {
+    FaultEvent { at_s, kind }
+}
+
+/// Serve the shared eval workload to completion; panics if any request
+/// fails to complete (the fleet must never wedge under faults).
+fn serve(cfg: &ModelConfig, store: Arc<WeightStore>, scfg: ServingConfig) -> Server {
+    let pc = profile_model(cfg, store.clone(), 8, 555).unwrap();
+    let warm = warm_rank_from_profile(&pc);
+    let opts = EngineOptions { clock: ClockMode::Virtual, ..Default::default() };
+    let engine = engine_with_config(cfg, store, &pc, &warm, scfg, opts).unwrap();
+    let mut server = Server::new(engine);
+    let settings = TableSettings {
+        cache_rate: 0.5,
+        n_easy: 3,
+        n_hard: 3,
+        max_new: 4,
+        seed: 42,
+        clock: ClockMode::Virtual,
+    };
+    let reqs = build_requests(cfg, &settings);
+    let n = reqs.len();
+    let responses = server.run_offline(reqs).unwrap();
+    assert_eq!(responses.len(), n, "every request must complete");
+    server
+}
+
+/// The fault/recovery accounting a deterministic replay must reproduce
+/// exactly.
+fn fault_fingerprint(server: &Server) -> Vec<(&'static str, u64)> {
+    let c = &server.engine.counters;
+    vec![
+        ("substitutions", c.get("substitutions")),
+        ("fetches", c.get("fetches")),
+        ("routed_slots", c.get("routed_slots")),
+        ("dropped_slots", c.get("dropped_slots")),
+        ("device_failovers", c.get("device_failovers")),
+        ("failover_rerouted", c.get("failover_rerouted")),
+        ("failover_rehomed", c.get("failover_rehomed")),
+        ("failover_restored", c.get("failover_restored")),
+        ("emergency_promotions", c.get("emergency_promotions")),
+        ("waterfall_replica_hits", c.get("waterfall_replica_hits")),
+        ("waterfall_buddy_subs", c.get("waterfall_buddy_subs")),
+        ("waterfall_retried_fetches", c.get("waterfall_retried_fetches")),
+        ("waterfall_transient_rescues", c.get("waterfall_transient_rescues")),
+        ("waterfall_drops", c.get("waterfall_drops")),
+        ("transfer_retries", c.get("transfer_retries")),
+        ("subs_in_fault_window", c.get("subs_in_fault_window")),
+        ("subs_outside_fault_window", c.get("subs_outside_fault_window")),
+        ("degraded_requests", server.metrics.degraded_requests),
+        ("clock_ns", server.engine.clock().now().as_nanos() as u64),
+    ]
+}
+
+#[test]
+fn fault_free_runs_ignore_retry_tuning_and_empty_plans() {
+    // The byte-identity contract: an empty FaultPlan plus non-default
+    // retry/backoff knobs must leave a fault-free fleet timeline exactly
+    // where it was — backoff jitter is only ever drawn on a second
+    // re-issue, which never happens without injected chaos.
+    let (cfg, store) = setup();
+    let baseline = {
+        let server = serve(&cfg, store.clone(), fleet_scfg(2, PlacementKind::LayerStriped));
+        let out = fault_fingerprint(&server);
+        server.engine.shutdown();
+        out
+    };
+    let tuned = {
+        let mut scfg = fleet_scfg(2, PlacementKind::LayerStriped);
+        scfg.fault_plan = FaultPlan::empty();
+        scfg.transfer_max_retries = 9;
+        scfg.transfer_backoff_base_s = 0.05;
+        let server = serve(&cfg, store, scfg);
+        let out = fault_fingerprint(&server);
+        server.engine.shutdown();
+        out
+    };
+    assert_eq!(baseline, tuned, "empty plan + tuning knobs must not perturb the timeline");
+    let zeros: Vec<&str> = baseline
+        .iter()
+        .filter(|(k, v)| k.starts_with("waterfall") && *v > 0)
+        .map(|(k, _)| *k)
+        .collect();
+    assert!(zeros.is_empty(), "waterfall arms fired without faults: {zeros:?}");
+}
+
+#[test]
+fn permanent_device_down_rehomes_every_expert_and_serves_all_requests() {
+    // Single-homed fleet: a permanent device failure must displace every
+    // expert homed there onto survivors, and with no transfer deadline
+    // the waterfall is lossless — zero dropped slots.
+    let (cfg, store) = setup();
+    let mut scfg = fleet_scfg(4, PlacementKind::LayerStriped);
+    scfg.fault_plan = FaultPlan::from_events(vec![ev(
+        0.001,
+        FaultKind::DeviceDown { device: 1, down_s: None },
+    )]);
+    let server = serve(&cfg, store, scfg);
+
+    let c = &server.engine.counters;
+    assert!(c.get("device_failovers") >= 1, "the down event must trigger failover");
+    assert!(c.get("failover_rehomed") > 0, "striped experts on device 1 must rehome");
+    assert_eq!(c.get("dropped_slots"), 0, "no deadline means a lossless waterfall");
+    assert_eq!(c.get("waterfall_drops"), 0);
+    assert_eq!(c.get("failover_restored"), 0, "a permanent failure never restores");
+    // Every home set now avoids the dead device.
+    for l in 0..cfg.n_layers {
+        for e in 0..cfg.n_experts {
+            let homes = server.engine.placement().homes(ExpertKey::new(l, e)).to_vec();
+            assert!(!homes.contains(&1), "layer {l} expert {e} still homed on dead device");
+            assert!(!homes.is_empty(), "layer {l} expert {e} lost all homes");
+        }
+    }
+    // Window accounting is conservation-exact: the down window is
+    // [1 ms, inf), so every substitution lands in exactly one bucket.
+    assert_eq!(
+        c.get("subs_in_fault_window") + c.get("subs_outside_fault_window"),
+        c.get("substitutions"),
+        "window split must partition the substitution count"
+    );
+    server.engine.shutdown();
+}
+
+#[test]
+fn replica_survivors_serve_displaced_hot_experts_in_place() {
+    // Waterfall arm 1: with rf = 2 on two devices the hot experts are
+    // homed on both, so downing device 1 leaves them resident on device
+    // 0 — they keep serving as replica hits, with no refetch and no
+    // substitution of the hot set.
+    let (cfg, store) = setup();
+    let mut scfg = fleet_scfg(2, PlacementKind::Popularity);
+    scfg.topology = TopologyKind::FullyConnected;
+    scfg.replication_factor = 2;
+    scfg.replan_interval_steps = 0; // isolate failover from the replanner
+    scfg.fault_plan = FaultPlan::from_events(vec![ev(
+        0.001,
+        FaultKind::DeviceDown { device: 1, down_s: None },
+    )]);
+    let server = serve(&cfg, store, scfg);
+
+    let c = &server.engine.counters;
+    assert!(c.get("device_failovers") >= 1);
+    assert!(
+        c.get("waterfall_replica_hits") > 0,
+        "hot displaced experts must be served from the surviving replica"
+    );
+    assert_eq!(c.get("dropped_slots"), 0);
+    assert!(server.metrics.degraded_requests >= 1, "replica-hit steps are degraded");
+    for l in 0..cfg.n_layers {
+        for e in 0..cfg.n_experts {
+            let homes = server.engine.placement().homes(ExpertKey::new(l, e)).to_vec();
+            assert!(!homes.contains(&1), "layer {l} expert {e} still homed on dead device");
+        }
+    }
+    server.engine.shutdown();
+}
+
+#[test]
+fn lost_in_flight_transfers_surface_as_retried_fetches() {
+    // Waterfall arm 3: losing in-flight host transfers mid-prefill forces
+    // re-issues, surfaced as retried fetches and a degraded annotation —
+    // never as silent stalls or drops.
+    let (cfg, store) = setup();
+    let mut scfg = ServingConfig::default().preset("original").unwrap();
+    scfg.cache_rate = 0.5;
+    scfg.prefetch = PrefetchKind::None; // losses must land on demand fetches
+    scfg.fault_plan = FaultPlan::from_events(vec![
+        ev(0.0003, FaultKind::LoseInFlight { device: 0 }),
+        ev(0.0009, FaultKind::LoseInFlight { device: 0 }),
+        ev(0.0015, FaultKind::LoseInFlight { device: 0 }),
+    ]);
+    let server = serve(&cfg, store, scfg);
+
+    let c = &server.engine.counters;
+    assert!(c.get("transfer_retries") > 0, "losses on a saturated link must retry");
+    assert!(c.get("waterfall_retried_fetches") > 0);
+    assert_eq!(c.get("dropped_slots"), 0, "retries recover everything without a deadline");
+    assert!(server.metrics.degraded_requests >= 1, "retried steps are degraded");
+    server.engine.shutdown();
+}
+
+#[test]
+fn deadline_drops_slots_when_the_host_link_stalls() {
+    // Waterfall arm 4: under a hard per-transfer deadline a stalled host
+    // link exhausts retry-then-refetch and drops the slot — bounded
+    // latency traded for fidelity, with exact drop accounting.
+    let (cfg, store) = setup();
+    let mut scfg = ServingConfig::default().preset("original").unwrap();
+    scfg.cache_rate = 0.5;
+    scfg.prefetch = PrefetchKind::None; // isolate the demand-fetch deadline path
+    scfg.transfer_deadline_s = 0.005;
+    scfg.fault_plan = FaultPlan::from_events(vec![ev(
+        0.0,
+        FaultKind::HostStall { device: 0, duration_s: 1e6 },
+    )]);
+    let server = serve(&cfg, store, scfg);
+
+    let c = &server.engine.counters;
+    assert!(c.get("dropped_slots") > 0, "a stalled link under deadline must drop");
+    assert!(c.get("waterfall_drops") > 0);
+    assert!(
+        c.get("dropped_slots") >= c.get("waterfall_drops"),
+        "each dropped expert covers at least one routed slot"
+    );
+    assert_eq!(
+        c.get("drops_in_fault_window") + c.get("drops_outside_fault_window"),
+        c.get("dropped_slots"),
+        "window split must partition the drop count"
+    );
+    assert!(c.get("drops_in_fault_window") > 0, "the stall window spans the whole run");
+    assert!(server.metrics.degraded_requests >= 1, "dropped steps are degraded");
+    server.engine.shutdown();
+}
+
+#[test]
+fn faulted_runs_are_deterministic_per_seed() {
+    // Chaos replays: the whole fault pipeline (event application, retry
+    // jitter, failover ordering, waterfall arms) lives on the virtual
+    // clock and seeded RNG streams, so the same seed must reproduce every
+    // counter and the final clock exactly.
+    let (cfg, store) = setup();
+    let run = |store: Arc<WeightStore>| {
+        let mut scfg = fleet_scfg(4, PlacementKind::Popularity);
+        scfg.replication_factor = 2;
+        scfg.fault_plan = FaultPlan::from_events(vec![
+            ev(0.001, FaultKind::DeviceDown { device: 1, down_s: Some(0.005) }),
+            ev(0.004, FaultKind::LoseInFlight { device: 0 }),
+        ]);
+        let server = serve(&cfg, store, scfg);
+        let out = fault_fingerprint(&server);
+        server.engine.shutdown();
+        out
+    };
+    let a = run(store.clone());
+    let b = run(store);
+    assert_eq!(a, b, "same seed must replay the faulted timeline exactly");
+}
+
+#[test]
+fn replicated_ring_survives_device_down_across_thread_counts() {
+    // The acceptance e2e: a 4-device ring with replication_factor = 2
+    // takes a mid-sweep device failure (down at 1 ms, back at 6 ms),
+    // completes every request with zero dropped experts, and replays
+    // byte-identically at PALLAS_THREADS 1 and 4.
+    let _serialize = par_lock();
+    let (cfg, store) = setup();
+    let run = |store: Arc<WeightStore>, threads: usize| {
+        par::set_threads(threads);
+        let mut scfg = fleet_scfg(4, PlacementKind::Popularity);
+        scfg.replication_factor = 2;
+        scfg.fault_plan = FaultPlan::from_events(vec![ev(
+            0.001,
+            FaultKind::DeviceDown { device: 1, down_s: Some(0.005) },
+        )]);
+        let server = serve(&cfg, store, scfg);
+        let out = fault_fingerprint(&server);
+        server.engine.shutdown();
+        par::set_threads(0);
+        out
+    };
+    let one = run(store.clone(), 1);
+    let four = run(store, 4);
+    assert_eq!(one, four, "thread count must never change the faulted timeline");
+
+    let get = |k: &str| one.iter().find(|(n, _)| *n == k).unwrap().1;
+    assert!(get("device_failovers") >= 1, "the failure must land mid-sweep");
+    assert!(
+        get("failover_rerouted") + get("failover_rehomed") > 0,
+        "experts homed on the dead device must be displaced"
+    );
+    assert_eq!(get("dropped_slots"), 0, "replicated fleet survives with zero drops");
+    assert_eq!(get("waterfall_drops"), 0);
+}
