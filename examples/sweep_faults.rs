@@ -20,11 +20,13 @@
 use std::path::Path;
 
 use anyhow::Result;
+use buddymoe::config::ServingConfig;
 use buddymoe::eval::{profile_model, warm_rank_from_profile, Domain};
+use buddymoe::fault::FaultPlan;
 use buddymoe::topology::TopologyKind;
 use buddymoe::traffic::{
-    fault_cells_json, fault_report_markdown, run_fault_sweep, FaultSweep, LoadSettings,
-    ProcessKind,
+    fault_cells_json, fault_report_markdown, run_fault_cell_traced, run_fault_sweep, FaultSweep,
+    LoadSettings, ProcessKind,
 };
 use buddymoe::util::json::{num, obj, s};
 
@@ -67,6 +69,9 @@ fn main() -> Result<()> {
             cache_rate: 0.5,
             domain: Domain::Mixed,
             seed: 42,
+            // Trace every cell: each BENCH_faults.json row then carries
+            // the p99 request's stall attribution.
+            trace: true,
         },
     };
 
@@ -79,6 +84,39 @@ fn main() -> Result<()> {
         spec.settings.n_requests,
         spec.load_rps,
     );
+    // One fully-traced reference cell (device-down on the single-homed
+    // fleet — the worst-case degradation story): its Perfetto-loadable
+    // trace is the TRACE_faults.json artifact, with fault epochs and every
+    // degradation-waterfall arm visible as instants.
+    {
+        let mut scfg = ServingConfig::default().preset("buddy-rho3")?;
+        scfg.cache_rate = spec.settings.cache_rate;
+        scfg.seed = spec.settings.seed;
+        scfg.n_devices = spec.n_devices;
+        scfg.topology = spec.topology;
+        scfg.fault_plan = FaultPlan::scenario("device-down")
+            .expect("device-down is a built-in fault scenario");
+        scfg.transfer_deadline_s = spec.transfer_deadline_s;
+        let process = spec.process.build(&cfg, &spec.settings, spec.load_rps);
+        let (_cell, _probe, _fault, trace) = run_fault_cell_traced(
+            &cfg,
+            store.clone(),
+            &pc,
+            &warm,
+            scfg,
+            "buddy-rho3",
+            spec.load_rps,
+            process,
+        )?;
+        let tpath = Path::new(env!("CARGO_MANIFEST_DIR")).join("TRACE_faults.json");
+        std::fs::write(&tpath, &trace.chrome_json)?;
+        println!(
+            "wrote {} ({} finished requests traced)\n",
+            tpath.display(),
+            trace.attributions.len()
+        );
+    }
+
     let rows = run_fault_sweep(&cfg, store, &pc, &warm, &spec)?;
     println!("{}", fault_report_markdown(&rows));
 

@@ -12,9 +12,11 @@
 use std::path::Path;
 
 use anyhow::Result;
+use buddymoe::config::ServingConfig;
 use buddymoe::eval::{profile_model, warm_rank_from_profile, Domain};
 use buddymoe::traffic::{
-    cells_json, report_markdown, run_sweep, LoadSettings, ProcessKind, SweepSpec,
+    cells_json, report_markdown, run_load_cell_traced, run_sweep, LoadSettings, ProcessKind,
+    SweepSpec,
 };
 use buddymoe::util::json::{num, obj, s};
 
@@ -42,6 +44,9 @@ fn main() -> Result<()> {
             cache_rate: 0.5,
             domain: Domain::Mixed,
             seed: 42,
+            // Trace every cell: each BENCH_load.json cell then carries the
+            // p99 request's stall attribution ("where did the time go").
+            trace: true,
         },
     };
 
@@ -49,6 +54,34 @@ fn main() -> Result<()> {
         "# Load sweep at c = {} (virtual clock, seed {}, {} requests/cell)\n",
         spec.settings.cache_rate, spec.settings.seed, spec.settings.n_requests
     );
+
+    // One fully-traced reference cell (bursty arrivals near the knee on
+    // the buddy preset): its Perfetto-loadable trace is the TRACE_load.json
+    // artifact the docs walkthrough opens.
+    {
+        let mut scfg = ServingConfig::default().preset("buddy-rho3")?;
+        scfg.cache_rate = spec.settings.cache_rate;
+        scfg.seed = spec.settings.seed;
+        let process = ProcessKind::Bursty.build(&cfg, &spec.settings, 16.0);
+        let (_cell, trace) = run_load_cell_traced(
+            &cfg,
+            store.clone(),
+            &pc,
+            &warm,
+            scfg,
+            "buddy-rho3",
+            16.0,
+            process,
+        )?;
+        let tpath = Path::new(env!("CARGO_MANIFEST_DIR")).join("TRACE_load.json");
+        std::fs::write(&tpath, &trace.chrome_json)?;
+        println!(
+            "wrote {} ({} finished requests traced)\n",
+            tpath.display(),
+            trace.attributions.len()
+        );
+    }
+
     let cells = run_sweep(&cfg, store, &pc, &warm, &spec)?;
     println!("{}", report_markdown(&cells));
 

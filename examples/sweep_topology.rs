@@ -52,6 +52,9 @@ fn main() -> Result<()> {
             cache_rate: 0.5,
             domain: Domain::Mixed,
             seed: 42,
+            // Untraced: BENCH_topology.json stays byte-identical to the
+            // pre-trace golden.
+            trace: false,
         },
     };
 

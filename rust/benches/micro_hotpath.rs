@@ -11,8 +11,10 @@
 
 mod bench_support;
 
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use buddymoe::buddy::{BuddyProfile, GateParams, SubstitutionEngine, TokenRouting};
@@ -22,6 +24,7 @@ use buddymoe::prefetch::host_router_probs;
 use buddymoe::profilecollect::ProfileCollector;
 use buddymoe::runtime::{kernels, BackendKind};
 use buddymoe::stats::Counters;
+use buddymoe::trace::TraceSink;
 use buddymoe::util::clock::ClockMode;
 use buddymoe::util::json::{num, s, Json};
 use buddymoe::util::math::{tae, top_k};
@@ -29,7 +32,33 @@ use buddymoe::util::par;
 use buddymoe::util::rng::Rng;
 use buddymoe::weights::WeightStore;
 
+/// Counting wrapper around the system allocator: lets the benchmark
+/// assert a hot path is allocation-free (the `counters_add_hot_allocs`
+/// row) instead of inferring it from timing noise.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
 fn main() {
+    let mut json = BTreeMap::new();
+    // Runs first, before any worker threads exist, so the allocation count
+    // is attributable to the measured loop alone.
+    counters_alloc_bench(&mut json);
+
     let (cfg, store) = bench_support::load_model_or_synthetic();
     let iters = if bench_support::fast_mode() { 200 } else { 2000 };
     let mut rng = Rng::new(3);
@@ -137,14 +166,98 @@ fn main() {
     // ------------------------------------------------------------------
     // Raw kernels + full decode step: naive vs blocked, 1..4 threads.
     // ------------------------------------------------------------------
-    let mut json = BTreeMap::new();
     kernel_bench(iters, &mut json);
     decode_step_bench(&mut json);
     long_context_bench(&mut json);
+    tracing_overhead_bench(&mut json);
 
     let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_hotpath.json");
     std::fs::write(&path, Json::Obj(json).to_string() + "\n").expect("write BENCH_hotpath.json");
     println!("\nwrote {}", path.display());
+}
+
+/// `Counters::add` on warm keys must not allocate: the counting allocator
+/// observes a tight single-threaded loop of adds against already-present
+/// keys and reports the exact allocation count (`counters_add_hot_allocs`,
+/// expected 0 — CI grep-asserts the row).
+fn counters_alloc_bench(json: &mut BTreeMap<String, Json>) {
+    let keys = [
+        "substitutions",
+        "fetches",
+        "peer_hops",
+        "replica_hits",
+        "retried_fetches",
+        "waterfall_drops",
+    ];
+    let mut c = Counters::new();
+    // Warm-up: the first touch of each key allocates its String once.
+    for k in &keys {
+        c.add(k, 1);
+    }
+    let iters = 10_000u64;
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for i in 0..iters {
+        c.add(keys[(i % keys.len() as u64) as usize], 1);
+    }
+    let allocs = ALLOCS.load(Ordering::Relaxed) - before;
+    println!("# Counters hot path\n");
+    println!("counters.add on warm keys: {allocs} allocations across {iters} adds\n");
+    json.insert("counters_add_hot_allocs".into(), num(allocs as f64));
+    json.insert("counters_add_hot_iters".into(), num(iters as f64));
+}
+
+/// Decode step with the trace ring sink on vs. off (same model, same
+/// workload, blocked kernels, one thread): the `tracing_overhead_ratio`
+/// row quantifies the cost of full instrumentation, and the untraced row
+/// doubles as evidence the disabled tracer stays off the hot path.
+fn tracing_overhead_bench(json: &mut BTreeMap<String, Json>) {
+    let cfg = perf_cfg();
+    let store = Arc::new(WeightStore::synthetic_families(&cfg, 2024));
+    let batch = 8usize;
+    let warmup = 3usize;
+    let iters = if bench_support::fast_mode() { 12 } else { 40 };
+    par::set_threads(1);
+
+    println!("\n# Tracing overhead: decode step, ring sink on vs off\n");
+    println!("| sink | mean | p95 |");
+    println!("|---|---|---|");
+
+    let mut means = Vec::new();
+    for (label, sink) in [("untraced", TraceSink::Off), ("traced", TraceSink::Ring)] {
+        let scfg = ServingConfig {
+            cache_rate: 1.0,
+            miss_policy: MissPolicy::OnDemand,
+            prefetch: PrefetchKind::None,
+            trace: sink,
+            ..Default::default()
+        };
+        let opts = EngineOptions {
+            clock: ClockMode::Virtual,
+            backend: BackendKind::Reference,
+            ..Default::default()
+        };
+        let mut engine =
+            Engine::new(cfg.clone(), scfg, store.clone(), None, None, opts).unwrap();
+        let mut seqs: Vec<_> = (0..batch)
+            .map(|i| engine.new_sequence(vec![3 + i as i32, 9, 17, 4, 2, 11], iters + warmup))
+            .collect();
+        for sq in seqs.iter_mut() {
+            engine.prefill(sq).unwrap();
+        }
+        let (mean, p95) = bench_support::time_it(warmup, iters, || {
+            let mut refs: Vec<&mut _> = seqs.iter_mut().collect();
+            engine.decode_step(&mut refs).unwrap();
+        });
+        println!("| {label} | {:.3} ms | {:.3} ms |", mean * 1e3, p95 * 1e3);
+        json.insert(format!("decode_step_{label}_mean_s"), num(mean));
+        json.insert(format!("decode_step_{label}_p95_s"), num(p95));
+        means.push(mean);
+        engine.shutdown();
+    }
+    par::set_threads(0);
+    let ratio = means[1] / means[0].max(1e-12);
+    json.insert("tracing_overhead_ratio".into(), num(ratio));
+    println!("\ntracing overhead: {ratio:.3}x traced vs untraced");
 }
 
 /// A synthetic model sized so kernels, not fixed overheads, dominate the

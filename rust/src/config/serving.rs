@@ -5,6 +5,7 @@ use anyhow::{bail, Result};
 
 use crate::fault::FaultPlan;
 use crate::topology::{PlacementKind, Topology, TopologyKind};
+use crate::trace::TraceSink;
 
 /// What to do when a selected expert is CPU-resident (paper §5.1 baselines
 /// plus the BuddyMoE policy).
@@ -168,6 +169,17 @@ pub struct ServingConfig {
     /// Base of the exponential retry backoff, simulated seconds.
     pub transfer_backoff_base_s: f64,
 
+    // --- observability (crate::trace) ---
+    /// Trace sink: `Off` (the default) is the zero-cost no-op — no
+    /// recorder is allocated and every golden sweep is byte-identical to
+    /// a build without tracing. `Ring` records SimClock-stamped spans
+    /// into bounded in-memory rings, exportable as Perfetto-loadable
+    /// Chrome trace JSON or JSONL.
+    pub trace: TraceSink,
+    /// Global trace-ring capacity in events (per-request flight
+    /// recorders use `trace::recorder::PER_REQUEST_RING`).
+    pub trace_ring: usize,
+
     // --- serving shape ---
     pub max_batch: usize,
     pub batch_timeout_us: u64,
@@ -221,6 +233,8 @@ impl Default for ServingConfig {
             transfer_deadline_s: 0.0,
             transfer_max_retries: 4,
             transfer_backoff_base_s: 2e-3,
+            trace: TraceSink::Off,
+            trace_ring: 1 << 16,
             max_batch: 8,
             batch_timeout_us: 2_000,
             seed: 0x00ddf00d,
@@ -285,6 +299,9 @@ impl ServingConfig {
         }
         if !(self.transfer_backoff_base_s.is_finite() && self.transfer_backoff_base_s >= 0.0) {
             bail!("transfer_backoff_base_s must be finite and non-negative");
+        }
+        if self.trace.is_on() && self.trace_ring == 0 {
+            bail!("trace_ring must be >= 1 when tracing is enabled");
         }
         if !self.fault_plan.is_empty() {
             let links = Topology::new(self.n_devices, self.topology).n_peer_links();
@@ -441,6 +458,17 @@ mod tests {
         assert!(c.validate().is_err());
         let mut c = ServingConfig::default();
         c.kappa = f64::NAN;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn trace_knob_validated() {
+        let c = ServingConfig::default();
+        assert!(!c.trace.is_on(), "tracing is off by default");
+        let mut c = ServingConfig::default();
+        c.trace = TraceSink::Ring;
+        c.validate().unwrap();
+        c.trace_ring = 0;
         assert!(c.validate().is_err());
     }
 

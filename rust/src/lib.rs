@@ -59,6 +59,7 @@ pub mod server;
 pub mod stats;
 pub mod testing;
 pub mod topology;
+pub mod trace;
 pub mod traffic;
 pub mod util;
 pub mod weights;

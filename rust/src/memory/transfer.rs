@@ -88,6 +88,7 @@ use crate::fault::{FaultAction, FaultTick, FaultTimeline};
 use crate::memory::cache::{ExpertCache, LoadDecision, SlotState};
 use crate::memory::pcie::{PcieSim, PcieStats};
 use crate::topology::{Placement, Topology};
+use crate::trace::{StallKind, Tracer, Track};
 use crate::util::clock::SimClock;
 use crate::util::rng::Rng;
 use crate::weights::{ExpertKey, ExpertWeights, WeightStore};
@@ -242,6 +243,10 @@ pub struct EngineState {
     /// Seeded jitter stream for retry backoff (only drawn from on the
     /// second re-issue of a wait — never in fault-free runs).
     retry_rng: Rng,
+    /// Trace sink for transfer-lifecycle events (`Tracer::off()` unless
+    /// the serving engine installs an enabled recorder post-spawn). Every
+    /// emission site goes through an inlined no-op when disabled.
+    pub tracer: Tracer,
     shutdown: bool,
 }
 
@@ -401,6 +406,7 @@ fn reserve_peer_path(
         let end = start + dur;
         link.busy_until = end;
         link.sim.record(bytes, false);
+        st.tracer.span(start, end, Track::PeerLink(e), "peer_xfer", &[("bytes", bytes as i64)]);
         cursor = end;
     }
     cursor
@@ -475,10 +481,12 @@ fn next_start(dev: &DeviceState) -> Option<(Duration, bool)> {
 /// in flight when a run ends), and complete every transfer whose ready
 /// time has passed (flipping the cache slot and staging arrivals).
 fn settle_device(
+    dev_idx: usize,
     dev: &mut DeviceState,
     store: &WeightStore,
     now: Duration,
     arrivals: &mut Vec<(ExpertKey, ExpertWeights)>,
+    tracer: &Tracer,
 ) {
     // A down device starts no transfers (its queues were drained when it
     // went down, but new enqueues are also refused at the request layer).
@@ -503,6 +511,17 @@ fn settle_device(
         dev.link_free_at = ready;
         dev.pcie.record(store.expert_bytes, !demand_first);
         dev.in_flight.push(InFlight { key, ready_at: ready });
+        tracer.span(
+            start,
+            ready,
+            Track::HostLink(dev_idx),
+            "transfer",
+            &[
+                ("layer", key.layer as i64),
+                ("expert", key.expert as i64),
+                ("prefetch", (!demand_first) as i64),
+            ],
+        );
     }
     let mut i = 0;
     while i < dev.in_flight.len() {
@@ -513,6 +532,12 @@ fn settle_device(
                 "invariant violated: WeightStore must hold every expert the cache accepted",
             );
             arrivals.push((t.key, w));
+            tracer.instant(
+                t.ready_at,
+                Track::HostLink(dev_idx),
+                "land",
+                &[("layer", t.key.layer as i64), ("expert", t.key.expert as i64)],
+            );
         } else {
             i += 1;
         }
@@ -537,9 +562,9 @@ fn settle(st: &mut EngineState, store: &WeightStore, now: Duration) {
 }
 
 fn settle_links(st: &mut EngineState, store: &WeightStore, now: Duration) {
-    let EngineState { devices, arrivals, peer_in_flight, .. } = st;
-    for dev in devices.iter_mut() {
-        settle_device(dev, store, now, arrivals);
+    let EngineState { devices, arrivals, peer_in_flight, tracer, .. } = st;
+    for (i, dev) in devices.iter_mut().enumerate() {
+        settle_device(i, dev, store, now, arrivals, tracer);
     }
     let mut i = 0;
     while i < peer_in_flight.len() {
@@ -550,6 +575,12 @@ fn settle_links(st: &mut EngineState, store: &WeightStore, now: Duration) {
                 "invariant violated: WeightStore must hold every expert the cache accepted",
             );
             arrivals.push((t.key, w));
+            tracer.instant(
+                t.ready_at,
+                Track::Device(t.device),
+                "replica_land",
+                &[("layer", t.key.layer as i64), ("expert", t.key.expert as i64)],
+            );
         } else {
             i += 1;
         }
@@ -559,6 +590,15 @@ fn settle_links(st: &mut EngineState, store: &WeightStore, now: Duration) {
 /// Apply one primitive fault tick to the fleet. Only engine-owned state is
 /// touched (see `crate::fault` module docs for the full mutation contract).
 fn apply_fault(st: &mut EngineState, tick: FaultTick) {
+    let (fault_name, target) = match &tick.action {
+        FaultAction::DeviceDown { device } => ("device_down", *device as i64),
+        FaultAction::DeviceUp { device } => ("device_up", *device as i64),
+        FaultAction::HostBandwidth { device, .. } => ("host_bandwidth", *device as i64),
+        FaultAction::HostStall { device, .. } => ("host_stall", *device as i64),
+        FaultAction::PeerStall { link, .. } => ("peer_stall", *link as i64),
+        FaultAction::LoseInFlight { device } => ("lose_inflight", *device as i64),
+    };
+    st.tracer.instant(tick.at, Track::Fault, fault_name, &[("target", target)]);
     match tick.action {
         FaultAction::DeviceDown { device } => {
             let live = st.devices.iter().filter(|d| !d.down).count();
@@ -787,6 +827,7 @@ impl TransferEngine {
                 faults,
                 fault_epoch: 0,
                 retry_rng: Rng::new(tuning.seed ^ 0xfa17_0b0f),
+                tracer: Tracer::off(),
                 shutdown: false,
             }),
             cv: Condvar::new(),
@@ -924,6 +965,16 @@ impl TransferHandle {
                 TransferPriority::Demand => st.devices[dev].demand_q.push_back(q),
                 TransferPriority::Prefetch => st.devices[dev].prefetch_q.push_back(q),
             }
+            st.tracer.instant(
+                q.enqueued_at,
+                Track::HostLink(dev),
+                "enqueue",
+                &[
+                    ("layer", key.layer as i64),
+                    ("expert", key.expert as i64),
+                    ("prefetch", matches!(prio, TransferPriority::Prefetch) as i64),
+                ],
+            );
             if self.clock.is_virtual() {
                 // The link may be idle: the transfer starts this instant.
                 settle(&mut st, &self.store, self.clock.now());
@@ -998,19 +1049,41 @@ impl TransferHandle {
                 if st.is_gpu(key) {
                     return done(retries);
                 }
+                let home = st.home(key);
+                let key_args = |reason: i64| {
+                    [("layer", key.layer as i64), ("expert", key.expert as i64), ("reason", reason)]
+                };
                 if let Some(dl) = deadline {
                     if self.clock.now() >= dl {
+                        st.tracer.instant(
+                            self.clock.now(),
+                            Track::HostLink(home),
+                            "timeout",
+                            &key_args(0),
+                        );
                         abandon_wait(&mut st, key);
                         return TransferOutcome::TimedOut;
                     }
                 }
                 if !st.has_transfer(key) {
-                    if st.devices[st.home(key)].down {
+                    if st.devices[home].down {
                         // Nothing to clean up: the device-down fault
                         // already drained its queues. The caller reroutes.
+                        st.tracer.instant(
+                            self.clock.now(),
+                            Track::HostLink(home),
+                            "timeout",
+                            &key_args(1),
+                        );
                         return TransferOutcome::TimedOut;
                     }
                     if retries >= self.tuning.max_retries {
+                        st.tracer.instant(
+                            self.clock.now(),
+                            Track::HostLink(home),
+                            "timeout",
+                            &key_args(2),
+                        );
                         abandon_wait(&mut st, key);
                         return TransferOutcome::TimedOut;
                     }
@@ -1021,28 +1094,68 @@ impl TransferHandle {
                         let base = self.tuning.backoff_base.as_secs_f64();
                         let jitter = st.retry_rng.f64();
                         let factor = (1u64 << (retries - 1).min(20)) as f64;
-                        let mut until = self.clock.now()
-                            + Duration::from_secs_f64(base * factor * (1.0 + jitter));
+                        let t_before = self.clock.now();
+                        let mut until =
+                            t_before + Duration::from_secs_f64(base * factor * (1.0 + jitter));
                         if let Some(dl) = deadline {
                             until = until.min(dl);
                         }
                         self.clock.advance_to(until);
+                        st.tracer.stall(
+                            StallKind::RetryBackoff,
+                            t_before,
+                            self.clock.now(),
+                            Track::HostLink(home),
+                            &[
+                                ("layer", key.layer as i64),
+                                ("expert", key.expert as i64),
+                                ("retry", retries as i64),
+                            ],
+                        );
                         settle(&mut st, &self.store, self.clock.now());
                         if st.is_gpu(key) {
                             return done(retries);
                         }
-                        if st.devices[st.home(key)].down {
+                        if st.devices[home].down {
+                            st.tracer.instant(
+                                self.clock.now(),
+                                Track::HostLink(home),
+                                "timeout",
+                                &key_args(1),
+                            );
                             return TransferOutcome::TimedOut;
                         }
                         if deadline.is_some_and(|dl| self.clock.now() >= dl) {
+                            st.tracer.instant(
+                                self.clock.now(),
+                                Track::HostLink(home),
+                                "timeout",
+                                &key_args(0),
+                            );
                             abandon_wait(&mut st, key);
                             return TransferOutcome::TimedOut;
                         }
                     }
                     retries += 1;
                     if !reissue_demand(&mut st, key, self.clock.now()) {
+                        st.tracer.instant(
+                            self.clock.now(),
+                            Track::HostLink(home),
+                            "timeout",
+                            &key_args(3),
+                        );
                         return TransferOutcome::TimedOut;
                     }
+                    st.tracer.instant(
+                        self.clock.now(),
+                        Track::HostLink(home),
+                        "retry",
+                        &[
+                            ("layer", key.layer as i64),
+                            ("expert", key.expert as i64),
+                            ("attempt", retries as i64),
+                        ],
+                    );
                     continue;
                 }
                 let dev = st.home(key);
@@ -1117,6 +1230,14 @@ impl TransferHandle {
         self.clock.sleep(dur);
         let mut st = self.lock_settled();
         st.devices[dev].pcie.record(bytes, false);
+        let now = self.clock.now();
+        st.tracer.stall(
+            StallKind::Waterfall,
+            now.saturating_sub(dur),
+            now,
+            Track::HostLink(dev),
+            &[("layer", key.layer as i64), ("expert", key.expert as i64), ("bytes", bytes as i64)],
+        );
         dur
     }
 

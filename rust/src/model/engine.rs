@@ -27,6 +27,7 @@ use crate::profilecollect::ProfileCollector;
 use crate::runtime::{BackendKind, RefStages, StageRunner};
 use crate::stats::Counters;
 use crate::topology::{HopContext, Placement, Topology};
+use crate::trace::{StallKind, Tracer, Track};
 use crate::util::arena::Arena;
 use crate::util::clock::{ClockMode, SimClock};
 use crate::util::math::argmax;
@@ -128,6 +129,10 @@ pub struct Engine {
     prefetcher: PrefetchEngine,
     pub counters: Counters,
     pub profile_out: Option<ProfileCollector>,
+    /// Span/event recorder shared with the transfer fleet (`Tracer::off()`
+    /// unless `scfg.trace` selects a sink; every emission site is an
+    /// inlined no-op when off).
+    tracer: Tracer,
     rng: Rng,
     next_seq_id: u64,
     /// Decode steps since the last online re-placement pass.
@@ -275,6 +280,17 @@ impl Engine {
             scfg.fault_plan.timeline(),
             tuning,
         );
+        // Log lines stamp virtual time once the serving clock exists.
+        crate::util::logging::set_clock(&clock);
+        // One recorder shared by the engine and the transfer fleet, so
+        // transfer-lifecycle events and engine spans land in one ring.
+        let tracer = if scfg.trace.is_on() {
+            let t = Tracer::ring(scfg.trace_ring);
+            transfer.with_state(|st| st.tracer = t.clone());
+            t
+        } else {
+            Tracer::off()
+        };
 
         let predictor: Option<Box<dyn Predictor>> = match scfg.prefetch {
             PrefetchKind::None => None,
@@ -327,6 +343,7 @@ impl Engine {
             prefetcher,
             counters: Counters::new(),
             profile_out,
+            tracer,
             next_seq_id: 0,
             steps_since_replan: 0,
             last_fault_epoch: 0,
@@ -403,6 +420,13 @@ impl Engine {
         &self.transfer
     }
 
+    /// The engine's trace sink (`Tracer::off()` unless `scfg.trace` is
+    /// enabled). The scheduler emits request lifecycle marks through it;
+    /// sweeps export it after a run.
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
     /// The live expert→device-set placement (reflects online re-placement,
     /// including its fallback flag — sweep reports read it *after* the run
     /// so they can't mislabel a silently-degraded placement).
@@ -445,6 +469,7 @@ impl Engine {
     pub fn prefill(&mut self, seq: &mut Sequence) -> Result<StepTelemetry> {
         let s = self.cfg.max_seq;
         let s0 = seq.prompt.len();
+        let t_prefill = self.clock.now();
         let mut tel = StepTelemetry::default();
 
         // Embed the padded prompt.
@@ -486,6 +511,13 @@ impl Engine {
         seq.next_token = seq.fed_token(pred, 0);
         seq.pos = s0;
         self.counters.inc("prefills");
+        self.tracer.span(
+            t_prefill,
+            self.clock.now(),
+            Track::Engine,
+            "prefill",
+            &[("seq", seq.id as i64), ("prompt", s0 as i64)],
+        );
         Ok(tel)
     }
 
@@ -507,6 +539,7 @@ impl Engine {
     pub fn decode_step(&mut self, seqs: &mut [&mut Sequence]) -> Result<StepTelemetry> {
         let b = seqs.len();
         anyhow::ensure!(b > 0, "empty batch");
+        let t_step = self.clock.now();
         let mut tel = StepTelemetry::default();
         // Take the scratch out of self so its borrows can't conflict with
         // the `&mut self` stage calls; restored on *every* exit of the
@@ -531,6 +564,13 @@ impl Engine {
         }
         self.counters.inc("decode_steps");
         self.counters.add("decode_tokens", b as u64);
+        self.tracer.span(
+            t_step,
+            self.clock.now(),
+            Track::Engine,
+            "decode_step",
+            &[("batch", b as i64)],
+        );
         self.maybe_replan();
         Ok(tel)
     }
@@ -653,6 +693,12 @@ impl Engine {
             return;
         }
         self.last_fault_epoch = epoch;
+        self.tracer.instant(
+            self.clock.now(),
+            Track::Fault,
+            "fault_epoch",
+            &[("epoch", epoch as i64)],
+        );
         let newly_down: Vec<usize> = (0..down.len())
             .filter(|&d| down[d] && !self.down_seen[d])
             .collect();
@@ -882,6 +928,12 @@ impl Engine {
                 if residency[e] && self.displaced.contains_key(&ExpertKey::new(l, e)) {
                     self.counters.inc("waterfall_replica_hits");
                     tel.replica_hits += 1;
+                    self.tracer.instant(
+                        self.clock.now(),
+                        Track::Engine,
+                        "replica_hit",
+                        &[("layer", l as i64), ("expert", e as i64)],
+                    );
                 }
             }
         }
@@ -943,6 +995,16 @@ impl Engine {
         };
         let call_subs = self.counters.get("substitutions") - sub_counters_before;
         tel.substitutions += call_subs;
+        if self.tracer.enabled() {
+            for ev in &sub_events {
+                self.tracer.instant(
+                    self.clock.now(),
+                    Track::Engine,
+                    "psi_sub",
+                    &[("layer", l as i64), ("from", ev.from as i64), ("to", ev.to as i64)],
+                );
+            }
+        }
 
         // Waterfall arm 2: buddy substitutions standing in for experts a
         // fault displaced (Ψ already steered these to resident buddies).
@@ -954,6 +1016,12 @@ impl Engine {
                 .count() as u64;
             if victim_subs > 0 {
                 self.counters.add("waterfall_buddy_subs", victim_subs);
+                self.tracer.instant(
+                    self.clock.now(),
+                    Track::Engine,
+                    "waterfall_buddy_sub",
+                    &[("layer", l as i64), ("count", victim_subs as i64)],
+                );
             }
         }
 
@@ -1016,6 +1084,18 @@ impl Engine {
                 }
             }
         }
+        self.tracer.instant(
+            self.clock.now(),
+            Track::Engine,
+            "route",
+            &[
+                ("layer", l as i64),
+                ("unique", actual_unique.len() as i64),
+                ("fetches", fetches.len() as i64),
+                ("subs", call_subs as i64),
+            ],
+        );
+        let t_pin = self.clock.now();
         self.transfer.with_state(|st| {
             for &e in &used {
                 st.pin(ExpertKey::new(l, e));
@@ -1047,6 +1127,16 @@ impl Engine {
                         tel.retried_fetches += 1;
                         self.counters.inc("waterfall_retried_fetches");
                         self.counters.add("transfer_retries", n as u64);
+                        self.tracer.instant(
+                            self.clock.now(),
+                            Track::Engine,
+                            "waterfall_retry",
+                            &[
+                                ("layer", l as i64),
+                                ("expert", key.expert as i64),
+                                ("retries", n as i64),
+                            ],
+                        );
                     }
                     TransferOutcome::TimedOut => {
                         // Waterfall arm 3 fallback: one fresh attempt (the
@@ -1063,6 +1153,16 @@ impl Engine {
                                         TransferOutcome::Ok | TransferOutcome::Retried(_) => {
                                             tel.retried_fetches += 1;
                                             self.counters.inc("waterfall_retried_fetches");
+                                            self.tracer.instant(
+                                                self.clock.now(),
+                                                Track::Engine,
+                                                "waterfall_retry",
+                                                &[
+                                                    ("layer", l as i64),
+                                                    ("expert", key.expert as i64),
+                                                    ("retries", 0),
+                                                ],
+                                            );
                                             true
                                         }
                                         TransferOutcome::TimedOut => false,
@@ -1076,15 +1176,34 @@ impl Engine {
                                 transient.push(key.expert);
                                 transient_rescues += 1;
                                 self.counters.inc("waterfall_transient_rescues");
+                                self.tracer.instant(
+                                    self.clock.now(),
+                                    Track::Engine,
+                                    "transient_rescue",
+                                    &[("layer", l as i64), ("expert", key.expert as i64)],
+                                );
                             } else {
                                 dropped.push(key.expert);
                                 tel.waterfall_drops += 1;
                                 self.counters.inc("waterfall_drops");
+                                self.tracer.instant(
+                                    self.clock.now(),
+                                    Track::Engine,
+                                    "waterfall_drop",
+                                    &[("layer", l as i64), ("expert", key.expert as i64)],
+                                );
                             }
                         }
                     }
                 }
             }
+            self.tracer.stall(
+                StallKind::TransferWait,
+                t0,
+                self.clock.now(),
+                Track::Engine,
+                &[("layer", l as i64), ("pending", pending.len() as i64)],
+            );
             tel.stall_seconds += self.clock.since(t0);
         }
         self.sync_device_buffers()?;
@@ -1190,6 +1309,13 @@ impl Engine {
                 st.unpin(ExpertKey::new(l, e));
             }
         });
+        self.tracer.span(
+            t_pin,
+            self.clock.now(),
+            Track::Engine,
+            "pin_window",
+            &[("layer", l as i64), ("pinned", used.len() as i64)],
+        );
 
         // Degradation accounting: split substitutions/drops by whether
         // this instant falls inside a scheduled fault window, and flag

@@ -138,6 +138,11 @@ impl Server {
                     if a.degraded {
                         self.metrics.degraded_requests += 1;
                     }
+                    let _ = self.engine.tracer().finish_request(
+                        a.seq.id,
+                        clock.now(),
+                        a.degraded,
+                    );
                     let resp = InferenceResponse {
                         id: a.seq.id,
                         tokens: a.seq.generated.clone(),
@@ -179,6 +184,7 @@ impl Server {
         let mut seq = self.engine.new_sequence(req.prompt, req.max_new);
         seq.id = req.id;
         seq.force_tokens = req.force_tokens;
+        self.engine.tracer().begin_request(seq.id, arrived, clock.now());
         let tel = self.engine.prefill(&mut seq)?;
         self.metrics.stall_seconds.add(tel.stall_seconds);
         self.metrics.counters.add("substitutions", tel.substitutions);

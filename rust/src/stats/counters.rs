@@ -20,7 +20,15 @@ impl Counters {
     }
 
     pub fn add(&mut self, name: &str, n: u64) {
-        *self.map.entry(name.to_string()).or_insert(0) += n;
+        // Lookup with the borrowed key first: the counter set is tiny and
+        // stable, so after warm-up the per-increment hot path never
+        // allocates a `String` (asserted by the counting-allocator row in
+        // `benches/micro_hotpath.rs`).
+        if let Some(v) = self.map.get_mut(name) {
+            *v += n;
+        } else {
+            self.map.insert(name.to_string(), n);
+        }
     }
 
     pub fn get(&self, name: &str) -> u64 {

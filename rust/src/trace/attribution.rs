@@ -1,0 +1,227 @@
+//! Stall attribution: decompose a request's end-to-end latency into
+//! buckets that sum *exactly* to the measured total.
+//!
+//! All arithmetic is integer [`Duration`] — no floats anywhere in the
+//! accounting, so the decomposition is bit-exact and independent of
+//! summation order. Seconds are derived only at JSON-export time.
+//!
+//! The engine records three categories of *global* stall intervals on
+//! the virtual timeline (see [`super::recorder`]):
+//!
+//! - **transfer-wait** — `run_moe` blocked on demand fetches,
+//! - **retry-backoff** — seeded-jitter backoff inside `wait_gpu`
+//!   (always nested inside a transfer-wait window),
+//! - **waterfall** — transient stream-through rescues (the waterfall's
+//!   lossless arm), disjoint from the wait windows.
+//!
+//! Intervals within a category never overlap: they are opened and
+//! closed sequentially by single-threaded orchestration code under a
+//! monotone clock. A request admitted at `a` and finished at `d` is
+//! charged the clipped overlap of each category with `[a, d]` — a stall
+//! shared by a whole batch is charged to every co-resident request,
+//! which is exactly what "where did *this* request's time go" means.
+//! The remainder of `[a, d]` is compute; `[arrived, a]` is queueing.
+
+use std::time::Duration;
+
+use crate::util::json::{num, obj, Json};
+
+/// Non-overlapping, time-ordered stall intervals for one category.
+#[derive(Debug, Clone, Default)]
+pub struct Intervals {
+    spans: Vec<(Duration, Duration)>,
+}
+
+impl Intervals {
+    /// Record `[start, end)`; empty or inverted intervals are ignored.
+    /// Callers append in non-decreasing time order (enforced by the
+    /// single-threaded orchestration contract, debug-asserted here).
+    pub fn push(&mut self, start: Duration, end: Duration) {
+        if end <= start {
+            return;
+        }
+        if let Some(&(_, last_end)) = self.spans.last() {
+            debug_assert!(start >= last_end, "stall intervals must not overlap");
+        }
+        self.spans.push((start, end));
+    }
+
+    /// Exact total overlap of the recorded intervals with `[a, b)`.
+    pub fn overlap(&self, a: Duration, b: Duration) -> Duration {
+        let mut total = Duration::ZERO;
+        for &(s, e) in &self.spans {
+            let lo = s.max(a);
+            let hi = e.min(b);
+            if hi > lo {
+                total += hi - lo;
+            }
+        }
+        total
+    }
+
+    /// Drop intervals that ended at or before `before` (no live request
+    /// can overlap them anymore).
+    pub fn prune(&mut self, before: Duration) {
+        self.spans.retain(|&(_, e)| e > before);
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+}
+
+/// Where one finished request's wall time went. The five buckets sum
+/// exactly (integer nanoseconds) to `total()`:
+///
+/// `queue + compute + transfer_wait + retry_backoff + waterfall == done - arrived`
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestAttribution {
+    pub id: u64,
+    pub arrived: Duration,
+    pub admitted: Duration,
+    pub done: Duration,
+    /// Waiting for admission: `admitted - arrived`.
+    pub queue: Duration,
+    /// Residual of the active span not charged to any stall bucket.
+    pub compute: Duration,
+    /// Blocked on demand fetches, excluding nested retry backoff.
+    pub transfer_wait: Duration,
+    /// Seeded-jitter backoff between transfer re-issues.
+    pub retry_backoff: Duration,
+    /// Transient stream-through rescues (degradation waterfall).
+    pub waterfall: Duration,
+    /// The response carried the degraded annotation.
+    pub degraded: bool,
+}
+
+impl RequestAttribution {
+    /// Measured end-to-end latency (`done - arrived`).
+    pub fn total(&self) -> Duration {
+        self.done.saturating_sub(self.arrived)
+    }
+
+    /// Exact bucket sum — equals `total()` bit-for-bit (property-tested).
+    pub fn bucket_sum(&self) -> Duration {
+        self.queue + self.compute + self.transfer_wait + self.retry_backoff + self.waterfall
+    }
+
+    /// JSON row for the bench artifacts: exact integer nanoseconds per
+    /// bucket plus a human-scale `total_s`.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("id", num(self.id as f64)),
+            ("total_s", num(self.total().as_secs_f64())),
+            ("total_ns", num(self.total().as_nanos() as f64)),
+            ("queue_ns", num(self.queue.as_nanos() as f64)),
+            ("compute_ns", num(self.compute.as_nanos() as f64)),
+            ("transfer_wait_ns", num(self.transfer_wait.as_nanos() as f64)),
+            ("retry_backoff_ns", num(self.retry_backoff.as_nanos() as f64)),
+            ("waterfall_ns", num(self.waterfall.as_nanos() as f64)),
+            ("degraded", Json::Bool(self.degraded)),
+        ])
+    }
+}
+
+/// Run the attribution pass for one finished request against the global
+/// stall-interval categories. Exactness argument: the three categories
+/// clip to the active span `[admitted, done)`; backoff intervals are
+/// nested inside transfer-wait intervals and waterfall intervals are
+/// disjoint from both, so `wait_total + waterfall <= active` and
+/// `backoff <= wait_total`, making every `saturating_sub` exact and the
+/// bucket identity hold bit-for-bit.
+pub fn attribute(
+    id: u64,
+    arrived: Duration,
+    admitted: Duration,
+    done: Duration,
+    degraded: bool,
+    transfer_wait: &Intervals,
+    retry_backoff: &Intervals,
+    waterfall: &Intervals,
+) -> RequestAttribution {
+    let queue = admitted.saturating_sub(arrived);
+    let active = done.saturating_sub(admitted);
+    let wait_total = transfer_wait.overlap(admitted, done);
+    let backoff = retry_backoff.overlap(admitted, done);
+    let wf = waterfall.overlap(admitted, done);
+    let wait = wait_total.saturating_sub(backoff);
+    let compute = active.saturating_sub(wait_total).saturating_sub(wf);
+    RequestAttribution {
+        id,
+        arrived,
+        admitted,
+        done,
+        queue,
+        compute,
+        transfer_wait: wait,
+        retry_backoff: backoff,
+        waterfall: wf,
+        degraded,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(x: u64) -> Duration {
+        Duration::from_millis(x)
+    }
+
+    #[test]
+    fn overlap_clips_exactly() {
+        let mut iv = Intervals::default();
+        iv.push(ms(10), ms(20));
+        iv.push(ms(30), ms(40));
+        assert_eq!(iv.overlap(ms(0), ms(100)), ms(20));
+        assert_eq!(iv.overlap(ms(15), ms(35)), ms(10));
+        assert_eq!(iv.overlap(ms(20), ms(30)), ms(0));
+        iv.prune(ms(20));
+        assert_eq!(iv.len(), 1);
+    }
+
+    #[test]
+    fn degenerate_intervals_ignored() {
+        let mut iv = Intervals::default();
+        iv.push(ms(5), ms(5));
+        iv.push(ms(7), ms(6));
+        assert!(iv.is_empty());
+    }
+
+    #[test]
+    fn buckets_sum_exactly_to_total() {
+        let mut wait = Intervals::default();
+        let mut backoff = Intervals::default();
+        let mut wf = Intervals::default();
+        // Wait window [10, 30) with a nested backoff [12, 18); a later
+        // transient rescue [40, 45).
+        wait.push(ms(10), ms(30));
+        backoff.push(ms(12), ms(18));
+        wf.push(ms(40), ms(45));
+        let a = attribute(1, ms(2), ms(8), ms(50), true, &wait, &backoff, &wf);
+        assert_eq!(a.queue, ms(6));
+        assert_eq!(a.transfer_wait, ms(14));
+        assert_eq!(a.retry_backoff, ms(6));
+        assert_eq!(a.waterfall, ms(5));
+        assert_eq!(a.compute, ms(17));
+        assert_eq!(a.bucket_sum(), a.total());
+        assert!(a.degraded);
+    }
+
+    #[test]
+    fn partial_overlap_is_charged_pro_rata() {
+        let mut wait = Intervals::default();
+        wait.push(ms(0), ms(100));
+        let empty = Intervals::default();
+        // Active span [40, 60) sits inside the wait window.
+        let a = attribute(2, ms(40), ms(40), ms(60), false, &wait, &empty, &empty);
+        assert_eq!(a.queue, ms(0));
+        assert_eq!(a.transfer_wait, ms(20));
+        assert_eq!(a.compute, ms(0));
+        assert_eq!(a.bucket_sum(), a.total());
+    }
+}

@@ -1,0 +1,115 @@
+//! The event vocabulary: named tracks and fixed-size, heap-free events.
+
+use std::time::Duration;
+
+/// Maximum key/value args an event may carry. Fixed so [`TraceEvent`] is
+/// `Copy` and recording never allocates per event payload.
+pub const MAX_TRACE_ARGS: usize = 4;
+
+/// A named timeline in the exported trace. Tracks map 1:1 to Perfetto
+/// "threads": one per device, host link, peer link, and request, plus
+/// the engine / scheduler / fault singletons.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Track {
+    /// The engine's orchestration loop: decode steps, pin windows,
+    /// routing, stall windows.
+    Engine,
+    /// Admission and release decisions.
+    Scheduler,
+    /// Fault ticks from the `FaultTimeline`.
+    Fault,
+    /// Per-device cache-side events.
+    Device(usize),
+    /// A device's serialized host PCIe link: enqueue → transfer → land,
+    /// retries, timeouts.
+    HostLink(usize),
+    /// A contended peer-fabric link (per-edge on the ring).
+    PeerLink(usize),
+    /// One request's lifetime: admit → prefill → done.
+    Request(u64),
+}
+
+impl Track {
+    /// Stable display name used for the Perfetto `thread_name` metadata
+    /// and the JSONL `track` field.
+    pub fn label(&self) -> String {
+        match self {
+            Track::Engine => "engine".to_string(),
+            Track::Scheduler => "scheduler".to_string(),
+            Track::Fault => "faults".to_string(),
+            Track::Device(d) => format!("device-{d}"),
+            Track::HostLink(d) => format!("host-link-{d}"),
+            Track::PeerLink(l) => format!("peer-link-{l}"),
+            Track::Request(id) => format!("request-{id}"),
+        }
+    }
+}
+
+/// One recorded moment: an instant (`dur == None`) or a complete span.
+/// `Copy` and allocation-free by construction — args are a bounded
+/// inline array of integer key/values with `'static` keys.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    /// Virtual timestamp (from `SimClock::now`) of the event start.
+    pub ts: Duration,
+    /// Span length; `None` marks an instant event.
+    pub dur: Option<Duration>,
+    pub track: Track,
+    pub name: &'static str,
+    /// Number of valid entries in `args`.
+    pub n_args: u8,
+    pub args: [(&'static str, i64); MAX_TRACE_ARGS],
+}
+
+impl TraceEvent {
+    /// Build an event from a caller-side stack slice of args (extra args
+    /// beyond [`MAX_TRACE_ARGS`] are dropped).
+    pub fn new(
+        ts: Duration,
+        dur: Option<Duration>,
+        track: Track,
+        name: &'static str,
+        args: &[(&'static str, i64)],
+    ) -> Self {
+        let mut packed = [("", 0i64); MAX_TRACE_ARGS];
+        let n = args.len().min(MAX_TRACE_ARGS);
+        packed[..n].copy_from_slice(&args[..n]);
+        Self { ts, dur, track, name, n_args: n as u8, args: packed }
+    }
+
+    /// The valid arg entries.
+    pub fn args(&self) -> &[(&'static str, i64)] {
+        &self.args[..self.n_args as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn track_labels_are_stable() {
+        assert_eq!(Track::Engine.label(), "engine");
+        assert_eq!(Track::Scheduler.label(), "scheduler");
+        assert_eq!(Track::Fault.label(), "faults");
+        assert_eq!(Track::Device(2).label(), "device-2");
+        assert_eq!(Track::HostLink(0).label(), "host-link-0");
+        assert_eq!(Track::PeerLink(3).label(), "peer-link-3");
+        assert_eq!(Track::Request(17).label(), "request-17");
+    }
+
+    #[test]
+    fn event_packs_and_truncates_args() {
+        let ev = TraceEvent::new(
+            Duration::from_millis(5),
+            None,
+            Track::Engine,
+            "route",
+            &[("layer", 1), ("unique", 4), ("fetches", 2), ("subs", 1), ("extra", 9)],
+        );
+        assert_eq!(ev.args().len(), MAX_TRACE_ARGS);
+        assert_eq!(ev.args()[0], ("layer", 1));
+        assert_eq!(ev.args()[3], ("subs", 1));
+        assert!(ev.dur.is_none());
+    }
+}

@@ -1,0 +1,163 @@
+//! Trace exporters: Chrome trace-event JSON (Perfetto /
+//! `chrome://tracing`) and compact JSONL.
+//!
+//! Both formats are rendered through `util::json`, so output bytes are
+//! a pure function of the event list — per-seed byte-identity of the
+//! trace file follows from per-seed byte-identity of the ring.
+
+use std::collections::BTreeSet;
+
+use super::event::{TraceEvent, Track};
+use crate::util::json::{num, obj, s, Json};
+
+/// Microseconds (Chrome's native trace unit) from a virtual timestamp,
+/// keeping sub-microsecond precision as a fraction.
+fn micros(d: std::time::Duration) -> f64 {
+    d.as_nanos() as f64 / 1000.0
+}
+
+fn args_json(ev: &TraceEvent) -> Json {
+    obj(ev.args().iter().map(|&(k, v)| (k, num(v as f64))).collect())
+}
+
+/// Render events as a Chrome trace-event JSON document: one `pid` for
+/// the sim, one `tid` (with a `thread_name` metadata record) per
+/// [`Track`], `X` complete events for spans and `i` instants for point
+/// events. Tracks are numbered in sorted `Track` order so the mapping is
+/// stable across runs.
+pub fn chrome_trace(events: &[TraceEvent]) -> String {
+    let tracks: BTreeSet<Track> = events.iter().map(|e| e.track).collect();
+    let tid_of = |t: Track| -> i64 {
+        tracks.iter().position(|&x| x == t).map(|i| i as i64 + 1).unwrap_or(0)
+    };
+
+    let mut out: Vec<Json> = Vec::with_capacity(events.len() + tracks.len() + 1);
+    out.push(obj(vec![
+        ("ph", s("M")),
+        ("pid", num(0.0)),
+        ("tid", num(0.0)),
+        ("name", s("process_name")),
+        ("args", obj(vec![("name", s("buddymoe-sim"))])),
+    ]));
+    for &track in &tracks {
+        out.push(obj(vec![
+            ("ph", s("M")),
+            ("pid", num(0.0)),
+            ("tid", num(tid_of(track) as f64)),
+            ("name", s("thread_name")),
+            ("args", obj(vec![("name", s(&track.label()))])),
+        ]));
+    }
+    for ev in events {
+        let mut fields = vec![
+            ("pid", num(0.0)),
+            ("tid", num(tid_of(ev.track) as f64)),
+            ("ts", num(micros(ev.ts))),
+            ("name", s(ev.name)),
+            ("args", args_json(ev)),
+        ];
+        match ev.dur {
+            Some(d) => {
+                fields.push(("ph", s("X")));
+                fields.push(("dur", num(micros(d))));
+            }
+            None => {
+                fields.push(("ph", s("i")));
+                fields.push(("s", s("t")));
+            }
+        }
+        out.push(obj(fields));
+    }
+
+    obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", s("ms")),
+    ])
+    .to_string()
+        + "\n"
+}
+
+/// Render events as compact JSONL: one object per line, integer
+/// nanosecond timestamps, args nested under `"args"`.
+pub fn jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for ev in events {
+        let mut fields = vec![
+            ("ts_ns", num(ev.ts.as_nanos() as f64)),
+            ("track", s(&ev.track.label())),
+            ("name", s(ev.name)),
+        ];
+        if let Some(d) = ev.dur {
+            fields.push(("dur_ns", num(d.as_nanos() as f64)));
+        }
+        if ev.n_args > 0 {
+            fields.push(("args", args_json(ev)));
+        }
+        out.push_str(&obj(fields).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn sample() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent::new(
+                Duration::from_millis(1),
+                Some(Duration::from_millis(2)),
+                Track::Engine,
+                "decode_step",
+                &[("batch", 4)],
+            ),
+            TraceEvent::new(
+                Duration::from_micros(1500),
+                None,
+                Track::HostLink(0),
+                "enqueue",
+                &[("layer", 2), ("expert", 7)],
+            ),
+        ]
+    }
+
+    #[test]
+    fn chrome_trace_has_metadata_and_both_phases() {
+        let text = chrome_trace(&sample());
+        let j = Json::parse(&text).unwrap();
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // process_name + 2 thread_names + 2 events.
+        assert_eq!(events.len(), 5);
+        assert!(text.contains("\"thread_name\""));
+        assert!(text.contains("\"engine\""));
+        assert!(text.contains("\"host-link-0\""));
+        assert!(text.contains("\"ph\":\"X\""));
+        assert!(text.contains("\"ph\":\"i\""));
+        // Chrome ts unit is microseconds: 1 ms span starts at ts 1000.
+        assert!(text.contains("\"ts\":1000"));
+        assert!(text.contains("\"dur\":2000"));
+    }
+
+    #[test]
+    fn jsonl_is_one_parseable_object_per_line() {
+        let text = jsonl(&sample());
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in &lines {
+            let j = Json::parse(line).unwrap();
+            assert!(j.get("ts_ns").is_ok());
+            assert!(j.get("track").is_ok());
+        }
+        assert!(lines[0].contains("\"dur_ns\":2000000"));
+        assert!(lines[1].contains("\"expert\":7"));
+    }
+
+    #[test]
+    fn export_is_deterministic() {
+        let evs = sample();
+        assert_eq!(chrome_trace(&evs), chrome_trace(&evs));
+        assert_eq!(jsonl(&evs), jsonl(&evs));
+    }
+}

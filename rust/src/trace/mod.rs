@@ -1,0 +1,123 @@
+//! Deterministic tracing and stall attribution for the serving stack.
+//!
+//! Every interesting moment in the discrete-event sim — decode steps and
+//! pin windows, per-layer routing, transfer lifecycles on host and peer
+//! links, ψ substitutions and each degradation-waterfall arm, fault
+//! ticks, scheduler admission/release — can be recorded as a
+//! [`TraceEvent`] stamped *only* from the serving stack's
+//! [`crate::util::clock::SimClock`]. Events land in a bounded global
+//! ring plus a bounded per-request flight-recorder ring, and export as
+//! Chrome trace-event JSON (loadable in Perfetto or `chrome://tracing`,
+//! one named track per device/link/request) or compact JSONL.
+//!
+//! # Sink contract (who may emit, and when it costs nothing)
+//!
+//! - The sink is selected by [`TraceSink`] (`ServingConfig::trace`).
+//!   With [`TraceSink::Off`] the shared [`Tracer`] handle holds no
+//!   recorder at all: every record method is `#[inline]` and returns
+//!   after one `Option` check — no allocation, no lock, no formatting.
+//!   All golden sweeps are byte-identical with tracing off because the
+//!   instrumentation is unobservable.
+//! - Spans may be emitted only from single-threaded orchestration code:
+//!   the engine's step loop, `TransferHandle` methods under the engine
+//!   state lock, and the scheduler. Kernel worker threads
+//!   (`util::par`) must never touch the tracer — that is what makes an
+//!   enabled trace byte-identical across `PALLAS_THREADS` settings by
+//!   construction.
+//! - Timestamps come only from `SimClock`. No wall clock, ever. Under
+//!   `ClockMode::Virtual` the same seed therefore replays the same
+//!   trace file byte for byte (golden-tested in `tests/trace.rs`).
+//!
+//! # Stall attribution
+//!
+//! On top of the raw spans, [`Recorder::finish_request`] decomposes
+//! each finished request's end-to-end latency into
+//! queue / compute / transfer-wait / retry-backoff / waterfall-arm
+//! buckets ([`RequestAttribution`]). All arithmetic is integer
+//! [`std::time::Duration`] — the buckets sum *exactly* (bit for bit) to
+//! the measured total, no float drift, property-tested including
+//! degraded and faulted requests. The load and fault sweeps surface the
+//! p99 request's breakdown per cell in `BENCH_load.json` /
+//! `BENCH_faults.json`.
+//!
+//! # Reading a trace in Perfetto
+//!
+//! 1. Run a traced cell, e.g.
+//!    `cargo run --release --example sweep_load -- --fast` — it writes
+//!    `TRACE_load.json` next to `Cargo.toml` (CI uploads it as an
+//!    artifact). A small checked-in example lives at
+//!    `rust/tests/data/example_trace_perfetto.json`.
+//! 2. Open <https://ui.perfetto.dev> (or `chrome://tracing`) and drag
+//!    the JSON file in.
+//! 3. Tracks: `engine` carries `decode_step` / `pin_window` /
+//!    `transfer_wait` spans and per-layer `route` instants;
+//!    `host-link-N` carries each device's host-PCIe lifecycle
+//!    (`enqueue` → `transfer` → `land`, plus `retry_backoff` /
+//!    `timeout`); `peer-link-N` carries `peer_xfer` hops; `faults`
+//!    carries fault ticks; `request-N` brackets each request from
+//!    `admit` to `done` with its `queued` span and prefill.
+//! 4. The `dur` of a `transfer_wait` span on `engine` is exactly the
+//!    time `run_moe` blocked on demand fetches — the same interval the
+//!    attribution pass charges to overlapping requests.
+
+pub mod attribution;
+pub mod event;
+pub mod export;
+pub mod recorder;
+pub mod ring;
+
+pub use attribution::RequestAttribution;
+pub use event::{TraceEvent, Track, MAX_TRACE_ARGS};
+pub use export::{chrome_trace, jsonl};
+pub use recorder::{Recorder, StallKind, Tracer};
+pub use ring::Ring;
+
+/// Where trace events go. The `Off` arm is the zero-cost no-op sink;
+/// `Ring` records into the bounded in-memory rings this module owns.
+/// (Streaming sinks can slot in here later without touching call sites.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TraceSink {
+    /// No recorder is allocated; every record call is a single branch.
+    #[default]
+    Off,
+    /// Bounded in-memory global + per-request rings, exportable as
+    /// Chrome trace JSON or JSONL.
+    Ring,
+}
+
+impl TraceSink {
+    pub fn is_on(&self) -> bool {
+        matches!(self, TraceSink::Ring)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceSink::Off => "off",
+            TraceSink::Ring => "ring",
+        }
+    }
+
+    /// Parse a config string (`off` / `ring`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "off" => Some(TraceSink::Off),
+            "ring" => Some(TraceSink::Ring),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sink_parse_roundtrip() {
+        for sink in [TraceSink::Off, TraceSink::Ring] {
+            assert_eq!(TraceSink::parse(sink.name()), Some(sink));
+        }
+        assert_eq!(TraceSink::parse("tcp"), None);
+        assert!(!TraceSink::default().is_on());
+        assert!(TraceSink::Ring.is_on());
+    }
+}

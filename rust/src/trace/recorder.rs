@@ -1,0 +1,401 @@
+//! The shared [`Tracer`] handle and the [`Recorder`] behind it.
+//!
+//! `Tracer` is the only type instrumentation sites see. Cloning is an
+//! `Arc` bump; the disabled handle ([`Tracer::off`]) holds no recorder,
+//! so every record method is one branch and returns — no lock, no
+//! allocation, no formatting. Callers therefore pass args as stack
+//! slices (`&[("layer", l as i64)]`) and never pre-format strings.
+//!
+//! Determinism: all timestamps are supplied by callers from `SimClock`,
+//! and all callers are single-threaded orchestration code (engine loop,
+//! transfer handle under its state lock, scheduler), so ring order is
+//! the deterministic discrete-event order regardless of kernel thread
+//! count.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::attribution::{attribute, Intervals, RequestAttribution};
+use super::event::{TraceEvent, Track};
+use super::ring::Ring;
+
+/// Categories of globally-recorded stall intervals consumed by the
+/// attribution pass (see [`super::attribution`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StallKind {
+    /// `run_moe` blocked on demand fetches.
+    TransferWait,
+    /// Backoff between transfer re-issues (nested inside a
+    /// `TransferWait` window).
+    RetryBackoff,
+    /// Transient stream-through rescue (degradation waterfall arm).
+    Waterfall,
+}
+
+impl StallKind {
+    fn span_name(&self) -> &'static str {
+        match self {
+            StallKind::TransferWait => "transfer_wait",
+            StallKind::RetryBackoff => "retry_backoff",
+            StallKind::Waterfall => "transient_fetch",
+        }
+    }
+}
+
+/// Per-request flight recorder: the request's own bounded ring plus the
+/// bracketing timestamps the attribution pass needs.
+#[derive(Debug, Clone)]
+struct Flight {
+    ring: Ring<TraceEvent>,
+    arrived: Duration,
+    admitted: Duration,
+}
+
+/// How many finished flight-recorder rings to retain for post-mortems.
+const FINISHED_FLIGHTS_KEPT: usize = 64;
+
+/// Default per-request flight-recorder capacity (events).
+pub const PER_REQUEST_RING: usize = 512;
+
+/// The in-memory sink: a bounded global ring, per-request flight
+/// recorders, the global stall-interval categories, and finished-request
+/// attributions.
+#[derive(Debug)]
+pub struct Recorder {
+    global: Ring<TraceEvent>,
+    per_request_cap: usize,
+    active: BTreeMap<u64, Flight>,
+    finished_flights: VecDeque<(u64, Ring<TraceEvent>)>,
+    finished: Vec<RequestAttribution>,
+    transfer_wait: Intervals,
+    retry_backoff: Intervals,
+    waterfall: Intervals,
+}
+
+impl Recorder {
+    pub fn new(global_cap: usize, per_request_cap: usize) -> Self {
+        Self {
+            global: Ring::new(global_cap),
+            per_request_cap: per_request_cap.max(1),
+            active: BTreeMap::new(),
+            finished_flights: VecDeque::new(),
+            finished: Vec::new(),
+            transfer_wait: Intervals::default(),
+            retry_backoff: Intervals::default(),
+            waterfall: Intervals::default(),
+        }
+    }
+
+    /// Append to the global ring and mirror into every active request's
+    /// flight recorder (each bounded on its own).
+    fn record(&mut self, ev: TraceEvent) {
+        for flight in self.active.values_mut() {
+            flight.ring.push(ev);
+        }
+        self.global.push(ev);
+    }
+
+    fn stall(&mut self, kind: StallKind, start: Duration, end: Duration) {
+        match kind {
+            StallKind::TransferWait => self.transfer_wait.push(start, end),
+            StallKind::RetryBackoff => self.retry_backoff.push(start, end),
+            StallKind::Waterfall => self.waterfall.push(start, end),
+        }
+    }
+
+    fn begin_request(&mut self, id: u64, arrived: Duration, admitted: Duration) {
+        self.active.insert(
+            id,
+            Flight { ring: Ring::new(self.per_request_cap), arrived, admitted },
+        );
+    }
+
+    fn finish_request(
+        &mut self,
+        id: u64,
+        done: Duration,
+        degraded: bool,
+    ) -> Option<RequestAttribution> {
+        let flight = self.active.remove(&id)?;
+        let attr = attribute(
+            id,
+            flight.arrived,
+            flight.admitted,
+            done,
+            degraded,
+            &self.transfer_wait,
+            &self.retry_backoff,
+            &self.waterfall,
+        );
+        self.finished.push(attr);
+        self.finished_flights.push_back((id, flight.ring));
+        if self.finished_flights.len() > FINISHED_FLIGHTS_KEPT {
+            self.finished_flights.pop_front();
+        }
+        // Intervals older than every still-active request can never be
+        // charged again — drop them so long runs stay bounded.
+        let horizon = self.active.values().map(|f| f.admitted).min().unwrap_or(done);
+        self.transfer_wait.prune(horizon);
+        self.retry_backoff.prune(horizon);
+        self.waterfall.prune(horizon);
+        Some(attr)
+    }
+
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.global.iter().copied().collect()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.global.dropped()
+    }
+
+    pub fn attributions(&self) -> &[RequestAttribution] {
+        &self.finished
+    }
+
+    /// Flight-recorder contents for `id`: active requests first, then
+    /// the bounded retained set of finished ones.
+    pub fn request_events(&self, id: u64) -> Option<Vec<TraceEvent>> {
+        if let Some(f) = self.active.get(&id) {
+            return Some(f.ring.iter().copied().collect());
+        }
+        self.finished_flights
+            .iter()
+            .find(|(fid, _)| *fid == id)
+            .map(|(_, ring)| ring.iter().copied().collect())
+    }
+}
+
+/// The cheap, cloneable handle threaded through the serving stack.
+#[derive(Debug, Clone, Default)]
+pub struct Tracer {
+    inner: Option<Arc<Mutex<Recorder>>>,
+}
+
+impl Tracer {
+    /// The no-op sink: no recorder exists, record calls are one branch.
+    pub fn off() -> Self {
+        Self { inner: None }
+    }
+
+    /// An enabled tracer backed by bounded in-memory rings.
+    pub fn ring(global_cap: usize) -> Self {
+        Self {
+            inner: Some(Arc::new(Mutex::new(Recorder::new(global_cap, PER_REQUEST_RING)))),
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    fn with<R>(&self, f: impl FnOnce(&mut Recorder) -> R) -> Option<R> {
+        let inner = self.inner.as_ref()?;
+        let mut rec = inner.lock().unwrap_or_else(|e| e.into_inner());
+        Some(f(&mut rec))
+    }
+
+    /// Record an instant event. `args` is a caller stack slice — nothing
+    /// is evaluated or allocated when the tracer is off.
+    #[inline]
+    pub fn instant(
+        &self,
+        ts: Duration,
+        track: Track,
+        name: &'static str,
+        args: &[(&'static str, i64)],
+    ) {
+        if self.inner.is_none() {
+            return;
+        }
+        self.with(|r| r.record(TraceEvent::new(ts, None, track, name, args)));
+    }
+
+    /// Record a complete span `[t0, t1]` (emitted once both ends are
+    /// known, which keeps ring order deterministic).
+    #[inline]
+    pub fn span(
+        &self,
+        t0: Duration,
+        t1: Duration,
+        track: Track,
+        name: &'static str,
+        args: &[(&'static str, i64)],
+    ) {
+        if self.inner.is_none() {
+            return;
+        }
+        self.with(|r| {
+            r.record(TraceEvent::new(t0, Some(t1.saturating_sub(t0)), track, name, args))
+        });
+    }
+
+    /// Record a categorized stall interval *and* its span event (named
+    /// by the category, on `track`).
+    #[inline]
+    pub fn stall(
+        &self,
+        kind: StallKind,
+        t0: Duration,
+        t1: Duration,
+        track: Track,
+        args: &[(&'static str, i64)],
+    ) {
+        if self.inner.is_none() {
+            return;
+        }
+        self.with(|r| {
+            r.stall(kind, t0, t1);
+            r.record(TraceEvent::new(
+                t0,
+                Some(t1.saturating_sub(t0)),
+                track,
+                kind.span_name(),
+                args,
+            ));
+        });
+    }
+
+    /// Open a request's flight recorder and emit its `admit` instant and
+    /// `queued` span.
+    #[inline]
+    pub fn begin_request(&self, id: u64, arrived: Duration, admitted: Duration) {
+        if self.inner.is_none() {
+            return;
+        }
+        self.with(|r| {
+            r.begin_request(id, arrived, admitted);
+            r.record(TraceEvent::new(
+                arrived,
+                Some(admitted.saturating_sub(arrived)),
+                Track::Request(id),
+                "queued",
+                &[],
+            ));
+            r.record(TraceEvent::new(
+                admitted,
+                None,
+                Track::Scheduler,
+                "admit",
+                &[("id", id as i64)],
+            ));
+        });
+    }
+
+    /// Close a request: run the attribution pass, emit the `done`
+    /// instant, retire its flight recorder.
+    #[inline]
+    pub fn finish_request(
+        &self,
+        id: u64,
+        done: Duration,
+        degraded: bool,
+    ) -> Option<RequestAttribution> {
+        if self.inner.is_none() {
+            return None;
+        }
+        self.with(|r| {
+            r.record(TraceEvent::new(
+                done,
+                None,
+                Track::Request(id),
+                "done",
+                &[("degraded", degraded as i64)],
+            ));
+            r.finish_request(id, done, degraded)
+        })
+        .flatten()
+    }
+
+    /// Snapshot of all finished-request attributions, in completion order.
+    pub fn attributions(&self) -> Vec<RequestAttribution> {
+        self.with(|r| r.attributions().to_vec()).unwrap_or_default()
+    }
+
+    /// Snapshot of the global ring.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.with(|r| r.events()).unwrap_or_default()
+    }
+
+    /// Events evicted from the global ring (trace is a suffix if > 0).
+    pub fn dropped(&self) -> u64 {
+        self.with(|r| r.dropped()).unwrap_or(0)
+    }
+
+    /// One request's flight-recorder contents, if still retained.
+    pub fn request_events(&self, id: u64) -> Option<Vec<TraceEvent>> {
+        self.with(|r| r.request_events(id)).flatten()
+    }
+
+    /// Export the global ring as Chrome trace-event JSON (Perfetto).
+    pub fn export_chrome(&self) -> String {
+        super::export::chrome_trace(&self.events())
+    }
+
+    /// Export the global ring as compact JSONL.
+    pub fn export_jsonl(&self) -> String {
+        super::export::jsonl(&self.events())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(x: u64) -> Duration {
+        Duration::from_millis(x)
+    }
+
+    #[test]
+    fn off_tracer_records_nothing() {
+        let t = Tracer::off();
+        assert!(!t.enabled());
+        t.instant(ms(1), Track::Engine, "route", &[("layer", 0)]);
+        t.span(ms(1), ms(2), Track::Engine, "decode_step", &[]);
+        t.stall(StallKind::TransferWait, ms(1), ms(2), Track::Engine, &[]);
+        t.begin_request(1, ms(0), ms(1));
+        assert!(t.finish_request(1, ms(3), false).is_none());
+        assert!(t.events().is_empty());
+        assert!(t.attributions().is_empty());
+    }
+
+    #[test]
+    fn flight_recorder_mirrors_while_active() {
+        let t = Tracer::ring(128);
+        t.begin_request(7, ms(0), ms(1));
+        t.instant(ms(2), Track::Engine, "route", &[("layer", 0)]);
+        t.stall(StallKind::TransferWait, ms(2), ms(5), Track::Engine, &[]);
+        let attr = t.finish_request(7, ms(6), false).unwrap();
+        assert_eq!(attr.queue, ms(1));
+        assert_eq!(attr.transfer_wait, ms(3));
+        assert_eq!(attr.compute, ms(2));
+        assert_eq!(attr.bucket_sum(), attr.total());
+        // The flight recorder kept the events seen while active.
+        let evs = t.request_events(7).unwrap();
+        assert!(evs.iter().any(|e| e.name == "route"));
+        assert!(evs.iter().any(|e| e.name == "transfer_wait"));
+        // Events after the request finished do not retro-append.
+        t.instant(ms(9), Track::Engine, "route", &[]);
+        assert_eq!(t.request_events(7).unwrap().len(), evs.len());
+    }
+
+    #[test]
+    fn attribution_is_per_request_overlap() {
+        let t = Tracer::ring(128);
+        t.begin_request(1, ms(0), ms(0));
+        t.begin_request(2, ms(0), ms(10));
+        // A stall both requests ride out, and one only request 2 sees.
+        t.stall(StallKind::TransferWait, ms(12), ms(20), Track::Engine, &[]);
+        let a1 = t.finish_request(1, ms(16), false).unwrap();
+        t.stall(StallKind::Waterfall, ms(20), ms(24), Track::Engine, &[]);
+        let a2 = t.finish_request(2, ms(30), true).unwrap();
+        assert_eq!(a1.transfer_wait, ms(4)); // clipped at done=16
+        assert_eq!(a2.transfer_wait, ms(8));
+        assert_eq!(a2.waterfall, ms(4));
+        assert_eq!(a1.bucket_sum(), a1.total());
+        assert_eq!(a2.bucket_sum(), a2.total());
+        assert_eq!(t.attributions().len(), 2);
+    }
+}

@@ -24,6 +24,7 @@ use crate::profilecollect::ProfileCollector;
 use crate::server::Server;
 use crate::stats::Summary;
 use crate::topology::{PlacementKind, TopologyKind};
+use crate::trace::{RequestAttribution, TraceSink};
 use crate::util::clock::ClockMode;
 use crate::util::json::{num, obj, s, Json};
 use crate::weights::WeightStore;
@@ -44,6 +45,11 @@ pub struct LoadSettings {
     pub cache_rate: f64,
     pub domain: Domain,
     pub seed: u64,
+    /// Record a trace per cell (`ServingConfig::trace = Ring`): every
+    /// cell then carries the p99 request's stall attribution. Off by
+    /// default — disabled sweeps stay byte-identical to the pre-trace
+    /// goldens.
+    pub trace: bool,
 }
 
 impl Default for LoadSettings {
@@ -54,6 +60,7 @@ impl Default for LoadSettings {
             cache_rate: 0.5,
             domain: Domain::Mixed,
             seed: 42,
+            trace: false,
         }
     }
 }
@@ -145,6 +152,10 @@ pub struct LoadCell {
     pub e2e: Summary,
     pub queue_delay: Summary,
     pub queue_depth: Summary,
+    /// Stall attribution of the cell's p99 request (by end-to-end
+    /// latency; deterministic tie-break on request id). `None` when the
+    /// cell ran untraced.
+    pub p99_attr: Option<RequestAttribution>,
 }
 
 /// Post-run engine state probed for the sweep reports: placement identity
@@ -261,6 +272,28 @@ pub struct FaultProbe {
     pub emergency_promotions: u64,
 }
 
+/// Exported trace of one traced cell: the Perfetto-loadable Chrome
+/// trace-event document, the compact JSONL form, and every finished
+/// request's stall attribution (completion order).
+#[derive(Debug, Clone)]
+pub struct TraceOutput {
+    pub chrome_json: String,
+    pub jsonl: String,
+    pub attributions: Vec<RequestAttribution>,
+}
+
+/// Deterministic p99 pick over finished-request attributions: sort by
+/// (end-to-end latency, id) and take the `ceil(0.99 n)`-th request.
+fn p99_attribution(mut attrs: Vec<RequestAttribution>) -> Option<RequestAttribution> {
+    if attrs.is_empty() {
+        return None;
+    }
+    attrs.sort_by(|a, b| a.total().cmp(&b.total()).then(a.id.cmp(&b.id)));
+    let n = attrs.len();
+    let idx = ((n as f64 * 0.99).ceil() as usize).clamp(1, n) - 1;
+    Some(attrs[idx])
+}
+
 /// [`run_load_cell_probed`] plus the post-run [`FaultProbe`] (zeros on a
 /// fault-free cell).
 #[allow(clippy::too_many_arguments)]
@@ -272,8 +305,85 @@ pub fn run_fault_cell(
     scfg: ServingConfig,
     policy_label: &str,
     offered_rps: f64,
-    mut process: Box<dyn ArrivalProcess>,
+    process: Box<dyn ArrivalProcess>,
 ) -> Result<(LoadCell, CellProbe, FaultProbe)> {
+    let (cell, probe, fault, _) = run_cell_inner(
+        cfg,
+        store,
+        collector,
+        warm_rank,
+        scfg,
+        policy_label,
+        offered_rps,
+        process,
+    )?;
+    Ok((cell, probe, fault))
+}
+
+/// [`run_fault_cell`] with tracing forced on: returns the exported
+/// [`TraceOutput`] alongside the measurements.
+#[allow(clippy::too_many_arguments)]
+pub fn run_fault_cell_traced(
+    cfg: &ModelConfig,
+    store: Arc<WeightStore>,
+    collector: &ProfileCollector,
+    warm_rank: &[Vec<usize>],
+    mut scfg: ServingConfig,
+    policy_label: &str,
+    offered_rps: f64,
+    process: Box<dyn ArrivalProcess>,
+) -> Result<(LoadCell, CellProbe, FaultProbe, TraceOutput)> {
+    scfg.trace = TraceSink::Ring;
+    let (cell, probe, fault, trace) = run_cell_inner(
+        cfg,
+        store,
+        collector,
+        warm_rank,
+        scfg,
+        policy_label,
+        offered_rps,
+        process,
+    )?;
+    let trace = trace.expect("tracing was forced on; the engine must export a trace");
+    Ok((cell, probe, fault, trace))
+}
+
+/// [`run_load_cell`] with tracing forced on.
+#[allow(clippy::too_many_arguments)]
+pub fn run_load_cell_traced(
+    cfg: &ModelConfig,
+    store: Arc<WeightStore>,
+    collector: &ProfileCollector,
+    warm_rank: &[Vec<usize>],
+    scfg: ServingConfig,
+    policy_label: &str,
+    offered_rps: f64,
+    process: Box<dyn ArrivalProcess>,
+) -> Result<(LoadCell, TraceOutput)> {
+    let (cell, _probe, _fault, trace) = run_fault_cell_traced(
+        cfg,
+        store,
+        collector,
+        warm_rank,
+        scfg,
+        policy_label,
+        offered_rps,
+        process,
+    )?;
+    Ok((cell, trace))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_cell_inner(
+    cfg: &ModelConfig,
+    store: Arc<WeightStore>,
+    collector: &ProfileCollector,
+    warm_rank: &[Vec<usize>],
+    scfg: ServingConfig,
+    policy_label: &str,
+    offered_rps: f64,
+    mut process: Box<dyn ArrivalProcess>,
+) -> Result<(LoadCell, CellProbe, FaultProbe, Option<TraceOutput>)> {
     let opts = EngineOptions { clock: ClockMode::Virtual, ..Default::default() };
     let engine = engine_with_config(cfg, store, collector, warm_rank, scfg, opts)?;
     let mut server = Server::new(engine);
@@ -294,6 +404,24 @@ pub fn run_fault_cell(
     server.run()?;
     let wall_s = clock.since(t0);
 
+    // Trace export (before shutdown: the tracer lives in engine state).
+    let (p99_attr, trace) = {
+        let tracer = server.engine.tracer();
+        if tracer.enabled() {
+            let attributions = tracer.attributions();
+            (
+                p99_attribution(attributions.clone()),
+                Some(TraceOutput {
+                    chrome_json: tracer.export_chrome(),
+                    jsonl: tracer.export_jsonl(),
+                    attributions,
+                }),
+            )
+        } else {
+            (None, None)
+        }
+    };
+
     let m = &server.metrics;
     let cell = LoadCell {
         process: process_name,
@@ -308,6 +436,7 @@ pub fn run_fault_cell(
         e2e: m.request_latency.clone(),
         queue_delay: m.queue_delay.clone(),
         queue_depth: m.queue_depth.clone(),
+        p99_attr,
     };
     let placement = server.engine.placement();
     let probe = CellProbe {
@@ -350,7 +479,7 @@ pub fn run_fault_cell(
         emergency_promotions: ec.get("emergency_promotions"),
     };
     server.engine.shutdown();
-    Ok((cell, probe, fault))
+    Ok((cell, probe, fault, trace))
 }
 
 /// The full grid: every (process kind × offered load × policy preset).
@@ -377,6 +506,9 @@ pub fn run_sweep(
                 let mut scfg = ServingConfig::default().preset(preset)?;
                 scfg.cache_rate = spec.settings.cache_rate;
                 scfg.seed = spec.settings.seed;
+                if spec.settings.trace {
+                    scfg.trace = TraceSink::Ring;
+                }
                 let process = kind.build(cfg, &spec.settings, rps);
                 cells.push(run_load_cell(
                     cfg,
@@ -439,7 +571,7 @@ pub fn cells_json(cells: &[LoadCell]) -> Json {
         cells
             .iter()
             .map(|c| {
-                obj(vec![
+                let mut fields = vec![
                     ("process", s(&c.process)),
                     ("policy", s(&c.policy)),
                     ("offered_rps", num(c.offered_rps)),
@@ -452,7 +584,11 @@ pub fn cells_json(cells: &[LoadCell]) -> Json {
                     ("e2e_s", summary_json(&c.e2e)),
                     ("queue_delay_s", summary_json(&c.queue_delay)),
                     ("queue_depth", summary_json(&c.queue_depth)),
-                ])
+                ];
+                if let Some(a) = &c.p99_attr {
+                    fields.push(("p99_attr", a.to_json()));
+                }
+                obj(fields)
             })
             .collect(),
     )
@@ -540,6 +676,9 @@ pub fn run_topology_sweep(
                         if rf > 1 {
                             scfg.replication_factor = rf;
                             scfg.placement = PlacementKind::Popularity;
+                        }
+                        if spec.settings.trace {
+                            scfg.trace = TraceSink::Ring;
                         }
                         let process = kind.build(cfg, &spec.settings, spec.load_rps);
                         let (cell, probe) = run_load_cell_probed(
@@ -702,6 +841,9 @@ pub fn run_fault_sweep(
                     scfg.replication_factor = rf;
                     scfg.placement = PlacementKind::Popularity;
                 }
+                if spec.settings.trace {
+                    scfg.trace = TraceSink::Ring;
+                }
                 let process = spec.process.build(cfg, &spec.settings, spec.load_rps);
                 let (cell, probe, fault) = run_fault_cell(
                     cfg,
@@ -766,7 +908,7 @@ pub fn fault_cells_json(rows: &[FaultCell]) -> Json {
         rows.iter()
             .map(|r| {
                 let f = &r.fault;
-                obj(vec![
+                let mut fields = vec![
                     ("scenario", s(&r.scenario)),
                     ("replication_factor", num(r.replication_factor as f64)),
                     ("policy", s(&r.cell.policy)),
@@ -794,7 +936,11 @@ pub fn fault_cells_json(rows: &[FaultCell]) -> Json {
                     ("ttft_s", summary_json(&r.cell.ttft)),
                     ("tbt_s", summary_json(&r.cell.tbt)),
                     ("e2e_s", summary_json(&r.cell.e2e)),
-                ])
+                ];
+                if let Some(a) = &r.cell.p99_attr {
+                    fields.push(("p99_attr", a.to_json()));
+                }
+                obj(fields)
             })
             .collect(),
     )

@@ -40,7 +40,8 @@ pub use arrivals::{
 pub use events::EventQueue;
 pub use load::{
     cells_json, fault_cells_json, fault_report_markdown, report_markdown, run_fault_cell,
-    run_fault_sweep, run_load_cell, run_load_cell_probed, run_sweep, run_topology_sweep,
-    topology_cells_json, topology_report_markdown, CellProbe, FaultCell, FaultProbe, FaultSweep,
-    LoadCell, LoadSettings, ProcessKind, SweepSpec, TopologyCell, TopologySweep,
+    run_fault_cell_traced, run_fault_sweep, run_load_cell, run_load_cell_probed,
+    run_load_cell_traced, run_sweep, run_topology_sweep, topology_cells_json,
+    topology_report_markdown, CellProbe, FaultCell, FaultProbe, FaultSweep, LoadCell,
+    LoadSettings, ProcessKind, SweepSpec, TopologyCell, TopologySweep, TraceOutput,
 };

@@ -1,14 +1,45 @@
 //! Minimal `log` facade backend: timestamped stderr logger with an
 //! environment-controlled level (`BUDDYMOE_LOG=debug|info|warn|error`).
+//!
+//! When a serving [`SimClock`] has been installed via [`set_clock`], log
+//! lines are stamped with *virtual* serving time (the same timeline every
+//! trace span uses), so a log line can be lined up against the Perfetto
+//! trace. Without an installed clock, lines fall back to process elapsed
+//! time as before.
 
-use std::sync::Once;
+use std::sync::{Mutex, Once};
 use std::time::Instant;
 
 use log::{Level, LevelFilter, Metadata, Record};
 use once_cell::sync::Lazy;
 
+use super::clock::SimClock;
+
 static START: Lazy<Instant> = Lazy::new(Instant::now);
 static INIT: Once = Once::new();
+static CLOCK: Mutex<Option<SimClock>> = Mutex::new(None);
+
+/// Install the serving clock as the logger's time source (latest wins).
+/// Log lines then carry the clock's timestamp — virtual seconds in
+/// simulation runs — instead of process elapsed time.
+pub fn set_clock(clock: &SimClock) {
+    let mut slot = CLOCK.lock().unwrap_or_else(|p| p.into_inner());
+    *slot = Some(clock.clone());
+}
+
+/// The logger's current timestamp, in seconds: the installed serving
+/// clock when present, process elapsed time otherwise.
+fn timestamp_s() -> f64 {
+    let slot = CLOCK.lock().unwrap_or_else(|p| p.into_inner());
+    stamp(&slot)
+}
+
+fn stamp(slot: &Option<SimClock>) -> f64 {
+    match slot {
+        Some(clock) => clock.now_s(),
+        None => START.elapsed().as_secs_f64(),
+    }
+}
 
 struct StderrLogger {
     level: Level,
@@ -21,7 +52,7 @@ impl log::Log for StderrLogger {
 
     fn log(&self, record: &Record) {
         if self.enabled(record.metadata()) {
-            let t = START.elapsed().as_secs_f64();
+            let t = timestamp_s();
             eprintln!(
                 "[{t:9.3}s {:5} {}] {}",
                 record.level(),
@@ -51,10 +82,29 @@ pub fn init() {
 
 #[cfg(test)]
 mod tests {
+    use super::super::clock::SimClock;
+    use std::time::Duration;
+
     #[test]
     fn init_is_idempotent() {
         super::init();
         super::init();
         log::info!("logging smoke");
+    }
+
+    #[test]
+    fn installed_clock_drives_timestamps() {
+        // Stamp logic is tested on a local slot: the global CLOCK is
+        // latest-wins and other tests (any Engine construction) install
+        // their own clocks concurrently.
+        let clock = SimClock::virtual_clock();
+        clock.advance(Duration::from_secs(42));
+        assert_eq!(super::stamp(&Some(clock.clone())), 42.0);
+        clock.advance(Duration::from_secs(1));
+        assert_eq!(super::stamp(&Some(clock.clone())), 43.0);
+        assert!(super::stamp(&None) >= 0.0);
+        // And installing via the public API must not panic.
+        super::set_clock(&clock);
+        let _ = super::timestamp_s();
     }
 }

@@ -1,0 +1,263 @@
+//! Tracing & stall-attribution integration tests: the observability
+//! invariants from ROADMAP.md.
+//!
+//! * Off is free *and* invisible: running a cell with the trace sink off
+//!   produces byte-identical reports to the pre-trace goldens (covered by
+//!   the existing golden tests staying green), and running the *same*
+//!   cell traced changes none of the measured metrics.
+//! * On is deterministic: the exported trace (Chrome JSON and JSONL) is
+//!   byte-identical per seed across kernel thread counts — instrumentation
+//!   lives only in single-threaded orchestration code.
+//! * Attribution is exact: for every finished request, the stall buckets
+//!   sum bit-for-bit to the measured end-to-end latency, including
+//!   degraded and faulted requests.
+//! * The Chrome export is schema-valid: parseable JSON with the expected
+//!   process/track metadata and span names, so Perfetto loads it.
+
+use std::sync::{Arc, Mutex};
+
+use buddymoe::config::{ModelConfig, ServingConfig};
+use buddymoe::eval::{profile_model, warm_rank_from_profile, Domain};
+use buddymoe::fault::FaultPlan;
+use buddymoe::topology::TopologyKind;
+use buddymoe::traffic::{
+    report_markdown, run_fault_cell_traced, run_load_cell, run_load_cell_traced, LoadSettings,
+    ProcessKind, TraceOutput,
+};
+use buddymoe::trace::RequestAttribution;
+use buddymoe::util::json::Json;
+use buddymoe::util::par;
+use buddymoe::weights::WeightStore;
+
+/// `par::set_threads` is a process-global override and the test harness
+/// runs tests concurrently; serialize the test that drives it.
+static PAR_LOCK: Mutex<()> = Mutex::new(());
+
+fn setup() -> (ModelConfig, Arc<WeightStore>) {
+    let cfg = ModelConfig::synthetic_small();
+    let store = Arc::new(WeightStore::synthetic_families(&cfg, 2024));
+    (cfg, store)
+}
+
+fn settings() -> LoadSettings {
+    LoadSettings {
+        n_requests: 6,
+        max_new: 4,
+        cache_rate: 0.5,
+        domain: Domain::Mixed,
+        seed: 42,
+        trace: true,
+    }
+}
+
+/// One traced load cell on the buddy preset (bursty arrivals, so queueing
+/// and prefetch misses both occur).
+fn run_traced(
+    cfg: &ModelConfig,
+    store: Arc<WeightStore>,
+) -> (buddymoe::traffic::LoadCell, TraceOutput) {
+    let pc = profile_model(cfg, store.clone(), 8, 7777).unwrap();
+    let warm = warm_rank_from_profile(&pc);
+    let st = settings();
+    let mut scfg = ServingConfig::default().preset("buddy-rho3").unwrap();
+    scfg.cache_rate = st.cache_rate;
+    scfg.seed = st.seed;
+    let process = ProcessKind::Bursty.build(cfg, &st, 16.0);
+    run_load_cell_traced(cfg, store, &pc, &warm, scfg, "buddy-rho3", 16.0, process).unwrap()
+}
+
+// ---------------------------------------------------------------------
+// Determinism: per-seed byte-identical traces across thread counts
+// ---------------------------------------------------------------------
+
+#[test]
+fn trace_is_byte_identical_across_thread_counts() {
+    let _guard = PAR_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let (cfg, store) = setup();
+    par::set_threads(1);
+    let (_, t1) = run_traced(&cfg, store.clone());
+    par::set_threads(4);
+    let (_, t4) = run_traced(&cfg, store);
+    par::set_threads(0);
+    assert!(!t1.chrome_json.is_empty() && !t1.jsonl.is_empty());
+    assert_eq!(
+        t1.chrome_json, t4.chrome_json,
+        "Chrome trace must not depend on the kernel thread count"
+    );
+    assert_eq!(t1.jsonl, t4.jsonl, "JSONL trace must not depend on the kernel thread count");
+    assert_eq!(t1.attributions.len(), t4.attributions.len());
+    for (a, b) in t1.attributions.iter().zip(&t4.attributions) {
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+}
+
+#[test]
+fn trace_is_byte_identical_per_seed() {
+    let (cfg, store) = setup();
+    let (_, a) = run_traced(&cfg, store.clone());
+    let (_, b) = run_traced(&cfg, store);
+    assert_eq!(a.chrome_json, b.chrome_json, "same seed must reproduce the trace byte-for-byte");
+    assert_eq!(a.jsonl, b.jsonl);
+}
+
+// ---------------------------------------------------------------------
+// Zero-cost-off: tracing changes no measured metric
+// ---------------------------------------------------------------------
+
+#[test]
+fn tracing_does_not_change_metrics() {
+    let (cfg, store) = setup();
+    let pc = profile_model(&cfg, store.clone(), 8, 7777).unwrap();
+    let warm = warm_rank_from_profile(&pc);
+    let st = settings();
+    let mk_scfg = || {
+        let mut scfg = ServingConfig::default().preset("buddy-rho3").unwrap();
+        scfg.cache_rate = st.cache_rate;
+        scfg.seed = st.seed;
+        scfg
+    };
+    let off = run_load_cell(
+        &cfg,
+        store.clone(),
+        &pc,
+        &warm,
+        mk_scfg(),
+        "buddy-rho3",
+        16.0,
+        ProcessKind::Bursty.build(&cfg, &st, 16.0),
+    )
+    .unwrap();
+    let (on, trace) = run_load_cell_traced(
+        &cfg,
+        store,
+        &pc,
+        &warm,
+        mk_scfg(),
+        "buddy-rho3",
+        16.0,
+        ProcessKind::Bursty.build(&cfg, &st, 16.0),
+    )
+    .unwrap();
+    // The full metric row (every percentile) must be byte-identical; the
+    // only difference tracing makes is the extra p99_attr payload.
+    assert_eq!(
+        report_markdown(std::slice::from_ref(&off)),
+        report_markdown(std::slice::from_ref(&on)),
+        "tracing must not perturb any measured metric"
+    );
+    assert!(off.p99_attr.is_none(), "untraced cells carry no attribution");
+    assert!(on.p99_attr.is_some(), "traced cells carry the p99 attribution");
+    assert_eq!(trace.attributions.len(), on.requests_done as usize);
+}
+
+// ---------------------------------------------------------------------
+// Attribution exactness (property over faulted + degraded requests)
+// ---------------------------------------------------------------------
+
+fn assert_exact(a: &RequestAttribution, ctx: &str) {
+    // Durations are non-negative by construction; exactness is the claim:
+    // the buckets sum bit-for-bit to the measured end-to-end latency.
+    let sum = a.queue + a.compute + a.transfer_wait + a.retry_backoff + a.waterfall;
+    assert_eq!(sum, a.total(), "{ctx}: request {} buckets must sum exactly to e2e", a.id);
+    assert_eq!(a.bucket_sum(), a.total(), "{ctx}: bucket_sum mirrors the field sum");
+    for (name, d) in [
+        ("queue", a.queue),
+        ("compute", a.compute),
+        ("transfer_wait", a.transfer_wait),
+        ("retry_backoff", a.retry_backoff),
+        ("waterfall", a.waterfall),
+    ] {
+        assert!(d <= a.total(), "{ctx}: request {} bucket {name} exceeds e2e", a.id);
+    }
+}
+
+#[test]
+fn attribution_buckets_sum_exactly_under_faults() {
+    let (cfg, store) = setup();
+    let pc = profile_model(&cfg, store.clone(), 8, 7777).unwrap();
+    let warm = warm_rank_from_profile(&pc);
+    // The fast-mode sweep_faults cell shape: a single-homed 4-device ring
+    // whose device-down scenario is the known degradation story.
+    let st = LoadSettings { n_requests: 16, ..settings() };
+    let mut saw_degraded = false;
+    for scenario in ["baseline", "device-down", "flap", "lose-inflight"] {
+        let mut scfg = ServingConfig::default().preset("buddy-rho3").unwrap();
+        scfg.cache_rate = st.cache_rate;
+        scfg.seed = st.seed;
+        scfg.n_devices = 4;
+        scfg.topology = TopologyKind::Ring;
+        scfg.fault_plan = FaultPlan::scenario(scenario).unwrap();
+        let process = ProcessKind::Poisson.build(&cfg, &st, 4.0);
+        let (cell, _probe, _fault, trace) = run_fault_cell_traced(
+            &cfg,
+            store.clone(),
+            &pc,
+            &warm,
+            scfg,
+            "buddy-rho3",
+            4.0,
+            process,
+        )
+        .unwrap();
+        assert_eq!(trace.attributions.len(), cell.requests_done as usize, "{scenario}");
+        for a in &trace.attributions {
+            assert_exact(a, scenario);
+            saw_degraded |= a.degraded;
+        }
+        assert_exact(cell.p99_attr.as_ref().unwrap(), scenario);
+    }
+    assert!(saw_degraded, "fault scenarios must exercise degraded-request attribution");
+}
+
+// ---------------------------------------------------------------------
+// Chrome export schema (what Perfetto actually loads)
+// ---------------------------------------------------------------------
+
+#[test]
+fn chrome_export_is_schema_valid() {
+    let (cfg, store) = setup();
+    let (_, trace) = run_traced(&cfg, store);
+    let doc = Json::parse(&trace.chrome_json).expect("Chrome trace must be valid JSON");
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+
+    let mut tracks = Vec::new();
+    let mut names = Vec::new();
+    for ev in events {
+        let ph = ev.get("ph").unwrap().as_str().unwrap();
+        match ph {
+            "M" => {
+                if ev.get("name").unwrap().as_str().unwrap() == "thread_name" {
+                    tracks.push(
+                        ev.get("args").unwrap().get("name").unwrap().as_str().unwrap().to_string(),
+                    );
+                }
+            }
+            "X" => {
+                assert!(ev.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+                names.push(ev.get("name").unwrap().as_str().unwrap().to_string());
+            }
+            "i" => names.push(ev.get("name").unwrap().as_str().unwrap().to_string()),
+            other => panic!("unexpected phase {other:?}"),
+        }
+    }
+    for want in ["engine", "scheduler", "host-link-0"] {
+        assert!(tracks.iter().any(|t| t == want), "missing track {want:?} in {tracks:?}");
+    }
+    assert!(tracks.iter().any(|t| t.starts_with("request-")), "per-request tracks expected");
+    for want in ["decode_step", "pin_window", "route", "transfer", "queued", "admit", "done"] {
+        assert!(names.iter().any(|n| n == want), "missing event name {want:?}");
+    }
+}
+
+#[test]
+fn checked_in_example_trace_matches_live_schema() {
+    // The docs walkthrough opens tests/data/example_trace_perfetto.json;
+    // keep it loadable and structurally in sync with the live exporter.
+    let text = include_str!("data/example_trace_perfetto.json");
+    let doc = Json::parse(text).expect("example trace must be valid JSON");
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(events.iter().any(|e| e.get("ph").unwrap().as_str().unwrap() == "M"));
+    assert!(events.iter().any(|e| e.get("ph").unwrap().as_str().unwrap() == "X"));
+    assert_eq!(doc.get("displayTimeUnit").unwrap().as_str().unwrap(), "ms");
+}

@@ -255,6 +255,7 @@ fn load_sweep_report_is_byte_identical_per_seed() {
             cache_rate: 0.5,
             domain: Domain::Mixed,
             seed: 42,
+            trace: false,
         },
     };
     let a = run_sweep(&cfg, store.clone(), &pc, &warm, &spec).unwrap();
@@ -279,6 +280,7 @@ fn topology_settings() -> LoadSettings {
         cache_rate: 0.5,
         domain: Domain::Mixed,
         seed: 42,
+        trace: false,
     }
 }
 
