@@ -68,7 +68,7 @@ fn main() -> Result<()> {
     let max = acts.iter().cloned().fold(0.0f64, f64::max).max(1.0);
     println!("\nFig 6 — activation distribution, layer {l6} (heavy tail):");
     let mut ranked: Vec<(usize, f64)> = acts.iter().cloned().enumerate().collect();
-    ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    ranked.sort_by(|a, b| b.1.total_cmp(&a.1));
     for (e, a) in ranked.iter().take(12) {
         println!("  expert {e:>2}: {} {a:.0}", "#".repeat((a / max * 50.0) as usize));
     }

@@ -12,6 +12,7 @@ use buddymoe::weights::WeightStore;
 /// Time `f` over `iters` iterations after `warmup` discarded ones.
 /// Returns (mean seconds, p95 seconds).
 #[allow(dead_code)]
+#[allow(clippy::disallowed_methods)]
 pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64) {
     for _ in 0..warmup {
         f();
@@ -22,7 +23,7 @@ pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64) 
         f();
         samples.push(t0.elapsed().as_secs_f64());
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(|a, b| a.total_cmp(b));
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;
     let p95 = samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)];
     (mean, p95)

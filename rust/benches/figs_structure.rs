@@ -74,11 +74,11 @@ fn main() {
     let acts = &pc.layer(l).activations;
     let total: f64 = acts.iter().sum();
     let mut ranked: Vec<f64> = acts.clone();
-    ranked.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    ranked.sort_by(|a, b| b.total_cmp(a));
     let top8: f64 = ranked.iter().take(8).sum();
     let gini = {
         let mut s = acts.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(|a, b| a.total_cmp(b));
         let n = s.len() as f64;
         let sum: f64 = s.iter().sum();
         let cum: f64 = s
@@ -105,7 +105,7 @@ fn main() {
         }
     }
     let tot: f64 = cells.iter().sum();
-    cells.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    cells.sort_by(|a, b| b.total_cmp(a));
     let top5pct: f64 = cells.iter().take(cells.len() / 20).sum();
     let mut same_fam_mass = 0.0;
     for i in 0..cfg.n_experts {

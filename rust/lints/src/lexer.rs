@@ -1,0 +1,350 @@
+//! A minimal, dependency-free Rust lexer — just enough fidelity for
+//! contract linting.
+//!
+//! The token stream keeps identifiers/keywords and single-byte
+//! punctuation with their 1-based line numbers, and drops everything a
+//! rule could false-positive on: whitespace, comments (collected
+//! separately so suppression directives can be parsed), string/char/byte
+//! literals (including raw strings and raw identifiers), and numeric
+//! literals. The classic `'a'`-char vs `'a`-lifetime ambiguity is
+//! resolved the same way rustc's lexer does: a quote starts a char
+//! literal only when an escape follows or the quote closes one character
+//! later.
+//!
+//! Fidelity limits are deliberate (this is a tripwire, not a compiler):
+//! non-ASCII identifiers and exotic numeric suffixes may lex as several
+//! junk tokens, which no rule pattern matches, so they cannot produce
+//! diagnostics — only, at worst, missed ones.
+
+/// One lexical token: an identifier/keyword, or one punctuation byte.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Token {
+    pub text: String,
+    pub punct: bool,
+    /// 1-based source line.
+    pub line: u32,
+}
+
+impl Token {
+    pub fn is_punct(&self, c: char) -> bool {
+        self.punct && self.text.len() == 1 && self.text.as_bytes()[0] == c as u8
+    }
+
+    pub fn is_ident(&self, name: &str) -> bool {
+        !self.punct && self.text == name
+    }
+}
+
+/// A `//` line comment (text after the slashes, trimmed), with its line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CommentLine {
+    pub text: String,
+    pub line: u32,
+}
+
+/// The lexed view of one source file.
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<CommentLine>,
+}
+
+/// Lex `src` into tokens and line comments. Never fails: unrecognized
+/// bytes become punctuation tokens no rule matches.
+pub fn lex(src: &str) -> Lexed {
+    Lexer { b: src.as_bytes(), src, i: 0, line: 1, tokens: Vec::new(), comments: Vec::new() }
+        .run()
+}
+
+struct Lexer<'a> {
+    b: &'a [u8],
+    src: &'a str,
+    i: usize,
+    line: u32,
+    tokens: Vec<Token>,
+    comments: Vec<CommentLine>,
+}
+
+impl Lexer<'_> {
+    fn peek(&self, ahead: usize) -> u8 {
+        *self.b.get(self.i + ahead).unwrap_or(&0)
+    }
+
+    fn run(mut self) -> Lexed {
+        while self.i < self.b.len() {
+            let c = self.b[self.i];
+            match c {
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                b' ' | b'\t' | b'\r' => self.i += 1,
+                b'/' if self.peek(1) == b'/' => self.line_comment(),
+                b'/' if self.peek(1) == b'*' => self.block_comment(),
+                b'"' => {
+                    self.i += 1;
+                    self.quoted_string();
+                }
+                b'\'' => self.char_or_lifetime(),
+                b'r' | b'b' if self.literal_prefix_len().is_some() => self.prefixed_literal(),
+                b'_' => self.ident(),
+                _ if c.is_ascii_alphabetic() => self.ident(),
+                _ if c.is_ascii_digit() => self.number(),
+                _ => {
+                    self.push_punct(c);
+                    self.i += 1;
+                }
+            }
+        }
+        Lexed { tokens: self.tokens, comments: self.comments }
+    }
+
+    fn push_punct(&mut self, c: u8) {
+        self.tokens.push(Token { text: (c as char).to_string(), punct: true, line: self.line });
+    }
+
+    fn line_comment(&mut self) {
+        let start = self.i + 2;
+        while self.i < self.b.len() && self.b[self.i] != b'\n' {
+            self.i += 1;
+        }
+        let text = self.src[start..self.i].trim().to_string();
+        self.comments.push(CommentLine { text, line: self.line });
+    }
+
+    fn block_comment(&mut self) {
+        self.i += 2;
+        let mut depth = 1usize;
+        while self.i < self.b.len() && depth > 0 {
+            if self.b[self.i] == b'\n' {
+                self.line += 1;
+                self.i += 1;
+            } else if self.b[self.i] == b'/' && self.peek(1) == b'*' {
+                depth += 1;
+                self.i += 2;
+            } else if self.b[self.i] == b'*' && self.peek(1) == b'/' {
+                depth -= 1;
+                self.i += 2;
+            } else {
+                self.i += 1;
+            }
+        }
+    }
+
+    /// Body of a non-raw string/byte-string; `self.i` is past the
+    /// opening quote on entry and past the closing quote on exit.
+    fn quoted_string(&mut self) {
+        while self.i < self.b.len() {
+            match self.b[self.i] {
+                b'\\' => {
+                    if self.peek(1) == b'\n' {
+                        self.line += 1;
+                    }
+                    self.i += 2;
+                }
+                b'"' => {
+                    self.i += 1;
+                    return;
+                }
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                _ => self.i += 1,
+            }
+        }
+    }
+
+    /// `'x'`, `'\n'`, `'\u{1F600}'` are char literals; `'a` / `'_` are
+    /// lifetimes (skipped — rules never match them).
+    fn char_or_lifetime(&mut self) {
+        let j = self.i + 1;
+        if j >= self.b.len() {
+            self.i = j;
+        } else if self.b[j] == b'\\' {
+            let mut k = j + 1;
+            if self.peek(2) == b'u' && self.peek(3) == b'{' {
+                k += 2;
+                while k < self.b.len() && self.b[k] != b'}' {
+                    k += 1;
+                }
+            }
+            k += 1;
+            // Closing quote (tolerate malformed input by not requiring it).
+            if k < self.b.len() && self.b[k] == b'\'' {
+                k += 1;
+            }
+            self.i = k;
+        } else if j + 1 < self.b.len() && self.b[j] != b'\'' && self.b[j + 1] == b'\'' {
+            self.i = j + 2;
+        } else {
+            self.i = j;
+            while self.i < self.b.len()
+                && (self.b[self.i].is_ascii_alphanumeric() || self.b[self.i] == b'_')
+            {
+                self.i += 1;
+            }
+        }
+    }
+
+    /// If the cursor sits on an `r`/`b`-prefixed literal (`r"`, `r#"`,
+    /// `b"`, `b'`, `br#"` ...), the prefix length up to but excluding the
+    /// opening quote; `None` when it is just an identifier like `ring`.
+    /// `r#ident` raw identifiers also return `None`.
+    fn literal_prefix_len(&self) -> Option<usize> {
+        let mut k = 0usize;
+        if self.peek(k) == b'b' {
+            k += 1;
+            if self.peek(k) == b'\'' {
+                return Some(k);
+            }
+            if self.peek(k) == b'r' {
+                k += 1;
+            }
+        } else if self.peek(k) == b'r' {
+            k += 1;
+        } else {
+            return None;
+        }
+        while self.peek(k) == b'#' {
+            k += 1;
+        }
+        // `r#foo` (raw identifier) has hashes but no quote after them,
+        // and plain identifiers like `ring`/`by` have neither — both
+        // fall through to None and lex as identifiers.
+        if self.peek(k) == b'"' {
+            return Some(k);
+        }
+        None
+    }
+
+    fn prefixed_literal(&mut self) {
+        let quote_at = self.i + self.literal_prefix_len().expect("caller checked prefix");
+        if self.b[quote_at] == b'\'' {
+            // Byte char literal b'x' / b'\n'.
+            self.i = quote_at + 1;
+            if self.peek(0) == b'\\' {
+                self.i += 2;
+            } else {
+                self.i += 1;
+            }
+            if self.peek(0) == b'\'' {
+                self.i += 1;
+            }
+            return;
+        }
+        let raw = self.src[self.i..quote_at].contains('r');
+        let hashes = self.src[self.i..quote_at].matches('#').count();
+        self.i = quote_at + 1;
+        if !raw {
+            self.quoted_string();
+            return;
+        }
+        // Raw string: ends at `"` followed by `hashes` hashes, no escapes.
+        while self.i < self.b.len() {
+            if self.b[self.i] == b'\n' {
+                self.line += 1;
+                self.i += 1;
+            } else if self.b[self.i] == b'"'
+                && self.b[self.i + 1..].iter().take_while(|&&h| h == b'#').count() >= hashes
+            {
+                self.i += 1 + hashes;
+                return;
+            } else {
+                self.i += 1;
+            }
+        }
+    }
+
+    fn ident(&mut self) {
+        let start = self.i;
+        while self.i < self.b.len()
+            && (self.b[self.i].is_ascii_alphanumeric() || self.b[self.i] == b'_')
+        {
+            self.i += 1;
+        }
+        self.tokens.push(Token {
+            text: self.src[start..self.i].to_string(),
+            punct: false,
+            line: self.line,
+        });
+    }
+
+    /// Numeric literals produce no tokens — no rule matches numbers, and
+    /// dropping them keeps suffixes (`1.0f32`, `0xfe`, `1e-3`) from
+    /// surfacing as spurious identifiers.
+    fn number(&mut self) {
+        while self.i < self.b.len()
+            && (self.b[self.i].is_ascii_alphanumeric() || self.b[self.i] == b'_')
+        {
+            self.i += 1;
+        }
+        if self.i + 1 < self.b.len()
+            && self.b[self.i] == b'.'
+            && self.b[self.i + 1].is_ascii_digit()
+        {
+            self.i += 1;
+            while self.i < self.b.len()
+                && (self.b[self.i].is_ascii_alphanumeric() || self.b[self.i] == b'_')
+            {
+                self.i += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src).tokens.into_iter().filter(|t| !t.punct).map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_invisible() {
+        let src = r##"
+            // Instant::now in a comment
+            /* SystemTime in /* a nested */ block */
+            let s = "Instant::now()";
+            let r = r#"thread_rng "quoted" here"#;
+            let b = b"partial_cmp";
+            call(real_token);
+        "##;
+        let ids = idents(src);
+        assert!(ids.contains(&"real_token".to_string()));
+        assert!(!ids.iter().any(|t| t.contains("Instant")));
+        assert!(!ids.iter().any(|t| t.contains("thread_rng")));
+        assert!(!ids.iter().any(|t| t.contains("partial_cmp")));
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let ids = idents("fn f<'a>(x: &'a str) { let c = 'x'; let n = '\\n'; g(c, n) }");
+        assert!(ids.contains(&"str".to_string()));
+        assert!(ids.contains(&"g".to_string()));
+        // 'x' must not swallow the rest of the line as a string would.
+        assert!(ids.contains(&"n".to_string()));
+    }
+
+    #[test]
+    fn comment_lines_are_collected() {
+        let out = lex("let a = 1; // pallas-lint: allow(wall-clock, reason = \"x\")\nlet b = 2;");
+        assert_eq!(out.comments.len(), 1);
+        assert_eq!(out.comments[0].line, 1);
+        assert!(out.comments[0].text.starts_with("pallas-lint:"));
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_strings() {
+        let src = "let s = \"line\none\ntwo\";\nInstant::now();";
+        let toks = lex(src).tokens;
+        let inst = toks.iter().find(|t| t.is_ident("Instant")).expect("Instant token");
+        assert_eq!(inst.line, 4);
+    }
+
+    #[test]
+    fn raw_identifiers_still_lex() {
+        let ids = idents("let r#type = 1; use_it(r#type);");
+        assert!(ids.contains(&"use_it".to_string()));
+    }
+}

@@ -1,0 +1,323 @@
+//! pallas-lint — the determinism-contract checker for the buddymoe
+//! serving stack.
+//!
+//! The simulator's headline guarantee is bitwise-reproducible runs: same
+//! config + seed ⇒ identical traces, reports, and goldens. That guarantee
+//! is carried by conventions (virtual clock, seeded RNG streams, total
+//! float orderings, ordered containers in reporting paths) that the type
+//! system cannot enforce and that have each been broken at least once.
+//! This crate turns those conventions into deny-by-default lint rules and
+//! runs as a tier-1 CI gate: `cargo run --release -p pallas-lint`.
+//!
+//! It walks every `.rs` file under `rust/src`, `rust/tests`,
+//! `rust/benches`, and `examples/`, lexes each file with a small
+//! dependency-free lexer ([`lexer`]) — comment/string/char-literal aware,
+//! so rules never fire on prose — and pattern-matches the token stream
+//! ([`rules`]). Diagnostics are deterministic: sorted by (file, line,
+//! rule) and rendered as byte-stable JSON ([`report`]).
+//!
+//! # Rule catalog
+//!
+//! **`wall-clock`** — `Instant::now()`, `SystemTime`, or `.elapsed()`
+//! anywhere outside `util/clock.rs` and the explicitly allowlisted
+//! real-time intake sites. Virtual-clock time must come from
+//! `util::clock::SimClock`. The PR 6 real-time batcher regression is the
+//! motivating example:
+//! ```text
+//! // before (nondeterministic: window depends on host scheduling)
+//! let deadline = Instant::now() + window;
+//! // after (deterministic: the sim clock is the only time source)
+//! let deadline_us = clock.now_us() + window_us;
+//! ```
+//!
+//! **`ambient-rng`** — `thread_rng`, `rand::random`, `from_entropy`,
+//! `OsRng`, `getrandom`. All randomness flows from named, seeded
+//! `util::rng` streams so a run is replayable from its config.
+//!
+//! **`float-sort`** — `partial_cmp` used as a sort/min/max comparator,
+//! or chained straight into `.unwrap*`. NaN makes `partial_cmp` panic or
+//! break comparator transitivity (UB-adjacent in `sort_by`); `total_cmp`
+//! is total and deterministic. The PR 4 top-k gate is the motivating
+//! example:
+//! ```text
+//! // before (panics on a NaN router logit)
+//! idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+//! // after (NaN ranks deterministically; finite behavior unchanged)
+//! idx.sort_by(|&a, &b| probs[b].total_cmp(&probs[a]).then(a.cmp(&b)));
+//! ```
+//!
+//! **`unordered-iter`** — `HashMap`/`HashSet` (and the Fx variants) in
+//! modules whose iteration order can reach reports, telemetry, or golden
+//! output ([`rules::ORDERED_OUTPUT_PREFIXES`]). Use `BTreeMap`/`BTreeSet`
+//! or collect-and-sort.
+//!
+//! **`trace-emission`** — `Tracer` record calls (`span`, `instant`,
+//! `stall`, `begin_request`, `finish_request`) lexically inside closures
+//! passed to `util::par` fan-out (`par_map`, `par_rows`) or
+//! `std::thread::{spawn, scope}`. The trace contract (ROADMAP) is that
+//! only single-threaded orchestration code records; worker-side emission
+//! interleaves nondeterministically. This rule is a lexical tripwire —
+//! emission hidden behind a helper called from a worker is caught by the
+//! trace goldens, not the lint.
+//!
+//! **`unwrap-audit`** — bare `.unwrap()` on the library surface
+//! (`rust/src`, outside `#[cfg(test)]`). The PR 7 error-handling policy:
+//! fallible paths use `?` with context, infallible ones name their
+//! invariant via `.expect("...")`. Poisoning propagation
+//! (`.lock()/.wait()/.join()/.recv()` followed by `.unwrap()`) is
+//! exempt — those unwraps forward another thread's panic.
+//!
+//! # Suppressions
+//!
+//! A violation that is *the point* of the code (e.g. the real-time
+//! batcher's genuine wall-clock deadline) is silenced in place with a
+//! reasoned directive on its own line or the line above:
+//!
+//! ```text
+//! // pallas-lint: allow(wall-clock, reason = "real-time intake deadline")
+//! let t0 = Instant::now();
+//! ```
+//!
+//! The rule name must be one of the catalog above and the reason must be
+//! non-empty — a malformed directive is itself a violation (rule
+//! `suppression`), so suppressions cannot rot silently. Whole-file grants
+//! live in `rust/lints/allow.list` (`<rule> <path>` lines), reviewed like
+//! code.
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use lexer::{lex, Lexed};
+use report::{Diagnostic, Report};
+
+/// Directories scanned by [`lint_tree`], relative to the repo root.
+pub const SCAN_ROOTS: [&str; 4] = ["rust/src", "rust/tests", "rust/benches", "examples"];
+
+/// A whole-file grant: (rule, repo-root-relative path).
+pub type AllowEntry = (String, String);
+
+/// Parse the `allow.list` format: one `<rule> <path>` per line, `#`
+/// comments and blank lines ignored. Unknown rule names are an error —
+/// the allowlist must not rot.
+pub fn parse_allowlist(text: &str) -> Result<Vec<AllowEntry>, String> {
+    let mut out = Vec::new();
+    for (n, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let (rule, path) = match (parts.next(), parts.next(), parts.next()) {
+            (Some(r), Some(p), None) => (r, p),
+            _ => return Err(format!("allow.list:{}: expected `<rule> <path>`", n + 1)),
+        };
+        if !rules::RULES.contains(&rule) {
+            return Err(format!("allow.list:{}: unknown rule `{rule}`", n + 1));
+        }
+        out.push((rule.to_string(), path.to_string()));
+    }
+    Ok(out)
+}
+
+/// One parsed in-source suppression directive.
+struct Suppression {
+    rule: String,
+    /// Line of the directive comment itself.
+    line: u32,
+}
+
+/// Parse `pallas-lint: allow(<rule>, reason = "...")` directives out of a
+/// file's line comments. Malformed directives (unknown rule, missing or
+/// empty reason, bad syntax) become diagnostics with rule `suppression`.
+fn parse_suppressions(lexed: &Lexed) -> (Vec<Suppression>, Vec<(u32, String)>) {
+    let mut sups = Vec::new();
+    let mut bad = Vec::new();
+    for c in &lexed.comments {
+        let Some(rest) = c.text.strip_prefix("pallas-lint:") else { continue };
+        let rest = rest.trim();
+        let inner = rest
+            .strip_prefix("allow(")
+            .and_then(|s| s.strip_suffix(')'))
+            .map(str::trim);
+        let Some(inner) = inner else {
+            bad.push((c.line, format!("malformed directive `{}`", c.text)));
+            continue;
+        };
+        let (rule, tail) = match inner.split_once(',') {
+            Some((r, t)) => (r.trim(), t.trim()),
+            None => (inner, ""),
+        };
+        if !rules::RULES.contains(&rule) {
+            bad.push((c.line, format!("unknown rule `{rule}` in suppression")));
+            continue;
+        }
+        let reason = tail
+            .strip_prefix("reason")
+            .map(str::trim_start)
+            .and_then(|s| s.strip_prefix('='))
+            .map(str::trim)
+            .and_then(|s| s.strip_prefix('"'))
+            .and_then(|s| s.strip_suffix('"'));
+        match reason {
+            Some(r) if !r.trim().is_empty() => {
+                sups.push(Suppression { rule: rule.to_string(), line: c.line });
+            }
+            _ => bad.push((
+                c.line,
+                format!("suppression of `{rule}` needs a non-empty reason = \"...\""),
+            )),
+        }
+    }
+    (sups, bad)
+}
+
+/// Lint one file's source. `path` is the repo-root-relative,
+/// `/`-separated label (it scopes path-sensitive rules and is matched
+/// against `allow`). Returns the surviving diagnostics and how many
+/// findings were silenced by suppressions or the allowlist.
+pub fn lint_source(path: &str, src: &str, allow: &[AllowEntry]) -> (Vec<Diagnostic>, usize) {
+    let lexed = lex(src);
+    let findings = rules::run_all(path, &lexed.tokens);
+    let (sups, bad) = parse_suppressions(&lexed);
+
+    // A directive covers its own line plus the next token-bearing line
+    // (comments emit no tokens, so stacked directives all reach the code).
+    let mut token_lines: Vec<u32> = lexed.tokens.iter().map(|t| t.line).collect();
+    token_lines.sort_unstable();
+    token_lines.dedup();
+    let next_code_line = |line: u32| -> Option<u32> {
+        let at = token_lines.partition_point(|&l| l <= line);
+        token_lines.get(at).copied()
+    };
+    let covers = |s: &Suppression, rule: &str, line: u32| -> bool {
+        s.rule == rule && (line == s.line || Some(line) == next_code_line(s.line))
+    };
+
+    let file_allowed = |rule: &str| allow.iter().any(|(r, p)| r == rule && p == path);
+
+    let mut out = Vec::new();
+    let mut suppressed = 0usize;
+    for f in findings {
+        if sups.iter().any(|s| covers(s, f.rule, f.line)) || file_allowed(f.rule) {
+            suppressed += 1;
+        } else {
+            out.push(Diagnostic {
+                file: path.to_string(),
+                line: f.line,
+                rule: f.rule,
+                message: f.message,
+            });
+        }
+    }
+    for (line, message) in bad {
+        out.push(Diagnostic { file: path.to_string(), line, rule: "suppression", message });
+    }
+    out.sort();
+    (out, suppressed)
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted by name at every
+/// level so the scan order (and thus the report) is deterministic.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<io::Result<Vec<_>>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Repo-root-relative label with forward slashes, for stable reports and
+/// path-scoped rules regardless of host OS.
+fn label_for(root: &Path, file: &Path) -> String {
+    let rel = file.strip_prefix(root).unwrap_or(file);
+    let parts: Vec<String> =
+        rel.components().map(|c| c.as_os_str().to_string_lossy().into_owned()).collect();
+    parts.join("/")
+}
+
+/// Lint every `.rs` file under [`SCAN_ROOTS`] below `root`. Missing scan
+/// roots are skipped (the crate must work from a partial checkout);
+/// unreadable files are hard errors.
+pub fn lint_tree(root: &Path, allow: &[AllowEntry]) -> io::Result<Report> {
+    let mut files = Vec::new();
+    for scan in SCAN_ROOTS {
+        let dir = root.join(scan);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut files)?;
+        }
+    }
+    let mut report = Report::default();
+    for file in files {
+        let src = fs::read_to_string(&file)?;
+        let (diags, suppressed) = lint_source(&label_for(root, &file), &src, allow);
+        report.files_scanned += 1;
+        report.suppressed += suppressed;
+        report.diagnostics.extend(diags);
+    }
+    report.sort();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allowlist_rejects_unknown_rules() {
+        assert!(parse_allowlist("wall-clock rust/src/util/clock.rs\n").is_ok());
+        assert!(parse_allowlist("no-such-rule a.rs\n").is_err());
+        assert!(parse_allowlist("wall-clock\n").is_err());
+        let with_comment = "# grants\nunwrap-audit rust/src/weights/store.rs # builder\n";
+        assert_eq!(parse_allowlist(with_comment).map(|v| v.len()), Ok(1));
+    }
+
+    #[test]
+    fn suppression_covers_own_and_next_line() {
+        let src = "// pallas-lint: allow(wall-clock, reason = \"intake deadline\")\n\
+                   let t = Instant::now();\n\
+                   let u = Instant::now();\n";
+        let (diags, suppressed) = lint_source("rust/src/x.rs", src, &[]);
+        assert_eq!(suppressed, 1);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].line, 3);
+    }
+
+    #[test]
+    fn trailing_suppression_covers_its_own_line() {
+        let src =
+            "let t = Instant::now(); // pallas-lint: allow(wall-clock, reason = \"deadline\")\n";
+        let (diags, suppressed) = lint_source("rust/src/x.rs", src, &[]);
+        assert_eq!((diags.len(), suppressed), (0, 1));
+    }
+
+    #[test]
+    fn reasonless_suppression_is_a_violation() {
+        let src = "// pallas-lint: allow(wall-clock)\nlet t = Instant::now();\n";
+        let (diags, suppressed) = lint_source("rust/src/x.rs", src, &[]);
+        assert_eq!(suppressed, 0, "a reasonless directive must not suppress");
+        let rules: Vec<_> = diags.iter().map(|d| d.rule).collect();
+        assert!(rules.contains(&"suppression"));
+        assert!(rules.contains(&"wall-clock"));
+    }
+
+    #[test]
+    fn file_allowlist_silences_matching_rule_only() {
+        let allow = vec![("wall-clock".to_string(), "rust/src/x.rs".to_string())];
+        let src = "let t = Instant::now();\nlet v = x.unwrap();\n";
+        let (diags, suppressed) = lint_source("rust/src/x.rs", src, &allow);
+        assert_eq!(suppressed, 1);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].rule, "unwrap-audit");
+    }
+}

@@ -1,0 +1,104 @@
+//! CLI for pallas-lint. Tier-1 CI gate:
+//!
+//! ```text
+//! cargo run --release -p pallas-lint -- --json pallas-lint.json
+//! ```
+//!
+//! Exits 0 on a clean tree, 1 on any violation, 2 on usage/IO errors.
+//! Human diagnostics go to stdout; `--json <file>` additionally writes
+//! the byte-stable machine report (CI greps it for `"violations": 0`).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use pallas_lint::{lint_tree, parse_allowlist};
+
+struct Opts {
+    root: PathBuf,
+    json: Option<PathBuf>,
+    allowlist: Option<PathBuf>,
+}
+
+fn usage() -> &'static str {
+    "usage: pallas-lint [--root <repo-root>] [--json <out.json>] [--allowlist <file>]\n\
+     \n\
+     Scans rust/src, rust/tests, rust/benches, examples under the repo root\n\
+     for determinism-contract violations. Default root is the workspace's\n\
+     parent (the repo checkout); default allowlist is rust/lints/allow.list."
+}
+
+fn parse_opts(args: &[String]) -> Result<Opts, String> {
+    // Default root: rust/lints/../.. == the repo checkout.
+    let mut opts = Opts {
+        root: PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../.."),
+        json: None,
+        allowlist: None,
+    };
+    let mut i = 0usize;
+    while i < args.len() {
+        let value = |i: usize, name: &str| -> Result<PathBuf, String> {
+            args.get(i + 1).map(PathBuf::from).ok_or_else(|| format!("{name} needs a value"))
+        };
+        match args[i].as_str() {
+            "--root" => {
+                opts.root = value(i, "--root")?;
+                i += 2;
+            }
+            "--json" => {
+                opts.json = Some(value(i, "--json")?);
+                i += 2;
+            }
+            "--allowlist" => {
+                opts.allowlist = Some(value(i, "--allowlist")?);
+                i += 2;
+            }
+            "--help" | "-h" => return Err(String::new()),
+            other => return Err(format!("unknown argument `{other}`")),
+        }
+    }
+    Ok(opts)
+}
+
+fn run() -> Result<bool, String> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let opts = parse_opts(&args)?;
+
+    let allow_path =
+        opts.allowlist.clone().unwrap_or_else(|| opts.root.join("rust/lints/allow.list"));
+    let allow = if allow_path.is_file() {
+        let text = std::fs::read_to_string(&allow_path)
+            .map_err(|e| format!("reading {}: {e}", allow_path.display()))?;
+        parse_allowlist(&text)?
+    } else if opts.allowlist.is_some() {
+        return Err(format!("allowlist {} not found", allow_path.display()));
+    } else {
+        Vec::new()
+    };
+
+    let report = lint_tree(&opts.root, &allow)
+        .map_err(|e| format!("scanning {}: {e}", opts.root.display()))?;
+
+    print!("{}", report.render_human());
+    if let Some(json_path) = &opts.json {
+        std::fs::write(json_path, report.render_json())
+            .map_err(|e| format!("writing {}: {e}", json_path.display()))?;
+    }
+    Ok(report.violations() == 0)
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::FAILURE,
+        Err(msg) => {
+            if msg.is_empty() {
+                println!("{}", usage());
+                ExitCode::SUCCESS
+            } else {
+                eprintln!("pallas-lint: {msg}");
+                eprintln!("{}", usage());
+                ExitCode::from(2)
+            }
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! Diagnostics and the machine-readable report.
+//!
+//! Output is byte-stable by construction: diagnostics are sorted by
+//! (file, line, rule), paths use forward slashes, and the JSON renderer
+//! emits a fixed field order with no floats and no timestamps — CI greps
+//! the literal `"violations": 0` and diffs the artifact across runs.
+
+use std::fmt::Write as _;
+
+/// One finding, pointing at a file:line with a named rule.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Diagnostic {
+    /// Sort key order matters: file first, then line, then rule.
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// The full result of a lint run.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub files_scanned: usize,
+    pub suppressed: usize,
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn violations(&self) -> usize {
+        self.diagnostics.len()
+    }
+
+    /// Canonical ordering; idempotent, called before every render.
+    pub fn sort(&mut self) {
+        self.diagnostics.sort();
+        self.diagnostics.dedup();
+    }
+
+    /// Human-readable diagnostics, one `file:line: [rule] message` per
+    /// line, followed by a summary line.
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            let _ = writeln!(out, "{}:{}: [{}] {}", d.file, d.line, d.rule, d.message);
+        }
+        let _ = writeln!(
+            out,
+            "pallas-lint: {} files scanned, {} violations, {} suppressed",
+            self.files_scanned,
+            self.violations(),
+            self.suppressed
+        );
+        out
+    }
+
+    /// The machine-readable report. Field order, separators, and
+    /// indentation are part of the contract (byte-stable, grep-able).
+    pub fn render_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str("  \"tool\": \"pallas-lint\",\n");
+        out.push_str("  \"schema_version\": 1,\n");
+        let _ = writeln!(out, "  \"files_scanned\": {},", self.files_scanned);
+        let _ = writeln!(out, "  \"violations\": {},", self.violations());
+        let _ = writeln!(out, "  \"suppressed\": {},", self.suppressed);
+        if self.diagnostics.is_empty() {
+            out.push_str("  \"diagnostics\": []\n");
+        } else {
+            out.push_str("  \"diagnostics\": [\n");
+            for (i, d) in self.diagnostics.iter().enumerate() {
+                out.push_str("    {\n");
+                let _ = writeln!(out, "      \"rule\": {},", json_str(d.rule));
+                let _ = writeln!(out, "      \"file\": {},", json_str(&d.file));
+                let _ = writeln!(out, "      \"line\": {},", d.line);
+                let _ = writeln!(out, "      \"message\": {}", json_str(&d.message));
+                out.push_str(if i + 1 == self.diagnostics.len() { "    }\n" } else { "    },\n" });
+            }
+            out.push_str("  ]\n");
+        }
+        out.push_str("}\n");
+        out
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control bytes).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_report_is_clean_and_greppable() {
+        let mut r = Report { files_scanned: 3, suppressed: 1, diagnostics: Vec::new() };
+        r.sort();
+        let json = r.render_json();
+        assert!(json.contains("\"violations\": 0"));
+        assert!(json.contains("\"diagnostics\": []"));
+        assert_eq!(json, r.render_json(), "rendering must be deterministic");
+    }
+
+    #[test]
+    fn diagnostics_sort_and_escape() {
+        let mut r = Report::default();
+        r.diagnostics.push(Diagnostic {
+            file: "b.rs".into(),
+            line: 2,
+            rule: "wall-clock",
+            message: "say \"no\"".into(),
+        });
+        r.diagnostics.push(Diagnostic {
+            file: "a.rs".into(),
+            line: 9,
+            rule: "float-sort",
+            message: "m".into(),
+        });
+        r.sort();
+        assert_eq!(r.diagnostics[0].file, "a.rs");
+        let json = r.render_json();
+        assert!(json.contains("\\\"no\\\""));
+        assert!(json.contains("\"violations\": 2"));
+    }
+}

@@ -1,0 +1,416 @@
+//! The six determinism-contract rules, as token-stream passes.
+//!
+//! Every rule is deny-by-default and named; see the crate docs for the
+//! catalog with before/after examples, and `suppress.rs` for the scoped
+//! escape hatch. Rules return raw `(rule, line, message)` findings; the
+//! driver in `lib.rs` applies suppressions and the file allowlist.
+
+use crate::lexer::Token;
+
+/// Rule names, in catalog order. `RULES` is the closed set a suppression
+/// or allowlist entry may name.
+pub const RULES: [&str; 6] = [
+    "wall-clock",
+    "ambient-rng",
+    "float-sort",
+    "unordered-iter",
+    "trace-emission",
+    "unwrap-audit",
+];
+
+/// Sort-family methods whose comparator argument must be NaN-safe.
+const SORT_METHODS: [&str; 6] = [
+    "sort_by",
+    "sort_unstable_by",
+    "select_nth_unstable_by",
+    "min_by",
+    "max_by",
+    "binary_search_by",
+];
+
+/// `Tracer` recording entry points (see `trace/recorder.rs`).
+const TRACER_METHODS: [&str; 5] = ["span", "instant", "stall", "begin_request", "finish_request"];
+
+/// Fan-out / thread entry points whose closures run off the orchestration
+/// thread: `util::par` and `std::thread`.
+const FANOUT_CALLS: [&str; 4] = ["par_map", "par_rows", "spawn", "scope"];
+
+/// `.unwrap()` callees that propagate another thread's panic (mutex /
+/// condvar poisoning, thread join): sanctioned, since inventing a message
+/// for "a thread already panicked" adds nothing.
+const POISON_CALLEES: [&str; 5] = ["lock", "wait", "wait_timeout", "join", "recv"];
+
+/// Hash containers whose iteration order is nondeterministic.
+const HASH_TYPES: [&str; 4] = ["HashMap", "HashSet", "FxHashMap", "FxHashSet"];
+
+/// Module path prefixes (repo-root-relative, `/`-separated) where
+/// iteration order can reach reports, telemetry, or golden output — the
+/// scope of the `unordered-iter` rule. `util`, `config`, `weights`,
+/// `testing`, and integration tests are deliberately outside it: a hash
+/// container is fine where order provably never escapes.
+pub const ORDERED_OUTPUT_PREFIXES: [&str; 16] = [
+    "rust/src/server/",
+    "rust/src/trace/",
+    "rust/src/stats/",
+    "rust/src/traffic/",
+    "rust/src/model/",
+    "rust/src/memory/",
+    "rust/src/buddy/",
+    "rust/src/topology/",
+    "rust/src/fault/",
+    "rust/src/eval/",
+    "rust/src/prefetch/",
+    "rust/src/profilecollect/",
+    "rust/src/runtime/",
+    "rust/src/main.rs",
+    "rust/benches/",
+    "examples/",
+];
+
+/// A raw finding before suppression/allowlist filtering.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub line: u32,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// Run every rule over one file's token stream. `path` is the
+/// repo-root-relative, `/`-separated label (it scopes `unordered-iter`
+/// and `unwrap-audit`).
+pub fn run_all(path: &str, toks: &[Token]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    wall_clock(toks, &mut out);
+    ambient_rng(toks, &mut out);
+    float_sort(toks, &mut out);
+    unordered_iter(path, toks, &mut out);
+    trace_emission(toks, &mut out);
+    unwrap_audit(path, toks, &mut out);
+    out.sort();
+    out.dedup();
+    out
+}
+
+fn is_p(toks: &[Token], i: usize, c: char) -> bool {
+    toks.get(i).is_some_and(|t| t.is_punct(c))
+}
+
+fn is_i(toks: &[Token], i: usize, name: &str) -> bool {
+    toks.get(i).is_some_and(|t| t.is_ident(name))
+}
+
+fn ident_in(toks: &[Token], i: usize, set: &[&str]) -> bool {
+    toks.get(i).is_some_and(|t| !t.punct && set.contains(&t.text.as_str()))
+}
+
+/// Index of the close paren matching the open paren at `open`, scanning
+/// forward; `None` on unbalanced input.
+fn match_paren_forward(toks: &[Token], open: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct('(') {
+            depth += 1;
+        } else if t.is_punct(')') {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k);
+            }
+        }
+    }
+    None
+}
+
+/// Index of the open paren matching the close paren at `close`, scanning
+/// backward; `None` on unbalanced input.
+fn match_paren_backward(toks: &[Token], close: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    for (k, t) in toks.iter().enumerate().take(close + 1).rev() {
+        if t.is_punct(')') {
+            depth += 1;
+        } else if t.is_punct('(') {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k);
+            }
+        }
+    }
+    None
+}
+
+/// Index of the close brace matching the open brace at `open`.
+fn match_brace_forward(toks: &[Token], open: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct('}') {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k);
+            }
+        }
+    }
+    None
+}
+
+/// Inclusive line ranges of `#[cfg(test)]`-gated items: from the
+/// attribute to the end of the next braced block. `cfg` predicates
+/// containing `not` (e.g. `cfg(not(test))`) are conservatively treated
+/// as non-test.
+pub fn test_regions(toks: &[Token]) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 4 < toks.len() {
+        if is_p(toks, i, '#')
+            && is_p(toks, i + 1, '[')
+            && is_i(toks, i + 2, "cfg")
+            && is_p(toks, i + 3, '(')
+        {
+            if let Some(close) = match_paren_forward(toks, i + 3) {
+                let pred = &toks[i + 4..close];
+                let has_test = pred.iter().any(|t| t.is_ident("test"));
+                let has_not = pred.iter().any(|t| t.is_ident("not"));
+                if has_test && !has_not {
+                    let mut j = close + 1;
+                    while j < toks.len() && !toks[j].is_punct('{') {
+                        j += 1;
+                    }
+                    if j < toks.len() {
+                        if let Some(end) = match_brace_forward(toks, j) {
+                            out.push((toks[i].line, toks[end].line));
+                            i = end + 1;
+                            continue;
+                        }
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+fn in_regions(regions: &[(u32, u32)], line: u32) -> bool {
+    regions.iter().any(|&(a, b)| a <= line && line <= b)
+}
+
+/// wall-clock: `Instant::now`, `SystemTime`, and `.elapsed(` — serving
+/// code must read time from `util::clock::SimClock`.
+fn wall_clock(toks: &[Token], out: &mut Vec<Finding>) {
+    for k in 0..toks.len() {
+        if is_i(toks, k, "Instant")
+            && is_p(toks, k + 1, ':')
+            && is_p(toks, k + 2, ':')
+            && is_i(toks, k + 3, "now")
+        {
+            push(out, "wall-clock", toks[k].line, "`Instant::now()` outside util/clock.rs");
+        }
+        if is_i(toks, k, "SystemTime") {
+            push(out, "wall-clock", toks[k].line, "`SystemTime` outside util/clock.rs");
+        }
+        if is_p(toks, k, '.') && is_i(toks, k + 1, "elapsed") && is_p(toks, k + 2, '(') {
+            push(out, "wall-clock", toks[k].line, "`.elapsed()` wall-clock read");
+        }
+    }
+}
+
+/// ambient-rng: all randomness must come from a seeded `util::rng`
+/// stream — no thread-local or OS entropy.
+fn ambient_rng(toks: &[Token], out: &mut Vec<Finding>) {
+    const AMBIENT: [&str; 4] = ["thread_rng", "from_entropy", "OsRng", "getrandom"];
+    for k in 0..toks.len() {
+        if ident_in(toks, k, &AMBIENT) {
+            let msg = format!("ambient RNG `{}`: use a seeded util::rng stream", toks[k].text);
+            push_owned(out, "ambient-rng", toks[k].line, msg);
+        }
+        if is_i(toks, k, "rand")
+            && is_p(toks, k + 1, ':')
+            && is_p(toks, k + 2, ':')
+            && is_i(toks, k + 3, "random")
+        {
+            push(out, "ambient-rng", toks[k].line, "`rand::random`: use a seeded util::rng stream");
+        }
+    }
+}
+
+/// float-sort: a float comparator built from `partial_cmp` is
+/// NaN-unsafe (panics or silently breaks transitivity). Two patterns:
+/// `partial_cmp` lexically inside a sort-family call's arguments, and
+/// `.partial_cmp(..)` chained straight into `.unwrap*`.
+fn float_sort(toks: &[Token], out: &mut Vec<Finding>) {
+    const MSG: &str = "NaN-unsafe `partial_cmp` comparator: use `total_cmp` (PR 4/6 policy)";
+    for k in 0..toks.len() {
+        if ident_in(toks, k, &SORT_METHODS) && is_p(toks, k + 1, '(') {
+            if let Some(close) = match_paren_forward(toks, k + 1) {
+                for t in &toks[k + 2..close] {
+                    if t.is_ident("partial_cmp") {
+                        push(out, "float-sort", t.line, MSG);
+                    }
+                }
+            }
+        }
+        if is_p(toks, k, '.') && is_i(toks, k + 1, "partial_cmp") && is_p(toks, k + 2, '(') {
+            if let Some(close) = match_paren_forward(toks, k + 2) {
+                let chained_unwrap = is_p(toks, close + 1, '.')
+                    && toks
+                        .get(close + 2)
+                        .is_some_and(|t| !t.punct && t.text.starts_with("unwrap"));
+                if chained_unwrap {
+                    push(out, "float-sort", toks[k + 1].line, MSG);
+                }
+            }
+        }
+    }
+}
+
+/// unordered-iter: hash containers are banned where iteration order can
+/// reach output (see [`ORDERED_OUTPUT_PREFIXES`]).
+fn unordered_iter(path: &str, toks: &[Token], out: &mut Vec<Finding>) {
+    let scoped = ORDERED_OUTPUT_PREFIXES
+        .iter()
+        .any(|p| path.starts_with(p) || path == p.trim_end_matches('/'));
+    if !scoped {
+        return;
+    }
+    for t in toks {
+        if !t.punct && HASH_TYPES.contains(&t.text.as_str()) {
+            let msg = format!(
+                "`{}` in an ordered-output module: iteration order leaks into \
+                 reports; use BTreeMap/BTreeSet or collect-and-sort",
+                t.text
+            );
+            push_owned(out, "unordered-iter", t.line, msg);
+        }
+    }
+}
+
+/// trace-emission: `Tracer` record calls are only sound from
+/// single-threaded orchestration code; flag them lexically inside
+/// closures passed to `util::par` fan-out or `std::thread` spawn/scope.
+/// (A tripwire, not a proof: emission hidden behind a function called
+/// from a worker still needs the `tests/trace.rs` golden to catch it.)
+fn trace_emission(toks: &[Token], out: &mut Vec<Finding>) {
+    for k in 0..toks.len() {
+        if ident_in(toks, k, &FANOUT_CALLS) && is_p(toks, k + 1, '(') {
+            if let Some(close) = match_paren_forward(toks, k + 1) {
+                for m in k + 2..close.saturating_sub(1) {
+                    if is_p(toks, m, '.')
+                        && ident_in(toks, m + 1, &TRACER_METHODS)
+                        && is_p(toks, m + 2, '(')
+                    {
+                        let msg = format!(
+                            "Tracer `.{}()` inside a fan-out/spawned closure: only \
+                             single-threaded orchestration code may record",
+                            toks[m + 1].text
+                        );
+                        push_owned(out, "trace-emission", toks[m + 1].line, msg);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// unwrap-audit: bare `.unwrap()` on the library surface (`rust/src`,
+/// outside `#[cfg(test)]`) — use `?` with context or
+/// `.expect("named invariant")` per the PR 7 policy. Poisoning
+/// propagation (`lock/wait/join/recv`) is exempt.
+fn unwrap_audit(path: &str, toks: &[Token], out: &mut Vec<Finding>) {
+    if !path.starts_with("rust/src/") {
+        return;
+    }
+    let regions = test_regions(toks);
+    for k in 0..toks.len() {
+        let bare_unwrap = is_p(toks, k, '.')
+            && is_i(toks, k + 1, "unwrap")
+            && is_p(toks, k + 2, '(')
+            && is_p(toks, k + 3, ')');
+        if !bare_unwrap || in_regions(&regions, toks[k].line) {
+            continue;
+        }
+        let exempt = k > 0
+            && toks[k - 1].is_punct(')')
+            && match_paren_backward(toks, k - 1)
+                .and_then(|open| open.checked_sub(1))
+                .is_some_and(|callee| ident_in(toks, callee, &POISON_CALLEES));
+        if !exempt {
+            push(
+                out,
+                "unwrap-audit",
+                toks[k].line,
+                "bare `.unwrap()` on the library surface: use `?` with context or \
+                 `.expect(\"named invariant\")` (PR 7 policy)",
+            );
+        }
+    }
+}
+
+fn push(out: &mut Vec<Finding>, rule: &'static str, line: u32, msg: &str) {
+    out.push(Finding { line, rule, message: msg.to_string() });
+}
+
+fn push_owned(out: &mut Vec<Finding>, rule: &'static str, line: u32, message: String) {
+    out.push(Finding { line, rule, message });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    fn findings(path: &str, src: &str) -> Vec<(&'static str, u32)> {
+        run_all(path, &lex(src).tokens).into_iter().map(|f| (f.rule, f.line)).collect()
+    }
+
+    #[test]
+    fn wall_clock_patterns() {
+        let got = findings(
+            "rust/src/x.rs",
+            "fn f() {\n    let t = Instant::now();\n    let d = t.elapsed();\n}\n",
+        );
+        assert_eq!(got, vec![("wall-clock", 2), ("wall-clock", 3)]);
+    }
+
+    #[test]
+    fn float_sort_catches_comparator_variables() {
+        // The PR 4 shape: partial_cmp in a named closure, only *used* by
+        // the sort — pattern (b) catches the definition site.
+        let src = "let by = |a: &f32, b: &f32| a.partial_cmp(b).unwrap_or(Ordering::Equal);\n\
+                   v.sort_by(by);\n";
+        assert_eq!(findings("rust/tests/t.rs", src), vec![("float-sort", 1)]);
+    }
+
+    #[test]
+    fn poisoning_unwrap_is_exempt() {
+        let src = "fn f(m: &Mutex<u32>) -> u32 {\n    *m.lock().unwrap()\n}\n\
+                   fn g(v: &[u32]) -> u32 {\n    *v.first().unwrap()\n}\n";
+        assert_eq!(findings("rust/src/x.rs", src), vec![("unwrap-audit", 5)]);
+    }
+
+    #[test]
+    fn unwrap_outside_src_is_out_of_scope() {
+        assert!(findings("rust/tests/t.rs", "fn f() { x.unwrap(); }").is_empty());
+    }
+
+    #[test]
+    fn cfg_test_mod_is_exempt_from_unwrap_audit() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn t() {\n        \
+                   x.unwrap();\n    }\n}\n";
+        assert!(findings("rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unordered_iter_is_scoped() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(findings("rust/src/server/m.rs", src), vec![("unordered-iter", 1)]);
+        assert!(findings("rust/src/util/m.rs", src).is_empty());
+    }
+
+    #[test]
+    fn tracer_in_fanout_closure() {
+        let src = "par_rows(out, 4, w, |r, c| {\n    tracer.instant(\"x\", 0, &[]);\n});\n";
+        assert_eq!(findings("rust/src/x.rs", src), vec![("trace-emission", 2)]);
+        // The same call from straight-line orchestration code is fine.
+        assert!(findings("rust/src/x.rs", "tracer.instant(\"x\", 0, &[]);\n").is_empty());
+    }
+}

@@ -1,0 +1,9 @@
+// Ambient-RNG fixture: randomness must come from seeded util::rng
+// streams. Expected: ambient-rng at lines 5, 6.
+
+fn naughty() -> u64 {
+    let mut rng = thread_rng();
+    let roll: u64 = rand::random();
+    let _ = &mut rng;
+    roll
+}

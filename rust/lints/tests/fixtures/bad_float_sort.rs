@@ -1,0 +1,7 @@
+// Float-sort fixture: NaN-unsafe comparators built from partial_cmp.
+// Expected: float-sort at lines 5, 6 (both patterns collapse per line).
+
+fn naughty(v: &mut Vec<f32>) -> Option<f32> {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.iter().cloned().max_by(|a, b| a.partial_cmp(b).unwrap())
+}

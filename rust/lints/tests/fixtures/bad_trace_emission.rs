@@ -1,0 +1,10 @@
+// Trace-emission fixture: recording from inside a fan-out closure
+// violates the single-threaded-orchestration trace contract. Expected:
+// trace-emission at line 7. The orchestration-side call at line 9 is fine.
+
+fn naughty(tracer: &mut Tracer, out: &mut [f32]) {
+    par_rows(out, 4, |_row, _chunk| {
+        tracer.instant("worker-side", 0, &[]);
+    });
+    tracer.instant("orchestration-side", 0, &[]);
+}

@@ -1,0 +1,10 @@
+// Unordered-iter fixture. The golden test lints this under the pretend
+// path rust/src/server/bad_unordered_iter.rs, inside the ordered-output
+// scope. Expected: unordered-iter at lines 6, 8.
+
+fn naughty() -> Vec<u32> {
+    use std::collections::HashMap;
+
+    let m: HashMap<u32, u32> = [(1, 2)].into_iter().collect();
+    m.values().copied().collect()
+}

@@ -1,0 +1,18 @@
+// Unwrap fixture. The golden test lints this under a pretend rust/src
+// path. Expected: unwrap-audit at line 6 only — the poisoning unwrap at
+// line 10 and the #[cfg(test)] unwrap at line 16 are exempt.
+
+fn naughty(v: &[u32]) -> u32 {
+    *v.first().unwrap()
+}
+
+fn sanctioned(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    fn also_fine(v: &[u32]) -> u32 {
+        *v.first().unwrap()
+    }
+}

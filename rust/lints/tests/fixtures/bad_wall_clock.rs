@@ -1,0 +1,9 @@
+// Wall-clock fixture: the rule fires on Instant::now, SystemTime, and
+// .elapsed reads. Expected: wall-clock at lines 5, 6, 7.
+
+fn naughty() {
+    let t0 = std::time::Instant::now();
+    let epoch = SystemTime::now();
+    let waited = t0.elapsed();
+    let _ = (epoch, waited);
+}

@@ -1,0 +1,15 @@
+// Suppression fixture: a reasonless directive at line 8 (itself a
+// violation, and it does NOT silence line 9), a leading directive at
+// line 10 (covers the next code line, 11), and a trailing directive at
+// line 12 (covers its own line).
+// Expected: suppression at 8, wall-clock at 9; suppressed = 2.
+
+fn intake() -> u64 {
+    // pallas-lint: allow(wall-clock)
+    let t1 = Instant::now();
+    // pallas-lint: allow(wall-clock, reason = "real-time intake deadline")
+    let t0 = Instant::now();
+    let waited = t0.elapsed(); // pallas-lint: allow(wall-clock, reason = "measures the real wait")
+    let _ = (t0, t1, waited);
+    0
+}

@@ -1,0 +1,143 @@
+//! Golden fixture suite for pallas-lint.
+//!
+//! Each `tests/fixtures/*.rs` file is lexed as *data* (cargo never
+//! compiles it) and must produce exactly the diagnostics its header
+//! comment promises — rule and line both. On top of the fixtures: the
+//! JSON rendering is asserted byte-for-byte, and the real tree is linted
+//! as a self-check so the gate can never silently drift from the code.
+
+use std::path::PathBuf;
+
+use pallas_lint::report::{Diagnostic, Report};
+use pallas_lint::{lint_source, lint_tree, parse_allowlist};
+
+/// Lint fixture source under a pretend repo path; return ((rule, line)s,
+/// suppressed-count).
+fn check(path_label: &str, src: &str) -> (Vec<(&'static str, u32)>, usize) {
+    let (diags, suppressed) = lint_source(path_label, src, &[]);
+    (diags.iter().map(|d| (d.rule, d.line)).collect(), suppressed)
+}
+
+#[test]
+fn fixture_wall_clock() {
+    let (d, s) = check("rust/src/fixture.rs", include_str!("fixtures/bad_wall_clock.rs"));
+    assert_eq!(d, vec![("wall-clock", 5), ("wall-clock", 6), ("wall-clock", 7)]);
+    assert_eq!(s, 0);
+}
+
+#[test]
+fn fixture_ambient_rng() {
+    let (d, s) = check("rust/src/fixture.rs", include_str!("fixtures/bad_ambient_rng.rs"));
+    assert_eq!(d, vec![("ambient-rng", 5), ("ambient-rng", 6)]);
+    assert_eq!(s, 0);
+}
+
+#[test]
+fn fixture_float_sort() {
+    // Also fires outside rust/src — tests and benches sort floats too.
+    let (d, s) = check("rust/tests/fixture.rs", include_str!("fixtures/bad_float_sort.rs"));
+    assert_eq!(d, vec![("float-sort", 5), ("float-sort", 6)]);
+    assert_eq!(s, 0);
+}
+
+#[test]
+fn fixture_unordered_iter() {
+    let src = include_str!("fixtures/bad_unordered_iter.rs");
+    let (d, s) = check("rust/src/server/bad_unordered_iter.rs", src);
+    assert_eq!(d, vec![("unordered-iter", 6), ("unordered-iter", 8)]);
+    assert_eq!(s, 0);
+    // The same source outside the ordered-output scope is clean.
+    let (d, _) = check("rust/src/util/fixture.rs", src);
+    assert!(d.is_empty());
+}
+
+#[test]
+fn fixture_trace_emission() {
+    let (d, s) = check("rust/src/fixture.rs", include_str!("fixtures/bad_trace_emission.rs"));
+    assert_eq!(d, vec![("trace-emission", 7)]);
+    assert_eq!(s, 0);
+}
+
+#[test]
+fn fixture_unwrap() {
+    let src = include_str!("fixtures/bad_unwrap.rs");
+    let (d, s) = check("rust/src/fixture.rs", src);
+    assert_eq!(d, vec![("unwrap-audit", 6)]);
+    assert_eq!(s, 0);
+    // unwrap-audit is library-surface only: the same source in tests/ is clean.
+    let (d, _) = check("rust/tests/fixture.rs", src);
+    assert!(d.is_empty());
+}
+
+#[test]
+fn fixture_suppressed() {
+    let (d, s) = check("rust/src/fixture.rs", include_str!("fixtures/suppressed.rs"));
+    assert_eq!(d, vec![("suppression", 8), ("wall-clock", 9)]);
+    assert_eq!(s, 2, "two reasoned directives must each silence one finding");
+}
+
+#[test]
+fn json_report_is_byte_stable() {
+    let mut r = Report {
+        files_scanned: 2,
+        suppressed: 1,
+        diagnostics: vec![Diagnostic {
+            file: "rust/src/a.rs".to_string(),
+            line: 3,
+            rule: "wall-clock",
+            message: "`Instant::now()` outside util/clock.rs".to_string(),
+        }],
+    };
+    r.sort();
+    let want = concat!(
+        "{\n",
+        "  \"tool\": \"pallas-lint\",\n",
+        "  \"schema_version\": 1,\n",
+        "  \"files_scanned\": 2,\n",
+        "  \"violations\": 1,\n",
+        "  \"suppressed\": 1,\n",
+        "  \"diagnostics\": [\n",
+        "    {\n",
+        "      \"rule\": \"wall-clock\",\n",
+        "      \"file\": \"rust/src/a.rs\",\n",
+        "      \"line\": 3,\n",
+        "      \"message\": \"`Instant::now()` outside util/clock.rs\"\n",
+        "    }\n",
+        "  ]\n",
+        "}\n",
+    );
+    assert_eq!(r.render_json(), want);
+    assert_eq!(r.render_json(), r.render_json(), "rendering must be deterministic");
+}
+
+/// The gate itself: the real tree must lint clean under the checked-in
+/// allowlist. This is what makes seeding an `Instant::now()` or a
+/// `partial_cmp` sort into rust/src fail CI even before the dedicated
+/// lint step runs.
+#[test]
+fn real_tree_lints_clean() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let allow_text = std::fs::read_to_string(root.join("rust/lints/allow.list"))
+        .expect("rust/lints/allow.list is checked in");
+    let allow = parse_allowlist(&allow_text).expect("allow.list parses");
+    let report = lint_tree(&root, &allow).expect("tree scan succeeds");
+    assert!(report.files_scanned > 50, "scan must actually find the tree");
+    assert_eq!(
+        report.violations(),
+        0,
+        "tree must lint clean; diagnostics:\n{}",
+        report.render_human()
+    );
+}
+
+/// Seeding a violation into an otherwise-clean source must be caught —
+/// the acceptance test for the gate, in miniature.
+#[test]
+fn seeded_violation_is_caught() {
+    let clean = "fn orchestrate(clock: &SimClock) -> u64 {\n    clock.now_us()\n}\n";
+    let (d, _) = check("rust/src/server/loop.rs", clean);
+    assert!(d.is_empty());
+    let seeded = format!("{clean}fn leak() -> std::time::Instant {{\n    Instant::now()\n}}\n");
+    let (d, _) = check("rust/src/server/loop.rs", &seeded);
+    assert_eq!(d, vec![("wall-clock", 5)]);
+}

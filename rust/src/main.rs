@@ -86,8 +86,8 @@ fn cmd_profile(rest: &[String]) -> Result<()> {
     println!(
         "profiled {} prompts; layer-0 buddy list sizes: min {} max {} mean {:.1}",
         a.get_usize("prompts")?,
-        sizes.iter().min().unwrap(),
-        sizes.iter().max().unwrap(),
+        sizes.iter().min().expect("profiled model has at least one layer-0 buddy list"),
+        sizes.iter().max().expect("profiled model has at least one layer-0 buddy list"),
         sizes.iter().sum::<usize>() as f64 / sizes.len() as f64
     );
     println!("wrote {}", out.display());

@@ -401,7 +401,10 @@ impl Engine {
     pub fn bias_rank(cfg: &ModelConfig, store: &WeightStore) -> Vec<Vec<usize>> {
         (0..cfg.n_layers)
             .map(|l| {
-                let bias = &store.tensor(&format!("L{l}.rbias")).unwrap().data;
+                let bias = &store
+                    .tensor(&format!("L{l}.rbias"))
+                    .expect("validated weight store carries a router bias per layer")
+                    .data;
                 let mut idx: Vec<usize> = (0..cfg.n_experts).collect();
                 // total_cmp: NaN bias entries rank deterministically
                 // instead of panicking the sort.

@@ -78,6 +78,7 @@ impl SimClock {
     }
 
     /// A wall-clock handle with its epoch at construction.
+    #[allow(clippy::disallowed_methods)]
     pub fn real_time() -> Self {
         Self { inner: Arc::new(Inner::Real(Instant::now())) }
     }

@@ -15,6 +15,8 @@ use once_cell::sync::Lazy;
 
 use super::clock::SimClock;
 
+#[allow(clippy::disallowed_methods)]
+// pallas-lint: allow(wall-clock, reason = "fallback stamp before a SimClock is installed; serving runs use set_clock")
 static START: Lazy<Instant> = Lazy::new(Instant::now);
 static INIT: Once = Once::new();
 static CLOCK: Mutex<Option<SimClock>> = Mutex::new(None);
@@ -37,6 +39,7 @@ fn timestamp_s() -> f64 {
 fn stamp(slot: &Option<SimClock>) -> f64 {
     match slot {
         Some(clock) => clock.now_s(),
+        // pallas-lint: allow(wall-clock, reason = "fallback stamp before a SimClock is installed; serving runs use set_clock")
         None => START.elapsed().as_secs_f64(),
     }
 }

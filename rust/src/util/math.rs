@@ -36,12 +36,10 @@ pub fn top_k(probs: &[f32], k: usize) -> (Vec<usize>, Vec<f32>) {
         return (Vec::new(), Vec::new());
     }
     let mut idx: Vec<usize> = (0..probs.len()).collect();
-    let by_prob_desc = |a: &usize, b: &usize| {
-        probs[*b]
-            .partial_cmp(&probs[*a])
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.cmp(b))
-    };
+    // total_cmp: NaN gate probs rank deterministically (greatest-first)
+    // instead of collapsing to Equal and leaking index order; softmax
+    // probs are non-negative, so finite inputs sort exactly as before.
+    let by_prob_desc = |a: &usize, b: &usize| probs[*b].total_cmp(&probs[*a]).then(a.cmp(b));
     if k < idx.len() {
         idx.select_nth_unstable_by(k - 1, by_prob_desc);
         idx.truncate(k);
@@ -216,12 +214,9 @@ mod tests {
             let k = rng.range(0, n + 1);
             let probs: Vec<f32> = (0..n).map(|_| (rng.below(6) as f32) / 5.0).collect();
             let mut want: Vec<usize> = (0..n).collect();
-            want.sort_by(|&a, &b| {
-                probs[b]
-                    .partial_cmp(&probs[a])
-                    .unwrap_or(std::cmp::Ordering::Equal)
-                    .then(a.cmp(&b))
-            });
+            // Same total_cmp order as top_k itself; inputs here are
+            // finite and non-negative, where total_cmp == partial_cmp.
+            want.sort_by(|&a, &b| probs[b].total_cmp(&probs[a]).then(a.cmp(&b)));
             want.truncate(k);
             let (got, _) = top_k(&probs, k);
             assert_eq!(got, want, "n={n} k={k} probs={probs:?}");
@@ -258,7 +253,7 @@ mod tests {
     fn percentile_sorted_fast_path_agrees() {
         let xs = vec![4.0, 1.0, 3.0, 2.0];
         let mut sorted = xs.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         for &p in &[0.0, 10.0, 50.0, 90.0, 100.0] {
             assert_eq!(percentile(&xs, p), percentile_sorted(&sorted, p));
             // Sorted input takes the no-clone path and must agree too.

@@ -9,7 +9,7 @@ use buddymoe::buddy::BuddyProfile;
 use buddymoe::eval::warm_rank_from_profile;
 use buddymoe::prefetch::{PredictContext, Predictor, TopFreq};
 use buddymoe::profilecollect::ProfileCollector;
-use buddymoe::util::math::percentile;
+use buddymoe::util::math::{percentile, top_k};
 
 /// A collector whose first recorded token is weighted NaN (via the
 /// warm-up discount), poisoning the activation counts and co-activation
@@ -65,6 +65,26 @@ fn percentile_survives_nan_samples() {
     let ys = [4.0f32, 1.0, 3.0, 2.0];
     assert_eq!(percentile(&ys, 100.0), 4.0);
     assert_eq!(percentile(&ys, 50.0), 2.5);
+}
+
+#[test]
+fn top_k_survives_nan_gate_probs() {
+    // The router's top_k comparator was the last partial_cmp(..)
+    // .unwrap_or(Equal) ranking sort (found by pallas-lint's float-sort
+    // rule): NaN-as-Equal is non-transitive, so a NaN gate probability
+    // made the selected expert set comparator-dependent. total_cmp ranks
+    // +NaN above every number, deterministically.
+    let probs = [0.2f32, f32::NAN, 0.5];
+    let (idx, w) = top_k(&probs, 2);
+    assert_eq!(idx, vec![1, 2], "NaN ranks first, then the largest finite prob");
+    // The NaN poisons the renormalization sum, so weights fall back to
+    // the uniform 1/k split instead of propagating NaN everywhere.
+    assert_eq!(w, vec![0.5, 0.5]);
+    let (idx2, _) = top_k(&probs, 2);
+    assert_eq!(idx, idx2, "NaN ranking must be deterministic");
+    // Finite inputs keep the exact pre-fix order (prob desc, index asc).
+    let (fin, _) = top_k(&[0.1f32, 0.4, 0.4, 0.2], 3);
+    assert_eq!(fin, vec![1, 2, 3]);
 }
 
 #[test]

@@ -477,7 +477,7 @@ fn prop_algorithm1_invariants() {
                     let mut w: Vec<f32> = (0..k).map(|_| rng.f32() + 0.01).collect();
                     let s: f32 = w.iter().sum();
                     w.iter_mut().for_each(|x| *x /= s);
-                    w.sort_by(|a, b| b.partial_cmp(a).unwrap());
+                    w.sort_by(|a, b| b.total_cmp(a));
                     TokenRouting { selected: sel, weights: w }
                 })
                 .collect();
