@@ -72,6 +72,7 @@ fn main() -> Result<()> {
             // Trace every cell: each BENCH_faults.json row then carries
             // the p99 request's stall attribution.
             trace: true,
+            interactive_share: 1.0,
         },
     };
 

@@ -47,6 +47,7 @@ fn main() -> Result<()> {
             // Trace every cell: each BENCH_load.json cell then carries the
             // p99 request's stall attribution ("where did the time go").
             trace: true,
+            interactive_share: 1.0,
         },
     };
 

@@ -1,0 +1,103 @@
+//! Overload protection past the saturation knee: sweep (offered load ×
+//! admission mode) under MMPP bursts with a mixed Interactive/Batch
+//! population, on the virtual clock.
+//!
+//! Each load level runs twice per policy preset: once with admission
+//! control disabled (`fifo` — the seed serving loop, whose queue grows
+//! without bound past the knee and whose TTFT collapses for every
+//! class), and once with the SLO gate (`slo` — bounded queue,
+//! deadline-unmeetable shedding, priority batch composition, brownout
+//! coupling into the degradation waterfall).
+//!
+//! The acceptance row: at offered load ≥ 1.5× the FIFO knee, the p99.9
+//! TTFT of *admitted Interactive* traffic under `slo` stays within 2×
+//! its SLO budget while the `fifo` rows collapse, with nonzero shed-rate
+//! and brownout-dwell columns showing how the gate paid for it.
+//!
+//! Run: `cargo run --release --example sweep_overload [-- --fast]`
+//! Works with or without artifacts (synthetic-family fallback); emits
+//! machine-readable `BENCH_overload.json` next to Cargo.toml (uploaded
+//! by CI alongside the other BENCH artifacts).
+
+use std::path::Path;
+
+use anyhow::Result;
+use buddymoe::eval::{profile_model, warm_rank_from_profile, Domain};
+use buddymoe::traffic::{
+    overload_cells_json, overload_report_markdown, run_overload_sweep, AdmissionMode,
+    LoadSettings, OverloadSweep, ProcessKind,
+};
+use buddymoe::util::json::{num, obj, s};
+
+fn main() -> Result<()> {
+    buddymoe::util::logging::init();
+    let fast = std::env::args().any(|a| a == "--fast");
+
+    // Artifacts when built; otherwise the synthetic-family model (the
+    // shared eval fallback), so the sweep runs anywhere.
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let (cfg, store) = buddymoe::eval::load_model_or_synthetic(&dir, 4242)?;
+    let pc = profile_model(&cfg, store.clone(), if fast { 16 } else { 48 }, 7777)?;
+    let warm = warm_rank_from_profile(&pc);
+
+    let spec = OverloadSweep {
+        // The load sweep's knee sits between 16 and 64 rps for this
+        // model; the top rows are well past 1.5× it, where the FIFO
+        // queue grows without bound over the burst windows.
+        loads_rps: vec![16.0, 64.0, 128.0],
+        presets: vec!["buddy-rho3".into()],
+        admissions: vec![AdmissionMode::Fifo, AdmissionMode::Slo],
+        // MMPP bursts: 2× the offered rate while bursting, silent while
+        // idle — the same average load as Poisson, much deeper queue
+        // excursions, which is what admission control is for.
+        process: ProcessKind::Bursty,
+        interactive_ttft_slo_s: 0.25,
+        batch_ttft_slo_s: 2.5,
+        queue_cap: 32,
+        settings: LoadSettings {
+            n_requests: if fast { 24 } else { 64 },
+            max_new: 8,
+            cache_rate: 0.5,
+            domain: Domain::Mixed,
+            seed: 42,
+            // Trace every cell: each BENCH_overload.json row then
+            // carries the p99 admitted-Interactive stall attribution.
+            trace: true,
+            // Mixed population: half the arrivals carry the tight
+            // Interactive budget, half the loose Batch one.
+            interactive_share: 0.5,
+        },
+    };
+
+    println!(
+        "# Overload sweep at c = {} (virtual clock, seed {}, {} requests/cell, \
+         interactive share {}, SLO {}s/{}s, queue cap {})\n",
+        spec.settings.cache_rate,
+        spec.settings.seed,
+        spec.settings.n_requests,
+        spec.settings.interactive_share,
+        spec.interactive_ttft_slo_s,
+        spec.batch_ttft_slo_s,
+        spec.queue_cap,
+    );
+
+    let rows = run_overload_sweep(&cfg, store, &pc, &warm, &spec)?;
+    println!("{}", overload_report_markdown(&rows));
+
+    let json = obj(vec![
+        ("model", s(&cfg.name)),
+        ("cache_rate", num(spec.settings.cache_rate)),
+        ("seed", num(spec.settings.seed as f64)),
+        ("n_requests", num(spec.settings.n_requests as f64)),
+        ("max_new", num(spec.settings.max_new as f64)),
+        ("interactive_share", num(spec.settings.interactive_share)),
+        ("interactive_ttft_slo_s", num(spec.interactive_ttft_slo_s)),
+        ("batch_ttft_slo_s", num(spec.batch_ttft_slo_s)),
+        ("queue_cap", num(spec.queue_cap as f64)),
+        ("rows", overload_cells_json(&rows)),
+    ]);
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_overload.json");
+    std::fs::write(&path, json.to_string() + "\n")?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

@@ -55,6 +55,7 @@ fn main() -> Result<()> {
             // Untraced: BENCH_topology.json stays byte-identical to the
             // pre-trace golden.
             trace: false,
+            interactive_share: 1.0,
         },
     };
 

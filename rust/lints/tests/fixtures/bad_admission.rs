@@ -1,0 +1,18 @@
+// Admission-module fixture: shed bookkeeping through a HashMap inside
+// the ordered-output scope (shed logs feed byte-identical reports), and
+// a brownout trace emitted from inside a fan-out closure. Expected:
+// unordered-iter at lines 7, 9; trace-emission at line 15.
+
+fn naughty_shed_log() -> Vec<u64> {
+    use std::collections::HashMap;
+
+    let shed: HashMap<u64, &'static str> = [(3, "queue_full")].into_iter().collect();
+    shed.keys().copied().collect()
+}
+
+fn naughty_brownout(tracer: &mut Tracer, delay_ewma: &mut [f32]) {
+    par_rows(delay_ewma, 4, |_row, _chunk| {
+        tracer.instant("brownout_enter", 0, &[]);
+    });
+    tracer.instant("brownout_exit", 0, &[]);
+}

@@ -59,6 +59,24 @@ fn fixture_trace_emission() {
 }
 
 #[test]
+fn fixture_admission() {
+    // The admission module lives under rust/src/server/ — inside the
+    // ordered-output scope (its shed log and EWMA state feed
+    // byte-identical reports), and its trace emissions must stay on the
+    // single-threaded orchestration side.
+    let src = include_str!("fixtures/bad_admission.rs");
+    let (d, s) = check("rust/src/server/bad_admission.rs", src);
+    assert_eq!(
+        d,
+        vec![("unordered-iter", 7), ("unordered-iter", 9), ("trace-emission", 15)]
+    );
+    assert_eq!(s, 0);
+    // Outside the ordered-output scope only the trace rule remains.
+    let (d, _) = check("rust/src/util/fixture.rs", src);
+    assert_eq!(d, vec![("trace-emission", 15)]);
+}
+
+#[test]
 fn fixture_unwrap() {
     let src = include_str!("fixtures/bad_unwrap.rs");
     let (d, s) = check("rust/src/fixture.rs", src);

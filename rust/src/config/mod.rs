@@ -6,4 +6,4 @@ mod model;
 mod serving;
 
 pub use model::{ArtifactInfo, ModelConfig};
-pub use serving::{MissPolicy, PrefetchKind, ServingConfig};
+pub use serving::{AdmissionControl, MissPolicy, PrefetchKind, ServingConfig};

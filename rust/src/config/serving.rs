@@ -78,6 +78,132 @@ impl PrefetchKind {
     }
 }
 
+/// SLO-aware admission control, backpressure, and brownout degradation.
+///
+/// Disabled (the default) is the byte-identical degenerate case, matching
+/// the `FaultPlan` contract: no gate is constructed, no queue cap applies,
+/// no shed decision is ever made, no brownout controller runs, and every
+/// existing golden sweep reproduces exactly. All transitions the enabled
+/// policy makes are driven by the shared [`crate::util::clock::SimClock`]
+/// and seeded state only — never the wall clock.
+#[derive(Debug, Clone)]
+pub struct AdmissionControl {
+    /// Master switch. `false` (default) short-circuits everything below.
+    pub enabled: bool,
+    /// Hard staging-queue depth cap: a request that would push the
+    /// admission queue past this depth is shed with `ShedReason::QueueFull`
+    /// (backpressure). 0 = unbounded (the pre-admission behavior).
+    pub queue_cap: usize,
+    /// TTFT budget for `SloClass::Interactive`, simulated seconds.
+    pub interactive_ttft_slo_s: f64,
+    /// TTFT budget for `SloClass::Batch`, simulated seconds (loose).
+    pub batch_ttft_slo_s: f64,
+    /// Shed requests whose TTFT budget is already unmeetable at staging,
+    /// estimated from live queue depth × recent per-slot drain time plus
+    /// the recent prefill tail (`ShedReason::DeadlineUnmeetable`). Never
+    /// fires before the first completed request seeds the estimator.
+    pub shed_unmeetable: bool,
+    /// EWMA smoothing factor for the drain-time / queue-delay estimators,
+    /// in (0, 1]; 1 = no smoothing (latest observation wins).
+    pub ewma_alpha: f64,
+    /// At saturation (more queued than free slots), compose batches by
+    /// (tightest remaining budget, largest expert-working-set overlap with
+    /// the device residency masks) instead of FIFO.
+    pub priority_compose: bool,
+    /// Brownout enter threshold: when EWMA(queue delay) / interactive TTFT
+    /// budget crosses this ratio, the engine shifts miss handling toward ψ
+    /// buddy substitution and tightens the transfer deadline. 0 disables
+    /// brownout entirely.
+    pub brownout_enter_ratio: f64,
+    /// Brownout exit threshold (hysteresis): leave brownout when the EWMA
+    /// ratio drops back below this. Must be < enter ratio.
+    pub brownout_exit_ratio: f64,
+    /// TAE gate τ used while browned out (more permissive than the
+    /// configured `tae_tau`, so more misses resolve by ψ substitution
+    /// instead of demand fetch). Only meaningful under `MissPolicy::Buddy`.
+    pub brownout_tae_tau: f64,
+    /// Transfer deadline while browned out, simulated seconds: tightens
+    /// (or introduces) `transfer_deadline_s` so stragglers hit the
+    /// degradation waterfall instead of stalling the batch. 0 keeps the
+    /// configured deadline unchanged.
+    pub brownout_transfer_deadline_s: f64,
+}
+
+impl AdmissionControl {
+    /// The degenerate case: everything off, byte-identical to the
+    /// pre-admission system.
+    pub fn disabled() -> Self {
+        Self {
+            enabled: false,
+            queue_cap: 0,
+            interactive_ttft_slo_s: 0.25,
+            batch_ttft_slo_s: 2.5,
+            shed_unmeetable: false,
+            ewma_alpha: 0.2,
+            priority_compose: false,
+            brownout_enter_ratio: 0.0,
+            brownout_exit_ratio: 0.0,
+            brownout_tae_tau: 0.45,
+            brownout_transfer_deadline_s: 0.0,
+        }
+    }
+
+    /// A full overload-protection policy: bounded queue, deadline
+    /// shedding, priority batch composition, and brownout coupling to the
+    /// degradation waterfall. Budgets are in simulated seconds and should
+    /// be sized against the configured compute model.
+    pub fn overload_protect(interactive_ttft_slo_s: f64, batch_ttft_slo_s: f64, queue_cap: usize) -> Self {
+        Self {
+            enabled: true,
+            queue_cap,
+            interactive_ttft_slo_s,
+            batch_ttft_slo_s,
+            shed_unmeetable: true,
+            ewma_alpha: 0.2,
+            priority_compose: true,
+            brownout_enter_ratio: 0.5,
+            brownout_exit_ratio: 0.25,
+            brownout_tae_tau: 0.45,
+            brownout_transfer_deadline_s: 0.02,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        if !(self.interactive_ttft_slo_s.is_finite() && self.interactive_ttft_slo_s > 0.0) {
+            bail!("interactive_ttft_slo_s must be finite and positive when admission is enabled");
+        }
+        if !(self.batch_ttft_slo_s.is_finite() && self.batch_ttft_slo_s > 0.0) {
+            bail!("batch_ttft_slo_s must be finite and positive when admission is enabled");
+        }
+        if !(self.ewma_alpha > 0.0 && self.ewma_alpha <= 1.0) {
+            bail!("ewma_alpha must be in (0,1]");
+        }
+        if self.brownout_enter_ratio != 0.0 {
+            if !(self.brownout_enter_ratio.is_finite() && self.brownout_enter_ratio > 0.0) {
+                bail!("brownout_enter_ratio must be finite and positive (0 disables)");
+            }
+            if !(self.brownout_exit_ratio.is_finite()
+                && self.brownout_exit_ratio >= 0.0
+                && self.brownout_exit_ratio < self.brownout_enter_ratio)
+            {
+                bail!("brownout_exit_ratio must be in [0, brownout_enter_ratio) for hysteresis");
+            }
+            if !(0.0..=1.0).contains(&self.brownout_tae_tau) {
+                bail!("brownout_tae_tau must be in [0,1]");
+            }
+            if !(self.brownout_transfer_deadline_s.is_finite()
+                && self.brownout_transfer_deadline_s >= 0.0)
+            {
+                bail!("brownout_transfer_deadline_s must be finite and non-negative (0 keeps the configured deadline)");
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Full serving configuration. Field names follow the paper's symbols.
 #[derive(Debug, Clone)]
 pub struct ServingConfig {
@@ -169,6 +295,11 @@ pub struct ServingConfig {
     /// Base of the exponential retry backoff, simulated seconds.
     pub transfer_backoff_base_s: f64,
 
+    // --- admission control & overload protection ---
+    /// SLO-aware admission gate, backpressure, and brownout policy.
+    /// Disabled (the default) is the byte-identical degenerate case.
+    pub admission: AdmissionControl,
+
     // --- observability (crate::trace) ---
     /// Trace sink: `Off` (the default) is the zero-cost no-op — no
     /// recorder is allocated and every golden sweep is byte-identical to
@@ -233,6 +364,7 @@ impl Default for ServingConfig {
             transfer_deadline_s: 0.0,
             transfer_max_retries: 4,
             transfer_backoff_base_s: 2e-3,
+            admission: AdmissionControl::disabled(),
             trace: TraceSink::Off,
             trace_ring: 1 << 16,
             max_batch: 8,
@@ -302,6 +434,9 @@ impl ServingConfig {
         }
         if self.trace.is_on() && self.trace_ring == 0 {
             bail!("trace_ring must be >= 1 when tracing is enabled");
+        }
+        if let Err(e) = self.admission.validate() {
+            bail!("admission invalid: {e}");
         }
         if !self.fault_plan.is_empty() {
             let links = Topology::new(self.n_devices, self.topology).n_peer_links();
@@ -469,6 +604,44 @@ mod tests {
         c.trace = TraceSink::Ring;
         c.validate().unwrap();
         c.trace_ring = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn admission_knobs_validated() {
+        let c = ServingConfig::default();
+        assert!(!c.admission.enabled, "admission control is off by default");
+        c.validate().unwrap();
+
+        // A disabled config validates even with nonsense knobs (they are
+        // inert), matching the FaultPlan empty-plan contract.
+        let mut c = ServingConfig::default();
+        c.admission.interactive_ttft_slo_s = -1.0;
+        c.validate().unwrap();
+
+        let mut c = ServingConfig::default();
+        c.admission = AdmissionControl::overload_protect(0.25, 2.5, 64);
+        c.validate().unwrap();
+
+        let mut c = ServingConfig::default();
+        c.admission = AdmissionControl::overload_protect(0.25, 2.5, 64);
+        c.admission.interactive_ttft_slo_s = 0.0;
+        assert!(c.validate().is_err());
+
+        let mut c = ServingConfig::default();
+        c.admission = AdmissionControl::overload_protect(0.25, 2.5, 64);
+        c.admission.ewma_alpha = 0.0;
+        assert!(c.validate().is_err());
+
+        // Hysteresis: exit must sit strictly below enter.
+        let mut c = ServingConfig::default();
+        c.admission = AdmissionControl::overload_protect(0.25, 2.5, 64);
+        c.admission.brownout_exit_ratio = c.admission.brownout_enter_ratio;
+        assert!(c.validate().is_err());
+
+        let mut c = ServingConfig::default();
+        c.admission = AdmissionControl::overload_protect(0.25, 2.5, 64);
+        c.admission.brownout_tae_tau = 1.5;
         assert!(c.validate().is_err());
     }
 

@@ -928,6 +928,15 @@ impl TransferHandle {
         self.tuning
     }
 
+    /// Override the per-awaited-transfer deadline on *this* handle
+    /// (`None` disables it). Tuning is per-handle `Copy` state: clones
+    /// held elsewhere (e.g. the prefetcher, which never waits on
+    /// transfers) are unaffected. The brownout controller uses this to
+    /// tighten the deadline while browned out and restore it on exit.
+    pub fn set_deadline(&mut self, deadline: Option<Duration>) {
+        self.tuning.deadline = deadline;
+    }
+
     /// The clock this engine runs on.
     pub fn clock(&self) -> &SimClock {
         &self.clock

@@ -148,6 +148,13 @@ pub struct Engine {
     step_scratch: StepScratch,
     /// Pooled per-expert-group gather+pad staging for `run_moe`.
     arena: Arena,
+    /// Brownout (overload degradation) engaged: misses gate through the
+    /// permissive `scfg.admission.brownout_tae_tau` and awaited transfers
+    /// run under the tightened brownout deadline. Always `false` with
+    /// admission control disabled — the degenerate case never toggles it.
+    brownout_active: bool,
+    /// The configured transfer deadline, restored on brownout exit.
+    base_deadline: Option<Duration>,
 }
 
 impl Engine {
@@ -270,6 +277,7 @@ impl Engine {
             backoff_base: Duration::from_secs_f64(scfg.transfer_backoff_base_s),
             seed: scfg.seed,
         };
+        let base_deadline = tuning.deadline;
         let transfer = TransferEngine::spawn_multi_with(
             caches.into_iter().zip(links).collect(),
             peer,
@@ -351,7 +359,50 @@ impl Engine {
             displaced: BTreeMap::new(),
             step_scratch: StepScratch::default(),
             arena: Arena::new(),
+            brownout_active: false,
+            base_deadline,
         })
+    }
+
+    /// Engage or release brownout degradation (the scheduler's
+    /// [`crate::server::BrownoutController`] drives this on SimClock
+    /// thresholds). Entering tightens the awaited-transfer deadline to
+    /// `scfg.admission.brownout_transfer_deadline_s` (when nonzero) so
+    /// straggling fetches take the degradation waterfall, and `run_moe`
+    /// gates misses through the permissive brownout τ — shifting handling
+    /// from demand-fetch toward ψ buddy substitution. Exiting restores
+    /// the configured deadline and τ. Idempotent.
+    pub fn set_brownout(&mut self, active: bool) {
+        if self.brownout_active == active {
+            return;
+        }
+        self.brownout_active = active;
+        let deadline = if active {
+            let b = self.scfg.admission.brownout_transfer_deadline_s;
+            if b > 0.0 {
+                Some(Duration::from_secs_f64(b))
+            } else {
+                self.base_deadline
+            }
+        } else {
+            self.base_deadline
+        };
+        self.transfer.set_deadline(deadline);
+    }
+
+    /// Whether brownout degradation is currently engaged.
+    pub fn brownout_active(&self) -> bool {
+        self.brownout_active
+    }
+
+    /// The TAE gate τ in force right now: the permissive brownout τ while
+    /// browned out, the configured `tae_tau` otherwise.
+    fn effective_tau(&self) -> f64 {
+        if self.brownout_active {
+            self.scfg.admission.brownout_tae_tau
+        } else {
+            self.scfg.tae_tau
+        }
     }
 
     /// Select and construct the stage backend.
@@ -421,6 +472,37 @@ impl Engine {
 
     pub fn transfer_handle(&self) -> &TransferHandle {
         &self.transfer
+    }
+
+    /// Cheap expert-working-set hint for admission-time batch
+    /// composition: embed the prompt and run layer 0's router on it,
+    /// returning the final prompt token's top-k expert ids. Pure stage
+    /// math on borrowed weights — no clock advance, no cache, counter,
+    /// RNG, or prefetch effects — so the priority-composition path (the
+    /// only caller, admission control enabled) cannot perturb the
+    /// disabled-path goldens. Errors degrade to an empty hint: priority
+    /// composition then falls back to pure slack ordering.
+    pub fn admission_affinity(&self, prompt: &[i32]) -> Vec<usize> {
+        if prompt.is_empty() {
+            return Vec::new();
+        }
+        let s = self.cfg.max_seq;
+        let s0 = prompt.len().min(s);
+        let mut toks = vec![0i32; s];
+        toks[..s0].copy_from_slice(&prompt[..s0]);
+        let x = match self.stages.embed(s, &toks) {
+            Ok(x) => x,
+            Err(_) => return Vec::new(),
+        };
+        let probs = match self.stages.router(0, &x) {
+            Ok((_h, probs)) => probs,
+            Err(_) => return Vec::new(),
+        };
+        let mut routings = routings_from_probs(&probs, s0, self.cfg.top_k);
+        match routings.pop() {
+            Some(r) => r.selected,
+            None => Vec::new(),
+        }
     }
 
     /// The engine's trace sink (`Tracer::off()` unless `scfg.trace` is
@@ -944,8 +1026,11 @@ impl Engine {
         let sub_counters_before = self.counters.get("substitutions");
         let (mut decisions, sub_events) = if let Some(profile) = self.buddy_profile.as_ref() {
             let mut eng = SubstitutionEngine::new(profile);
+            // Brownout shifts the gate toward substitution (effective_tau
+            // == scfg.tae_tau whenever brownout is off, so the default
+            // path is untouched).
             eng.gates = GateParams {
-                tau: self.scfg.tae_tau,
+                tau: self.effective_tau(),
                 margin_gamma: self.scfg.margin_gamma,
                 beta: self.scfg.dist_beta,
                 temperature: None,

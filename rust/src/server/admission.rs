@@ -1,0 +1,385 @@
+//! SLO-aware admission control and brownout degradation.
+//!
+//! Two small, deterministic state machines implement the overload policy:
+//!
+//! * [`AdmissionGate`] — lives *inside* the batcher's queue mutex and
+//!   decides, at the instant a request is staged into the admission queue
+//!   (its virtual arrival timestamp), whether it is admitted or **shed**:
+//!
+//!   - `ShedReason::QueueFull` — the queue already holds `queue_cap`
+//!     requests. This is the hard backpressure bound: depth can never
+//!     exceed the cap, and closed-loop populations feel the rejection
+//!     through the completion hook (a shed is a completion too).
+//!   - `ShedReason::DeadlineUnmeetable` — the gate's live estimate of
+//!     time-to-first-token (`queue depth × EWMA per-slot drain interval +
+//!     EWMA prefill tail`) already exceeds the request's class TTFT
+//!     budget. The estimators are fed by the scheduler from completed
+//!     work, so the gate never sheds on a cold estimator — the first
+//!     requests of a run are always admitted.
+//!
+//! * [`BrownoutController`] — owned by the scheduler loop. An EWMA of
+//!   admitted queue delay, normalized by the Interactive TTFT budget, is
+//!   the overload signal; crossing `enter_ratio` trips brownout and the
+//!   engine shifts miss handling from demand-fetch toward ψ buddy
+//!   substitution (permissive brownout τ) and tightens the transfer
+//!   deadline so stragglers take the PR-7 degradation waterfall instead
+//!   of stalling the batch. Dropping back below `exit_ratio`
+//!   (hysteresis) relaxes both knobs to their configured values.
+//!
+//! Determinism contract (the `FaultPlan` shape): every decision reads
+//! only the shared virtual clock, the queue state under its lock, and
+//! EWMAs of virtual-time measurements — no wall clock, no ambient RNG.
+//! With `AdmissionControl::enabled == false` neither object is even
+//! constructed, so the disabled system is byte-identical to the
+//! pre-admission one. Decisions for a given seed are byte-identical
+//! across `PALLAS_THREADS` settings because all inputs are
+//! orchestration-thread state.
+
+use std::time::Duration;
+
+use crate::config::AdmissionControl;
+use crate::server::request::{InferenceRequest, ShedReason, SloClass};
+
+/// Per-class TTFT budgets, simulated seconds.
+#[derive(Debug, Clone, Copy)]
+pub struct SloBudgets {
+    pub interactive_ttft_s: f64,
+    pub batch_ttft_s: f64,
+}
+
+impl SloBudgets {
+    pub fn from_config(ac: &AdmissionControl) -> Self {
+        Self {
+            interactive_ttft_s: ac.interactive_ttft_slo_s,
+            batch_ttft_s: ac.batch_ttft_slo_s,
+        }
+    }
+
+    pub fn ttft_for(&self, slo: SloClass) -> f64 {
+        match slo {
+            SloClass::Interactive => self.interactive_ttft_s,
+            SloClass::Batch => self.batch_ttft_s,
+        }
+    }
+}
+
+/// The staging-time shed decision. See the module docs for semantics.
+#[derive(Debug, Clone)]
+pub struct AdmissionGate {
+    queue_cap: usize,
+    shed_unmeetable: bool,
+    budgets: SloBudgets,
+    alpha: f64,
+    /// EWMA of per-queue-slot drain interval: how long one queued request
+    /// waits per request ahead of it (completed-request service time
+    /// divided by the batch width it shared).
+    drain_ewma_s: f64,
+    /// EWMA of admission → first-token time (the prefill tail a request
+    /// pays after its queue wait).
+    ttft_tail_ewma_s: f64,
+    /// The estimators have been fed at least once; deadline shedding is
+    /// armed only then.
+    have_estimate: bool,
+}
+
+impl AdmissionGate {
+    /// `None` when admission control is disabled: the degenerate case
+    /// constructs nothing.
+    pub fn from_config(ac: &AdmissionControl) -> Option<Self> {
+        if !ac.enabled {
+            return None;
+        }
+        Some(Self {
+            queue_cap: ac.queue_cap,
+            shed_unmeetable: ac.shed_unmeetable,
+            budgets: SloBudgets::from_config(ac),
+            alpha: ac.ewma_alpha,
+            drain_ewma_s: 0.0,
+            ttft_tail_ewma_s: 0.0,
+            have_estimate: false,
+        })
+    }
+
+    /// Feed the drain estimator with one completed request's per-slot
+    /// service time (its service duration / the batch width it ran at).
+    pub fn observe_drain(&mut self, per_slot_s: f64) {
+        if !(per_slot_s.is_finite() && per_slot_s >= 0.0) {
+            return;
+        }
+        self.drain_ewma_s = if self.have_estimate {
+            self.alpha * per_slot_s + (1.0 - self.alpha) * self.drain_ewma_s
+        } else {
+            per_slot_s
+        };
+        self.have_estimate = true;
+    }
+
+    /// Feed the tail estimator with one admitted request's
+    /// admission→first-token seconds.
+    pub fn observe_ttft_tail(&mut self, tail_s: f64) {
+        if !(tail_s.is_finite() && tail_s >= 0.0) {
+            return;
+        }
+        // Tail estimate only arms deadline shedding together with the
+        // drain estimate (have_estimate flips there); before the first
+        // completion this just pre-seeds.
+        self.ttft_tail_ewma_s = if self.ttft_tail_ewma_s > 0.0 {
+            self.alpha * tail_s + (1.0 - self.alpha) * self.ttft_tail_ewma_s
+        } else {
+            tail_s
+        };
+    }
+
+    /// Estimated TTFT for a request staged now behind `depth` queued
+    /// requests.
+    pub fn estimated_ttft_s(&self, depth: usize) -> f64 {
+        depth as f64 * self.drain_ewma_s + self.ttft_tail_ewma_s
+    }
+
+    /// Decide a request's fate at its staging instant, with `depth`
+    /// requests already queued ahead of it. `Some(reason)` = shed.
+    pub fn decide(&self, depth: usize, req: &InferenceRequest) -> Option<ShedReason> {
+        if self.queue_cap > 0 && depth >= self.queue_cap {
+            return Some(ShedReason::QueueFull);
+        }
+        if self.shed_unmeetable && self.have_estimate {
+            let budget = self.budgets.ttft_for(req.slo);
+            if self.estimated_ttft_s(depth) > budget {
+                return Some(ShedReason::DeadlineUnmeetable);
+            }
+        }
+        None
+    }
+
+    pub fn budgets(&self) -> SloBudgets {
+        self.budgets
+    }
+}
+
+/// Edge emitted by [`BrownoutController::observe`] when the overload
+/// signal crosses a threshold.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BrownoutEdge {
+    Enter,
+    Exit,
+}
+
+/// Hysteresis thermostat for the brownout overload signal. See module
+/// docs.
+#[derive(Debug, Clone)]
+pub struct BrownoutController {
+    alpha: f64,
+    /// Reference SLO the signal is normalized by (Interactive TTFT).
+    slo_s: f64,
+    enter_ratio: f64,
+    exit_ratio: f64,
+    ewma_s: f64,
+    primed: bool,
+    active: bool,
+    entered_at: Option<Duration>,
+    /// Enter + exit edges over the run.
+    pub transitions: u64,
+    /// Total simulated seconds spent browned out.
+    pub dwell_s: f64,
+}
+
+impl BrownoutController {
+    /// `None` when admission control is disabled or `brownout_enter_ratio`
+    /// is 0 (brownout off).
+    pub fn from_config(ac: &AdmissionControl) -> Option<Self> {
+        if !ac.enabled || ac.brownout_enter_ratio == 0.0 {
+            return None;
+        }
+        Some(Self {
+            alpha: ac.ewma_alpha,
+            slo_s: ac.interactive_ttft_slo_s,
+            enter_ratio: ac.brownout_enter_ratio,
+            exit_ratio: ac.brownout_exit_ratio,
+            ewma_s: 0.0,
+            primed: false,
+            active: false,
+            entered_at: None,
+            transitions: 0,
+            dwell_s: 0.0,
+        })
+    }
+
+    /// Feed one admitted request's queue delay (seconds, virtual) at
+    /// admission instant `now`; returns the threshold edge, if any.
+    pub fn observe(&mut self, queue_delay_s: f64, now: Duration) -> Option<BrownoutEdge> {
+        if !(queue_delay_s.is_finite() && queue_delay_s >= 0.0) {
+            return None;
+        }
+        self.ewma_s = if self.primed {
+            self.alpha * queue_delay_s + (1.0 - self.alpha) * self.ewma_s
+        } else {
+            self.primed = true;
+            queue_delay_s
+        };
+        let ratio = self.ratio();
+        if !self.active && ratio >= self.enter_ratio {
+            self.active = true;
+            self.entered_at = Some(now);
+            self.transitions += 1;
+            Some(BrownoutEdge::Enter)
+        } else if self.active && ratio <= self.exit_ratio {
+            self.active = false;
+            if let Some(t0) = self.entered_at.take() {
+                self.dwell_s += now.saturating_sub(t0).as_secs_f64();
+            }
+            self.transitions += 1;
+            Some(BrownoutEdge::Exit)
+        } else {
+            None
+        }
+    }
+
+    /// Close the accounting window: a run that ends browned out charges
+    /// the residual dwell up to `now`.
+    pub fn finish(&mut self, now: Duration) {
+        if self.active {
+            if let Some(t0) = self.entered_at.take() {
+                self.dwell_s += now.saturating_sub(t0).as_secs_f64();
+            }
+        }
+    }
+
+    /// Current overload signal: EWMA(queue delay) / reference SLO.
+    pub fn ratio(&self) -> f64 {
+        self.ewma_s / self.slo_s
+    }
+
+    pub fn active(&self) -> bool {
+        self.active
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::request::InferenceRequest;
+
+    fn enabled(cap: usize) -> AdmissionControl {
+        AdmissionControl::overload_protect(0.25, 2.5, cap)
+    }
+
+    fn req(id: u64) -> InferenceRequest {
+        InferenceRequest::new(id, vec![1, 2], 4)
+    }
+
+    #[test]
+    fn disabled_config_constructs_nothing() {
+        let ac = AdmissionControl::disabled();
+        assert!(AdmissionGate::from_config(&ac).is_none());
+        assert!(BrownoutController::from_config(&ac).is_none());
+    }
+
+    #[test]
+    fn queue_cap_sheds_at_depth() {
+        let g = AdmissionGate::from_config(&enabled(4)).unwrap();
+        assert_eq!(g.decide(3, &req(1)), None);
+        assert_eq!(g.decide(4, &req(1)), Some(ShedReason::QueueFull));
+        assert_eq!(g.decide(9, &req(1)), Some(ShedReason::QueueFull));
+    }
+
+    #[test]
+    fn zero_cap_is_unbounded() {
+        let g = AdmissionGate::from_config(&enabled(0)).unwrap();
+        assert_eq!(g.decide(1_000_000, &req(1)), None);
+    }
+
+    #[test]
+    fn deadline_shed_requires_an_estimate() {
+        let mut g = AdmissionGate::from_config(&enabled(0)).unwrap();
+        // Cold estimator: even an absurd depth is admitted.
+        assert_eq!(g.decide(10_000, &req(1)), None);
+        // 10 ms per queued slot: depth 100 → 1 s ≫ 0.25 s interactive
+        // budget, still ≪ 2.5 s batch budget.
+        g.observe_drain(0.010);
+        assert_eq!(g.decide(100, &req(1)), Some(ShedReason::DeadlineUnmeetable));
+        assert_eq!(g.decide(100, &req(2).with_slo(SloClass::Batch)), None);
+        assert_eq!(g.decide(10, &req(3)), None, "0.1 s estimate fits the budget");
+    }
+
+    #[test]
+    fn ttft_tail_counts_toward_the_estimate() {
+        let mut g = AdmissionGate::from_config(&enabled(0)).unwrap();
+        g.observe_drain(0.001);
+        g.observe_ttft_tail(0.3); // tail alone blows the 0.25 s budget
+        assert_eq!(g.decide(0, &req(1)), Some(ShedReason::DeadlineUnmeetable));
+    }
+
+    #[test]
+    fn ewma_converges_on_repeated_observations() {
+        let mut g = AdmissionGate::from_config(&enabled(0)).unwrap();
+        g.observe_drain(0.010);
+        for _ in 0..200 {
+            g.observe_drain(0.002);
+        }
+        let est = g.estimated_ttft_s(10);
+        assert!(
+            (est - 0.020).abs() < 0.002,
+            "estimator should converge to ~2 ms/slot, got {est}"
+        );
+    }
+
+    #[test]
+    fn non_finite_observations_are_ignored() {
+        let mut g = AdmissionGate::from_config(&enabled(0)).unwrap();
+        g.observe_drain(f64::NAN);
+        g.observe_drain(-1.0);
+        assert_eq!(g.decide(10_000, &req(1)), None, "estimator must stay cold");
+    }
+
+    #[test]
+    fn brownout_hysteresis_and_dwell() {
+        let mut ac = enabled(0);
+        ac.ewma_alpha = 1.0; // no smoothing: the signal is the observation
+        let mut b = BrownoutController::from_config(&ac).unwrap();
+        // enter at ratio 0.5 (0.125 s), exit at 0.25 (0.0625 s).
+        assert_eq!(b.observe(0.05, Duration::from_secs(1)), None);
+        assert_eq!(
+            b.observe(0.20, Duration::from_secs(2)),
+            Some(BrownoutEdge::Enter)
+        );
+        assert!(b.active());
+        // Between the thresholds: no edge (hysteresis).
+        assert_eq!(b.observe(0.10, Duration::from_secs(3)), None);
+        assert!(b.active());
+        assert_eq!(
+            b.observe(0.01, Duration::from_secs(5)),
+            Some(BrownoutEdge::Exit)
+        );
+        assert!(!b.active());
+        assert_eq!(b.transitions, 2);
+        assert!((b.dwell_s - 3.0).abs() < 1e-9, "entered t=2, exited t=5");
+    }
+
+    #[test]
+    fn finish_charges_residual_dwell() {
+        let mut ac = enabled(0);
+        ac.ewma_alpha = 1.0;
+        let mut b = BrownoutController::from_config(&ac).unwrap();
+        b.observe(1.0, Duration::from_secs(1));
+        assert!(b.active());
+        b.finish(Duration::from_secs(4));
+        assert!((b.dwell_s - 3.0).abs() < 1e-9);
+        assert_eq!(b.transitions, 1, "run ended browned out: one edge");
+    }
+
+    #[test]
+    fn brownout_decisions_are_replayable() {
+        // Same observation stream → byte-identical controller state.
+        let ac = enabled(0);
+        let mut a = BrownoutController::from_config(&ac).unwrap();
+        let mut b = BrownoutController::from_config(&ac).unwrap();
+        let stream = [0.01, 0.2, 0.5, 0.3, 0.02, 0.01, 0.9, 0.001];
+        for (i, q) in stream.iter().enumerate() {
+            let t = Duration::from_millis(100 * (i as u64 + 1));
+            assert_eq!(a.observe(*q, t), b.observe(*q, t));
+        }
+        assert_eq!(a.transitions, b.transitions);
+        assert_eq!(a.dwell_s.to_bits(), b.dwell_s.to_bits());
+        assert_eq!(a.ratio().to_bits(), b.ratio().to_bits());
+    }
+}

@@ -30,14 +30,38 @@
 //!   staging (closed-loop completions scheduling their follow-ups via
 //!   `stage_arrival`) may continue after close — the serve loop ends when
 //!   both queues are empty.
+//!
+//! With an [`AdmissionGate`] installed (admission control enabled), every
+//! release/submit consults the gate at the request's own arrival instant:
+//! shed requests never enter the queue — they accumulate in a shed log
+//! the scheduler drains (`take_shed`) to account, trace, and report them.
+//! Without a gate (the default) the queue is unbounded and the admit path
+//! is byte-identical to the pre-admission system.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use super::request::InferenceRequest;
+use super::admission::AdmissionGate;
+use super::request::{InferenceRequest, ShedOutcome};
 use crate::traffic::{ArrivalProcess, EventQueue};
 use crate::util::clock::SimClock;
+
+/// Saturation gauges sampled on *every* batcher poll (not just at
+/// admission): overload onset is visible even when no request gets
+/// through. Zero-valued with no polls; plain bookkeeping, never consulted
+/// by any decision, so recording them cannot perturb goldens.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BatcherPollStats {
+    /// Total admission polls (blocking + non-blocking).
+    pub polls: u64,
+    /// Polls that observed a queue at least `max_batch` deep (the server
+    /// cannot drain faster than one batch per step: saturation).
+    pub saturated_polls: u64,
+    /// Maximum instantaneous queue depth observed at any release, submit,
+    /// or poll.
+    pub max_depth: usize,
+}
 
 #[derive(Default)]
 struct QueueState {
@@ -45,20 +69,52 @@ struct QueueState {
     /// Staged future arrivals keyed on virtual time (traffic subsystem).
     events: EventQueue,
     closed: bool,
+    /// Admission gate; `None` (default) = unbounded FIFO, byte-identical
+    /// to the pre-admission batcher.
+    gate: Option<AdmissionGate>,
+    /// Shed decisions not yet drained by the scheduler.
+    shed: Vec<ShedOutcome>,
+    stats: BatcherPollStats,
 }
 
 impl QueueState {
     /// Release every staged arrival due by `now` into the admission queue,
     /// stamping `enqueued` (and `arrival_time`, when the generator did not)
     /// with the arrival timestamp — the instant the request "really"
-    /// entered the queue on the virtual timeline.
+    /// entered the queue on the virtual timeline. With a gate installed,
+    /// each release is an admission decision at that instant: releases are
+    /// processed in arrival order with the live depth, so a burst fills
+    /// the queue head-first and the overflow is shed deterministically.
     fn release_due(&mut self, now: Duration) {
         for (at, mut req) in self.events.pop_due(now) {
             req.enqueued = at;
             if req.arrival_time.is_none() {
                 req.arrival_time = Some(at);
             }
+            if let Some(gate) = &self.gate {
+                if let Some(reason) = gate.decide(self.queue.len(), &req) {
+                    self.shed.push(ShedOutcome {
+                        id: req.id,
+                        slo: req.slo,
+                        reason,
+                        at,
+                        arrived: req.arrived(),
+                    });
+                    continue;
+                }
+            }
             self.queue.push_back(req);
+        }
+        self.stats.max_depth = self.stats.max_depth.max(self.queue.len());
+    }
+
+    /// Per-poll saturation gauge (satellite: depth was previously sampled
+    /// only at admission, hiding overload onset between admissions).
+    fn note_poll(&mut self, max_batch: usize) {
+        self.stats.polls += 1;
+        self.stats.max_depth = self.stats.max_depth.max(self.queue.len());
+        if self.queue.len() >= max_batch {
+            self.stats.saturated_polls += 1;
         }
     }
 }
@@ -85,6 +141,8 @@ impl DynamicBatcher {
 
     /// Enqueue a request, stamping its arrival + enqueue time off the
     /// shared clock (unless the caller already stamped an arrival time).
+    /// With an admission gate installed, the submit instant is the
+    /// decision point and a shed request never enters the queue.
     pub fn submit(&self, mut req: InferenceRequest) {
         let now = self.clock.now();
         req.enqueued = now;
@@ -92,8 +150,57 @@ impl DynamicBatcher {
             req.arrival_time = Some(now);
         }
         let mut st = self.state.lock().unwrap();
+        if let Some(gate) = &st.gate {
+            if let Some(reason) = gate.decide(st.queue.len(), &req) {
+                st.shed.push(ShedOutcome {
+                    id: req.id,
+                    slo: req.slo,
+                    reason,
+                    at: now,
+                    arrived: req.arrived(),
+                });
+                self.cv.notify_all();
+                return;
+            }
+        }
         st.queue.push_back(req);
+        let depth = st.queue.len();
+        st.stats.max_depth = st.stats.max_depth.max(depth);
         self.cv.notify_all();
+    }
+
+    /// Install the admission gate (admission control enabled). The
+    /// scheduler sets this up before serving; `None` is never installed —
+    /// the disabled config simply never calls this.
+    pub fn set_admission_gate(&self, gate: AdmissionGate) {
+        self.state.lock().unwrap().gate = Some(gate);
+    }
+
+    /// Drain shed decisions accumulated since the last call (arrival
+    /// order). Empty — and allocation-free — without a gate.
+    pub fn take_shed(&self) -> Vec<ShedOutcome> {
+        std::mem::take(&mut self.state.lock().unwrap().shed)
+    }
+
+    /// Feed the gate's drain estimator with one completed request's
+    /// per-slot service time. No-op without a gate.
+    pub fn observe_service(&self, per_slot_s: f64) {
+        if let Some(gate) = &mut self.state.lock().unwrap().gate {
+            gate.observe_drain(per_slot_s);
+        }
+    }
+
+    /// Feed the gate's prefill-tail estimator with one admitted request's
+    /// admission→first-token seconds. No-op without a gate.
+    pub fn observe_ttft_tail(&self, tail_s: f64) {
+        if let Some(gate) = &mut self.state.lock().unwrap().gate {
+            gate.observe_ttft_tail(tail_s);
+        }
+    }
+
+    /// Saturation gauges sampled at every poll (see [`BatcherPollStats`]).
+    pub fn poll_stats(&self) -> BatcherPollStats {
+        self.state.lock().unwrap().stats
     }
 
     /// Stage a future arrival at virtual time `at`. The request is
@@ -161,6 +268,7 @@ impl DynamicBatcher {
         if self.clock.is_virtual() {
             let mut st = self.state.lock().unwrap();
             st.release_due(self.clock.now());
+            st.note_poll(self.max_batch);
             if st.queue.is_empty() {
                 // Idle: jump the clock to the next staged arrival. With
                 // nothing staged the poll is unservable (the degenerate
@@ -214,6 +322,7 @@ impl DynamicBatcher {
         let mut st = self.state.lock().unwrap();
         loop {
             st.release_due(self.clock.now());
+            st.note_poll(self.max_batch);
             if !st.queue.is_empty() {
                 // Wait briefly for more arrivals to batch together, unless
                 // we already have a full batch — or the batcher is closed
@@ -255,8 +364,44 @@ impl DynamicBatcher {
         }
         let mut st = self.state.lock().unwrap();
         st.release_due(self.clock.now());
+        st.note_poll(self.max_batch);
         let n = st.queue.len().min(room).min(self.max_batch);
         st.queue.drain(..n).collect()
+    }
+
+    /// Non-blocking pull with priority-aware batch composition: rank every
+    /// queued request with `rank` (smaller wins; ties break on queue
+    /// position, so equal-rank requests stay FIFO) and take the best
+    /// `room`. The rest keep their arrival order. Only the scheduler's
+    /// saturation path (admission control with `priority_compose`) calls
+    /// this; FIFO admission never does, keeping the default byte-identical.
+    pub fn try_admissions_ranked(
+        &self,
+        room: usize,
+        rank: &dyn Fn(&InferenceRequest) -> (i64, i64),
+    ) -> Vec<InferenceRequest> {
+        if room == 0 {
+            return Vec::new();
+        }
+        let mut st = self.state.lock().unwrap();
+        st.release_due(self.clock.now());
+        st.note_poll(self.max_batch);
+        let n = st.queue.len().min(room).min(self.max_batch);
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut order: Vec<usize> = (0..st.queue.len()).collect();
+        let keys: Vec<(i64, i64)> = st.queue.iter().map(|r| rank(r)).collect();
+        // Deterministic total order: (key, original index) never ties.
+        order.sort_by_key(|&i| (keys[i], i));
+        let mut drained: Vec<Option<InferenceRequest>> = st.queue.drain(..).map(Some).collect();
+        let mut picked = Vec::with_capacity(n);
+        for &i in &order[..n] {
+            picked.push(drained[i].take().expect("rank order indexes each queued request once"));
+        }
+        // Losers keep their arrival order for the next round.
+        st.queue = drained.into_iter().flatten().collect();
+        picked
     }
 }
 
@@ -503,5 +648,115 @@ mod tests {
         b.close();
         let got = b.next_admissions(4).unwrap();
         assert_eq!(got[0].id, 7);
+    }
+
+    // --- admission gate / shed / poll-stat contract ---
+
+    use crate::config::AdmissionControl;
+    use crate::server::request::{ShedReason, SloClass};
+
+    fn gated(cap: usize, max_batch: usize) -> (DynamicBatcher, SimClock) {
+        let (b, clock) = virt(max_batch, 1);
+        let ac = AdmissionControl::overload_protect(0.25, 2.5, cap);
+        b.set_admission_gate(AdmissionGate::from_config(&ac).expect("enabled config"));
+        (b, clock)
+    }
+
+    #[test]
+    fn queue_cap_bounds_depth_and_sheds_overflow() {
+        let (b, clock) = gated(2, 8);
+        for i in 0..5 {
+            b.stage_arrival(Duration::from_millis(i), req(i as u64));
+        }
+        clock.advance(Duration::from_millis(10));
+        let _ = b.pending(); // forces release of due arrivals through the gate
+        assert!(b.pending() <= 2, "hard cap must bound instantaneous depth");
+        let shed = b.take_shed();
+        assert_eq!(shed.len(), 3);
+        assert!(shed.iter().all(|s| s.reason == ShedReason::QueueFull));
+        // First-come-first-kept: ids 0,1 admitted, 2,3,4 shed.
+        assert_eq!(shed.iter().map(|s| s.id).collect::<Vec<_>>(), vec![2, 3, 4]);
+        assert!(b.take_shed().is_empty(), "take_shed drains");
+    }
+
+    #[test]
+    fn submit_is_gated_too() {
+        let (b, _) = gated(1, 8);
+        b.submit(req(1));
+        b.submit(req(2));
+        assert_eq!(b.pending(), 1);
+        let shed = b.take_shed();
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].id, 2);
+        assert_eq!(shed[0].reason, ShedReason::QueueFull);
+    }
+
+    #[test]
+    fn shed_records_arrival_instants() {
+        let (b, clock) = gated(1, 8);
+        b.stage_arrival(Duration::from_millis(3), req(1));
+        b.stage_arrival(Duration::from_millis(9), req(2));
+        clock.advance(Duration::from_millis(20));
+        let _ = b.pending(); // release due arrivals through the gate
+        let shed = b.take_shed();
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].at, Duration::from_millis(9), "decision at its own arrival");
+        assert_eq!(shed[0].arrived, Duration::from_millis(9));
+    }
+
+    #[test]
+    fn deadline_unmeetable_sheds_only_after_estimate() {
+        let (b, _) = gated(0, 8);
+        for i in 0..64 {
+            b.submit(req(i));
+        }
+        assert_eq!(b.pending(), 64, "cold estimator admits everything");
+        // 10 ms/slot behind a 64-deep queue blows the 0.25 s budget.
+        b.observe_service(0.010);
+        b.submit(req(100));
+        let shed = b.take_shed();
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].reason, ShedReason::DeadlineUnmeetable);
+        // A Batch-class request with the same backlog fits its 2.5 s budget.
+        b.submit(req(101).with_slo(SloClass::Batch));
+        assert!(b.take_shed().is_empty());
+    }
+
+    #[test]
+    fn poll_stats_gauge_saturation_without_a_gate() {
+        let (b, _) = virt(2, 1);
+        for i in 0..6 {
+            b.submit(req(i));
+        }
+        assert_eq!(b.next_admissions(2).unwrap().len(), 2);
+        let _ = b.try_admissions(0);
+        let s = b.poll_stats();
+        assert!(s.polls >= 2);
+        assert!(s.saturated_polls >= 2, "queue ≥ max_batch on both polls");
+        assert_eq!(s.max_depth, 6, "peak depth seen at submit, not only at polls");
+    }
+
+    #[test]
+    fn ranked_admissions_take_best_and_keep_rest_in_order() {
+        let (b, _) = virt(8, 1);
+        for i in 0..5 {
+            b.submit(req(i));
+        }
+        // Rank: even ids first (key 0), odds later (key 1).
+        let got = b.try_admissions_ranked(2, &|r| ((r.id % 2) as i64, 0));
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+        // Losers retain arrival order.
+        let rest = b.try_admissions(8);
+        assert_eq!(rest.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3, 4]);
+    }
+
+    #[test]
+    fn ranked_admissions_tie_breaks_fifo() {
+        let (b, _) = virt(8, 1);
+        for i in 0..4 {
+            b.submit(req(i));
+        }
+        let got = b.try_admissions_ranked(3, &|_| (0, 0));
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
     }
 }

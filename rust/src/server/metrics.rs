@@ -7,6 +7,7 @@
 
 use std::time::Duration;
 
+use crate::server::request::ShedOutcome;
 use crate::stats::{Counters, Summary};
 use crate::util::clock::SimClock;
 
@@ -16,6 +17,14 @@ pub struct ServerMetrics {
     /// Clock timestamp at which this metrics window opened.
     pub started: Duration,
     pub ttft: Summary,
+    /// TTFT restricted to admitted `SloClass::Interactive` requests (the
+    /// population whose p99.9 the overload acceptance bound is about).
+    /// Every request is Interactive when SLO tagging is unused, so this
+    /// mirrors `ttft` then; never serialized by the pre-admission
+    /// emitters.
+    pub ttft_interactive: Summary,
+    /// TTFT restricted to admitted `SloClass::Batch` requests.
+    pub ttft_batch: Summary,
     /// Arrival → admission wait (the load-dependent part of TTFT).
     pub queue_delay: Summary,
     /// Per-sequence time between consecutive tokens (decode-step
@@ -33,6 +42,21 @@ pub struct ServerMetrics {
     /// degradation-waterfall arm during a fault). Always 0 without an
     /// active fault plan.
     pub degraded_requests: u64,
+    /// Requests refused by the admission gate (never admitted, disjoint
+    /// from `requests_done`). Always 0 with admission control disabled.
+    pub shed_requests: u64,
+    pub shed_interactive: u64,
+    pub shed_batch: u64,
+    /// Shed breakdown by reason.
+    pub shed_queue_full: u64,
+    pub shed_deadline: u64,
+    /// Brownout enter+exit edges over the run.
+    pub brownout_transitions: u64,
+    /// Total simulated seconds spent browned out.
+    pub brownout_dwell_s: f64,
+    /// Every shed decision in arrival order (typed outcomes; per-seed
+    /// byte-identical — determinism-contract tests replay this log).
+    pub shed_log: Vec<ShedOutcome>,
     pub counters: Counters,
 }
 
@@ -43,6 +67,8 @@ impl ServerMetrics {
             clock,
             started,
             ttft: Summary::new(),
+            ttft_interactive: Summary::new(),
+            ttft_batch: Summary::new(),
             queue_delay: Summary::new(),
             tbt: Summary::new(),
             request_latency: Summary::new(),
@@ -52,6 +78,14 @@ impl ServerMetrics {
             tokens_out: 0,
             requests_done: 0,
             degraded_requests: 0,
+            shed_requests: 0,
+            shed_interactive: 0,
+            shed_batch: 0,
+            shed_queue_full: 0,
+            shed_deadline: 0,
+            brownout_transitions: 0,
+            brownout_dwell_s: 0.0,
+            shed_log: Vec::new(),
             counters: Counters::new(),
         }
     }
@@ -72,7 +106,7 @@ impl ServerMetrics {
     }
 
     pub fn report(&self) -> String {
-        format!(
+        let mut out = format!(
             "throughput: {:.2} tok/s | requests: {} ({} degraded) | tokens: {}\n\
              ttft:    {}\n\
              qdelay:  {}\n\
@@ -92,7 +126,24 @@ impl ServerMetrics {
             self.step_latency.report("s"),
             self.stall_seconds.report("s"),
             self.queue_depth.report(""),
-        )
+        );
+        // Overload lines appear only when the admission layer acted, so
+        // the default (admission-disabled) report is byte-identical to
+        // the pre-admission format.
+        if self.shed_requests > 0 || self.brownout_transitions > 0 {
+            out.push_str(&format!(
+                "\nshed:    {} (interactive {}, batch {}; queue-full {}, deadline {})\n\
+                 brownout: {} transitions, {:.4} s dwell",
+                self.shed_requests,
+                self.shed_interactive,
+                self.shed_batch,
+                self.shed_queue_full,
+                self.shed_deadline,
+                self.brownout_transitions,
+                self.brownout_dwell_s,
+            ));
+        }
+        out
     }
 }
 

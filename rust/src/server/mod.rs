@@ -1,13 +1,18 @@
 //! The serving front-end: request types, the dynamic batcher, continuous-
-//! batching scheduler, and per-request metrics — the vLLM-router-shaped
-//! substrate the paper's runtime plugs into.
+//! batching scheduler, per-request metrics, and the SLO-aware admission /
+//! overload-protection layer — the vLLM-router-shaped substrate the
+//! paper's runtime plugs into.
 
+mod admission;
 mod batcher;
 mod metrics;
 mod request;
 mod scheduler;
 
-pub use batcher::DynamicBatcher;
+pub use admission::{AdmissionGate, BrownoutController, BrownoutEdge, SloBudgets};
+pub use batcher::{BatcherPollStats, DynamicBatcher};
 pub use metrics::ServerMetrics;
-pub use request::{InferenceRequest, InferenceResponse};
+pub use request::{
+    InferenceRequest, InferenceResponse, RequestOutcome, ShedOutcome, ShedReason, SloClass,
+};
 pub use scheduler::{CompletionHook, Server};

@@ -1,12 +1,84 @@
-//! Request / response types.
+//! Request / response types, SLO classes, and typed request outcomes.
 
 use std::time::Duration;
+
+/// Service-level-objective class of a request. Deadline budgets (TTFT /
+/// end-to-end) for each class live in
+/// [`crate::config::AdmissionControl`]; the request only carries its
+/// class. With admission control disabled (the default) every request is
+/// `Interactive` and the class is inert — no code path reads it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SloClass {
+    /// Latency-sensitive traffic with a tight TTFT budget.
+    Interactive,
+    /// Throughput traffic with a loose budget; first to be shed or
+    /// deprioritized at saturation.
+    Batch,
+}
+
+impl SloClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Batch => "batch",
+        }
+    }
+}
+
+/// Why the admission gate refused a request (typed shed outcome).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The staging queue hit its hard depth cap (backpressure).
+    QueueFull,
+    /// The deadline estimator (live queue depth × recent per-slot drain
+    /// time + recent prefill tail) says the class's TTFT budget is
+    /// already unmeetable at staging time.
+    DeadlineUnmeetable,
+}
+
+impl ShedReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue_full",
+            ShedReason::DeadlineUnmeetable => "deadline_unmeetable",
+        }
+    }
+}
+
+/// Record of a load-shed decision: the request was refused at staging and
+/// never admitted. Deterministic per seed (the decision reads only the
+/// virtual clock and seeded queue state).
+#[derive(Debug, Clone)]
+pub struct ShedOutcome {
+    pub id: u64,
+    pub slo: SloClass,
+    pub reason: ShedReason,
+    /// Virtual instant the shed decision was made (the request's staging
+    /// release / submit time).
+    pub at: Duration,
+    /// The request's stamped arrival time.
+    pub arrived: Duration,
+}
+
+/// Terminal outcome of a request: completed with a response, or shed by
+/// the admission gate. The completion hook receives this, so closed-loop
+/// traffic sees sheds as completions too (the simulated user gets the
+/// rejection, thinks, and sends their next request — that is the
+/// backpressure path).
+#[derive(Debug, Clone)]
+pub enum RequestOutcome {
+    Done(InferenceResponse),
+    Shed(ShedOutcome),
+}
 
 #[derive(Debug, Clone)]
 pub struct InferenceRequest {
     pub id: u64,
     pub prompt: Vec<i32>,
     pub max_new: usize,
+    /// SLO class; defaults to `Interactive` and is inert unless admission
+    /// control is enabled.
+    pub slo: SloClass,
     /// Clock timestamp ([`crate::util::clock::SimClock::now`]) at which the
     /// request *arrived* at the serving system: stamped by the traffic
     /// generator for event-queue arrivals (`DynamicBatcher::stage_arrival`),
@@ -27,6 +99,7 @@ impl InferenceRequest {
             id,
             prompt,
             max_new,
+            slo: SloClass::Interactive,
             arrival_time: None,
             enqueued: Duration::ZERO,
             force_tokens: None,
@@ -35,6 +108,12 @@ impl InferenceRequest {
 
     pub fn forced(mut self, tokens: Vec<i32>) -> Self {
         self.force_tokens = Some(tokens);
+        self
+    }
+
+    /// Builder: tag the request with an SLO class.
+    pub fn with_slo(mut self, slo: SloClass) -> Self {
+        self.slo = slo;
         self
     }
 
@@ -54,6 +133,9 @@ impl InferenceRequest {
 #[derive(Debug, Clone)]
 pub struct InferenceResponse {
     pub id: u64,
+    /// SLO class the request carried (always `Interactive` when admission
+    /// control / SLO tagging is unused).
+    pub slo: SloClass,
     pub tokens: Vec<i32>,
     /// The model's own argmax at each position (prefill + decode steps);
     /// equals `tokens` on free-running runs, diverges under forcing.

@@ -15,38 +15,78 @@
 //! admission-queue depth sampled at every step. A completion hook lets
 //! closed-loop workloads schedule their next arrival off each finished
 //! request.
+//!
+//! # Admission control & overload (enabled via `scfg.admission`)
+//!
+//! With [`crate::config::AdmissionControl`] enabled the loop grows three
+//! deterministic overload behaviors — all SimClock-driven, all absent
+//! (not merely inert) in the disabled default:
+//!
+//! * **Shed processing** — the batcher's [`AdmissionGate`] refuses
+//!   requests at staging (queue cap, or unmeetable TTFT deadline); the
+//!   loop drains those typed [`ShedOutcome`]s every iteration, counts
+//!   them per class/reason, emits a `shed` instant on
+//!   `Track::Admission`, and fires the completion hook with
+//!   [`RequestOutcome::Shed`] so closed-loop populations feel the
+//!   backpressure (the simulated user gets the rejection and thinks
+//!   before their next request). A shed request is never admitted and
+//!   never double-counted as done or dropped.
+//! * **Priority batch composition** — at saturation (more queued than
+//!   free slots) batches are composed by tightest remaining TTFT slack
+//!   (bucketed), tie-broken by largest expert-working-set overlap with
+//!   the device-0 residency mask ([`Engine::admission_affinity`] ×
+//!   `EngineState::residency_mask`), instead of FIFO.
+//! * **Brownout coupling** — admitted queue delays feed the
+//!   [`BrownoutController`] EWMA; threshold crossings call
+//!   [`Engine::set_brownout`], shifting miss handling toward ψ buddy
+//!   substitution and tightening the transfer deadline, and emit
+//!   `brownout_enter`/`brownout_exit` instants on `Track::Admission`.
+//!
+//! The estimators close the loop: each admission feeds its
+//! admission→first-token tail and each completion its per-slot service
+//! time back into the gate, so the deadline-unmeetable test tracks the
+//! live service rate.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
 
+use super::admission::{AdmissionGate, BrownoutController, BrownoutEdge, SloBudgets};
 use super::batcher::DynamicBatcher;
 use super::metrics::ServerMetrics;
-use super::request::{InferenceRequest, InferenceResponse};
+use super::request::{
+    InferenceRequest, InferenceResponse, RequestOutcome, ShedReason, SloClass,
+};
 use crate::model::{Engine, Sequence};
+use crate::trace::Track;
 
-/// Called for each completed request: `(completion_time, response,
-/// batcher)`. Closed-loop traffic uses this to stage the population's next
-/// arrival (`DynamicBatcher::stage_arrival`).
-pub type CompletionHook = Box<dyn FnMut(Duration, &InferenceResponse, &DynamicBatcher)>;
+/// Called for each terminal request outcome: `(completion_time, outcome,
+/// batcher)` — completed responses *and* admission sheds. Closed-loop
+/// traffic uses this to stage the population's next arrival
+/// (`DynamicBatcher::stage_arrival`).
+pub type CompletionHook = Box<dyn FnMut(Duration, &RequestOutcome, &DynamicBatcher)>;
 
 pub struct Server {
     pub engine: Engine,
     pub batcher: Arc<DynamicBatcher>,
     pub metrics: ServerMetrics,
-    /// Invoked as each request completes (before it is returned). Used by
-    /// the traffic subsystem's closed-loop generator; `None` for offline
-    /// runs.
+    /// Invoked as each request reaches a terminal outcome (before a
+    /// completed response is returned). Used by the traffic subsystem's
+    /// closed-loop generator; `None` for offline runs.
     pub on_complete: Option<CompletionHook>,
 }
 
 struct Active {
     seq: Sequence,
+    slo: SloClass,
     /// Clock timestamp the request arrived (generator timestamp, or the
     /// submit instant when none was stamped).
     arrived: Duration,
     ttft: f64,
+    /// Arrival → admission seconds (subtracted from the total at retire
+    /// time to feed the gate's per-slot service estimator).
+    queue_delay: f64,
     /// Absolute clock seconds at which the first token was produced.
     first_token_s: f64,
     /// Clock timestamp of this sequence's latest token (TBT accounting).
@@ -61,8 +101,12 @@ impl Server {
         let max_batch = engine.scfg.max_batch;
         let timeout = Duration::from_micros(engine.scfg.batch_timeout_us);
         let clock = engine.clock();
+        let batcher = Arc::new(DynamicBatcher::new(max_batch, timeout, clock.clone()));
+        if let Some(gate) = AdmissionGate::from_config(&engine.scfg.admission) {
+            batcher.set_admission_gate(gate);
+        }
         Self {
-            batcher: Arc::new(DynamicBatcher::new(max_batch, timeout, clock.clone())),
+            batcher,
             metrics: ServerMetrics::new(clock),
             engine,
             on_complete: None,
@@ -76,20 +120,43 @@ impl Server {
         let mut active: Vec<Active> = Vec::new();
         let mut done: Vec<InferenceResponse> = Vec::new();
         self.metrics = ServerMetrics::new(clock.clone());
+        let admission_on = self.engine.scfg.admission.enabled;
+        let priority_on = admission_on && self.engine.scfg.admission.priority_compose;
+        let budgets = SloBudgets::from_config(&self.engine.scfg.admission);
+        let mut brownout = BrownoutController::from_config(&self.engine.scfg.admission);
 
         loop {
+            // Account sheds the gate produced since the last iteration
+            // (no-op without a gate: the shed log is always empty).
+            if admission_on {
+                self.process_shed()?;
+            }
             // Admit into free slots.
             let room = self.engine.scfg.max_batch - active.len();
-            let admissions = if active.is_empty() {
+            let admissions = if priority_on && self.batcher.pending() > room {
+                // Saturation: compose the batch by (tightest remaining
+                // budget, largest resident-working-set overlap) instead
+                // of FIFO. Never taken when admission is disabled.
+                self.ranked_admissions(room, budgets)
+            } else if active.is_empty() {
                 match self.batcher.next_admissions(room) {
                     Some(a) => a,
-                    None => break, // closed + drained + nothing active
+                    None => {
+                        // Drained — but a final burst may have been shed
+                        // at release; those sheds can stage closed-loop
+                        // follow-ups through the hook, so process them
+                        // and re-poll before concluding the run is over.
+                        if admission_on && self.process_shed()? > 0 {
+                            continue;
+                        }
+                        break; // closed + drained + nothing active
+                    }
                 }
             } else {
                 self.batcher.try_admissions(room)
             };
             for req in admissions {
-                let act = self.admit(req)?;
+                let act = self.admit(req, &mut brownout)?;
                 active.push(act);
             }
             if active.is_empty() {
@@ -123,6 +190,7 @@ impl Server {
             }
 
             // Retire finished sequences.
+            let batch_width = active.len();
             let mut i = 0;
             while i < active.len() {
                 if active[i].seq.done() {
@@ -138,6 +206,14 @@ impl Server {
                     if a.degraded {
                         self.metrics.degraded_requests += 1;
                     }
+                    if admission_on {
+                        // Close the estimator loop: this request's
+                        // in-service seconds, amortized over the batch
+                        // width it shared, approximate the per-queue-slot
+                        // drain interval the gate projects with.
+                        let service = (total - a.queue_delay).max(0.0);
+                        self.batcher.observe_service(service / batch_width as f64);
+                    }
                     let _ = self.engine.tracer().finish_request(
                         a.seq.id,
                         clock.now(),
@@ -145,6 +221,7 @@ impl Server {
                     );
                     let resp = InferenceResponse {
                         id: a.seq.id,
+                        slo: a.slo,
                         tokens: a.seq.generated.clone(),
                         predictions: a.seq.predictions.clone(),
                         logits,
@@ -153,14 +230,25 @@ impl Server {
                         total,
                         degraded: a.degraded,
                     };
+                    let outcome = RequestOutcome::Done(resp);
                     if let Some(hook) = self.on_complete.as_mut() {
-                        hook(clock.now(), &resp, &self.batcher);
+                        hook(clock.now(), &outcome, &self.batcher);
                     }
-                    done.push(resp);
+                    if let RequestOutcome::Done(resp) = outcome {
+                        done.push(resp);
+                    }
                 } else {
                     i += 1;
                 }
             }
+        }
+        if let Some(b) = brownout.as_mut() {
+            // A run that ends browned out still owes its residual dwell;
+            // make sure the engine is back in its configured mode too.
+            b.finish(clock.now());
+            self.metrics.brownout_transitions = b.transitions;
+            self.metrics.brownout_dwell_s = b.dwell_s;
+            self.engine.set_brownout(false);
         }
         Ok(done)
     }
@@ -175,12 +263,103 @@ impl Server {
         self.run()
     }
 
-    fn admit(&mut self, req: InferenceRequest) -> Result<Active> {
+    /// Drain the batcher's shed log: count, trace, and surface each shed
+    /// through the completion hook. Returns how many were processed.
+    fn process_shed(&mut self) -> Result<usize> {
+        let shed = self.batcher.take_shed();
+        let n = shed.len();
+        if n == 0 {
+            return Ok(0);
+        }
+        let clock = self.engine.clock();
+        for o in shed {
+            self.metrics.shed_requests += 1;
+            match o.slo {
+                SloClass::Interactive => self.metrics.shed_interactive += 1,
+                SloClass::Batch => self.metrics.shed_batch += 1,
+            }
+            match o.reason {
+                ShedReason::QueueFull => self.metrics.shed_queue_full += 1,
+                ShedReason::DeadlineUnmeetable => self.metrics.shed_deadline += 1,
+            }
+            self.engine.tracer().instant(
+                o.at,
+                Track::Admission,
+                "shed",
+                &[
+                    ("id", o.id as i64),
+                    ("interactive", i64::from(o.slo == SloClass::Interactive)),
+                    ("queue_full", i64::from(o.reason == ShedReason::QueueFull)),
+                ],
+            );
+            let outcome = RequestOutcome::Shed(o.clone());
+            if let Some(hook) = self.on_complete.as_mut() {
+                hook(clock.now(), &outcome, &self.batcher);
+            }
+            self.metrics.shed_log.push(o);
+        }
+        Ok(n)
+    }
+
+    /// Saturation-mode batch composition: rank every queued request by
+    /// `(remaining-TTFT-slack bucket, -resident-working-set overlap)` —
+    /// tightest budget first, ties to the request whose predicted experts
+    /// are already GPU-resident (cheapest to serve *now*). Slack is
+    /// bucketed at a quarter of the Interactive budget so overlap gets to
+    /// matter between near-equal deadlines; within one (bucket, overlap)
+    /// key the batcher keeps FIFO order, so the composition is
+    /// deterministic.
+    fn ranked_admissions(&self, room: usize, budgets: SloBudgets) -> Vec<InferenceRequest> {
+        let now_s = self.engine.clock().now().as_secs_f64();
+        let residency = self
+            .engine
+            .transfer_handle()
+            .with_state(|st| st.residency_mask(0));
+        let bucket_s = (budgets.interactive_ttft_s / 4.0).max(1e-6);
+        let engine = &self.engine;
+        let rank = move |req: &InferenceRequest| -> (i64, i64) {
+            let slack_s = req.arrived().as_secs_f64() + budgets.ttft_for(req.slo) - now_s;
+            let slack_bucket = (slack_s / bucket_s).floor() as i64;
+            let overlap = engine
+                .admission_affinity(&req.prompt)
+                .into_iter()
+                .filter(|&e| residency.get(e).copied().unwrap_or(false))
+                .count() as i64;
+            (slack_bucket, -overlap)
+        };
+        self.batcher.try_admissions_ranked(room, &rank)
+    }
+
+    fn admit(
+        &mut self,
+        req: InferenceRequest,
+        brownout: &mut Option<BrownoutController>,
+    ) -> Result<Active> {
         let clock = self.engine.clock();
         let arrived = req.arrived();
+        let slo = req.slo;
         // Admission instant: the queue-delay measurement point (prefill
         // below advances the clock in virtual mode).
-        self.metrics.queue_delay.add(clock.since(arrived));
+        let queue_delay = clock.since(arrived);
+        self.metrics.queue_delay.add(queue_delay);
+        // Queue delay vs SLO is the overload signal; threshold crossings
+        // toggle the engine's brownout mode.
+        if let Some(b) = brownout.as_mut() {
+            if let Some(edge) = b.observe(queue_delay, clock.now()) {
+                let ratio_ppm = (b.ratio() * 1e6) as i64;
+                let (name, engage) = match edge {
+                    BrownoutEdge::Enter => ("brownout_enter", true),
+                    BrownoutEdge::Exit => ("brownout_exit", false),
+                };
+                self.engine.set_brownout(engage);
+                self.engine.tracer().instant(
+                    clock.now(),
+                    Track::Admission,
+                    name,
+                    &[("ratio_ppm", ratio_ppm)],
+                );
+            }
+        }
         let mut seq = self.engine.new_sequence(req.prompt, req.max_new);
         seq.id = req.id;
         seq.force_tokens = req.force_tokens;
@@ -196,10 +375,19 @@ impl Server {
         // Prefill complete = first token out.
         let ttft = clock.since(arrived);
         self.metrics.ttft.add(ttft);
+        match slo {
+            SloClass::Interactive => self.metrics.ttft_interactive.add(ttft),
+            SloClass::Batch => self.metrics.ttft_batch.add(ttft),
+        }
+        if self.engine.scfg.admission.enabled {
+            self.batcher.observe_ttft_tail((ttft - queue_delay).max(0.0));
+        }
         Ok(Active {
             seq,
+            slo,
             arrived,
             ttft,
+            queue_delay,
             first_token_s: clock.now_s(),
             last_token: clock.now(),
             degraded: tel.degraded,

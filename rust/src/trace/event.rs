@@ -16,6 +16,10 @@ pub enum Track {
     Engine,
     /// Admission and release decisions.
     Scheduler,
+    /// Overload-protection decisions: load sheds and brownout
+    /// enter/exit transitions (admission control enabled only — the
+    /// track never appears in a default-config export).
+    Admission,
     /// Fault ticks from the `FaultTimeline`.
     Fault,
     /// Per-device cache-side events.
@@ -36,6 +40,7 @@ impl Track {
         match self {
             Track::Engine => "engine".to_string(),
             Track::Scheduler => "scheduler".to_string(),
+            Track::Admission => "admission".to_string(),
             Track::Fault => "faults".to_string(),
             Track::Device(d) => format!("device-{d}"),
             Track::HostLink(d) => format!("host-link-{d}"),
@@ -91,6 +96,7 @@ mod tests {
     fn track_labels_are_stable() {
         assert_eq!(Track::Engine.label(), "engine");
         assert_eq!(Track::Scheduler.label(), "scheduler");
+        assert_eq!(Track::Admission.label(), "admission");
         assert_eq!(Track::Fault.label(), "faults");
         assert_eq!(Track::Device(2).label(), "device-2");
         assert_eq!(Track::HostLink(0).label(), "host-link-0");

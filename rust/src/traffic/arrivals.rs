@@ -28,7 +28,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::ModelConfig;
 use crate::eval::{Domain, WorkloadGen};
-use crate::server::InferenceRequest;
+use crate::server::{InferenceRequest, SloClass};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -68,20 +68,54 @@ pub struct PromptSource {
     gen: WorkloadGen,
     domain: Domain,
     next_id: u64,
+    /// SLO-class mixer: present only for a genuine mix (`0 < share < 1`).
+    /// `None` at the default share of 1.0 — every request is Interactive
+    /// and *no* RNG is constructed or drawn, keeping default streams
+    /// byte-identical to the pre-SLO generator.
+    slo_mix: Option<(f64, Rng)>,
 }
 
 impl PromptSource {
     pub fn new(cfg: &ModelConfig, seed: u64, domain: Domain, max_new: usize) -> Self {
         let mut gen = WorkloadGen::new(cfg, seed);
         gen.max_new = max_new;
-        Self { gen, domain, next_id: 0 }
+        Self { gen, domain, next_id: 0, slo_mix: None }
     }
 
-    /// Next request body (sequential id, workload-domain prompt).
+    /// Builder: tag each generated request `Interactive` with probability
+    /// `share` (else `Batch`), drawn from a dedicated seeded stream.
+    /// `share >= 1.0` (the default) and `share <= 0.0` are degenerate —
+    /// all-Interactive / all-Batch with no RNG stream at all.
+    pub fn with_interactive_share(mut self, share: f64, seed: u64) -> Self {
+        assert!(share.is_finite(), "interactive share must be finite");
+        self.slo_mix = if share > 0.0 && share < 1.0 {
+            Some((share, Rng::new(seed)))
+        } else if share <= 0.0 {
+            // All-Batch: encode as a mix with probability 0 and no draws.
+            Some((0.0, Rng::new(seed)))
+        } else {
+            None
+        };
+        self
+    }
+
+    /// Next request body (sequential id, workload-domain prompt, SLO tag).
     pub fn next_request(&mut self) -> InferenceRequest {
         let id = self.next_id;
         self.next_id += 1;
-        self.gen.request(self.domain, id)
+        let req = self.gen.request(self.domain, id);
+        match self.slo_mix.as_mut() {
+            None => req,
+            Some((share, _)) if *share <= 0.0 => req.with_slo(SloClass::Batch),
+            Some((share, rng)) => {
+                let slo = if rng.f64() < *share {
+                    SloClass::Interactive
+                } else {
+                    SloClass::Batch
+                };
+                req.with_slo(slo)
+            }
+        }
     }
 
     /// As `next_request`, with optional prompt / length overrides (trace
@@ -503,6 +537,38 @@ mod tests {
         assert_eq!(b.req.prompt, vec![3, 9]);
         assert_eq!(b.req.max_new, 2);
         assert!(t.next_arrival().is_none());
+    }
+
+    #[test]
+    fn slo_mix_is_deterministic_and_degenerate_at_the_edges() {
+        use crate::server::SloClass;
+        // Default / share=1.0: all Interactive, and the prompt stream is
+        // identical to an untagged source (no RNG draws interleave).
+        let mut plain = src(7);
+        let mut full = src(7).with_interactive_share(1.0, 99);
+        for _ in 0..16 {
+            let a = plain.next_request();
+            let b = full.next_request();
+            assert_eq!(b.slo, SloClass::Interactive);
+            assert_eq!(a.prompt, b.prompt);
+        }
+        // share=0.0: all Batch, prompts still identical.
+        let mut none = src(7).with_interactive_share(0.0, 99);
+        let mut plain2 = src(7);
+        for _ in 0..16 {
+            assert_eq!(none.next_request().slo, SloClass::Batch);
+            let _ = plain2.next_request();
+        }
+        // A genuine mix is seeded: same seed → same class sequence, and
+        // both classes appear.
+        let seq = |seed: u64| -> Vec<SloClass> {
+            let mut s = src(7).with_interactive_share(0.5, seed);
+            (0..64).map(|_| s.next_request().slo).collect()
+        };
+        let a = seq(11);
+        assert_eq!(a, seq(11));
+        assert!(a.contains(&SloClass::Interactive));
+        assert!(a.contains(&SloClass::Batch));
     }
 
     #[test]

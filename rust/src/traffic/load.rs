@@ -12,16 +12,17 @@
 //! `examples/sweep_load.rs` renders the grid as a markdown table and
 //! writes the machine-readable `BENCH_load.json` artifact.
 
+use std::collections::BTreeSet;
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::config::{ModelConfig, ServingConfig};
+use crate::config::{AdmissionControl, ModelConfig, ServingConfig};
 use crate::eval::{engine_with_config, Domain};
 use crate::fault::FaultPlan;
 use crate::model::EngineOptions;
 use crate::profilecollect::ProfileCollector;
-use crate::server::Server;
+use crate::server::{Server, SloClass};
 use crate::stats::Summary;
 use crate::topology::{PlacementKind, TopologyKind};
 use crate::trace::{RequestAttribution, TraceSink};
@@ -50,6 +51,12 @@ pub struct LoadSettings {
     /// default — disabled sweeps stay byte-identical to the pre-trace
     /// goldens.
     pub trace: bool,
+    /// Probability a generated request is tagged `SloClass::Interactive`
+    /// (the rest are `Batch`). The default 1.0 tags everything
+    /// Interactive *without* constructing the mixer RNG, so default
+    /// prompt/arrival streams stay byte-identical to the pre-SLO
+    /// generator.
+    pub interactive_share: f64,
 }
 
 impl Default for LoadSettings {
@@ -61,6 +68,7 @@ impl Default for LoadSettings {
             domain: Domain::Mixed,
             seed: 42,
             trace: false,
+            interactive_share: 1.0,
         }
     }
 }
@@ -105,7 +113,10 @@ impl ProcessKind {
         st: &LoadSettings,
         offered_rps: f64,
     ) -> Box<dyn ArrivalProcess> {
-        let src = PromptSource::new(cfg, st.seed, st.domain, st.max_new);
+        // The SLO mixer draws from its own derived stream (a no-op at
+        // the default share of 1.0 — see `PromptSource`).
+        let src = PromptSource::new(cfg, st.seed, st.domain, st.max_new)
+            .with_interactive_share(st.interactive_share, st.seed.wrapping_add(0x0000_510C_1A55));
         let proc_seed = st.seed.wrapping_add(0x0007_2AFF_1C00); // "traffic" stream
         match self {
             ProcessKind::Poisson => {
@@ -272,6 +283,40 @@ pub struct FaultProbe {
     pub emergency_promotions: u64,
 }
 
+/// Admission-layer accounting for one cell, read from the serving
+/// metrics and the batcher's poll gauge after the run drained. All
+/// zeros / empty on an admission-disabled cell (sheds cannot happen
+/// without a gate), so probing it is free for the existing sweeps.
+#[derive(Debug, Clone, Default)]
+pub struct AdmissionProbe {
+    /// Requests refused by the gate (disjoint from `requests_done`).
+    pub shed_requests: u64,
+    pub shed_interactive: u64,
+    pub shed_batch: u64,
+    /// Shed breakdown by reason.
+    pub shed_queue_full: u64,
+    pub shed_deadline: u64,
+    /// shed / (shed + done) over the cell.
+    pub shed_rate: f64,
+    /// Brownout enter+exit edges and total browned-out virtual seconds.
+    pub brownout_transitions: u64,
+    pub brownout_dwell_s: f64,
+    /// TTFT restricted to *admitted* requests of each SLO class — the
+    /// overload acceptance bound is on the Interactive p99.9.
+    pub ttft_interactive: Summary,
+    pub ttft_batch: Summary,
+    /// Batcher poll gauge: depth high-water mark and saturation, sampled
+    /// on *every* release/admission poll (not just at admission, which
+    /// undercounts between-step bursts).
+    pub queue_depth_max: u64,
+    pub batcher_polls: u64,
+    pub saturated_polls: u64,
+    /// Stall attribution of the p99 *admitted Interactive* request (by
+    /// end-to-end latency; deterministic tie-break on id). `None` when
+    /// the cell ran untraced or no Interactive request finished.
+    pub p99_attr_interactive: Option<RequestAttribution>,
+}
+
 /// Exported trace of one traced cell: the Perfetto-loadable Chrome
 /// trace-event document, the compact JSONL form, and every finished
 /// request's stall attribution (completion order).
@@ -307,7 +352,7 @@ pub fn run_fault_cell(
     offered_rps: f64,
     process: Box<dyn ArrivalProcess>,
 ) -> Result<(LoadCell, CellProbe, FaultProbe)> {
-    let (cell, probe, fault, _) = run_cell_inner(
+    let (cell, probe, fault, _adm, _) = run_cell_inner(
         cfg,
         store,
         collector,
@@ -318,6 +363,32 @@ pub fn run_fault_cell(
         process,
     )?;
     Ok((cell, probe, fault))
+}
+
+/// [`run_load_cell`] plus the post-run [`AdmissionProbe`] (overload
+/// sweeps; all-zero probe on an admission-disabled config).
+#[allow(clippy::too_many_arguments)]
+pub fn run_overload_cell(
+    cfg: &ModelConfig,
+    store: Arc<WeightStore>,
+    collector: &ProfileCollector,
+    warm_rank: &[Vec<usize>],
+    scfg: ServingConfig,
+    policy_label: &str,
+    offered_rps: f64,
+    process: Box<dyn ArrivalProcess>,
+) -> Result<(LoadCell, AdmissionProbe)> {
+    let (cell, _probe, _fault, adm, _trace) = run_cell_inner(
+        cfg,
+        store,
+        collector,
+        warm_rank,
+        scfg,
+        policy_label,
+        offered_rps,
+        process,
+    )?;
+    Ok((cell, adm))
 }
 
 /// [`run_fault_cell`] with tracing forced on: returns the exported
@@ -334,7 +405,7 @@ pub fn run_fault_cell_traced(
     process: Box<dyn ArrivalProcess>,
 ) -> Result<(LoadCell, CellProbe, FaultProbe, TraceOutput)> {
     scfg.trace = TraceSink::Ring;
-    let (cell, probe, fault, trace) = run_cell_inner(
+    let (cell, probe, fault, _adm, trace) = run_cell_inner(
         cfg,
         store,
         collector,
@@ -383,16 +454,18 @@ fn run_cell_inner(
     policy_label: &str,
     offered_rps: f64,
     mut process: Box<dyn ArrivalProcess>,
-) -> Result<(LoadCell, CellProbe, FaultProbe, Option<TraceOutput>)> {
+) -> Result<(LoadCell, CellProbe, FaultProbe, AdmissionProbe, Option<TraceOutput>)> {
     let opts = EngineOptions { clock: ClockMode::Virtual, ..Default::default() };
     let engine = engine_with_config(cfg, store, collector, warm_rank, scfg, opts)?;
     let mut server = Server::new(engine);
 
     let process_name = process.name();
     server.batcher.stage_process(process.as_mut());
-    // Completions feed the process back (closed-loop next arrivals);
-    // open-loop processes return None here.
-    server.on_complete = Some(Box::new(move |now, _resp, batcher| {
+    // Terminal outcomes feed the process back (closed-loop next
+    // arrivals); open-loop processes return None here. Sheds count too:
+    // a rejected closed-loop user thinks and retries, which is the
+    // admission layer's backpressure path.
+    server.on_complete = Some(Box::new(move |now, _outcome, batcher| {
         if let Some(a) = process.on_completion(now) {
             batcher.stage_arrival(a.at, a.req);
         }
@@ -401,16 +474,31 @@ fn run_cell_inner(
 
     let clock = server.engine.clock();
     let t0 = clock.now();
-    server.run()?;
+    let responses = server.run()?;
     let wall_s = clock.since(t0);
 
+    // Ids of admitted Interactive completions, for the class-restricted
+    // p99 attribution pick (BTreeSet: this feeds ordered report output).
+    let interactive_ids: BTreeSet<u64> = responses
+        .iter()
+        .filter(|r| r.slo == SloClass::Interactive)
+        .map(|r| r.id)
+        .collect();
+
     // Trace export (before shutdown: the tracer lives in engine state).
-    let (p99_attr, trace) = {
+    let (p99_attr, p99_attr_interactive, trace) = {
         let tracer = server.engine.tracer();
         if tracer.enabled() {
             let attributions = tracer.attributions();
             (
                 p99_attribution(attributions.clone()),
+                p99_attribution(
+                    attributions
+                        .iter()
+                        .filter(|a| interactive_ids.contains(&a.id))
+                        .cloned()
+                        .collect(),
+                ),
                 Some(TraceOutput {
                     chrome_json: tracer.export_chrome(),
                     jsonl: tracer.export_jsonl(),
@@ -418,7 +506,7 @@ fn run_cell_inner(
                 }),
             )
         } else {
-            (None, None)
+            (None, None, None)
         }
     };
 
@@ -478,8 +566,31 @@ fn run_cell_inner(
         failover_restored: ec.get("failover_restored"),
         emergency_promotions: ec.get("emergency_promotions"),
     };
+    let m = &server.metrics;
+    let poll = server.batcher.poll_stats();
+    let terminal = m.shed_requests + m.requests_done;
+    let adm = AdmissionProbe {
+        shed_requests: m.shed_requests,
+        shed_interactive: m.shed_interactive,
+        shed_batch: m.shed_batch,
+        shed_queue_full: m.shed_queue_full,
+        shed_deadline: m.shed_deadline,
+        shed_rate: if terminal > 0 {
+            m.shed_requests as f64 / terminal as f64
+        } else {
+            0.0
+        },
+        brownout_transitions: m.brownout_transitions,
+        brownout_dwell_s: m.brownout_dwell_s,
+        ttft_interactive: m.ttft_interactive.clone(),
+        ttft_batch: m.ttft_batch.clone(),
+        queue_depth_max: poll.max_depth as u64,
+        batcher_polls: poll.polls,
+        saturated_polls: poll.saturated_polls,
+        p99_attr_interactive,
+    };
     server.engine.shutdown();
-    Ok((cell, probe, fault, trace))
+    Ok((cell, probe, fault, adm, trace))
 }
 
 /// The full grid: every (process kind × offered load × policy preset).
@@ -946,6 +1057,197 @@ pub fn fault_cells_json(rows: &[FaultCell]) -> Json {
     )
 }
 
+// ---------------------------------------------------------------------
+// Overload sweep: SLO admission control vs FIFO past the knee
+// ---------------------------------------------------------------------
+
+/// Admission mode of an overload-sweep cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionMode {
+    /// Admission control disabled: the seed FIFO serving loop. Under
+    /// sustained overload its queue grows without bound and every class's
+    /// TTFT collapses together.
+    Fifo,
+    /// SLO-aware gate: bounded queue, deadline-unmeetable shedding,
+    /// priority batch composition, and brownout coupling.
+    Slo,
+}
+
+impl AdmissionMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            AdmissionMode::Fifo => "fifo",
+            AdmissionMode::Slo => "slo",
+        }
+    }
+}
+
+/// The (offered load × policy preset × admission mode) overload grid:
+/// MMPP bursts at rates past the FIFO saturation knee, a mixed
+/// Interactive/Batch population, comparing the FIFO seed loop against
+/// the SLO gate on the *admitted-Interactive* tail.
+#[derive(Debug, Clone)]
+pub struct OverloadSweep {
+    /// Offered loads (requests/second); pick the top entries ≥ 1.5× the
+    /// FIFO knee so the acceptance bound is exercised.
+    pub loads_rps: Vec<f64>,
+    /// `ServingConfig::preset` names.
+    pub presets: Vec<String>,
+    pub admissions: Vec<AdmissionMode>,
+    /// Arrival family ([`ProcessKind::Bursty`] for the acceptance grid).
+    pub process: ProcessKind,
+    /// Gate knobs applied to the `Slo` cells
+    /// ([`AdmissionControl::overload_protect`]).
+    pub interactive_ttft_slo_s: f64,
+    pub batch_ttft_slo_s: f64,
+    pub queue_cap: usize,
+    pub settings: LoadSettings,
+}
+
+/// One overload-sweep row.
+#[derive(Debug, Clone)]
+pub struct OverloadCell {
+    /// `AdmissionMode::label()`.
+    pub admission: &'static str,
+    /// `ProcessKind::label()` of the arrival family.
+    pub process: &'static str,
+    pub probe: AdmissionProbe,
+    pub cell: LoadCell,
+}
+
+pub fn run_overload_sweep(
+    cfg: &ModelConfig,
+    store: Arc<WeightStore>,
+    collector: &ProfileCollector,
+    warm_rank: &[Vec<usize>],
+    spec: &OverloadSweep,
+) -> Result<Vec<OverloadCell>> {
+    let mut rows = Vec::new();
+    for &rps in &spec.loads_rps {
+        for preset in &spec.presets {
+            for &mode in &spec.admissions {
+                let mut scfg = ServingConfig::default().preset(preset)?;
+                scfg.cache_rate = spec.settings.cache_rate;
+                scfg.seed = spec.settings.seed;
+                if mode == AdmissionMode::Slo {
+                    scfg.admission = AdmissionControl::overload_protect(
+                        spec.interactive_ttft_slo_s,
+                        spec.batch_ttft_slo_s,
+                        spec.queue_cap,
+                    );
+                }
+                if spec.settings.trace {
+                    scfg.trace = TraceSink::Ring;
+                }
+                let process = spec.process.build(cfg, &spec.settings, rps);
+                let (cell, probe) = run_overload_cell(
+                    cfg,
+                    store.clone(),
+                    collector,
+                    warm_rank,
+                    scfg,
+                    preset,
+                    rps,
+                    process,
+                )?;
+                rows.push(OverloadCell {
+                    admission: mode.label(),
+                    process: spec.process.label(),
+                    probe,
+                    cell,
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// Markdown table over the overload rows (deterministic formatting; the
+/// determinism test asserts byte-identity per seed). `ttft_i` is the
+/// admitted-Interactive TTFT — the column the acceptance bound reads.
+pub fn overload_report_markdown(rows: &[OverloadCell]) -> String {
+    let mut out = String::from(
+        "| process | rps | policy | admission | done | shed | shed rate | \
+         brownout | ttft_i p50/p99/p99.9 (ms) | ttft_b p99 (ms) | qdepth max |\n\
+         |---|---|---|---|---|---|---|---|---|---|---|\n",
+    );
+    for r in rows {
+        let c = &r.cell;
+        let p = &r.probe;
+        out.push_str(&format!(
+            "| {} | {:.2} | {} | {} | {} | {} | {:.4} | {}x/{:.3}s | {:.2}/{:.2}/{:.2} | {:.2} | {} |\n",
+            r.process,
+            c.offered_rps,
+            c.policy,
+            r.admission,
+            c.requests_done,
+            p.shed_requests,
+            p.shed_rate,
+            p.brownout_transitions,
+            p.brownout_dwell_s,
+            p.ttft_interactive.p(50.0) * 1e3,
+            p.ttft_interactive.p(99.0) * 1e3,
+            p.ttft_interactive.p(99.9) * 1e3,
+            p.ttft_batch.p(99.0) * 1e3,
+            p.queue_depth_max,
+        ));
+    }
+    out
+}
+
+/// [`summary_json`] plus the p99.9 the overload acceptance bound reads.
+fn summary_json_p999(x: &Summary) -> Json {
+    obj(vec![
+        ("mean", num(x.mean())),
+        ("p50", num(x.p(50.0))),
+        ("p95", num(x.p(95.0))),
+        ("p99", num(x.p(99.0))),
+        ("p999", num(x.p(99.9))),
+        ("n", num(x.count() as f64)),
+    ])
+}
+
+/// Machine-readable overload sweep (the `BENCH_overload.json` payload).
+pub fn overload_cells_json(rows: &[OverloadCell]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                let p = &r.probe;
+                let mut fields = vec![
+                    ("process", s(r.process)),
+                    ("policy", s(&r.cell.policy)),
+                    ("admission", s(r.admission)),
+                    ("offered_rps", num(r.cell.offered_rps)),
+                    ("requests_done", num(r.cell.requests_done as f64)),
+                    ("tokens_out", num(r.cell.tokens_out as f64)),
+                    ("wall_s", num(r.cell.wall_s)),
+                    ("tok_s", num(r.cell.tok_s)),
+                    ("shed_requests", num(p.shed_requests as f64)),
+                    ("shed_interactive", num(p.shed_interactive as f64)),
+                    ("shed_batch", num(p.shed_batch as f64)),
+                    ("shed_queue_full", num(p.shed_queue_full as f64)),
+                    ("shed_deadline", num(p.shed_deadline as f64)),
+                    ("shed_rate", num(p.shed_rate)),
+                    ("brownout_transitions", num(p.brownout_transitions as f64)),
+                    ("brownout_dwell_s", num(p.brownout_dwell_s)),
+                    ("queue_depth_max", num(p.queue_depth_max as f64)),
+                    ("batcher_polls", num(p.batcher_polls as f64)),
+                    ("saturated_polls", num(p.saturated_polls as f64)),
+                    ("ttft_interactive_s", summary_json_p999(&p.ttft_interactive)),
+                    ("ttft_batch_s", summary_json_p999(&p.ttft_batch)),
+                    ("ttft_s", summary_json_p999(&r.cell.ttft)),
+                    ("e2e_s", summary_json(&r.cell.e2e)),
+                    ("queue_delay_s", summary_json(&r.cell.queue_delay)),
+                ];
+                if let Some(a) = &p.p99_attr_interactive {
+                    fields.push(("p99_attr_interactive", a.to_json()));
+                }
+                obj(fields)
+            })
+            .collect(),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -982,5 +1284,24 @@ mod tests {
         assert!(md.starts_with("| scenario | repl | policy | done | degraded | avail |"));
         assert_eq!(md.lines().count(), 2);
         assert_eq!(fault_cells_json(&[]).to_string(), "[]");
+    }
+
+    #[test]
+    fn overload_report_header_is_stable() {
+        let md = overload_report_markdown(&[]);
+        assert!(md.starts_with("| process | rps | policy | admission | done | shed |"));
+        assert_eq!(md.lines().count(), 2);
+        assert_eq!(overload_cells_json(&[]).to_string(), "[]");
+    }
+
+    #[test]
+    fn default_settings_keep_slo_tagging_inert() {
+        let st = LoadSettings::default();
+        assert_eq!(st.interactive_share, 1.0);
+        let cfg = ModelConfig::test_tiny();
+        let mut p = ProcessKind::Poisson.build(&cfg, &st, 10.0);
+        while let Some(a) = p.next_arrival() {
+            assert_eq!(a.req.slo, SloClass::Interactive);
+        }
     }
 }

@@ -27,7 +27,11 @@
 //!   `BENCH_topology.json`), and the fault sweep over (fault scenario ×
 //!   replication factor × miss policy) measuring availability and
 //!   degradation under injected device/link chaos (rendered by
-//!   `examples/sweep_faults.rs` into `BENCH_faults.json`).
+//!   `examples/sweep_faults.rs` into `BENCH_faults.json`), and the
+//!   overload sweep over (offered load × admission mode) comparing the
+//!   FIFO seed loop against SLO-aware admission control past the
+//!   saturation knee (rendered by `examples/sweep_overload.rs` into
+//!   `BENCH_overload.json`).
 
 pub mod arrivals;
 pub mod events;
@@ -39,9 +43,11 @@ pub use arrivals::{
 };
 pub use events::EventQueue;
 pub use load::{
-    cells_json, fault_cells_json, fault_report_markdown, report_markdown, run_fault_cell,
-    run_fault_cell_traced, run_fault_sweep, run_load_cell, run_load_cell_probed,
-    run_load_cell_traced, run_sweep, run_topology_sweep, topology_cells_json,
-    topology_report_markdown, CellProbe, FaultCell, FaultProbe, FaultSweep, LoadCell,
-    LoadSettings, ProcessKind, SweepSpec, TopologyCell, TopologySweep, TraceOutput,
+    cells_json, fault_cells_json, fault_report_markdown, overload_cells_json,
+    overload_report_markdown, report_markdown, run_fault_cell, run_fault_cell_traced,
+    run_fault_sweep, run_load_cell, run_load_cell_probed, run_load_cell_traced,
+    run_overload_cell, run_overload_sweep, run_sweep, run_topology_sweep, topology_cells_json,
+    topology_report_markdown, AdmissionMode, AdmissionProbe, CellProbe, FaultCell, FaultProbe,
+    FaultSweep, LoadCell, LoadSettings, OverloadCell, OverloadSweep, ProcessKind, SweepSpec,
+    TopologyCell, TopologySweep, TraceOutput,
 };

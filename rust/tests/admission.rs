@@ -1,0 +1,290 @@
+//! Admission-control integration tests: the disabled-config degenerate
+//! case (byte-identical sweeps across thread counts), per-seed
+//! byte-identical shed decisions, the bounded staging queue under
+//! saturation, and fault + overload composition (waterfall and shed
+//! counters must not double-count).
+
+use std::sync::Arc;
+
+use buddymoe::config::{AdmissionControl, ModelConfig, ServingConfig};
+use buddymoe::eval::{engine_with_config, profile_model, warm_rank_from_profile, Domain};
+use buddymoe::fault::FaultPlan;
+use buddymoe::model::EngineOptions;
+use buddymoe::profilecollect::ProfileCollector;
+use buddymoe::server::Server;
+use buddymoe::topology::TopologyKind;
+use buddymoe::traffic::{
+    cells_json, overload_cells_json, report_markdown, run_overload_sweep, run_sweep,
+    AdmissionMode, ArrivalProcess, BurstyProcess, LoadSettings, OverloadSweep, ProcessKind,
+    PromptSource, SweepSpec,
+};
+use buddymoe::util::clock::ClockMode;
+use buddymoe::util::par;
+use buddymoe::weights::WeightStore;
+
+fn setup() -> (ModelConfig, Arc<WeightStore>) {
+    let cfg = ModelConfig::synthetic_small();
+    let store = Arc::new(WeightStore::synthetic_families(&cfg, 2024));
+    (cfg, store)
+}
+
+fn profiled(
+    cfg: &ModelConfig,
+    store: &Arc<WeightStore>,
+) -> (ProfileCollector, Vec<Vec<usize>>) {
+    let pc = profile_model(cfg, store.clone(), 8, 7777).expect("profiling the tiny model");
+    let warm = warm_rank_from_profile(&pc);
+    (pc, warm)
+}
+
+/// Serve one admission-enabled cell end to end on a fresh engine and
+/// return the server (metrics still attached) for invariant checks.
+fn run_gated_server(
+    cfg: &ModelConfig,
+    store: Arc<WeightStore>,
+    pc: &ProfileCollector,
+    warm: &[Vec<usize>],
+    mut scfg: ServingConfig,
+    n_requests: usize,
+    burst_rps: f64,
+) -> Server {
+    scfg.cache_rate = 0.5;
+    let opts = EngineOptions { clock: ClockMode::Virtual, ..Default::default() };
+    let engine = engine_with_config(cfg, store, pc, warm, scfg, opts)
+        .expect("engine builds for the gated cell");
+    let mut server = Server::new(engine);
+    let src = PromptSource::new(cfg, 42, Domain::Mixed, 4).with_interactive_share(0.5, 0x510);
+    let mut process: Box<dyn ArrivalProcess> =
+        Box::new(BurstyProcess::new(src, burst_rps, 0.0, 0.25, 0.25, n_requests, 97));
+    server.batcher.stage_process(process.as_mut());
+    server.batcher.close();
+    server.run().expect("gated run drains");
+    server
+}
+
+// ---------------------------------------------------------------------
+// Disabled config: the degenerate case stays the seed loop
+// ---------------------------------------------------------------------
+
+#[test]
+fn disabled_admission_sweep_is_byte_identical_across_thread_counts() {
+    // The default (admission-disabled) config must keep the existing
+    // sweeps byte-identical regardless of PALLAS_THREADS — the scheduler
+    // rewiring may not perturb the golden path. (The CI driver further
+    // diffs these against the pre-PR goldens.)
+    let (cfg, store) = setup();
+    let (pc, warm) = profiled(&cfg, &store);
+    let spec = SweepSpec {
+        processes: vec![ProcessKind::Bursty],
+        loads_rps: vec![8.0, 64.0],
+        presets: vec!["original".into(), "buddy-rho3".into()],
+        settings: LoadSettings {
+            n_requests: 6,
+            max_new: 4,
+            cache_rate: 0.5,
+            domain: Domain::Mixed,
+            seed: 42,
+            trace: false,
+            interactive_share: 1.0,
+        },
+    };
+    par::set_threads(1);
+    let a = run_sweep(&cfg, store.clone(), &pc, &warm, &spec).expect("1-thread sweep");
+    par::set_threads(4);
+    let b = run_sweep(&cfg, store, &pc, &warm, &spec).expect("4-thread sweep");
+    par::set_threads(0);
+    assert_eq!(
+        report_markdown(&a),
+        report_markdown(&b),
+        "disabled-admission report must not depend on PALLAS_THREADS"
+    );
+    assert_eq!(cells_json(&a).to_string(), cells_json(&b).to_string());
+}
+
+#[test]
+fn disabled_admission_report_has_no_overload_lines() {
+    let (cfg, store) = setup();
+    let (pc, warm) = profiled(&cfg, &store);
+    let scfg = ServingConfig::default().preset("original").expect("preset");
+    let server = run_gated_server(&cfg, store, &pc, &warm, scfg, 6, 32.0);
+    assert_eq!(server.metrics.shed_requests, 0);
+    assert_eq!(server.metrics.brownout_transitions, 0);
+    assert!(server.metrics.shed_log.is_empty());
+    let report = server.metrics.report();
+    assert!(
+        !report.contains("shed:") && !report.contains("brownout:"),
+        "default report must stay byte-identical to the pre-admission format:\n{report}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Shed determinism: byte-identical decisions per seed
+// ---------------------------------------------------------------------
+
+#[test]
+fn shed_decisions_are_per_seed_byte_identical() {
+    let (cfg, store) = setup();
+    let (pc, warm) = profiled(&cfg, &store);
+    let gated_scfg = || {
+        let mut scfg = ServingConfig::default().preset("buddy-rho3").expect("preset");
+        // A tiny cap against a hard burst forces both shed reasons.
+        scfg.admission = AdmissionControl::overload_protect(0.05, 0.5, 4);
+        scfg
+    };
+    let run = || {
+        run_gated_server(&cfg, store.clone(), &pc, &warm, gated_scfg(), 24, 400.0)
+    };
+    let a = run();
+    let b = run();
+    assert!(a.metrics.shed_requests > 0, "the burst must overflow the cap");
+    assert_eq!(
+        format!("{:?}", a.metrics.shed_log),
+        format!("{:?}", b.metrics.shed_log),
+        "shed decisions (ids, classes, reasons, instants) must replay byte-identically"
+    );
+    assert_eq!(a.metrics.brownout_transitions, b.metrics.brownout_transitions);
+    assert_eq!(
+        a.metrics.brownout_dwell_s.to_bits(),
+        b.metrics.brownout_dwell_s.to_bits(),
+        "brownout dwell must be bit-identical per seed"
+    );
+    assert_eq!(a.metrics.report(), b.metrics.report());
+}
+
+#[test]
+fn overload_sweep_json_is_byte_identical_per_seed() {
+    let (cfg, store) = setup();
+    let (pc, warm) = profiled(&cfg, &store);
+    let spec = OverloadSweep {
+        loads_rps: vec![8.0, 96.0],
+        presets: vec!["buddy-rho3".into()],
+        admissions: vec![AdmissionMode::Fifo, AdmissionMode::Slo],
+        process: ProcessKind::Bursty,
+        interactive_ttft_slo_s: 0.05,
+        batch_ttft_slo_s: 0.5,
+        queue_cap: 4,
+        settings: LoadSettings {
+            n_requests: 8,
+            max_new: 4,
+            cache_rate: 0.5,
+            domain: Domain::Mixed,
+            seed: 42,
+            trace: false,
+            interactive_share: 0.5,
+        },
+    };
+    let a = run_overload_sweep(&cfg, store.clone(), &pc, &warm, &spec).expect("sweep a");
+    let b = run_overload_sweep(&cfg, store, &pc, &warm, &spec).expect("sweep b");
+    assert_eq!(a.len(), 4, "2 loads x 1 preset x 2 admission modes");
+    assert_eq!(
+        overload_cells_json(&a).to_string(),
+        overload_cells_json(&b).to_string(),
+        "overload rows (shed rates, brownout dwell, tails) must replay byte-identically"
+    );
+    // FIFO rows shed nothing by construction.
+    for r in a.iter().filter(|r| r.admission == "fifo") {
+        assert_eq!(r.probe.shed_requests, 0, "no gate, no sheds");
+        assert_eq!(r.probe.brownout_transitions, 0);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bounded staging queue under saturation
+// ---------------------------------------------------------------------
+
+#[test]
+fn queue_cap_bounds_staging_depth_under_saturation() {
+    let (cfg, store) = setup();
+    let (pc, warm) = profiled(&cfg, &store);
+    let cap = 4usize;
+    let n = 32usize;
+    let mut scfg = ServingConfig::default().preset("buddy-rho3").expect("preset");
+    // Cap only (huge budgets, no deadline shedding): isolates the
+    // backpressure bound.
+    let mut ac = AdmissionControl::overload_protect(10.0, 100.0, cap);
+    ac.shed_unmeetable = false;
+    ac.brownout_enter_ratio = 0.0;
+    scfg.admission = ac;
+    let server = run_gated_server(&cfg, store, &pc, &warm, scfg, n, 800.0);
+    let m = &server.metrics;
+    let poll = server.batcher.poll_stats();
+    assert!(
+        poll.max_depth <= cap,
+        "staging depth {} exceeded the hard cap {}",
+        poll.max_depth,
+        cap
+    );
+    assert!(poll.polls > 0, "the depth gauge must have sampled");
+    assert!(m.shed_requests > 0, "an 800-rps burst against cap 4 must shed");
+    assert_eq!(m.shed_requests, m.shed_queue_full, "cap-only config sheds only QueueFull");
+    assert_eq!(
+        m.shed_requests + m.requests_done,
+        n as u64,
+        "every request must be exactly one of shed or done"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Faults + overload compose without double-counting
+// ---------------------------------------------------------------------
+
+#[test]
+fn device_down_during_burst_composes_with_shedding() {
+    let (cfg, store) = setup();
+    let (pc, warm) = profiled(&cfg, &store);
+    let n = 24usize;
+    let mut scfg = ServingConfig::default().preset("buddy-rho3").expect("preset");
+    scfg.n_devices = 4;
+    scfg.topology = TopologyKind::Ring;
+    scfg.fault_plan =
+        FaultPlan::scenario("device-down").expect("device-down is a built-in scenario");
+    scfg.admission = AdmissionControl::overload_protect(0.05, 0.5, 4);
+    let mut server = {
+        scfg.cache_rate = 0.5;
+        let opts = EngineOptions { clock: ClockMode::Virtual, ..Default::default() };
+        let engine = engine_with_config(&cfg, store, &pc, &warm, scfg, opts)
+            .expect("engine builds with faults + admission");
+        Server::new(engine)
+    };
+    let src = PromptSource::new(&cfg, 42, Domain::Mixed, 4).with_interactive_share(0.5, 0x510);
+    // Low idle rate keeps arrivals flowing across the 1–3 s fault window
+    // while the bursts still overflow the cap.
+    let mut process: Box<dyn ArrivalProcess> =
+        Box::new(BurstyProcess::new(src, 400.0, 2.0, 0.25, 0.5, n, 97));
+    server.batcher.stage_process(process.as_mut());
+    server.batcher.close();
+    let done = server.run().expect("faulted gated run drains");
+
+    let m = &server.metrics;
+    assert!(m.shed_requests > 0, "the burst must shed against cap 4");
+    assert_eq!(
+        m.shed_requests + m.requests_done,
+        n as u64,
+        "shed and done must partition the offered requests"
+    );
+    assert_eq!(done.len() as u64, m.requests_done);
+    // No double-counting across the two protection layers: a shed request
+    // was never admitted, so it can be neither done nor degraded.
+    let done_ids: std::collections::BTreeSet<u64> = done.iter().map(|r| r.id).collect();
+    for shed in &m.shed_log {
+        assert!(
+            !done_ids.contains(&shed.id),
+            "request {} is both shed and done",
+            shed.id
+        );
+    }
+    assert!(
+        m.degraded_requests <= m.requests_done,
+        "degraded annotations only apply to completed requests"
+    );
+    assert_eq!(
+        m.shed_interactive + m.shed_batch,
+        m.shed_requests,
+        "class counters must partition the sheds"
+    );
+    assert_eq!(
+        m.shed_queue_full + m.shed_deadline,
+        m.shed_requests,
+        "reason counters must partition the sheds"
+    );
+}

@@ -47,6 +47,7 @@ fn settings() -> LoadSettings {
         domain: Domain::Mixed,
         seed: 42,
         trace: true,
+        interactive_share: 1.0,
     }
 }
 

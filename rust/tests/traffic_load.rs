@@ -256,6 +256,7 @@ fn load_sweep_report_is_byte_identical_per_seed() {
             domain: Domain::Mixed,
             seed: 42,
             trace: false,
+            interactive_share: 1.0,
         },
     };
     let a = run_sweep(&cfg, store.clone(), &pc, &warm, &spec).unwrap();
@@ -281,6 +282,7 @@ fn topology_settings() -> LoadSettings {
         domain: Domain::Mixed,
         seed: 42,
         trace: false,
+        interactive_share: 1.0,
     }
 }
 
